@@ -1,0 +1,55 @@
+//! Memory-disk coordination demo (paper §4.3 / Fig. 11): the same corpus
+//! indexed under shrinking memory budgets, showing the placement regimes
+//! switch (InMemory → Hybrid → OnPage) and the latency/IO consequences.
+//!
+//! ```bash
+//! cargo run --release --example memory_budget
+//! ```
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, OpenOptions, PageAnnIndex};
+use pageann::io::SsdModel;
+use pageann::layout::{BuildConfig, IndexBuilder};
+use pageann::memplan;
+
+fn main() -> pageann::Result<()> {
+    let n = 30_000;
+    let spec = SynthSpec::new(DatasetKind::SiftLike, n);
+    eprintln!("synthesizing {} + ground truth...", spec.name());
+    let w = Workload::synthesize(&spec, 128, 10, 0xB06E7);
+    let dataset_bytes = w.base.payload_bytes();
+
+    println!("ratio     placement              pages  cap   recall   mean_ms  mean_ios");
+    for ratio in [0.0005, 0.02, 0.08, 0.15, 0.30] {
+        let budget = (dataset_bytes as f64 * ratio) as usize;
+        let plan = memplan::plan(budget, n, w.base.dim(), 16);
+        let dir = std::env::temp_dir().join(format!("pageann-budget-{}", (ratio * 1e4) as u64));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = BuildConfig {
+            cv_placement: plan.cv_placement,
+            routing_bits: plan.routing_bits,
+            routing_sample_frac: plan.routing_sample_frac,
+            ..Default::default()
+        };
+        let report = IndexBuilder::new(&w.base, cfg).build(&dir)?;
+        let mut idx = PageAnnIndex::open(
+            &dir,
+            OpenOptions { sim_ssd: Some(SsdModel::default()), ..Default::default() },
+        )?;
+        if plan.cache_budget_bytes > 0 {
+            idx.warmup(&w.queries, plan.cache_budget_bytes)?;
+        }
+        let rep = run_workload(&idx, &w.queries, Some(&w.gt), 10, 64, 8);
+        println!(
+            "{:6.2}%   {:<20}  {:5}  {:3}  {:7.4}  {:8.2}  {:8.1}",
+            ratio * 100.0,
+            format!("{:?}", plan.cv_placement),
+            report.n_pages,
+            report.capacity,
+            rep.summary.recall,
+            rep.summary.mean_latency_ms(),
+            rep.summary.mean_ios(),
+        );
+    }
+    Ok(())
+}

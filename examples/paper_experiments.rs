@@ -1,0 +1,51 @@
+//! Regenerate the paper's tables and figures (DESIGN.md §5).
+//!
+//! ```bash
+//! cargo run --release --example paper_experiments -- tab3          # one id
+//! cargo run --release --example paper_experiments -- all --scale s # everything
+//! cargo run --release --example paper_experiments -- list
+//! ```
+//!
+//! Outputs are printed as text tables and persisted under `results/*.tsv`.
+
+use pageann::bench::{list_experiments, run_experiment, ExperimentCtx, Scale};
+use std::path::PathBuf;
+
+fn main() -> pageann::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let id = args.first().map(|s| s.as_str()).unwrap_or("list");
+    if id == "list" {
+        println!("experiments: {}", list_experiments().join(", "));
+        println!("usage: paper_experiments <id>|all [--scale xs|s|m] [--no-sim-ssd]");
+        return Ok(());
+    }
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| Scale::parse(s))
+        .transpose()?
+        .unwrap_or(Scale::S);
+
+    let mut ctx = ExperimentCtx::new(
+        scale,
+        &PathBuf::from("target/experiments"),
+        &PathBuf::from("results"),
+    )?;
+    if args.iter().any(|a| a == "--no-sim-ssd") {
+        ctx.sim = None;
+    }
+
+    let ids: Vec<&str> = if id == "all" { list_experiments() } else { vec![id] };
+    let t0 = std::time::Instant::now();
+    for id in ids {
+        eprintln!("=== {id} ===");
+        let t = std::time::Instant::now();
+        for table in run_experiment(&mut ctx, id)? {
+            println!("{}", table.render());
+        }
+        eprintln!("=== {id} done in {:.1}s ===\n", t.elapsed().as_secs_f64());
+    }
+    eprintln!("all done in {:.1}s; TSVs in results/", t0.elapsed().as_secs_f64());
+    Ok(())
+}

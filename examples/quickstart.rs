@@ -1,0 +1,44 @@
+//! Quickstart: build a PageANN index on a small synthetic corpus, search
+//! it, and print recall + I/O statistics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, AnnSystem, OpenOptions, PageAnnIndex};
+use pageann::layout::{BuildConfig, IndexBuilder};
+
+fn main() -> pageann::Result<()> {
+    // 1. A 20K-vector SIFT-like corpus with exact ground truth.
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 20_000);
+    eprintln!("synthesizing {} + ground truth...", spec.name());
+    let w = Workload::synthesize(&spec, 100, 10, 42);
+
+    // 2. Build the page-node index (defaults: 4 KiB pages, PQ-16,
+    //    codes on page, LSH routing).
+    let dir = std::env::temp_dir().join("pageann-quickstart");
+    let _ = std::fs::remove_dir_all(&dir);
+    eprintln!("building index...");
+    let report = IndexBuilder::new(&w.base, BuildConfig::default()).build(&dir)?;
+    println!(
+        "index: {} pages, {} vectors/page, avg page degree {:.1}",
+        report.n_pages, report.capacity, report.avg_page_degree
+    );
+
+    // 3. Open and serve queries on 8 threads.
+    let idx = PageAnnIndex::open(&dir, OpenOptions::default())?;
+    for l in [20, 40, 80] {
+        let rep = run_workload(&idx, &w.queries, Some(&w.gt), 10, l, 8);
+        println!(
+            "L={l:3}  recall@10={:.4}  qps={:7.1}  mean={:6.2}ms  meanIOs={:5.1}  readAmp={:.2}",
+            rep.summary.recall,
+            rep.summary.qps(),
+            rep.summary.mean_latency_ms(),
+            rep.summary.mean_ios(),
+            rep.summary.totals.read_amplification(),
+        );
+    }
+    println!("resident memory: {} KiB", idx.memory_bytes() / 1024);
+    Ok(())
+}

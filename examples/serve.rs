@@ -1,0 +1,93 @@
+//! End-to-end serving driver (the mandated E2E validation example).
+//!
+//! Builds a real PageANN index over a ~60K-vector SIFT-like corpus (the
+//! paper's dataset family at laptop scale), then serves batched concurrent
+//! query traffic through the full stack — LSH routing → page-graph
+//! traversal → batched AIO page reads over the simulated NVMe → exact
+//! rerank — and reports the paper's metrics (QPS, mean/p50/p99 latency,
+//! mean I/Os, read amplification, recall@10) per load level.
+//!
+//! ```bash
+//! cargo run --release --example serve [-- --n 60000 --threads 16]
+//! ```
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, AnnSystem, OpenOptions, PageAnnIndex};
+use pageann::io::SsdModel;
+use pageann::layout::{BuildConfig, IndexBuilder};
+use pageann::memplan;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> pageann::Result<()> {
+    let n = arg("--n", 60_000);
+    let max_threads = arg("--threads", 16);
+    let spec = SynthSpec::new(DatasetKind::SiftLike, n);
+    eprintln!("[serve] synthesizing {} (n={n}) + ground truth...", spec.name());
+    let w = Workload::synthesize(&spec, 256, 10, 0xE2E);
+
+    // Memory plan at the paper's 30% ratio.
+    let budget = w.base.payload_bytes() * 3 / 10;
+    let plan = memplan::plan(budget, n, w.base.dim(), 16);
+    eprintln!(
+        "[serve] memory plan @30%: placement={:?}, cache {} KiB",
+        plan.cv_placement,
+        plan.cache_budget_bytes / 1024
+    );
+
+    let dir = std::env::temp_dir().join("pageann-serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = BuildConfig {
+        cv_placement: plan.cv_placement,
+        routing_bits: plan.routing_bits,
+        routing_sample_frac: plan.routing_sample_frac,
+        ..Default::default()
+    };
+    eprintln!("[serve] building index (Vamana → page graph → layout)...");
+    let t = std::time::Instant::now();
+    let report = IndexBuilder::new(&w.base, cfg).build(&dir)?;
+    eprintln!(
+        "[serve] built {} pages (capacity {}) in {:.1}s",
+        report.n_pages,
+        report.capacity,
+        t.elapsed().as_secs_f64()
+    );
+
+    // Open over the simulated NVMe (80µs/3.2GBps/QD64) and warm the cache.
+    let mut idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions { sim_ssd: Some(SsdModel::default()), ..Default::default() },
+    )?;
+    if plan.cache_budget_bytes > 0 {
+        eprintln!("[serve] warm-up...");
+        idx.warmup(&w.queries, plan.cache_budget_bytes)?;
+        eprintln!("[serve] cached {} hot pages", idx.cache_pages());
+    }
+
+    // Serve at increasing concurrency.
+    println!("\nthreads     qps   mean_ms    p50_ms    p99_ms  mean_ios  read_amp  recall@10");
+    let mut threads = 1;
+    while threads <= max_threads {
+        let rep = run_workload(&idx, &w.queries, Some(&w.gt), 10, 64, threads);
+        println!(
+            "{threads:7} {:7.1} {:9.2} {:9.2} {:9.2} {:9.1} {:9.2} {:10.4}",
+            rep.summary.qps(),
+            rep.summary.mean_latency_ms(),
+            rep.summary.latency.p50_ms(),
+            rep.summary.latency.p99_ms(),
+            rep.summary.mean_ios(),
+            rep.summary.totals.read_amplification(),
+            rep.summary.recall,
+        );
+        threads *= 2;
+    }
+    println!("\nresident memory: {} KiB (budget was {} KiB)", idx.memory_bytes() / 1024, budget / 1024);
+    Ok(())
+}

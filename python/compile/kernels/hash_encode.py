@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: hyperplane-LSH hash encoding.
+
+Projects the query onto H random hyperplanes and emits the sign bits
+(as 0.0/1.0 f32; the rust side packs them into a u64 code). This is the
+in-memory routing front-end of PageANN (paper §4.3): one matvec per query,
+executed once per search.
+
+TPU mapping: H x D f32 (<= 16 KiB at H=32, D=128) fits in a single VMEM
+tile, so the grid is trivial — one step, one MXU matvec.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_kernel(q_ref, p_ref, o_ref):
+    q = q_ref[...]  # (1, D)
+    planes = p_ref[...]  # (H, D)
+    proj = jnp.dot(planes, q[0, :])  # (H,) — MXU matvec
+    o_ref[...] = (proj > 0).astype(jnp.float32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hash_encode(query, planes, *, interpret=True):
+    """Sign bits of `planes @ query`: (D,), (H, D) -> (H,) of {0.0, 1.0}."""
+    h, d = planes.shape
+    out = pl.pallas_call(
+        _hash_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, h), jnp.float32),
+        interpret=interpret,
+    )(query[None, :], planes)
+    return out[0]
+
+
+def vmem_bytes(h, d):
+    return 4 * (d + h * d + h)

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: batched squared-L2 distance (the page-scan hot
+spot).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the distance is computed as
+``||x||^2 - 2 x.q + ||q||^2`` so the inner loop is a (TR, D) x (D,) matvec
+that lowers onto the MXU; the row axis is tiled by BlockSpec so each tile
+(TR x D f32 <= 64 KiB at TR=128, D=128) sits in VMEM with the query vector
+resident across the whole grid.
+
+CPU note: lowered with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Structure (tiling, fused
+matvec) is preserved either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 keeps the tile square-ish against D<=128 and is a
+# multiple of the 8-lane f32 sublane tiling on TPU.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _l2_kernel(q_ref, x_ref, o_ref):
+    # q_ref: (1, D) — kept 2-D so the matvec is a plain dot on the MXU.
+    # x_ref: (TR, D) tile of the block.
+    # o_ref: (1, TR) distances for this tile.
+    q = q_ref[...]  # (1, D)
+    x = x_ref[...]  # (TR, D)
+    xsq = jnp.sum(x * x, axis=-1)  # (TR,)
+    qsq = jnp.sum(q * q)  # scalar
+    cross = jnp.dot(x, q[0, :])  # (TR,) — MXU matvec
+    o_ref[...] = (xsq - 2.0 * cross + qsq)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def l2_batch(query, block, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=True):
+    """Squared L2 from `query` (D,) to each row of `block` (R, D) -> (R,).
+
+    R must be a multiple of `block_rows` (the AOT wrapper pads).
+    """
+    r, d = block.shape
+    assert r % block_rows == 0, f"rows {r} not a multiple of {block_rows}"
+    q2 = query[None, :]  # (1, D)
+    out = pl.pallas_call(
+        _l2_kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # query resident
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # row tiles
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, r), jnp.float32),
+        interpret=interpret,
+    )(q2, block)
+    return out[0]
+
+
+def vmem_bytes(block_rows, d):
+    """Estimated VMEM footprint per grid step (inputs + output tile)."""
+    return 4 * (d + block_rows * d + block_rows)

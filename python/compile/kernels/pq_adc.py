@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: PQ asymmetric-distance computation (ADC).
+
+Given a per-query lookup table ``lut (M, K)`` and per-vector codes
+``codes (N, M)``, the approximate distance of vector n is
+``sum_m lut[m, codes[n, m]]`` — the next-hop selection hot spot of
+PageANN's on-page compressed neighbors (paper §4.2).
+
+TPU mapping: the LUT (M x 256 f32 <= 16 KiB at M=16) stays resident in VMEM
+across the grid; code tiles stream through. The gather is expressed as
+``take_along_axis`` over the K axis, which Mosaic lowers to VMEM dynamic
+gathers; on CPU (interpret=True) it executes as numpy fancy indexing.
+
+Codes arrive as f32 (the rust boundary passes a single literal dtype) and
+are converted in-kernel; values are exact integers <= 255 so the f32->s32
+round-trip is lossless.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _adc_kernel(lut_ref, codes_ref, o_ref):
+    lut = lut_ref[...]  # (M, K)
+    codes = codes_ref[...].astype(jnp.int32)  # (TR, M)
+    m = lut.shape[0]
+    # gathered[n, m] = lut[m, codes[n, m]]
+    gathered = jnp.take_along_axis(lut.T[None, :, :],  # (1, K, M) -> broadcast
+                                   codes[:, None, :], axis=1)[:, 0, :]
+    del m
+    o_ref[...] = jnp.sum(gathered, axis=-1)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pq_adc(lut, codes, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=True):
+    """ADC distances: lut (M, K) f32, codes (N, M) f32-of-ints -> (N,) f32."""
+    n, m = codes.shape
+    _, k = lut.shape
+    assert n % block_rows == 0, f"rows {n} not a multiple of {block_rows}"
+    out = pl.pallas_call(
+        _adc_kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),  # LUT resident in VMEM
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)
+    return out[0]
+
+
+def vmem_bytes(block_rows, m, k):
+    """Estimated VMEM footprint per grid step."""
+    return 4 * (m * k + block_rows * m + block_rows)

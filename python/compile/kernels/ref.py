@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/`) asserts allclose between kernel and oracle across shape /
+dtype sweeps (hypothesis). The rust layer additionally cross-checks the
+compiled artifacts against its own native backend.
+"""
+
+import jax.numpy as jnp
+
+
+def l2_batch_ref(query, block):
+    """Squared L2 from `query` (D,) to each row of `block` (R, D) -> (R,)."""
+    diff = block - query[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pq_adc_ref(lut, codes):
+    """Asymmetric distance computation.
+
+    lut:   (M, K) f32 — per-subspace distance of the query to each centroid.
+    codes: (N, M) int — centroid index per subspace for each of N vectors.
+    returns (N,) f32 — sum over subspaces of lut[m, codes[n, m]].
+    """
+    m = lut.shape[0]
+    gathered = lut[jnp.arange(m)[None, :], codes]  # (N, M)
+    return jnp.sum(gathered, axis=-1)
+
+
+def hash_encode_ref(query, planes):
+    """Hyperplane sign bits: (planes @ query > 0) as f32 (H,)."""
+    proj = planes @ query
+    return (proj > 0).astype(jnp.float32)
+
+
+def pq_lut_ref(query, codebooks):
+    """Build the ADC lookup table.
+
+    query:     (D,) f32
+    codebooks: (M, K, D//M) f32
+    returns    (M, K) f32 — squared L2 from the m-th query subvector to each
+               centroid of subspace m.
+    """
+    m, _, dsub = codebooks.shape
+    qsub = query.reshape(m, 1, dsub)
+    diff = codebooks - qsub
+    return jnp.sum(diff * diff, axis=-1)

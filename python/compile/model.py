@@ -1,0 +1,57 @@
+"""Layer-2 JAX graphs: the compute-side of PageANN's query path.
+
+These compose the Layer-1 Pallas kernels into the fixed-shape computations
+the rust coordinator invokes through PJRT:
+
+* ``l2_batch``      — exact distances query -> page-vector block (kernel).
+* ``pq_adc``        — approx distances query -> compressed neighbors (kernel).
+* ``hash_encode``   — LSH routing code (kernel).
+* ``pq_lut``        — per-query ADC table build (plain jnp: one-shot per
+                      query, not a hot loop; XLA fuses it into 3 ops).
+* ``page_scan``     — fused: exact block distances + neighbor ADC in one
+                      artifact, saving a PJRT dispatch per hop.
+
+Everything here runs at build time only (``make artifacts``); the rust
+binary loads the lowered HLO text and never imports python.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import hash_encode as hk
+from .kernels import l2_distance as l2k
+from .kernels import pq_adc as adck
+
+
+def l2_batch(query, block):
+    return l2k.l2_batch(query, block)
+
+
+def pq_adc(lut, codes):
+    return adck.pq_adc(lut, codes)
+
+
+def hash_encode(query, planes):
+    return hk.hash_encode(query, planes)
+
+
+def pq_lut(query, codebooks):
+    """ADC table: (D,), (M, K, D//M) -> (M, K). Plain jnp (fused by XLA)."""
+    m, _, dsub = codebooks.shape
+    qsub = query.reshape(m, 1, dsub)
+    diff = codebooks - qsub
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def page_scan(query, block, lut, codes):
+    """Fused per-hop computation (paper Alg. 2 lines 20-27).
+
+    query: (D,) f32        — the query vector
+    block: (R, D) f32      — vectors of the batch of pages just read
+    lut:   (M, K) f32      — the query's ADC table
+    codes: (N, M) f32-int  — compressed codes of the pages' neighbors
+
+    Returns (exact (R,), approx (N,)).
+    """
+    exact = l2k.l2_batch(query, block)
+    approx = adck.pq_adc(lut, codes)
+    return exact, approx

@@ -1,0 +1,145 @@
+"""Layer-1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; fixed cases pin the exact
+AOT shapes the artifacts are lowered with.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import hash_encode as hk
+from compile.kernels import l2_distance as l2k
+from compile.kernels import pq_adc as adck
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = hypothesis.settings(
+    max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- l2_batch
+
+@hypothesis.given(
+    d=st.sampled_from([8, 32, 96, 100, 128]),
+    tiles=st.integers(1, 4),
+    block_rows=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SETTINGS
+def test_l2_batch_matches_ref(d, tiles, block_rows, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, d)
+    block = rand(rng, tiles * block_rows, d)
+    got = l2k.l2_batch(q, block, block_rows=block_rows)
+    want = ref.l2_batch_ref(q, block)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_l2_batch_aot_shape():
+    """Exact AOT lowering shape: D=128, R=256."""
+    rng = np.random.default_rng(0)
+    q = rand(rng, 128, scale=100.0)  # SIFT-scale magnitudes
+    block = rand(rng, 256, 128, scale=100.0)
+    got = l2k.l2_batch(q, block)
+    want = ref.l2_batch_ref(q, block)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-1)
+
+
+def test_l2_batch_zero_query():
+    block = jnp.ones((128, 16), jnp.float32)
+    got = l2k.l2_batch(jnp.zeros(16, jnp.float32), block)
+    np.testing.assert_allclose(got, jnp.full((128,), 16.0), rtol=1e-6)
+
+
+def test_l2_batch_identical_rows_zero_distance():
+    rng = np.random.default_rng(3)
+    q = rand(rng, 32)
+    block = jnp.tile(q[None, :], (128, 1))
+    got = l2k.l2_batch(q, block)
+    np.testing.assert_allclose(got, jnp.zeros(128), atol=1e-3)
+
+
+def test_l2_batch_rejects_ragged_rows():
+    with pytest.raises(AssertionError):
+        l2k.l2_batch(jnp.zeros(8), jnp.zeros((100, 8)))  # 100 % 128 != 0
+
+
+# ------------------------------------------------------------------ pq_adc
+
+@hypothesis.given(
+    m=st.sampled_from([4, 8, 16]),
+    k=st.sampled_from([16, 256]),
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SETTINGS
+def test_pq_adc_matches_ref(m, k, tiles, seed):
+    rng = np.random.default_rng(seed)
+    n = tiles * adck.DEFAULT_BLOCK_ROWS
+    lut = rand(rng, m, k, scale=10.0)
+    codes_i = rng.integers(0, k, size=(n, m))
+    got = adck.pq_adc(lut, jnp.asarray(codes_i, jnp.float32))
+    want = ref.pq_adc_ref(lut, jnp.asarray(codes_i, jnp.int32))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_pq_adc_aot_shape():
+    rng = np.random.default_rng(1)
+    lut = rand(rng, 16, 256, scale=100.0)
+    codes = rng.integers(0, 256, size=(256, 16))
+    got = adck.pq_adc(lut, jnp.asarray(codes, jnp.float32))
+    want = ref.pq_adc_ref(lut, jnp.asarray(codes, jnp.int32))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_pq_adc_uniform_lut_gives_m_times_value():
+    m, k, n = 8, 256, 128
+    lut = jnp.full((m, k), 2.5, jnp.float32)
+    codes = jnp.zeros((n, m), jnp.float32)
+    got = adck.pq_adc(lut, codes)
+    np.testing.assert_allclose(got, jnp.full((n,), 20.0), rtol=1e-6)
+
+
+# ------------------------------------------------------------- hash_encode
+
+@hypothesis.given(
+    d=st.sampled_from([8, 96, 128]),
+    h=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SETTINGS
+def test_hash_encode_matches_ref(d, h, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, d)
+    planes = rand(rng, h, d)
+    got = hk.hash_encode(q, planes)
+    want = ref.hash_encode_ref(q, planes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hash_encode_bits_are_binary():
+    rng = np.random.default_rng(2)
+    got = hk.hash_encode(rand(rng, 128), rand(rng, 32, 128))
+    vals = set(np.asarray(got).tolist())
+    assert vals <= {0.0, 1.0}
+
+
+def test_hash_encode_antipodal_queries_flip_all_bits():
+    rng = np.random.default_rng(4)
+    q = rand(rng, 64)
+    planes = rand(rng, 32, 64)
+    a = np.asarray(hk.hash_encode(q, planes))
+    b = np.asarray(hk.hash_encode(-q, planes))
+    # proj != 0 almost surely, so bits must be complementary.
+    np.testing.assert_array_equal(a + b, np.ones(32, np.float32))

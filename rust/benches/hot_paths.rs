@@ -1,0 +1,170 @@
+//! Hot-path microbenchmarks (custom harness — no criterion offline):
+//! distance kernels (native vs XLA/PJRT), PQ ADC, page serde, candidate
+//! set ops, page-store reads. These are the L3 profile targets of the
+//! §Perf pass.
+//!
+//! ```bash
+//! cargo bench --offline  # runs both bench targets
+//! ```
+
+use pageann::bench::{ns_per_op, time_loop};
+use pageann::dataset::{DatasetKind, Dtype, SynthSpec};
+use pageann::distance::{BatchScanner, NativeBatch, XlaBatch};
+use pageann::io::open_auto;
+use pageann::layout::{PageRef, PageWriter};
+use pageann::pq::{PqCodebook, PqEncoder};
+use pageann::search::CandidateSet;
+use pageann::util::XorShift;
+
+fn main() {
+    println!("# hot-path microbenchmarks");
+    bench_distance();
+    bench_pq();
+    bench_page_serde();
+    bench_candidates();
+    bench_store();
+    bench_xla();
+}
+
+fn bench_distance() {
+    let mut rng = XorShift::new(1);
+    let dim = 128;
+    let rows = 256;
+    let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+    let block_u8: Vec<u8> = (0..rows * dim).map(|_| rng.next_below(256) as u8).collect();
+    let mut out = vec![0f32; rows];
+    let (mean, _) = time_loop(20, 200, || {
+        NativeBatch.scan(&q, &block_u8, Dtype::U8, rows, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "native_l2_u8_d128          {:>10.1} ns/vec ({} vecs/scan)",
+        ns_per_op(mean, rows),
+        rows
+    );
+
+    let block_f32: Vec<u8> = (0..rows * dim)
+        .flat_map(|_| rng.next_gaussian().to_le_bytes())
+        .collect();
+    let (mean, _) = time_loop(20, 200, || {
+        NativeBatch.scan(&q, &block_f32, Dtype::F32, rows, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!("native_l2_f32_d128         {:>10.1} ns/vec", ns_per_op(mean, rows));
+}
+
+fn bench_pq() {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 4000).with_dim(128);
+    let base = spec.generate(2);
+    let cb = PqCodebook::train(&base, 16, 8, 3);
+    let enc = PqEncoder::new(&cb);
+    let q = base.get_f32(0);
+
+    let (mean, _) = time_loop(3, 30, || {
+        std::hint::black_box(cb.build_lut(&q));
+    });
+    println!("pq_lut_build_m16_d128      {:>10.1} ns/query", ns_per_op(mean, 1));
+
+    let lut = cb.build_lut(&q);
+    let codes: Vec<Vec<u8>> = (0..512).map(|i| enc.encode(&base.get_f32(i))).collect();
+    let (mean, _) = time_loop(20, 500, || {
+        let mut s = 0f32;
+        for c in &codes {
+            s += lut.distance(c);
+        }
+        std::hint::black_box(s);
+    });
+    println!("pq_adc_distance_m16        {:>10.1} ns/code", ns_per_op(mean, codes.len()));
+}
+
+fn bench_page_serde() {
+    let stride = 128;
+    let m = 16;
+    let vec_data: Vec<Vec<u8>> = (0..25).map(|i| vec![i as u8; stride]).collect();
+    let code = vec![7u8; m];
+    let w = PageWriter {
+        page_size: 4096,
+        vec_stride: stride,
+        pq_m: m,
+        vectors: vec_data.iter().enumerate().map(|(i, v)| (i as u32, v.as_slice())).collect(),
+        neighbors: (0..24).map(|j| (j, Some(code.as_slice()))).collect(),
+    };
+    let mut buf = vec![0u8; 4096];
+    let (mean, _) = time_loop(100, 2000, || {
+        w.serialize_into(&mut buf).unwrap();
+        std::hint::black_box(&buf);
+    });
+    println!("page_serialize_4k          {:>10.1} ns/page", ns_per_op(mean, 1));
+
+    let (mean, _) = time_loop(100, 5000, || {
+        let p = PageRef::parse(&buf, stride, m).unwrap();
+        let mut acc = 0u64;
+        for j in 0..p.n_nbrs() {
+            acc += p.nbr_id(j) as u64;
+            if let Some(c) = p.nbr_code(j) {
+                acc += c[0] as u64;
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    println!("page_parse_scan_nbrs       {:>10.1} ns/page", ns_per_op(mean, 1));
+}
+
+fn bench_candidates() {
+    let mut rng = XorShift::new(5);
+    let dists: Vec<f32> = (0..4096).map(|_| rng.next_f32()).collect();
+    let (mean, _) = time_loop(20, 500, || {
+        let mut c = CandidateSet::new(128);
+        for (i, &d) in dists.iter().enumerate() {
+            c.push(d, i as u32);
+        }
+        while c.pop_closest_unvisited().is_some() {}
+        std::hint::black_box(&c);
+    });
+    println!("candidate_set_4096_pushes  {:>10.1} ns/push", ns_per_op(mean, dists.len()));
+}
+
+fn bench_store() {
+    let path = std::env::temp_dir().join(format!("pageann-bench-store-{}", std::process::id()));
+    let n_pages = 2048;
+    let data = vec![0xABu8; 4096 * n_pages];
+    std::fs::write(&path, &data).unwrap();
+    let store = open_auto(&path, 4096).unwrap();
+    let mut rng = XorShift::new(9);
+    let mut bufs: Vec<Vec<u8>> = (0..5).map(|_| vec![0u8; 4096]).collect();
+    let (mean, _) = time_loop(50, 500, || {
+        let ids: Vec<u32> = (0..5).map(|_| rng.next_below(n_pages) as u32).collect();
+        store.read_pages(&ids, &mut bufs).unwrap();
+        std::hint::black_box(&bufs);
+    });
+    println!(
+        "{}_batch5_read_4k    {:>10.1} ns/page",
+        store.name(),
+        ns_per_op(mean, 5)
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+fn bench_xla() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(arts) = pageann::runtime::ArtifactSet::load(&dir) else {
+        println!("xla_l2_batch               SKIPPED (run `make artifacts`)");
+        return;
+    };
+    let rt = pageann::runtime::XlaRuntime::cpu().unwrap();
+    let xla = XlaBatch::load(&rt, &arts, 128, 1).unwrap();
+    let rows = xla.rows();
+    let mut rng = XorShift::new(11);
+    let q: Vec<f32> = (0..128).map(|_| rng.next_gaussian()).collect();
+    let block: Vec<u8> = (0..rows * 128).map(|_| rng.next_below(256) as u8).collect();
+    let mut out = vec![0f32; rows];
+    let (mean, _) = time_loop(5, 50, || {
+        xla.scan(&q, &block, Dtype::U8, rows, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "xla_l2_batch_d128          {:>10.1} ns/vec ({} vecs/dispatch; includes PJRT boundary)",
+        ns_per_op(mean, rows),
+        rows
+    );
+}

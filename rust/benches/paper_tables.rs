@@ -1,0 +1,53 @@
+//! `cargo bench` entry for the paper's tables/figures.
+//!
+//! Default: a representative subset at smoke scale (`xs`) sized to finish
+//! in ~20 minutes on a 1-core host. Override with
+//! `PAGEANN_BENCH_EXPERIMENTS=all` (or a comma list of ids) and
+//! `PAGEANN_BENCH_SCALE={xs,s,m}`. Full-fidelity runs:
+//! `cargo run --release --example paper_experiments -- all --scale s`.
+
+use pageann::bench::{list_experiments, run_experiment, ExperimentCtx, Scale};
+use std::path::PathBuf;
+
+/// Representative subset: read amplification (tab1), breakdown (fig2),
+/// the headline op-point table (tab3), thread scaling (fig12), and two
+/// PageANN-internal ablations — together they touch every scheme, both
+/// traversal granularities, and the §4.3 regimes.
+const DEFAULT_IDS: [&str; 6] = ["tab1", "fig2", "tab3", "fig12", "ablB", "ablD"];
+
+fn main() {
+    let scale = match std::env::var("PAGEANN_BENCH_SCALE").as_deref() {
+        Ok("s") => Scale::S,
+        Ok("m") => Scale::M,
+        _ => Scale::Xs,
+    };
+    let ids_env = std::env::var("PAGEANN_BENCH_EXPERIMENTS").unwrap_or_default();
+    let ids: Vec<String> = if ids_env == "all" {
+        list_experiments().iter().map(|s| s.to_string()).collect()
+    } else if !ids_env.is_empty() {
+        ids_env.split(',').map(|s| s.trim().to_string()).collect()
+    } else {
+        DEFAULT_IDS.iter().map(|s| s.to_string()).collect()
+    };
+    let mut ctx = ExperimentCtx::new(
+        scale,
+        &PathBuf::from("target/experiments-bench"),
+        &PathBuf::from("results/bench"),
+    )
+    .expect("ctx");
+
+    let t0 = std::time::Instant::now();
+    for id in &ids {
+        let t = std::time::Instant::now();
+        match run_experiment(&mut ctx, id) {
+            Ok(tables) => {
+                for table in tables {
+                    println!("{}", table.render());
+                }
+                eprintln!("[bench] {id} took {:.1}s", t.elapsed().as_secs_f64());
+            }
+            Err(e) => eprintln!("[bench] {id} FAILED: {e:#}"),
+        }
+    }
+    eprintln!("[bench] suite total {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,263 @@
+//! DiskANN-like and PipeANN-like baselines.
+//!
+//! Both traverse the vector-level Vamana graph with node records on disk
+//! and all PQ codes in memory (the DiskANN minimum-memory configuration).
+//! Each beam expansion reads the SSD pages containing the popped nodes but
+//! consumes only those nodes' records — the read-amplification behaviour of
+//! Table 1.
+//!
+//! PipeANN-like models the OSDI'25 pipelined best-first search: the same
+//! I/O volume, but submission of the next beam overlaps the current beam's
+//! distance computations. On the simulated SSD this shows up as higher
+//! in-flight parallelism (wider batches), trading per-query latency for
+//! queue pressure — matching the paper's observation that PipeANN needs
+//! more memory/queue resources and degrades at high thread counts.
+
+use super::record::RecordLayout;
+use crate::dataset::{Dtype, VectorSet};
+use crate::distance::l2sq_query;
+use crate::engine::AnnSystem;
+use crate::io::{open_auto, PageStore, SimSsdStore, SsdModel};
+use crate::metrics::QueryStats;
+use crate::pq::{PqCodebook, PqEncoder};
+use crate::search::CandidateSet;
+use crate::util::WriteExt;
+use crate::vamana::{VamanaGraph, VamanaParams};
+use crate::Result;
+use std::cell::RefCell;
+use std::path::Path;
+use std::time::Instant;
+
+/// The on-disk DiskANN index plus its resident state.
+pub struct DiskAnnIndex {
+    pub layout: RecordLayout,
+    pub n_vectors: usize,
+    pub dtype: Dtype,
+    pub dim: usize,
+    pub medoid: u32,
+    pub pq: PqCodebook,
+    /// All PQ codes, dense (n × m) — DiskANN's resident memory.
+    pub codes: Vec<u8>,
+    pub dir: std::path::PathBuf,
+}
+
+impl DiskAnnIndex {
+    /// Build: Vamana + PQ + record file, written into `dir`.
+    pub fn build(
+        base: &VectorSet,
+        vamana: &VamanaParams,
+        pq_m: usize,
+        page_size: usize,
+        dir: &Path,
+    ) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let graph = VamanaGraph::build(base, vamana);
+        let pq = PqCodebook::train(base, pq_m, 12, 0xD15C);
+        let codes = PqEncoder::new(&pq).encode_all(base, vamana.nthreads);
+        let layout = RecordLayout {
+            vec_stride: base.dim() * base.dtype().size_bytes(),
+            max_degree: vamana.r,
+            page_size,
+        };
+        layout.write_file(&dir.join("records.bin"), base, &graph.adj)?;
+        // Persist PQ + meta for completeness (reopened in experiments).
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join("pq.bin"))?);
+            pq.write_to(&mut f)?;
+        }
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join("meta.bin"))?);
+            f.write_u32(base.len() as u32)?;
+            f.write_u32(graph.medoid)?;
+        }
+        Ok(Self {
+            layout,
+            n_vectors: base.len(),
+            dtype: base.dtype(),
+            dim: base.dim(),
+            medoid: graph.medoid,
+            pq,
+            codes,
+            dir: dir.to_path_buf(),
+        })
+    }
+}
+
+/// Shared search core for DiskANN-like and PipeANN-like.
+struct BeamSearcher {
+    index: DiskAnnIndex,
+    store: Box<dyn PageStore>,
+    /// Beam width (pages in flight per round).
+    beam: usize,
+    /// Dedup pages within a round only (DiskANN re-reads across rounds).
+    name: &'static str,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<BeamScratch> = RefCell::new(BeamScratch::default());
+}
+
+#[derive(Default)]
+struct BeamScratch {
+    visited: std::collections::HashSet<u32>,
+    bufs: Vec<Vec<u8>>,
+    results: Vec<(f32, u32)>,
+}
+
+impl BeamSearcher {
+    fn search(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        SCRATCH.with(|s| {
+            let mut scratch = s.borrow_mut();
+            self.search_inner(query, k, l, stats, &mut scratch)
+        })
+    }
+
+    fn search_inner(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+        scratch: &mut BeamScratch,
+    ) -> Vec<u32> {
+        let idx = &self.index;
+        let lut = idx.pq.build_lut(query);
+        let m = idx.pq.m;
+        let mut cands = CandidateSet::new(l);
+        scratch.visited.clear();
+        scratch.results.clear();
+
+        let entry = idx.medoid;
+        scratch.visited.insert(entry);
+        cands.push(lut.distance(&idx.codes[entry as usize * m..(entry as usize + 1) * m]), entry);
+        stats.approx_dists += 1;
+
+        let mut nodes: Vec<u32> = Vec::with_capacity(self.beam);
+        let mut pages: Vec<u32> = Vec::with_capacity(self.beam);
+        loop {
+            nodes.clear();
+            pages.clear();
+            while nodes.len() < self.beam {
+                let Some(v) = cands.pop_closest_unvisited() else { break };
+                nodes.push(v);
+                let p = idx.layout.page_of(v);
+                if !pages.contains(&p) {
+                    pages.push(p);
+                }
+            }
+            if nodes.is_empty() {
+                break;
+            }
+            stats.hops += 1;
+
+            let t_io = Instant::now();
+            if scratch.bufs.len() < pages.len() {
+                scratch
+                    .bufs
+                    .resize_with(pages.len(), || vec![0u8; idx.layout.page_size]);
+            }
+            self.store
+                .read_pages(&pages, &mut scratch.bufs[..pages.len()])
+                .expect("read failed");
+            stats.ios += pages.len() as u64;
+            stats.bytes_read += (pages.len() * idx.layout.page_size) as u64;
+            stats.io_time += t_io.elapsed();
+
+            let t_cpu = Instant::now();
+            for &v in &nodes {
+                let p = idx.layout.page_of(v);
+                let slot = pages.iter().position(|&x| x == p).unwrap();
+                let rec = idx.layout.parse(&scratch.bufs[slot], v);
+                stats.bytes_used += rec.used_bytes() as u64;
+                // Exact distance on the full vector.
+                let d = l2sq_query(query, crate::dataset::VectorView { bytes: rec.vector(), dtype: idx.dtype });
+                stats.exact_dists += 1;
+                scratch.results.push((d, v));
+                // Neighbors by PQ distance.
+                for j in 0..rec.n_nbrs() {
+                    let nb = rec.nbr(j);
+                    if !scratch.visited.insert(nb) {
+                        continue;
+                    }
+                    let dd = lut.distance(&idx.codes[nb as usize * m..(nb as usize + 1) * m]);
+                    stats.approx_dists += 1;
+                    cands.push(dd, nb);
+                }
+            }
+            stats.compute_time += t_cpu.elapsed();
+        }
+
+        scratch.results.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        scratch.results.dedup_by_key(|r| r.1);
+        scratch.results.iter().take(k).map(|&(_, id)| id).collect()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // Resident: all PQ codes + codebooks.
+        self.index.codes.len() + self.index.pq.centroids.len() * 4
+    }
+}
+
+/// DiskANN-like: beam width = the paper's I/O batch (5).
+pub struct DiskAnnLike {
+    core: BeamSearcher,
+}
+
+impl DiskAnnLike {
+    pub fn open(index: DiskAnnIndex, beam: usize) -> Result<Self> {
+        let store = open_auto(&index.dir.join("records.bin"), index.layout.page_size)?;
+        Ok(Self { core: BeamSearcher { index, store, beam, name: "DiskANN" } })
+    }
+
+    /// Wrap the store in the simulated-SSD timing model.
+    pub fn with_sim_ssd(mut self, model: SsdModel) -> Self {
+        let store = std::mem::replace(&mut self.core.store, Box::new(super::diskann_null_store()));
+        self.core.store = Box::new(SimSsdStore::new(store, model));
+        self
+    }
+}
+
+/// PipeANN-like: double beam width models pipelined submission (same I/O
+/// count per query, more in-flight).
+pub struct PipeAnnLike {
+    core: BeamSearcher,
+}
+
+impl PipeAnnLike {
+    pub fn open(index: DiskAnnIndex, beam: usize) -> Result<Self> {
+        let store = open_auto(&index.dir.join("records.bin"), index.layout.page_size)?;
+        Ok(Self { core: BeamSearcher { index, store, beam: beam * 2, name: "PipeANN" } })
+    }
+
+    pub fn with_sim_ssd(mut self, model: SsdModel) -> Self {
+        let store = std::mem::replace(&mut self.core.store, Box::new(super::diskann_null_store()));
+        self.core.store = Box::new(SimSsdStore::new(store, model));
+        self
+    }
+}
+
+impl AnnSystem for DiskAnnLike {
+    fn name(&self) -> String {
+        self.core.name.to_string()
+    }
+    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        self.core.search(query, k, l, stats)
+    }
+    fn memory_bytes(&self) -> usize {
+        self.core.memory_bytes()
+    }
+}
+
+impl AnnSystem for PipeAnnLike {
+    fn name(&self) -> String {
+        self.core.name.to_string()
+    }
+    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        self.core.search(query, k, l, stats)
+    }
+    fn memory_bytes(&self) -> usize {
+        // PipeANN additionally pins in-flight buffers (its open-source setup
+        // requires a larger resident set — paper Table 4).
+        self.core.memory_bytes() * 2
+    }
+}

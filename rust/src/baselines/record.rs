@@ -1,0 +1,180 @@
+//! Vector-node disk records: the DiskANN-family on-disk format.
+//!
+//! One record per vector: `[vector bytes][u16 n_nbrs][u32 × R nbr ids]`,
+//! fixed stride `record_size`, packed `nodes_per_page` to an SSD page.
+//! DiskANN reads the page containing a node and uses only that record —
+//! the read-amplification source PageANN eliminates.
+
+use crate::dataset::VectorSet;
+use crate::Result;
+
+/// Geometry of a record file.
+#[derive(Debug, Clone, Copy)]
+pub struct RecordLayout {
+    pub vec_stride: usize,
+    pub max_degree: usize,
+    pub page_size: usize,
+}
+
+impl RecordLayout {
+    pub fn record_size(&self) -> usize {
+        self.vec_stride + 2 + 4 * self.max_degree
+    }
+
+    pub fn nodes_per_page(&self) -> usize {
+        (self.page_size / self.record_size()).max(1)
+    }
+
+    #[inline]
+    pub fn page_of(&self, node: u32) -> u32 {
+        node / self.nodes_per_page() as u32
+    }
+
+    #[inline]
+    pub fn offset_in_page(&self, node: u32) -> usize {
+        (node as usize % self.nodes_per_page()) * self.record_size()
+    }
+
+    pub fn n_pages(&self, n_nodes: usize) -> usize {
+        crate::util::div_ceil(n_nodes, self.nodes_per_page())
+    }
+
+    /// Serialize the whole record file (node id = vector id, identity
+    /// order; Starling passes a reordered adjacency+set instead).
+    pub fn write_file(
+        &self,
+        path: &std::path::Path,
+        base: &VectorSet,
+        adj: &[Vec<u32>],
+    ) -> Result<()> {
+        use std::io::Write;
+        anyhow::ensure!(base.len() == adj.len());
+        anyhow::ensure!(self.record_size() * self.nodes_per_page() <= self.page_size || self.nodes_per_page() == 1);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let npp = self.nodes_per_page();
+        let mut page = vec![0u8; self.page_size];
+        let n_pages = self.n_pages(base.len());
+        for p in 0..n_pages {
+            page.fill(0);
+            for s in 0..npp {
+                let node = p * npp + s;
+                if node >= base.len() {
+                    break;
+                }
+                let off = s * self.record_size();
+                let rec = &mut page[off..off + self.record_size()];
+                rec[..self.vec_stride].copy_from_slice(base.raw(node));
+                let nbrs = &adj[node];
+                let n = nbrs.len().min(self.max_degree);
+                rec[self.vec_stride..self.vec_stride + 2]
+                    .copy_from_slice(&(n as u16).to_le_bytes());
+                for (j, &nb) in nbrs.iter().take(n).enumerate() {
+                    let o = self.vec_stride + 2 + j * 4;
+                    rec[o..o + 4].copy_from_slice(&nb.to_le_bytes());
+                }
+            }
+            f.write_all(&page)?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Parse the record of `node` out of its page buffer.
+    pub fn parse<'a>(&self, page: &'a [u8], node: u32) -> NodeRecord<'a> {
+        let off = self.offset_in_page(node);
+        let rec = &page[off..off + self.record_size()];
+        let n = u16::from_le_bytes([rec[self.vec_stride], rec[self.vec_stride + 1]]) as usize;
+        NodeRecord { layout: *self, rec, n_nbrs: n.min(self.max_degree) }
+    }
+
+    /// Parse the record at slot `s` of a page (block scans).
+    pub fn parse_slot<'a>(&self, page: &'a [u8], slot: usize) -> NodeRecord<'a> {
+        let off = slot * self.record_size();
+        let rec = &page[off..off + self.record_size()];
+        let n = u16::from_le_bytes([rec[self.vec_stride], rec[self.vec_stride + 1]]) as usize;
+        NodeRecord { layout: *self, rec, n_nbrs: n.min(self.max_degree) }
+    }
+}
+
+/// Zero-copy view of one node record.
+pub struct NodeRecord<'a> {
+    layout: RecordLayout,
+    rec: &'a [u8],
+    n_nbrs: usize,
+}
+
+impl<'a> NodeRecord<'a> {
+    pub fn vector(&self) -> &'a [u8] {
+        &self.rec[..self.layout.vec_stride]
+    }
+
+    pub fn n_nbrs(&self) -> usize {
+        self.n_nbrs
+    }
+
+    pub fn nbr(&self, j: usize) -> u32 {
+        let o = self.layout.vec_stride + 2 + j * 4;
+        u32::from_le_bytes([self.rec[o], self.rec[o + 1], self.rec[o + 2], self.rec[o + 3]])
+    }
+
+    /// Bytes of this record that are meaningful (read-amp accounting).
+    pub fn used_bytes(&self) -> usize {
+        self.layout.vec_stride + 2 + 4 * self.n_nbrs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Dtype;
+
+    #[test]
+    fn geometry() {
+        let l = RecordLayout { vec_stride: 128, max_degree: 24, page_size: 4096 };
+        assert_eq!(l.record_size(), 128 + 2 + 96);
+        assert_eq!(l.nodes_per_page(), 4096 / 226);
+        assert_eq!(l.page_of(0), 0);
+        assert_eq!(l.page_of(l.nodes_per_page() as u32), 1);
+        assert_eq!(l.n_pages(100), crate::util::div_ceil(100, l.nodes_per_page()));
+    }
+
+    #[test]
+    fn write_and_parse_roundtrip() {
+        let mut base = VectorSet::new(Dtype::U8, 8, 10);
+        for i in 0..10 {
+            base.set_from_f32(i, &[i as f32; 8]);
+        }
+        let adj: Vec<Vec<u32>> = (0..10u32).map(|i| vec![(i + 1) % 10, (i + 2) % 10]).collect();
+        let l = RecordLayout { vec_stride: 8, max_degree: 4, page_size: 128 };
+        let path = std::env::temp_dir().join(format!("pageann-rec-{}", std::process::id()));
+        l.write_file(&path, &base, &adj).unwrap();
+
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len() % 128, 0);
+        for node in [0u32, 3, 9] {
+            let p = l.page_of(node) as usize;
+            let page = &bytes[p * 128..(p + 1) * 128];
+            let rec = l.parse(page, node);
+            assert_eq!(rec.vector()[0], node as u8);
+            assert_eq!(rec.n_nbrs(), 2);
+            assert_eq!(rec.nbr(0), (node + 1) % 10);
+            assert_eq!(rec.nbr(1), (node + 2) % 10);
+            assert!(rec.used_bytes() <= l.record_size());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn degree_overflow_truncated() {
+        let mut base = VectorSet::new(Dtype::U8, 4, 2);
+        base.set_from_f32(0, &[1.0; 4]);
+        let adj = vec![vec![1u32; 10], vec![0u32]];
+        let l = RecordLayout { vec_stride: 4, max_degree: 3, page_size: 64 };
+        let path = std::env::temp_dir().join(format!("pageann-rec2-{}", std::process::id()));
+        l.write_file(&path, &base, &adj).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let rec = l.parse(&bytes[..64], 0);
+        assert_eq!(rec.n_nbrs(), 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

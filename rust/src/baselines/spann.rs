@@ -1,0 +1,234 @@
+//! SPANN-like baseline (NeurIPS'21): memory-resident cluster heads +
+//! disk-resident posting lists.
+//!
+//! Build: k-means picks `n/target_posting` heads; every vector joins the
+//! posting lists of its `dup` closest heads (SPANN's duplication knob,
+//! tuned in §6.1 to match disk overhead). Posting lists are page-aligned on
+//! disk. Search: rank heads in memory, read the `nprobe = l` closest
+//! postings (whole lists — all I/O issued *after* in-memory traversal,
+//! SPANN's signature), scan exactly.
+//!
+//! Memory: full head vectors + head index — the ≥30%-memory-ratio floor of
+//! Fig. 1/Table 4.
+
+use crate::dataset::{VectorSet, VectorView};
+use crate::distance::l2sq_query;
+use crate::engine::AnnSystem;
+use crate::io::{open_auto, PageStore, SimSsdStore, SsdModel};
+use crate::metrics::QueryStats;
+use crate::pq::kmeans;
+use crate::Result;
+use std::cell::RefCell;
+use std::path::Path;
+use std::time::Instant;
+
+pub struct SpannLike {
+    /// Head vectors (f32, flat) — in memory.
+    heads: Vec<f32>,
+    dim: usize,
+    n_heads: usize,
+    /// Per head: (first page, #pages, #vectors).
+    postings: Vec<(u32, u32, u32)>,
+    store: Box<dyn PageStore>,
+    page_size: usize,
+    dtype: crate::dataset::Dtype,
+    vec_stride: usize,
+    /// Vectors per page within posting lists.
+    per_page: usize,
+    /// Resident bytes (heads + maps) for memory accounting.
+    resident_bytes: usize,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+#[derive(Default)]
+struct Scratch {
+    bufs: Vec<Vec<u8>>,
+    results: Vec<(f32, u32)>,
+}
+
+impl SpannLike {
+    /// Build with `target_posting` vectors per head and duplication factor
+    /// `dup` (≥1.0; 1.5 ≈ every other vector in two postings).
+    pub fn build(
+        base: &VectorSet,
+        target_posting: usize,
+        dup: f64,
+        page_size: usize,
+        dir: &Path,
+        _nthreads: usize,
+    ) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let n = base.len();
+        let dim = base.dim();
+        let n_heads = (n / target_posting.max(1)).clamp(1, n);
+        // Train heads on f32 rows.
+        let mut rows = vec![0f32; n * dim];
+        for i in 0..n {
+            base.decode_into(i, &mut rows[i * dim..(i + 1) * dim]);
+        }
+        let km = kmeans(&rows, dim, n_heads, 10, 0x59A0);
+
+        // Assignment with duplication: every vector to its nearest head;
+        // a `dup-1` fraction also to the second nearest.
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); km.k];
+        let extra_frac = (dup - 1.0).clamp(0.0, 1.0);
+        let mut rng = crate::util::XorShift::new(0x59A1);
+        for i in 0..n {
+            let v = &rows[i * dim..(i + 1) * dim];
+            let (mut b1, mut d1, mut b2, mut d2) = (0usize, f32::INFINITY, 0usize, f32::INFINITY);
+            for c in 0..km.k {
+                let d = crate::distance::l2sq_f32(v, km.centroid(c));
+                if d < d1 {
+                    b2 = b1;
+                    d2 = d1;
+                    b1 = c;
+                    d1 = d;
+                } else if d < d2 {
+                    b2 = c;
+                    d2 = d;
+                }
+            }
+            lists[b1].push(i as u32);
+            if km.k > 1 && rng.next_f64() < extra_frac {
+                lists[b2].push(i as u32);
+            }
+        }
+
+        // Posting file: each list page-aligned; page = [u16 count][entries:
+        // u32 id + vector bytes].
+        let vec_stride = base.dim() * base.dtype().size_bytes();
+        let entry = 4 + vec_stride;
+        let per_page = ((page_size - 2) / entry).max(1);
+        let mut postings = Vec::with_capacity(km.k);
+        let mut file = Vec::new();
+        for list in &lists {
+            let first_page = (file.len() / page_size) as u32;
+            let n_pages = crate::util::div_ceil(list.len().max(1), per_page) as u32;
+            for chunk in list.chunks(per_page.max(1)) {
+                let mut page = vec![0u8; page_size];
+                page[..2].copy_from_slice(&(chunk.len() as u16).to_le_bytes());
+                for (s, &id) in chunk.iter().enumerate() {
+                    let off = 2 + s * entry;
+                    page[off..off + 4].copy_from_slice(&id.to_le_bytes());
+                    page[off + 4..off + 4 + vec_stride].copy_from_slice(base.raw(id as usize));
+                }
+                file.extend_from_slice(&page);
+            }
+            if list.is_empty() {
+                file.extend_from_slice(&vec![0u8; page_size]);
+            }
+            postings.push((first_page, n_pages, list.len() as u32));
+        }
+        std::fs::write(dir.join("postings.bin"), &file)?;
+
+        let resident_bytes = km.centroids.len() * 4 + postings.len() * 12 + n * 4 / 10;
+        let store = open_auto(&dir.join("postings.bin"), page_size)?;
+        Ok(Self {
+            heads: km.centroids,
+            dim,
+            n_heads: km.k,
+            postings,
+            store,
+            page_size,
+            dtype: base.dtype(),
+            vec_stride,
+            per_page,
+            resident_bytes,
+        })
+    }
+
+    pub fn with_sim_ssd(mut self, model: SsdModel) -> Self {
+        let inner = std::mem::replace(&mut self.store, Box::new(super::diskann_null_store()));
+        self.store = Box::new(SimSsdStore::new(inner, model));
+        self
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+}
+
+impl AnnSystem for SpannLike {
+    fn name(&self) -> String {
+        "SPANN".to_string()
+    }
+
+    /// `l` plays the role of `nprobe` (number of posting lists visited) —
+    /// the same recall knob semantics as the graph schemes' search list.
+    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        SCRATCH.with(|s| self.search_inner(query, k, l, stats, &mut s.borrow_mut()))
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+}
+
+impl SpannLike {
+    fn search_inner(
+        &self,
+        query: &[f32],
+        k: usize,
+        nprobe: usize,
+        stats: &mut QueryStats,
+        scratch: &mut Scratch,
+    ) -> Vec<u32> {
+        // In-memory head ranking (all I/O happens after, like SPANN).
+        let t_cpu = Instant::now();
+        let mut heads: Vec<(f32, u32)> = (0..self.n_heads)
+            .map(|c| {
+                stats.approx_dists += 1;
+                (
+                    crate::distance::l2sq_f32(query, &self.heads[c * self.dim..(c + 1) * self.dim]),
+                    c as u32,
+                )
+            })
+            .collect();
+        let nprobe = nprobe.clamp(1, self.n_heads);
+        heads.select_nth_unstable_by(nprobe - 1, |a, b| a.0.total_cmp(&b.0));
+        heads.truncate(nprobe);
+        stats.compute_time += t_cpu.elapsed();
+        stats.hops = 1; // single traversal phase
+
+        // Gather pages of the chosen postings.
+        let mut pages: Vec<u32> = Vec::new();
+        for &(_, h) in &heads {
+            let (first, np, _) = self.postings[h as usize];
+            for p in first..first + np {
+                pages.push(p);
+            }
+        }
+        let t_io = Instant::now();
+        if scratch.bufs.len() < pages.len() {
+            scratch.bufs.resize_with(pages.len(), || vec![0u8; self.page_size]);
+        }
+        self.store.read_pages(&pages, &mut scratch.bufs[..pages.len()]).expect("read failed");
+        stats.ios += pages.len() as u64;
+        stats.bytes_read += (pages.len() * self.page_size) as u64;
+        stats.io_time += t_io.elapsed();
+
+        // Exact scan of the postings.
+        let t_cpu = Instant::now();
+        scratch.results.clear();
+        let entry = 4 + self.vec_stride;
+        for buf in scratch.bufs[..pages.len()].iter() {
+            let count = u16::from_le_bytes([buf[0], buf[1]]) as usize;
+            stats.bytes_used += (2 + count * entry) as u64;
+            for s in 0..count.min(self.per_page) {
+                let off = 2 + s * entry;
+                let id = u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]]);
+                let vec_bytes = &buf[off + 4..off + 4 + self.vec_stride];
+                let d = l2sq_query(query, VectorView { bytes: vec_bytes, dtype: self.dtype });
+                stats.exact_dists += 1;
+                scratch.results.push((d, id));
+            }
+        }
+        scratch.results.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        scratch.results.dedup_by_key(|r| r.1);
+        stats.compute_time += t_cpu.elapsed();
+        scratch.results.iter().take(k).map(|&(_, id)| id).collect()
+    }
+}

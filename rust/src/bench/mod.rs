@@ -1,0 +1,62 @@
+//! Experiment harness: everything needed to regenerate the paper's tables
+//! and figures (DESIGN.md §5 experiment index) without criterion (offline
+//! build).
+
+mod experiments;
+mod schemes;
+mod table;
+
+pub use experiments::{list_experiments, run_experiment, ExperimentCtx, Scale};
+pub use schemes::{instantiate_scheme, SchemeInstance, SchemeKind, ALL_SCHEMES};
+pub use table::{Table, TsvSink};
+
+use std::time::{Duration, Instant};
+
+/// Simple measurement loop: warm up, then time `iters` runs of `f`,
+/// reporting (mean, min) per-iteration wall time. The hot-path benches use
+/// this in place of criterion.
+pub fn time_loop<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (Duration, Duration) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut min = Duration::MAX;
+    let mut total = Duration::ZERO;
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed();
+        total += dt;
+        if dt < min {
+            min = dt;
+        }
+    }
+    (total / iters.max(1) as u32, min)
+}
+
+/// ns/op convenience for the microbench printer.
+pub fn ns_per_op(d: Duration, ops: usize) -> f64 {
+    d.as_nanos() as f64 / ops.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_loop_measures() {
+        let mut count = 0;
+        let (mean, min) = time_loop(2, 5, || {
+            count += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert_eq!(count, 7);
+        assert!(mean >= Duration::from_micros(150));
+        assert!(min <= mean);
+    }
+
+    #[test]
+    fn ns_per_op_math() {
+        assert_eq!(ns_per_op(Duration::from_micros(1), 1000), 1.0);
+        assert!(ns_per_op(Duration::from_secs(1), 0) > 0.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Table formatting + TSV persistence for experiment outputs.
+
+use std::path::Path;
+
+/// A printable results table (paper row/column shape).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Append to a TSV sink (one file per experiment id).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        out.push_str(&self.headers.join("\t"));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Writes tables under `results/<id>.tsv`.
+pub struct TsvSink {
+    dir: std::path::PathBuf,
+}
+
+impl TsvSink {
+    pub fn new(dir: &Path) -> crate::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Self { dir: dir.to_path_buf() })
+    }
+
+    pub fn write(&self, id: &str, table: &Table) -> crate::Result<()> {
+        std::fs::write(self.dir.join(format!("{id}.tsv")), table.to_tsv())?;
+        Ok(())
+    }
+}
+
+/// Numeric formatting shared by all experiments.
+pub fn fmt_f(v: f64, digits: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else if v.is_infinite() {
+        "OOM".to_string()
+    } else {
+        format!("{v:.digits$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_and_tsv_roundtrips() {
+        let mut t = Table::new("Demo", &["scheme", "qps"]);
+        t.row(vec!["PageANN".into(), "2749.36".into()]);
+        t.row(vec!["DiskANN".into(), "1099.62".into()]);
+        let txt = t.render();
+        assert!(txt.contains("Demo"));
+        assert!(txt.contains("PageANN"));
+        let tsv = t.to_tsv();
+        assert_eq!(tsv.lines().count(), 4);
+        assert!(tsv.lines().nth(2).unwrap().starts_with("PageANN\t"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_handles_oom() {
+        assert_eq!(fmt_f(f64::INFINITY, 2), "OOM");
+        assert_eq!(fmt_f(f64::NAN, 2), "-");
+        assert_eq!(fmt_f(1.234, 2), "1.23");
+    }
+
+    #[test]
+    fn sink_writes_file() {
+        let dir = std::env::temp_dir().join(format!("pageann-tsv-{}", std::process::id()));
+        let sink = TsvSink::new(&dir).unwrap();
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]);
+        sink.write("tab1", &t).unwrap();
+        assert!(dir.join("tab1.tsv").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

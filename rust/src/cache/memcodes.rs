@@ -1,0 +1,164 @@
+//! Resident compressed-vector table (memcodes.bin): the query-time half of
+//! the §4.3 memory-disk coordination.
+//!
+//! Two layouts behind one lookup:
+//! * **sparse** — (sorted new-id array, packed codes), O(log n) binary
+//!   search, 4+M bytes/entry; used for OnPage/Hybrid placements where only
+//!   routing samples / hot neighbors are resident.
+//! * **dense** — flat `n_slots × M` array, O(1); used for InMemory
+//!   placement where every valid slot has a code.
+
+use crate::util::ReadExt;
+use crate::Result;
+use std::io::Read;
+use std::path::Path;
+
+pub struct MemCodes {
+    m: usize,
+    repr: Repr,
+}
+
+enum Repr {
+    Sparse { ids: Vec<u32>, codes: Vec<u8> },
+    Dense { codes: Vec<u8> },
+}
+
+impl MemCodes {
+    pub fn empty(m: usize) -> Self {
+        Self { m, repr: Repr::Sparse { ids: Vec::new(), codes: Vec::new() } }
+    }
+
+    /// Load memcodes.bin. Switches to the dense layout when the table
+    /// covers most of the slot space (the InMemory regime).
+    pub fn load(dir: &Path, n_slots: usize) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(dir.join("memcodes.bin"))?);
+        let m = f.read_u32v()? as usize;
+        let n = f.read_u64v()? as usize;
+        anyhow::ensure!(m > 0 && m <= 64, "corrupt memcodes header");
+        let mut ids = Vec::with_capacity(n);
+        let mut codes = vec![0u8; n * m];
+        for i in 0..n {
+            ids.push(f.read_u32v()?);
+            f.read_exact(&mut codes[i * m..(i + 1) * m])?;
+        }
+        anyhow::ensure!(ids.windows(2).all(|w| w[0] < w[1]), "memcodes not sorted");
+        // Densify when ≥ 50% of slots covered: the id array + binary search
+        // would cost more than the padding wastes.
+        if n * 2 >= n_slots && n_slots > 0 {
+            let mut dense = vec![0u8; n_slots * m];
+            for (i, &id) in ids.iter().enumerate() {
+                let id = id as usize;
+                anyhow::ensure!(id < n_slots, "memcode id {id} out of slot range");
+                dense[id * m..(id + 1) * m].copy_from_slice(&codes[i * m..(i + 1) * m]);
+            }
+            Ok(Self { m, repr: Repr::Dense { codes: dense } })
+        } else {
+            Ok(Self { m, repr: Repr::Sparse { ids, codes } })
+        }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Code for `new_id`, if resident.
+    #[inline]
+    pub fn get(&self, new_id: u32) -> Option<&[u8]> {
+        match &self.repr {
+            Repr::Sparse { ids, codes } => {
+                let i = ids.binary_search(&new_id).ok()?;
+                Some(&codes[i * self.m..(i + 1) * self.m])
+            }
+            Repr::Dense { codes } => {
+                let o = new_id as usize * self.m;
+                codes.get(o..o + self.m)
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            Repr::Sparse { ids, .. } => ids.len(),
+            Repr::Dense { codes } => codes.len() / self.m,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.repr, Repr::Dense { .. })
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Sparse { ids, codes } => ids.len() * 4 + codes.len(),
+            Repr::Dense { codes } => codes.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::WriteExt;
+    use std::io::Write;
+
+    fn write_memcodes(dir: &Path, m: usize, entries: &[(u32, Vec<u8>)]) {
+        let mut f = std::fs::File::create(dir.join("memcodes.bin")).unwrap();
+        f.write_u32(m as u32).unwrap();
+        f.write_u64(entries.len() as u64).unwrap();
+        for (id, code) in entries {
+            f.write_u32(*id).unwrap();
+            f.write_all(code).unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("pageann-mc-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn sparse_lookup() {
+        let dir = tmpdir("sparse");
+        write_memcodes(&dir, 2, &[(3, vec![1, 2]), (10, vec![3, 4]), (90, vec![5, 6])]);
+        let mc = MemCodes::load(&dir, 1000).unwrap();
+        assert!(!mc.is_dense());
+        assert_eq!(mc.get(10), Some(&[3u8, 4][..]));
+        assert_eq!(mc.get(11), None);
+        assert_eq!(mc.get(90), Some(&[5u8, 6][..]));
+        assert_eq!(mc.len(), 3);
+        assert!(mc.memory_bytes() > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dense_promotion() {
+        let dir = tmpdir("dense");
+        let entries: Vec<(u32, Vec<u8>)> = (0..8).map(|i| (i, vec![i as u8; 2])).collect();
+        write_memcodes(&dir, 2, &entries);
+        let mc = MemCodes::load(&dir, 10).unwrap(); // 8/10 ≥ 50% → dense
+        assert!(mc.is_dense());
+        assert_eq!(mc.get(5), Some(&[5u8, 5][..]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unsorted_rejected() {
+        let dir = tmpdir("unsorted");
+        write_memcodes(&dir, 2, &[(10, vec![0, 0]), (3, vec![0, 0])]);
+        assert!(MemCodes::load(&dir, 100).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        let mc = MemCodes::empty(4);
+        assert!(mc.is_empty());
+        assert_eq!(mc.get(0), None);
+    }
+}

@@ -1,0 +1,34 @@
+//! In-memory caches: warm-up-driven page cache and the resident
+//! compressed-vector table (paper §4.3).
+
+mod memcodes;
+mod pagecache;
+
+pub use memcodes::MemCodes;
+pub use pagecache::PageCache;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_cache_prefers_hot_pages() {
+        // Frequencies: page 3 hottest, then 1, then others.
+        let freqs = vec![(3u32, 100u64), (1, 50), (0, 5), (2, 1)];
+        let page_size = 128;
+        let fetch = |ids: &[u32], out: &mut [Vec<u8>]| {
+            for (k, &p) in ids.iter().enumerate() {
+                out[k] = vec![p as u8; page_size];
+            }
+            Ok(())
+        };
+        // Budget for exactly two pages.
+        let cache = PageCache::build(&freqs, page_size, 2 * page_size + 1, fetch).unwrap();
+        assert!(cache.get(3).is_some());
+        assert!(cache.get(1).is_some());
+        assert!(cache.get(0).is_none());
+        assert_eq!(cache.get(3).unwrap()[0], 3);
+        assert_eq!(cache.n_pages(), 2);
+        assert!(cache.memory_bytes() >= 2 * page_size);
+    }
+}

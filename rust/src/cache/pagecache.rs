@@ -1,0 +1,62 @@
+//! Warm-up-driven static page cache.
+//!
+//! PageANN runs a warm-up query batch, counts page visit frequencies, and
+//! pins the hottest pages in memory up to the budget (paper §4.3). The
+//! cache is immutable afterwards — no eviction on the query path, so a hit
+//! is a single hash probe.
+
+use crate::Result;
+use std::collections::HashMap;
+
+pub struct PageCache {
+    pages: HashMap<u32, Box<[u8]>>,
+    page_size: usize,
+}
+
+impl PageCache {
+    /// Empty cache (zero budget).
+    pub fn empty(page_size: usize) -> Self {
+        Self { pages: HashMap::new(), page_size }
+    }
+
+    /// Build from `(page_id, frequency)` warm-up counts: hottest pages
+    /// first until `budget_bytes` is exhausted. `fetch` reads page
+    /// contents (usually `PageStore::read_pages`).
+    pub fn build<F>(
+        freqs: &[(u32, u64)],
+        page_size: usize,
+        budget_bytes: usize,
+        fetch: F,
+    ) -> Result<Self>
+    where
+        F: FnOnce(&[u32], &mut [Vec<u8>]) -> Result<()>,
+    {
+        let n_fit = budget_bytes / page_size.max(1);
+        let mut ranked: Vec<(u32, u64)> = freqs.to_vec();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(n_fit);
+        let ids: Vec<u32> = ranked.iter().map(|&(p, _)| p).collect();
+        let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; page_size]).collect();
+        if !ids.is_empty() {
+            fetch(&ids, &mut bufs)?;
+        }
+        let mut pages = HashMap::with_capacity(ids.len());
+        for (id, buf) in ids.into_iter().zip(bufs) {
+            pages.insert(id, buf.into_boxed_slice());
+        }
+        Ok(Self { pages, page_size })
+    }
+
+    #[inline]
+    pub fn get(&self, page_id: u32) -> Option<&[u8]> {
+        self.pages.get(&page_id).map(|b| b.as_ref())
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.pages.len() * (self.page_size + 48) // payload + map overhead
+    }
+}

@@ -1,0 +1,187 @@
+//! fvecs / bvecs / ivecs readers and writers — the interchange formats of
+//! the TEXMEX/BIGANN benchmark suites the paper evaluates on.
+//!
+//! Format: each vector is `[d: i32 little-endian][d elements]`, where
+//! elements are f32 (fvecs), u8 (bvecs) or i32 (ivecs).
+
+use super::types::{Dtype, VectorSet};
+use crate::util::{ReadExt, WriteExt};
+use crate::Result;
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+
+/// Read an `.fvecs` file into an f32 [`VectorSet`].
+pub fn read_fvecs(path: &Path) -> Result<VectorSet> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut rows: Vec<f32> = Vec::new();
+    let mut dim: Option<usize> = None;
+    loop {
+        let d = match r.read_u32v() {
+            Ok(d) => d as usize,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        };
+        anyhow::ensure!(d > 0 && d < 1 << 20, "implausible fvecs dim {d}");
+        match dim {
+            None => dim = Some(d),
+            Some(prev) => anyhow::ensure!(prev == d, "ragged fvecs: {prev} vs {d}"),
+        }
+        rows.extend(r.read_f32_vec(d)?);
+    }
+    let dim = dim.ok_or_else(|| anyhow::anyhow!("empty fvecs file"))?;
+    Ok(VectorSet::from_f32(dim, &rows))
+}
+
+/// Write an f32 [`VectorSet`] as `.fvecs`.
+pub fn write_fvecs(path: &Path, set: &VectorSet) -> Result<()> {
+    anyhow::ensure!(set.dtype() == Dtype::F32, "write_fvecs requires f32 set");
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..set.len() {
+        w.write_u32(set.dim() as u32)?;
+        w.write_f32_slice(&set.get_f32(i))?;
+    }
+    Ok(())
+}
+
+/// Read a `.bvecs` file into a u8 [`VectorSet`].
+pub fn read_bvecs(path: &Path) -> Result<VectorSet> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut data: Vec<u8> = Vec::new();
+    let mut dim: Option<usize> = None;
+    loop {
+        let d = match r.read_u32v() {
+            Ok(d) => d as usize,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        };
+        anyhow::ensure!(d > 0 && d < 1 << 20, "implausible bvecs dim {d}");
+        match dim {
+            None => dim = Some(d),
+            Some(prev) => anyhow::ensure!(prev == d, "ragged bvecs: {prev} vs {d}"),
+        }
+        let start = data.len();
+        data.resize(start + d, 0);
+        std::io::Read::read_exact(&mut r, &mut data[start..])?;
+    }
+    let dim = dim.ok_or_else(|| anyhow::anyhow!("empty bvecs file"))?;
+    VectorSet::from_raw(Dtype::U8, dim, data)
+}
+
+/// Read an `.ivecs` file (ground-truth id lists).
+pub fn read_ivecs(path: &Path) -> Result<Vec<Vec<u32>>> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut out = Vec::new();
+    loop {
+        let d = match r.read_u32v() {
+            Ok(d) => d as usize,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        };
+        anyhow::ensure!(d < 1 << 20, "implausible ivecs dim {d}");
+        out.push(r.read_u32_vec(d)?);
+    }
+    Ok(out)
+}
+
+/// Write ground-truth id lists as `.ivecs`.
+pub fn write_ivecs(path: &Path, rows: &[Vec<u32>]) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for row in rows {
+        w.write_u32(row.len() as u32)?;
+        w.write_u32_slice(row)?;
+    }
+    Ok(())
+}
+
+/// Dispatch on file extension: `.fvecs` → f32, `.bvecs` → u8.
+pub fn read_vecs_auto(path: &Path) -> Result<VectorSet> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("fvecs") => read_fvecs(path),
+        Some("bvecs") => read_bvecs(path),
+        other => anyhow::bail!("unsupported vector file extension {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "pageann-fileio-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let dir = tmpdir();
+        let set = VectorSet::from_f32(3, &[1.0, 2.0, 3.0, -4.0, 5.5, 0.0]);
+        let p = dir.join("a.fvecs");
+        write_fvecs(&p, &set).unwrap();
+        let back = read_fvecs(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.dim(), 3);
+        assert_eq!(back.get_f32(1), vec![-4.0, 5.5, 0.0]);
+        // auto dispatch
+        let auto = read_vecs_auto(&p).unwrap();
+        assert_eq!(auto.as_bytes(), back.as_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bvecs_roundtrip_manual() {
+        let dir = tmpdir();
+        let p = dir.join("b.bvecs");
+        // Hand-encode two 4-d u8 vectors.
+        let mut bytes = Vec::new();
+        for v in [[1u8, 2, 3, 4], [250, 0, 9, 8]] {
+            bytes.extend_from_slice(&4u32.to_le_bytes());
+            bytes.extend_from_slice(&v);
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let set = read_bvecs(&p).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.dtype(), Dtype::U8);
+        assert_eq!(set.get_f32(1), vec![250.0, 0.0, 9.0, 8.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let dir = tmpdir();
+        let p = dir.join("gt.ivecs");
+        let rows = vec![vec![5u32, 2, 9], vec![1u32]];
+        write_ivecs(&p, &rows).unwrap();
+        assert_eq!(read_ivecs(&p).unwrap(), rows);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ragged_fvecs_rejected() {
+        let dir = tmpdir();
+        let p = dir.join("ragged.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // different dim
+        bytes.extend_from_slice(&[0u8; 12]);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_fvecs(&p).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_extension_rejected() {
+        assert!(read_vecs_auto(Path::new("/tmp/x.weird")).is_err());
+    }
+}

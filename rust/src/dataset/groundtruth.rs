@@ -1,0 +1,157 @@
+//! Exact k-nearest-neighbor ground truth (multithreaded brute force) and
+//! the recall@k metric the paper reports.
+
+use super::types::VectorSet;
+use crate::distance::l2sq_query;
+use crate::util::parallel_for;
+
+/// A bounded max-heap over (distance, id): keeps the k smallest distances.
+struct TopK {
+    k: usize,
+    /// Max-heap by distance (f32 total-ordered via bits).
+    heap: std::collections::BinaryHeap<HeapItem>,
+}
+
+#[derive(PartialEq)]
+struct HeapItem(f32, u32);
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Ties broken by id for determinism.
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+impl TopK {
+    fn new(k: usize) -> Self {
+        Self { k, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    fn push(&mut self, dist: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push(HeapItem(dist, id));
+        } else if let Some(top) = self.heap.peek() {
+            if HeapItem(dist, id) < *top {
+                self.heap.pop();
+                self.heap.push(HeapItem(dist, id));
+            }
+        }
+    }
+
+    /// Ids sorted ascending by distance.
+    fn into_sorted_ids(self) -> Vec<u32> {
+        let mut v: Vec<HeapItem> = self.heap.into_vec();
+        v.sort_by(|a, b| a.cmp(b));
+        v.into_iter().map(|HeapItem(_, id)| id).collect()
+    }
+}
+
+/// Exact top-k ids for every query, by brute force over the base set.
+pub fn ground_truth(
+    base: &VectorSet,
+    queries: &VectorSet,
+    k: usize,
+    nthreads: usize,
+) -> Vec<Vec<u32>> {
+    assert_eq!(base.dim(), queries.dim());
+    let k = k.min(base.len());
+    parallel_for(queries.len(), nthreads, |qi| {
+        let q = queries.get_f32(qi);
+        let mut top = TopK::new(k);
+        for i in 0..base.len() {
+            top.push(l2sq_query(&q, base.view(i)), i as u32);
+        }
+        top.into_sorted_ids()
+    })
+}
+
+/// recall@k: |returned ∩ true top-k| / k, averaged over queries.
+pub fn recall_at_k(results: &[Vec<u32>], gt: &[Vec<u32>], k: usize) -> f64 {
+    assert_eq!(results.len(), gt.len());
+    if results.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for (r, g) in results.iter().zip(gt) {
+        let truth: std::collections::HashSet<u32> = g.iter().take(k).copied().collect();
+        let hit = r.iter().take(k).filter(|id| truth.contains(id)).count();
+        total += hit as f64 / k.min(truth.len().max(1)) as f64;
+    }
+    total / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{Dtype, VectorSet};
+    use crate::util::XorShift;
+
+    #[test]
+    fn topk_keeps_smallest() {
+        let mut t = TopK::new(3);
+        for (d, id) in [(5.0, 0), (1.0, 1), (4.0, 2), (2.0, 3), (9.0, 4)] {
+            t.push(d, id);
+        }
+        assert_eq!(t.into_sorted_ids(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn ground_truth_matches_naive_sort() {
+        let mut rng = XorShift::new(21);
+        let n = 300;
+        let dim = 8;
+        let rows: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian()).collect();
+        let base = VectorSet::from_f32(dim, &rows);
+        let qrows: Vec<f32> = (0..5 * dim).map(|_| rng.next_gaussian()).collect();
+        let queries = VectorSet::from_f32(dim, &qrows);
+
+        let gt = ground_truth(&base, &queries, 10, 4);
+        for (qi, ids) in gt.iter().enumerate() {
+            let q = queries.get_f32(qi);
+            let mut all: Vec<(f32, u32)> = (0..n)
+                .map(|i| (crate::distance::l2sq_f32(&q, &base.get_f32(i)), i as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let want: Vec<u32> = all.iter().take(10).map(|&(_, id)| id).collect();
+            assert_eq!(ids, &want, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn ground_truth_u8_dtype() {
+        let mut base = VectorSet::new(Dtype::U8, 2, 4);
+        for (i, v) in [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0], [10.0, 10.0]].iter().enumerate() {
+            base.set_from_f32(i, v);
+        }
+        let mut q = VectorSet::new(Dtype::U8, 2, 1);
+        q.set_from_f32(0, &[1.0, 1.0]);
+        let gt = ground_truth(&base, &q, 2, 1);
+        assert_eq!(gt[0], vec![0, 1]); // (0,0) then (10,0) [tie with (0,10) broken by id]
+    }
+
+    #[test]
+    fn recall_computation() {
+        let gt = vec![vec![1u32, 2, 3], vec![4u32, 5, 6]];
+        let perfect = vec![vec![3u32, 2, 1], vec![4u32, 5, 6]];
+        assert!((recall_at_k(&perfect, &gt, 3) - 1.0).abs() < 1e-12);
+        let half = vec![vec![1u32, 9, 8], vec![4u32, 5, 9]];
+        let r = recall_at_k(&half, &gt, 3);
+        assert!((r - 0.5).abs() < 1e-12, "{r}");
+        let empty: Vec<Vec<u32>> = vec![];
+        assert_eq!(recall_at_k(&empty, &[], 3), 0.0);
+    }
+
+    #[test]
+    fn k_larger_than_base_is_clamped() {
+        let base = VectorSet::from_f32(2, &[0.0, 0.0, 1.0, 1.0]);
+        let q = VectorSet::from_f32(2, &[0.0, 0.0]);
+        let gt = ground_truth(&base, &q, 10, 1);
+        assert_eq!(gt[0].len(), 2);
+    }
+}

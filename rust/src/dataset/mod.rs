@@ -1,0 +1,61 @@
+//! Datasets: raw vector storage, synthetic workload generation, the
+//! fvecs/bvecs/ivecs interchange formats, and exact ground-truth
+//! computation.
+//!
+//! The paper evaluates on SIFT (128-d u8), SPACEV (100-d i8) and DEEP
+//! (96-d f32). Those corpora are not redistributable here, so
+//! [`synth::SynthSpec`] generates clustered datasets with identical
+//! dimensionality/dtype and a controllable cluster structure — the property
+//! graph-navigability and page-locality depend on (see DESIGN.md §3).
+
+mod fileio;
+mod groundtruth;
+mod synth;
+mod types;
+
+pub use fileio::{read_fvecs, read_ivecs, read_vecs_auto, write_fvecs, write_ivecs};
+pub use groundtruth::{ground_truth, recall_at_k};
+pub use synth::{SynthSpec, DatasetKind};
+pub use types::{Dtype, VectorSet, VectorView};
+
+/// A complete benchmark workload: base vectors, query vectors, and the exact
+/// top-k ground truth for each query.
+pub struct Workload {
+    pub name: String,
+    pub base: VectorSet,
+    pub queries: VectorSet,
+    /// `gt[q]` = ids of the exact `k` nearest base vectors for query `q`.
+    pub gt: Vec<Vec<u32>>,
+    pub gt_k: usize,
+}
+
+impl Workload {
+    /// Generate a synthetic workload (base + queries + ground truth).
+    pub fn synthesize(spec: &SynthSpec, n_queries: usize, gt_k: usize, seed: u64) -> Self {
+        let base = spec.generate(seed);
+        let queries = spec.generate_queries(n_queries, seed, seed ^ 0x9E3779B97F4A7C15);
+        let gt = ground_truth(&base, &queries, gt_k, crate::util::num_threads());
+        Self { name: spec.name(), base, queries, gt, gt_k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_end_to_end_tiny() {
+        let spec = SynthSpec::new(DatasetKind::DeepLike, 500).with_dim(16).with_clusters(4);
+        let w = Workload::synthesize(&spec, 10, 5, 42);
+        assert_eq!(w.base.len(), 500);
+        assert_eq!(w.queries.len(), 10);
+        assert_eq!(w.gt.len(), 10);
+        assert!(w.gt.iter().all(|g| g.len() == 5));
+        // Ground truth ids must be valid and distinct.
+        for g in &w.gt {
+            let set: std::collections::HashSet<_> = g.iter().collect();
+            assert_eq!(set.len(), g.len());
+            assert!(g.iter().all(|&id| (id as usize) < 500));
+        }
+    }
+}

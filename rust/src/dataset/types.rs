@@ -1,0 +1,259 @@
+//! Raw vector storage: a dtype-tagged, row-major byte matrix.
+//!
+//! Keeping vectors in their on-disk dtype (u8 for SIFT-like, i8 for
+//! SPACEV-like, f32 for DEEP-like) is load-bearing for the paper: page-node
+//! capacity is `page_bytes / (D * sizeof(dtype))`-ish, so a 128-d u8 vector
+//! is 128 bytes, not 512.
+
+use crate::Result;
+
+/// Element type of a vector set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    U8,
+    I8,
+    F32,
+}
+
+impl Dtype {
+    #[inline]
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::U8 | Dtype::I8 => 1,
+            Dtype::F32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U8 => "u8",
+            Dtype::I8 => "i8",
+            Dtype::F32 => "f32",
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => Dtype::U8,
+            1 => Dtype::I8,
+            2 => Dtype::F32,
+            _ => anyhow::bail!("unknown dtype tag {tag}"),
+        })
+    }
+
+    pub fn tag(self) -> u8 {
+        match self {
+            Dtype::U8 => 0,
+            Dtype::I8 => 1,
+            Dtype::F32 => 2,
+        }
+    }
+}
+
+/// Borrowed view of one raw vector.
+#[derive(Debug, Clone, Copy)]
+pub struct VectorView<'a> {
+    pub bytes: &'a [u8],
+    pub dtype: Dtype,
+}
+
+impl<'a> VectorView<'a> {
+    /// Decode into an f32 buffer (must be `dim` long).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        match self.dtype {
+            Dtype::U8 => {
+                for (o, &b) in out.iter_mut().zip(self.bytes) {
+                    *o = b as f32;
+                }
+            }
+            Dtype::I8 => {
+                for (o, &b) in out.iter_mut().zip(self.bytes) {
+                    *o = b as i8 as f32;
+                }
+            }
+            Dtype::F32 => crate::util::binio::f32_from_le(self.bytes, out),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.bytes.len() / self.dtype.size_bytes()
+    }
+}
+
+/// An owned, row-major set of `n` vectors of dimension `dim` and a fixed
+/// dtype, stored as raw bytes.
+#[derive(Debug, Clone)]
+pub struct VectorSet {
+    dtype: Dtype,
+    dim: usize,
+    n: usize,
+    data: Vec<u8>,
+}
+
+impl VectorSet {
+    pub fn new(dtype: Dtype, dim: usize, n: usize) -> Self {
+        Self { dtype, dim, n, data: vec![0u8; n * dim * dtype.size_bytes()] }
+    }
+
+    pub fn from_raw(dtype: Dtype, dim: usize, data: Vec<u8>) -> Result<Self> {
+        let stride = dim * dtype.size_bytes();
+        anyhow::ensure!(stride > 0 && data.len() % stride == 0, "ragged vector data");
+        let n = data.len() / stride;
+        Ok(Self { dtype, dim, n, data })
+    }
+
+    /// Build an f32 set from float rows.
+    pub fn from_f32(dim: usize, rows: &[f32]) -> Self {
+        assert_eq!(rows.len() % dim, 0);
+        let mut data = Vec::with_capacity(rows.len() * 4);
+        for &x in rows {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Self { dtype: Dtype::F32, dim, n: rows.len() / dim, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.dim * self.dtype.size_bytes()
+    }
+
+    /// Raw bytes of vector `i`.
+    #[inline]
+    pub fn raw(&self, i: usize) -> &[u8] {
+        let s = self.stride();
+        &self.data[i * s..(i + 1) * s]
+    }
+
+    /// Borrowed typed view of vector `i`.
+    #[inline]
+    pub fn view(&self, i: usize) -> VectorView<'_> {
+        VectorView { bytes: self.raw(i), dtype: self.dtype }
+    }
+
+    /// Mutable raw bytes of vector `i`.
+    #[inline]
+    pub fn raw_mut(&mut self, i: usize) -> &mut [u8] {
+        let s = self.stride();
+        &mut self.data[i * s..(i + 1) * s]
+    }
+
+    /// Decode vector `i` to f32.
+    pub fn get_f32(&self, i: usize) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim];
+        self.view(i).decode_into(&mut out);
+        out
+    }
+
+    /// Decode vector `i` into a caller-provided buffer (hot path, no alloc).
+    #[inline]
+    pub fn decode_into(&self, i: usize, out: &mut [f32]) {
+        self.view(i).decode_into(out);
+    }
+
+    /// Write an f32 row into slot `i`, quantizing to the set's dtype
+    /// (clamping for integer dtypes).
+    pub fn set_from_f32(&mut self, i: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        let dtype = self.dtype;
+        let raw = self.raw_mut(i);
+        match dtype {
+            Dtype::U8 => {
+                for (b, &x) in raw.iter_mut().zip(row) {
+                    *b = x.round().clamp(0.0, 255.0) as u8;
+                }
+            }
+            Dtype::I8 => {
+                for (b, &x) in raw.iter_mut().zip(row) {
+                    *b = (x.round().clamp(-128.0, 127.0) as i8) as u8;
+                }
+            }
+            Dtype::F32 => {
+                for (c, &x) in raw.chunks_exact_mut(4).zip(row) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Total size of the raw vector payload in bytes (the paper's notion of
+    /// "dataset size" against which memory ratios are computed).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip_all_dtypes() {
+        for dtype in [Dtype::U8, Dtype::I8, Dtype::F32] {
+            let mut s = VectorSet::new(dtype, 4, 3);
+            s.set_from_f32(1, &[1.0, 2.0, 3.0, 4.0]);
+            let got = s.get_f32(1);
+            assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0], "{dtype:?}");
+            // Untouched rows are zero.
+            assert_eq!(s.get_f32(0), vec![0.0; 4]);
+        }
+    }
+
+    #[test]
+    fn integer_dtypes_clamp() {
+        let mut s = VectorSet::new(Dtype::U8, 2, 1);
+        s.set_from_f32(0, &[-5.0, 300.0]);
+        assert_eq!(s.get_f32(0), vec![0.0, 255.0]);
+
+        let mut s = VectorSet::new(Dtype::I8, 2, 1);
+        s.set_from_f32(0, &[-500.0, 500.0]);
+        assert_eq!(s.get_f32(0), vec![-128.0, 127.0]);
+    }
+
+    #[test]
+    fn stride_and_payload() {
+        let s = VectorSet::new(Dtype::F32, 96, 10);
+        assert_eq!(s.stride(), 384);
+        assert_eq!(s.payload_bytes(), 3840);
+        let s = VectorSet::new(Dtype::U8, 128, 10);
+        assert_eq!(s.stride(), 128);
+        assert_eq!(s.payload_bytes(), 1280);
+    }
+
+    #[test]
+    fn from_raw_rejects_ragged() {
+        assert!(VectorSet::from_raw(Dtype::F32, 3, vec![0u8; 10]).is_err());
+        assert!(VectorSet::from_raw(Dtype::U8, 3, vec![0u8; 9]).is_ok());
+    }
+
+    #[test]
+    fn dtype_tag_roundtrip() {
+        for d in [Dtype::U8, Dtype::I8, Dtype::F32] {
+            assert_eq!(Dtype::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(Dtype::from_tag(9).is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Distance computation backends.
+//!
+//! Two implementations of the same batch-distance interface:
+//!
+//! * [`native`] — hand-unrolled scalar kernels per dtype (u8/i8/f32). This is
+//!   the rust-layer correctness oracle and the default hot-path backend for
+//!   tiny batches where PJRT dispatch overhead dominates.
+//! * [`xla_backend`] — executes the AOT-compiled Pallas/JAX page-scan
+//!   artifact through PJRT. Used for large batch scans; the backend choice
+//!   is an ablation (`paper_experiments ablC`).
+//!
+//! All distances are **squared Euclidean** (monotone in L2, so rankings are
+//! identical and we skip the sqrt everywhere, like the reference systems).
+
+mod native;
+mod xla_backend;
+
+pub use native::{l2sq_f32, l2sq_f32_i8, l2sq_f32_u8, norm_sq_f32, BatchScanner, NativeBatch};
+pub use xla_backend::XlaBatch;
+
+use crate::dataset::{Dtype, VectorView};
+
+/// Squared L2 between an f32 query and a raw-dtype vector.
+#[inline]
+pub fn l2sq_query(query: &[f32], v: VectorView<'_>) -> f32 {
+    match v.dtype {
+        Dtype::F32 => l2sq_f32(query, bytemuck_f32(v.bytes)),
+        Dtype::U8 => l2sq_f32_u8(query, v.bytes),
+        Dtype::I8 => l2sq_f32_i8(query, unsafe {
+            std::slice::from_raw_parts(v.bytes.as_ptr() as *const i8, v.bytes.len())
+        }),
+    }
+}
+
+/// Reinterpret little-endian raw bytes as f32. Callers guarantee alignment
+/// by construction (vector sets allocate `Vec<u8>` and offsets are multiples
+/// of 4 bytes for f32 data).
+#[inline]
+pub(crate) fn bytemuck_f32(bytes: &[u8]) -> &[f32] {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    debug_assert_eq!(bytes.as_ptr() as usize % 4, 0, "unaligned f32 view");
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Dtype;
+
+    fn view(bytes: &[u8], dtype: Dtype) -> VectorView<'_> {
+        VectorView { bytes, dtype }
+    }
+
+    #[test]
+    fn l2sq_query_dispatch_f32() {
+        let q = [1.0f32, 2.0, 3.0];
+        let v = [1.5f32, 0.0, 3.0];
+        let mut bytes = Vec::new();
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let d = l2sq_query(&q, view(&bytes, Dtype::F32));
+        assert!((d - (0.25 + 4.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2sq_query_dispatch_u8() {
+        let q = [10.0f32, 0.0];
+        let bytes = [8u8, 3u8];
+        let d = l2sq_query(&q, view(&bytes, Dtype::U8));
+        assert!((d - (4.0 + 9.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2sq_query_dispatch_i8() {
+        let q = [0.0f32, 0.0];
+        let bytes = [(-3i8) as u8, 4u8];
+        let d = l2sq_query(&q, view(&bytes, Dtype::I8));
+        assert!((d - 25.0).abs() < 1e-6);
+    }
+}

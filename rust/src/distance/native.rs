@@ -1,0 +1,193 @@
+//! Native (pure-rust) distance kernels.
+//!
+//! These are written as 4-way unrolled scalar loops; rustc/LLVM
+//! auto-vectorizes them to SSE/AVX on x86-64. They serve as the correctness
+//! oracle for the XLA backend and as the low-latency path for small batches.
+
+/// Squared L2 between two f32 slices of equal length.
+#[inline]
+pub fn l2sq_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Squared L2 between an f32 query and a u8 vector (SIFT-style).
+#[inline]
+pub fn l2sq_f32_u8(a: &[f32], b: &[u8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j] as f32;
+        let d1 = a[j + 1] - b[j + 1] as f32;
+        let d2 = a[j + 2] - b[j + 2] as f32;
+        let d3 = a[j + 3] - b[j + 3] as f32;
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j] as f32;
+        s += d * d;
+    }
+    s
+}
+
+/// Squared L2 between an f32 query and an i8 vector (SPACEV-style).
+#[inline]
+pub fn l2sq_f32_i8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j] as f32;
+        let d1 = a[j + 1] - b[j + 1] as f32;
+        let d2 = a[j + 2] - b[j + 2] as f32;
+        let d3 = a[j + 3] - b[j + 3] as f32;
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j] as f32;
+        s += d * d;
+    }
+    s
+}
+
+/// Squared norm of an f32 slice.
+#[inline]
+pub fn norm_sq_f32(a: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for &x in a {
+        s += x * x;
+    }
+    s
+}
+
+use crate::dataset::{Dtype, VectorView};
+
+/// Batch scanner interface: distances from one query to a packed block of
+/// vectors. Both the native and XLA backends implement this, so the search
+/// engine is backend-agnostic.
+pub trait BatchScanner: Send + Sync {
+    /// Compute squared L2 from `query` (f32, dim d) to `n` vectors packed
+    /// row-major in `block` with dtype `dtype`, writing into `out[..n]`.
+    fn scan(&self, query: &[f32], block: &[u8], dtype: Dtype, n: usize, out: &mut [f32]);
+
+    /// Backend name for logs/experiments.
+    fn name(&self) -> &'static str;
+}
+
+/// The native batch scanner.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBatch;
+
+impl BatchScanner for NativeBatch {
+    fn scan(&self, query: &[f32], block: &[u8], dtype: Dtype, n: usize, out: &mut [f32]) {
+        let d = query.len();
+        let stride = d * dtype.size_bytes();
+        debug_assert!(block.len() >= n * stride);
+        for i in 0..n {
+            let bytes = &block[i * stride..(i + 1) * stride];
+            out[i] = crate::distance::l2sq_query(query, VectorView { bytes, dtype });
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn naive_l2(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn f32_matches_naive_all_lengths() {
+        let mut rng = XorShift::new(11);
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 96, 100, 128] {
+            let a: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let got = l2sq_f32(&a, &b);
+            let want = naive_l2(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * want.max(1.0), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn u8_matches_f32_path() {
+        let mut rng = XorShift::new(12);
+        for n in [1usize, 5, 128] {
+            let q: Vec<f32> = (0..n).map(|_| rng.next_f32() * 255.0).collect();
+            let v: Vec<u8> = (0..n).map(|_| rng.next_below(256) as u8).collect();
+            let vf: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            let got = l2sq_f32_u8(&q, &v);
+            let want = l2sq_f32(&q, &vf);
+            assert!((got - want).abs() <= 1e-3 * want.max(1.0));
+        }
+    }
+
+    #[test]
+    fn i8_matches_f32_path() {
+        let mut rng = XorShift::new(13);
+        for n in [1usize, 5, 100] {
+            let q: Vec<f32> = (0..n).map(|_| rng.next_gaussian() * 50.0).collect();
+            let v: Vec<i8> = (0..n).map(|_| (rng.next_below(256) as i16 - 128) as i8).collect();
+            let vf: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            let got = l2sq_f32_i8(&q, &v);
+            let want = l2sq_f32(&q, &vf);
+            assert!((got - want).abs() <= 1e-3 * want.max(1.0));
+        }
+    }
+
+    #[test]
+    fn norm_is_distance_to_zero() {
+        let a = [3.0f32, 4.0];
+        assert_eq!(norm_sq_f32(&a), 25.0);
+        assert_eq!(l2sq_f32(&a, &[0.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn native_batch_scans_rows() {
+        let q = [1.0f32, 0.0];
+        // Two u8 vectors: (1,0) and (3,4).
+        let block = [1u8, 0, 3, 4];
+        let mut out = [0f32; 2];
+        NativeBatch.scan(&q, &block, Dtype::U8, 2, &mut out);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 20.0);
+    }
+}

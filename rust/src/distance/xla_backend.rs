@@ -1,0 +1,112 @@
+//! XLA/PJRT batch-distance backend.
+//!
+//! Executes the AOT-compiled `l2_batch` artifact (Layer-1 Pallas kernel
+//! wrapped by the Layer-2 JAX graph, lowered to HLO text by
+//! `python/compile/aot.py`). Shapes are fixed at AOT time: `R` rows of
+//! dimension `D`; shorter scans are zero-padded and the tail ignored.
+//!
+//! The backend decodes raw-dtype blocks into a reused f32 staging buffer —
+//! the PJRT boundary takes f32 — so the only per-call allocations are inside
+//! PJRT itself.
+
+use super::native::BatchScanner;
+use crate::dataset::{Dtype, VectorView};
+use crate::runtime::{execute_f32, ArtifactSet, ExecPool, XlaRuntime};
+use crate::Result;
+use std::sync::Mutex;
+
+pub struct XlaBatch {
+    pool: ExecPool,
+    /// Fixed row count the artifact was lowered with.
+    rows: usize,
+    dim: usize,
+    /// Reused decode buffers, one per concurrent caller (sized lazily).
+    staging: Mutex<Vec<Vec<f32>>>,
+}
+
+impl XlaBatch {
+    /// Load the `l2_batch_d{dim}` artifact from `artifacts/` and compile
+    /// `pool_size` executables.
+    pub fn load(rt: &XlaRuntime, artifacts: &ArtifactSet, dim: usize, pool_size: usize) -> Result<Self> {
+        let art = artifacts.get(&format!("l2_batch_d{dim}"))?;
+        let rows = art.meta_usize("rows")?;
+        anyhow::ensure!(art.meta_usize("dim")? == dim, "manifest dim mismatch");
+        let pool = ExecPool::new(rt, &art.file, pool_size)?;
+        Ok(Self { pool, rows, dim, staging: Mutex::new(Vec::new()) })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn take_staging(&self) -> Vec<f32> {
+        self.staging
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| vec![0f32; self.rows * self.dim])
+    }
+
+    fn put_staging(&self, buf: Vec<f32>) {
+        let mut g = self.staging.lock().unwrap();
+        if g.len() < 64 {
+            g.push(buf);
+        }
+    }
+
+    /// Scan up to `rows` vectors; returns error if `n > rows` (callers split
+    /// larger scans).
+    fn scan_padded(&self, query: &[f32], block: &[u8], dtype: Dtype, n: usize, out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(n <= self.rows, "batch {n} exceeds artifact rows {}", self.rows);
+        anyhow::ensure!(query.len() == self.dim, "dim mismatch");
+        let mut buf = self.take_staging();
+        let stride = self.dim * dtype.size_bytes();
+        for i in 0..n {
+            let bytes = &block[i * stride..(i + 1) * stride];
+            VectorView { bytes, dtype }.decode_into(&mut buf[i * self.dim..(i + 1) * self.dim]);
+        }
+        // Zero the padded tail so results there are finite (ignored anyway).
+        for x in buf[n * self.dim..].iter_mut() {
+            *x = 0.0;
+        }
+        let exe = self.pool.acquire();
+        let dists = execute_f32(
+            &exe,
+            &[
+                (query, &[self.dim as i64]),
+                (&buf, &[self.rows as i64, self.dim as i64]),
+            ],
+        )?;
+        drop(exe);
+        out[..n].copy_from_slice(&dists[..n]);
+        self.put_staging(buf);
+        Ok(())
+    }
+}
+
+impl BatchScanner for XlaBatch {
+    fn scan(&self, query: &[f32], block: &[u8], dtype: Dtype, n: usize, out: &mut [f32]) {
+        let stride = query.len() * dtype.size_bytes();
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(self.rows);
+            self.scan_padded(
+                query,
+                &block[done * stride..],
+                dtype,
+                take,
+                &mut out[done..done + take],
+            )
+            .expect("xla batch scan failed");
+            done += take;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

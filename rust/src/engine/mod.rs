@@ -1,0 +1,199 @@
+//! Query engine: opens a built index, owns the memory-resident state
+//! (routing, codes, cache, PJRT executables), and serves concurrent
+//! queries.
+//!
+//! [`AnnSystem`] is the interface every scheme implements — PageANN here,
+//! the four baselines in `crate::baselines` — so the experiment harness
+//! drives them identically.
+
+mod runner;
+pub mod server;
+
+pub use runner::{run_workload, tune_to_recall, WorkloadReport};
+pub use server::{QueryClient, QueryServer, ServerHandle};
+
+use crate::cache::{MemCodes, PageCache};
+use crate::dataset::VectorSet;
+use crate::distance::{BatchScanner, NativeBatch};
+use crate::io::{open_auto, PageStore, SimSsdStore, SsdModel};
+use crate::layout::{IndexFiles, IndexMeta};
+use crate::metrics::QueryStats;
+use crate::pq::PqCodebook;
+use crate::routing::RoutingIndex;
+use crate::search::{search_pages, SearchContext, SearchParams, SearchScratch};
+use crate::Result;
+use std::cell::RefCell;
+use std::path::Path;
+
+/// Common interface over all ANN schemes in this repo.
+pub trait AnnSystem: Send + Sync {
+    fn name(&self) -> String;
+    /// Top-k original ids for one query. `l` is the search-list size (the
+    /// recall knob every scheme shares).
+    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32>;
+    /// Resident memory this scheme needs at query time.
+    fn memory_bytes(&self) -> usize;
+}
+
+/// Options for opening an index.
+pub struct OpenOptions {
+    /// Enforce the NVMe timing model (None = raw host I/O).
+    pub sim_ssd: Option<SsdModel>,
+    /// Budget for the warm-up page cache.
+    pub cache_budget_bytes: usize,
+    /// Distance backend. `None` = native scalar.
+    pub scanner: Option<Box<dyn BatchScanner>>,
+    /// Base search params (io_batch, routing probe) used by `search_one`.
+    pub params: SearchParams,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        Self {
+            sim_ssd: None,
+            cache_budget_bytes: 0,
+            scanner: None,
+            params: SearchParams::default(),
+        }
+    }
+}
+
+pub struct PageAnnIndex {
+    pub meta: IndexMeta,
+    store: Box<dyn PageStore>,
+    cache: PageCache,
+    memcodes: MemCodes,
+    routing: Option<RoutingIndex>,
+    pq: PqCodebook,
+    scanner: Box<dyn BatchScanner>,
+    params: SearchParams,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<SearchScratch> = RefCell::new(SearchScratch::new());
+}
+
+impl PageAnnIndex {
+    /// Open a built index directory.
+    pub fn open(dir: &Path, opts: OpenOptions) -> Result<Self> {
+        let meta = IndexMeta::load(dir)?;
+        let files = IndexFiles::new(dir);
+        let raw = open_auto(&files.pages(), meta.page_size)?;
+        anyhow::ensure!(raw.n_pages() == meta.n_pages, "pages.bin size mismatch");
+        let store: Box<dyn PageStore> = match opts.sim_ssd {
+            Some(model) => Box::new(SimSsdStore::new(raw, model)),
+            None => raw,
+        };
+        let memcodes = MemCodes::load(dir, meta.n_slots())?;
+        let pq = {
+            let mut f = std::io::BufReader::new(std::fs::File::open(files.pq())?);
+            PqCodebook::read_from(&mut f)?
+        };
+        anyhow::ensure!(pq.m == meta.pq_m && pq.dim == meta.dim, "pq/meta mismatch");
+        let routing = if meta.routing_bits > 0 {
+            let mut f = std::io::BufReader::new(std::fs::File::open(files.routing())?);
+            Some(RoutingIndex::read_from(&mut f)?)
+        } else {
+            None
+        };
+        Ok(Self {
+            cache: PageCache::empty(meta.page_size),
+            scanner: opts.scanner.unwrap_or_else(|| Box::new(NativeBatch)),
+            params: opts.params,
+            meta,
+            store,
+            memcodes,
+            routing,
+            pq,
+        })
+    }
+
+    /// Entry points for a query: routing probe, medoid fallback.
+    fn entries(&self, query: &[f32]) -> Vec<u32> {
+        if let Some(r) = &self.routing {
+            let e = r.entry_points(query, self.params.routing_radius, self.params.max_entries);
+            if !e.is_empty() {
+                return e;
+            }
+        }
+        vec![self.meta.medoid_new_id]
+    }
+
+    /// Full-control search (explicit params/scratch/stats).
+    pub fn search(
+        &self,
+        query: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+        stats: &mut QueryStats,
+    ) -> Result<Vec<(f32, u32)>> {
+        let t0 = std::time::Instant::now();
+        let lut = self.pq.build_lut(query);
+        let entries = self.entries(query);
+        let ctx = SearchContext {
+            meta: &self.meta,
+            store: self.store.as_ref(),
+            cache: &self.cache,
+            memcodes: &self.memcodes,
+            scanner: self.scanner.as_ref(),
+        };
+        let out = search_pages(&ctx, query, &lut, &entries, params, scratch, stats)?;
+        stats.total_time += t0.elapsed();
+        Ok(out)
+    }
+
+    /// Warm-up (paper §4.3): run `queries` once, count page-visit
+    /// frequencies, pin the hottest pages within `budget_bytes`.
+    pub fn warmup(&mut self, queries: &VectorSet, budget_bytes: usize) -> Result<()> {
+        if budget_bytes < self.meta.page_size {
+            return Ok(());
+        }
+        let mut freq: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+        let mut scratch = SearchScratch::new();
+        let params = self.params.clone();
+        for qi in 0..queries.len() {
+            let q = queries.get_f32(qi);
+            let mut stats = QueryStats::default();
+            self.search(&q, &params, &mut scratch, &mut stats)?;
+            for p in scratch.visited_pages_for_warmup() {
+                *freq.entry(p).or_default() += 1;
+            }
+        }
+        let freqs: Vec<(u32, u64)> = freq.into_iter().collect();
+        let store = &*self.store;
+        self.cache = PageCache::build(&freqs, self.meta.page_size, budget_bytes, |ids, out| {
+            store.read_pages(ids, out)
+        })?;
+        Ok(())
+    }
+
+    pub fn routing_memory_bytes(&self) -> usize {
+        self.routing.as_ref().map(|r| r.memory_bytes()).unwrap_or(0)
+    }
+
+    pub fn cache_pages(&self) -> usize {
+        self.cache.n_pages()
+    }
+}
+
+impl AnnSystem for PageAnnIndex {
+    fn name(&self) -> String {
+        "PageANN".to_string()
+    }
+
+    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        let params = SearchParams { k, l, ..self.params.clone() };
+        SCRATCH.with(|s| {
+            let mut scratch = s.borrow_mut();
+            self.search(query, &params, &mut scratch, stats)
+                .expect("search failed")
+                .into_iter()
+                .map(|(_, id)| id)
+                .collect()
+        })
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.memcodes.memory_bytes() + self.routing_memory_bytes() + self.cache.memory_bytes()
+    }
+}

@@ -1,0 +1,187 @@
+//! Concurrent workload runner: N query threads pulling from a shared
+//! queue — the paper's §6.1 measurement setup (16 threads, QPS + mean
+//! latency + mean I/Os at a recall operating point).
+
+use super::AnnSystem;
+use crate::dataset::{recall_at_k, VectorSet};
+use crate::metrics::{CpuMeter, LatencyHistogram, QueryStats, RunSummary};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Results + summary of one workload run.
+pub struct WorkloadReport {
+    pub summary: RunSummary,
+    pub results: Vec<Vec<u32>>,
+    pub cpu_pct: f64,
+}
+
+/// Run every query in `queries` through `sys` on `nthreads` concurrent
+/// threads; compute recall against `gt` if provided.
+pub fn run_workload(
+    sys: &dyn AnnSystem,
+    queries: &VectorSet,
+    gt: Option<&[Vec<u32>]>,
+    k: usize,
+    l: usize,
+    nthreads: usize,
+) -> WorkloadReport {
+    let n = queries.len();
+    let next = AtomicUsize::new(0);
+    let agg: Mutex<(QueryStats, LatencyHistogram)> =
+        Mutex::new((QueryStats::default(), LatencyHistogram::new()));
+    let results: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+
+    let cpu = CpuMeter::start();
+    let wall_start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..nthreads.max(1) {
+            s.spawn(|| {
+                let mut local = QueryStats::default();
+                let mut hist = LatencyHistogram::new();
+                loop {
+                    let qi = next.fetch_add(1, Ordering::Relaxed);
+                    if qi >= n {
+                        break;
+                    }
+                    let q = queries.get_f32(qi);
+                    let mut stats = QueryStats::default();
+                    let t = Instant::now();
+                    let ids = sys.search_one(&q, k, l, &mut stats);
+                    let dt = t.elapsed();
+                    stats.total_time = dt;
+                    hist.record(dt);
+                    local.merge(&stats);
+                    *results[qi].lock().unwrap() = ids;
+                }
+                let mut g = agg.lock().unwrap();
+                g.0.merge(&local);
+                g.1.merge(&hist);
+            });
+        }
+    });
+    let wall = wall_start.elapsed();
+    let cpu_pct = cpu.utilization_pct();
+
+    let (totals, latency) = agg.into_inner().unwrap();
+    let results: Vec<Vec<u32>> = results.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    let recall = match gt {
+        Some(gt) => recall_at_k(&results, gt, k),
+        None => f64::NAN,
+    };
+    WorkloadReport {
+        summary: RunSummary { queries: n as u64, wall, totals, latency, recall },
+        results,
+        cpu_pct,
+    }
+}
+
+/// Sweep the search-list size until the target recall is reached; returns
+/// `(l, report)` for the smallest `l` that clears `target_recall`, or the
+/// best found. This is how the paper fixes "Recall@10 = 0.9" operating
+/// points across schemes.
+pub fn tune_to_recall(
+    sys: &dyn AnnSystem,
+    queries: &VectorSet,
+    gt: &[Vec<u32>],
+    k: usize,
+    target_recall: f64,
+    nthreads: usize,
+) -> (usize, WorkloadReport) {
+    let mut l = k.max(10);
+    let mut best: Option<(usize, WorkloadReport)> = None;
+    for _ in 0..10 {
+        let rep = run_workload(sys, queries, Some(gt), k, l, nthreads);
+        let hit = rep.summary.recall >= target_recall;
+        let replace = match &best {
+            None => true,
+            Some((_, b)) => {
+                if hit {
+                    b.summary.recall < target_recall || l < best.as_ref().unwrap().0
+                } else {
+                    rep.summary.recall > b.summary.recall
+                }
+            }
+        };
+        if replace {
+            best = Some((l, rep));
+        }
+        if hit {
+            break;
+        }
+        l = (l as f64 * 1.7).ceil() as usize;
+        if l > 4096 {
+            break;
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Dtype;
+
+    /// Trivial brute-force AnnSystem for runner tests.
+    struct BruteForce {
+        base: VectorSet,
+    }
+
+    impl AnnSystem for BruteForce {
+        fn name(&self) -> String {
+            "brute".into()
+        }
+        fn search_one(&self, q: &[f32], k: usize, _l: usize, stats: &mut QueryStats) -> Vec<u32> {
+            stats.exact_dists += self.base.len() as u64;
+            let mut all: Vec<(f32, u32)> = (0..self.base.len())
+                .map(|i| (crate::distance::l2sq_query(q, self.base.view(i)), i as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.total_cmp(&b.0));
+            all.into_iter().take(k).map(|(_, i)| i).collect()
+        }
+        fn memory_bytes(&self) -> usize {
+            self.base.payload_bytes()
+        }
+    }
+
+    #[test]
+    fn runner_counts_and_recall() {
+        let mut base = VectorSet::new(Dtype::F32, 4, 50);
+        for i in 0..50 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let mut queries = VectorSet::new(Dtype::F32, 4, 8);
+        for i in 0..8 {
+            queries.set_from_f32(i, &[i as f32 * 5.0 + 0.1, 0.0, 0.0, 0.0]);
+        }
+        let gt = crate::dataset::ground_truth(&base, &queries, 5, 2);
+        let sys = BruteForce { base };
+        let rep = run_workload(&sys, &queries, Some(&gt), 5, 10, 4);
+        assert_eq!(rep.summary.queries, 8);
+        assert!((rep.summary.recall - 1.0).abs() < 1e-9, "{}", rep.summary.recall);
+        assert!(rep.summary.qps() > 0.0);
+        assert_eq!(rep.summary.totals.exact_dists, 8 * 50);
+        assert_eq!(rep.results.len(), 8);
+        assert!(rep.results.iter().all(|r| r.len() == 5));
+    }
+
+    #[test]
+    fn tune_finds_recall_immediately_for_exact_system() {
+        let mut base = VectorSet::new(Dtype::F32, 2, 30);
+        for i in 0..30 {
+            base.set_from_f32(i, &[i as f32, i as f32]);
+        }
+        let queries = {
+            let mut q = VectorSet::new(Dtype::F32, 2, 4);
+            for i in 0..4 {
+                q.set_from_f32(i, &[i as f32 * 3.0, i as f32 * 3.0]);
+            }
+            q
+        };
+        let gt = crate::dataset::ground_truth(&base, &queries, 3, 1);
+        let sys = BruteForce { base };
+        let (l, rep) = tune_to_recall(&sys, &queries, &gt, 3, 0.9, 2);
+        assert!(rep.summary.recall >= 0.9);
+        assert_eq!(l, 10); // first try suffices
+    }
+}

@@ -1,0 +1,338 @@
+//! TCP query server: the network front-end of the L3 coordinator.
+//!
+//! Wire protocol (little-endian, one request per frame):
+//!
+//! ```text
+//! request:  [u32 magic 0x50414E51 "PANQ"] [u32 k] [u32 l] [u32 dim] [f32 × dim]
+//! response: [u32 magic 0x50414E52 "PANR"] [u32 n] [u32 id × n]
+//!           [f32 latency_ms] [u32 ios]
+//! error:    [u32 magic 0x50414E45 "PANE"] [u32 len] [len bytes utf-8]
+//! ```
+//!
+//! One OS thread per connection (queries within a connection are
+//! sequential; concurrency comes from multiple connections, matching the
+//! paper's 1–16 query-thread setup). A shared [`AnnSystem`] serves all
+//! connections; per-thread scratch lives in the system's thread-locals.
+
+use super::AnnSystem;
+use crate::metrics::QueryStats;
+use crate::Result;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub const REQ_MAGIC: u32 = 0x50414E51;
+pub const RESP_MAGIC: u32 = 0x50414E52;
+pub const ERR_MAGIC: u32 = 0x50414E45;
+
+/// Server statistics (scraped by monitoring / tests).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub queries: AtomicU64,
+    pub errors: AtomicU64,
+    pub total_ios: AtomicU64,
+}
+
+pub struct QueryServer {
+    listener: TcpListener,
+    system: Arc<dyn AnnSystem>,
+    dim: usize,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Handle returned by [`QueryServer::spawn`]: stop + join the serve loop.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Nudge the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl QueryServer {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str, system: Arc<dyn AnnSystem>, dim: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self {
+            listener,
+            system,
+            dim,
+            stats: Arc::new(ServerStats::default()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run the accept loop on a background thread.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let shutdown = self.shutdown.clone();
+        let stats = self.stats.clone();
+        let join = std::thread::spawn(move || self.serve_loop());
+        Ok(ServerHandle { addr, shutdown, join: Some(join), stats })
+    }
+
+    fn serve_loop(self) {
+        loop {
+            let (stream, _) = match self.listener.accept() {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            if self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let system = self.system.clone();
+            let stats = self.stats.clone();
+            let dim = self.dim;
+            let shutdown = self.shutdown.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, system, dim, stats, shutdown);
+            });
+        }
+    }
+}
+
+fn read_u32(s: &mut TcpStream) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    system: Arc<dyn AnnSystem>,
+    dim: usize,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let magic = match read_u32(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(()), // connection closed
+        };
+        if magic != REQ_MAGIC {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            send_error(&mut stream, "bad request magic")?;
+            return Ok(());
+        }
+        let k = read_u32(&mut stream)? as usize;
+        let l = read_u32(&mut stream)? as usize;
+        let qdim = read_u32(&mut stream)? as usize;
+        if qdim != dim || k == 0 || k > 1000 || l > 100_000 {
+            // Drain the (bounded) payload then report.
+            let mut sink = vec![0u8; qdim.min(1 << 16) * 4];
+            let _ = stream.read_exact(&mut sink);
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            send_error(&mut stream, &format!("bad request: dim {qdim} (want {dim}), k {k}"))?;
+            continue;
+        }
+        let mut buf = vec![0u8; dim * 4];
+        stream.read_exact(&mut buf)?;
+        let query: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut qstats = QueryStats::default();
+        let t = std::time::Instant::now();
+        let ids = system.search_one(&query, k, l.max(k), &mut qstats);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        stats.queries.fetch_add(1, Ordering::Relaxed);
+        stats.total_ios.fetch_add(qstats.ios, Ordering::Relaxed);
+
+        let mut out = Vec::with_capacity(16 + ids.len() * 4);
+        out.extend_from_slice(&RESP_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in &ids {
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+        out.extend_from_slice(&(ms as f32).to_le_bytes());
+        out.extend_from_slice(&(qstats.ios as u32).to_le_bytes());
+        stream.write_all(&out)?;
+    }
+}
+
+fn send_error(stream: &mut TcpStream, msg: &str) -> Result<()> {
+    let mut out = Vec::with_capacity(8 + msg.len());
+    out.extend_from_slice(&ERR_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    stream.write_all(&out)?;
+    Ok(())
+}
+
+/// Blocking client for the wire protocol above.
+pub struct QueryClient {
+    stream: TcpStream,
+}
+
+/// One answered query.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub ids: Vec<u32>,
+    pub server_ms: f32,
+    pub ios: u32,
+}
+
+impl QueryClient {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream })
+    }
+
+    pub fn query(&mut self, q: &[f32], k: usize, l: usize) -> Result<ClientResponse> {
+        let mut out = Vec::with_capacity(16 + q.len() * 4);
+        out.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        out.extend_from_slice(&(l as u32).to_le_bytes());
+        out.extend_from_slice(&(q.len() as u32).to_le_bytes());
+        for &x in q {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        self.stream.write_all(&out)?;
+
+        let magic = read_u32(&mut self.stream)?;
+        if magic == ERR_MAGIC {
+            let len = read_u32(&mut self.stream)? as usize;
+            let mut msg = vec![0u8; len.min(4096)];
+            self.stream.read_exact(&mut msg)?;
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        anyhow::ensure!(magic == RESP_MAGIC, "bad response magic {magic:#x}");
+        let n = read_u32(&mut self.stream)? as usize;
+        anyhow::ensure!(n <= 1000, "absurd result count {n}");
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(read_u32(&mut self.stream)?);
+        }
+        let mut b = [0u8; 4];
+        self.stream.read_exact(&mut b)?;
+        let server_ms = f32::from_le_bytes(b);
+        let ios = read_u32(&mut self.stream)?;
+        Ok(ClientResponse { ids, server_ms, ios })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{Dtype, VectorSet};
+
+    /// Brute-force system for protocol tests.
+    struct Brute {
+        base: VectorSet,
+    }
+    impl AnnSystem for Brute {
+        fn name(&self) -> String {
+            "brute".into()
+        }
+        fn search_one(&self, q: &[f32], k: usize, _l: usize, stats: &mut QueryStats) -> Vec<u32> {
+            stats.ios = 3;
+            let mut all: Vec<(f32, u32)> = (0..self.base.len())
+                .map(|i| (crate::distance::l2sq_query(q, self.base.view(i)), i as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.total_cmp(&b.0));
+            all.into_iter().take(k).map(|(_, i)| i).collect()
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+    }
+
+    fn spawn_server() -> (ServerHandle, usize) {
+        let dim = 4;
+        let mut base = VectorSet::new(Dtype::F32, dim, 20);
+        for i in 0..20 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let sys: Arc<dyn AnnSystem> = Arc::new(Brute { base });
+        let server = QueryServer::bind("127.0.0.1:0", sys, dim).unwrap();
+        (server.spawn().unwrap(), dim)
+    }
+
+    #[test]
+    fn roundtrip_query_over_tcp() {
+        let (handle, _) = spawn_server();
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        let resp = client.query(&[5.2, 0.0, 0.0, 0.0], 3, 10).unwrap();
+        assert_eq!(resp.ids, vec![5, 6, 4]);
+        assert_eq!(resp.ios, 3);
+        assert!(resp.server_ms >= 0.0);
+        // Second query on the same connection.
+        let resp2 = client.query(&[0.0, 0.0, 0.0, 0.0], 1, 10).unwrap();
+        assert_eq!(resp2.ids, vec![0]);
+        assert_eq!(handle.stats.queries.load(Ordering::Relaxed), 2);
+        handle.stop();
+    }
+
+    #[test]
+    fn dim_mismatch_reports_error() {
+        let (handle, _) = spawn_server();
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        let err = client.query(&[1.0, 2.0], 3, 10).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        assert_eq!(handle.stats.errors.load(Ordering::Relaxed), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn concurrent_connections() {
+        let (handle, _) = spawn_server();
+        let addr = handle.addr;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let mut c = QueryClient::connect(&addr).unwrap();
+                    for i in 0..10 {
+                        let x = ((t * 10 + i) % 20) as f32;
+                        let resp = c.query(&[x, 0.0, 0.0, 0.0], 1, 5).unwrap();
+                        assert_eq!(resp.ids, vec![x as u32]);
+                    }
+                });
+            }
+        });
+        assert_eq!(handle.stats.queries.load(Ordering::Relaxed), 40);
+        handle.stop();
+    }
+
+    #[test]
+    fn bad_magic_closes_connection() {
+        let (handle, _) = spawn_server();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        s.write_all(&0xDEADBEEFu32.to_le_bytes()).unwrap();
+        let mut buf = [0u8; 4];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(u32::from_le_bytes(buf), ERR_MAGIC);
+        handle.stop();
+    }
+}

@@ -1,0 +1,166 @@
+//! Page I/O engine.
+//!
+//! Three page stores behind one trait:
+//!
+//! * [`AioPageStore`] — real Linux AIO (`io_submit`/`io_getevents` through
+//!   `libc`), submitting each batch as one syscall and overlapping
+//!   completion waits with deferred computation, as in the paper's §5
+//!   pipeline. Falls back automatically when the kernel lacks AIO.
+//! * [`PreadPageStore`] — positional reads (`pread64`), batched loop.
+//! * [`SimSsdStore`] — wraps another store and enforces a deterministic
+//!   NVMe timing model (base latency + bandwidth + bounded queue depth), so
+//!   experiments measure the paper's I/O-bound regime even when the host
+//!   page cache would hide it (DESIGN.md §3 substitution table).
+
+mod aio;
+mod pread;
+mod simssd;
+
+pub use aio::AioPageStore;
+pub use pread::PreadPageStore;
+pub use simssd::{SimSsdStore, SsdModel};
+
+use crate::Result;
+use std::path::Path;
+
+/// A not-yet-completed batch read: call [`PendingRead::wait`] before
+/// touching the output buffers. Stores without true async I/O return an
+/// already-completed handle (the default `begin_read` reads synchronously).
+pub struct PendingRead<'a> {
+    complete: Option<Box<dyn FnOnce() -> Result<()> + 'a>>,
+}
+
+impl<'a> PendingRead<'a> {
+    /// An already-completed read.
+    pub fn ready() -> Self {
+        Self { complete: None }
+    }
+
+    /// A read whose completion is driven by `f`.
+    pub fn deferred(f: impl FnOnce() -> Result<()> + 'a) -> Self {
+        Self { complete: Some(Box::new(f)) }
+    }
+
+    /// Block until the buffers are filled.
+    pub fn wait(mut self) -> Result<()> {
+        match self.complete.take() {
+            Some(f) => f(),
+            None => Ok(()),
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        self.complete.is_some()
+    }
+}
+
+impl<'a> Drop for PendingRead<'a> {
+    fn drop(&mut self) {
+        // A dropped-without-wait pending read must still complete: the
+        // kernel owns the buffers until io_getevents returns.
+        if let Some(f) = self.complete.take() {
+            let _ = f();
+        }
+    }
+}
+
+/// A batch page reader. `read_pages` fills `out[i]` with the contents of
+/// `page_ids[i]`; each buffer must be exactly `page_size` long.
+pub trait PageStore: Send + Sync {
+    fn page_size(&self) -> usize;
+    fn n_pages(&self) -> usize;
+    fn read_pages(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()>;
+    fn name(&self) -> &'static str;
+
+    /// Start a batch read, returning a completion handle (paper §5:
+    /// io_submit now, io_getevents inside [`PendingRead::wait`], with the
+    /// caller free to compute in between). Default: synchronous.
+    ///
+    /// The output buffers must not be read until `wait` returns.
+    fn begin_read<'a>(&'a self, page_ids: &[u32], out: &'a mut [Vec<u8>]) -> Result<PendingRead<'a>> {
+        self.read_pages(page_ids, out)?;
+        Ok(PendingRead::ready())
+    }
+}
+
+/// Open the best available store for `path`: AIO if the kernel supports it,
+/// otherwise pread.
+pub fn open_auto(path: &Path, page_size: usize) -> Result<Box<dyn PageStore>> {
+    match AioPageStore::open(path, page_size) {
+        Ok(s) => Ok(Box::new(s)),
+        Err(e) => {
+            eprintln!("io: AIO unavailable ({e}); falling back to pread");
+            Ok(Box::new(PreadPageStore::open(path, page_size)?))
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn write_test_pages(path: &Path, page_size: usize, n: usize) {
+    let mut data = vec![0u8; page_size * n];
+    for p in 0..n {
+        for (i, b) in data[p * page_size..(p + 1) * page_size].iter_mut().enumerate() {
+            *b = ((p * 131 + i) % 251) as u8;
+        }
+    }
+    std::fs::write(path, &data).unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pageann-io-{}-{name}", std::process::id()))
+    }
+
+    fn check_store(store: &dyn PageStore, page_size: usize) {
+        // Batched read of out-of-order, duplicate-free pages.
+        let ids = vec![7u32, 0, 3, 9, 1];
+        let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; page_size]).collect();
+        store.read_pages(&ids, &mut bufs).unwrap();
+        for (k, &p) in ids.iter().enumerate() {
+            for (i, &b) in bufs[k].iter().enumerate() {
+                assert_eq!(b, ((p as usize * 131 + i) % 251) as u8, "page {p} byte {i}");
+            }
+        }
+        // Out-of-range page rejected.
+        let mut one = vec![vec![0u8; page_size]];
+        assert!(store.read_pages(&[99], &mut one).is_err());
+        // Empty batch is a no-op.
+        store.read_pages(&[], &mut []).unwrap();
+    }
+
+    #[test]
+    fn pread_store_reads_correct_pages() {
+        let path = tmpfile("pread");
+        write_test_pages(&path, 4096, 10);
+        let s = PreadPageStore::open(&path, 4096).unwrap();
+        assert_eq!(s.n_pages(), 10);
+        check_store(&s, 4096);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn aio_store_reads_correct_pages_or_is_unavailable() {
+        let path = tmpfile("aio");
+        write_test_pages(&path, 4096, 10);
+        match AioPageStore::open(&path, 4096) {
+            Ok(s) => {
+                assert_eq!(s.n_pages(), 10);
+                check_store(&s, 4096);
+            }
+            Err(e) => eprintln!("AIO unavailable in this environment: {e}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_auto_always_works() {
+        let path = tmpfile("auto");
+        write_test_pages(&path, 2048, 10);
+        let s = open_auto(&path, 2048).unwrap();
+        check_store(s.as_ref(), 2048);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

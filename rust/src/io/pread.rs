@@ -1,0 +1,60 @@
+//! Positional-read page store (`pread64` through libc) — the portable
+//! fallback and the backend the simulated-SSD wrapper defaults to.
+
+use super::PageStore;
+use crate::Result;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+pub struct PreadPageStore {
+    file: std::fs::File,
+    page_size: usize,
+    n_pages: usize,
+}
+
+impl PreadPageStore {
+    pub fn open(path: &Path, page_size: usize) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len() as usize;
+        anyhow::ensure!(page_size > 0 && len % page_size == 0, "file not page-aligned");
+        Ok(Self { file, page_size, n_pages: len / page_size })
+    }
+}
+
+impl PageStore for PreadPageStore {
+    fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    fn read_pages(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()> {
+        assert_eq!(page_ids.len(), out.len());
+        let fd = self.file.as_raw_fd();
+        for (k, &p) in page_ids.iter().enumerate() {
+            anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
+            let buf = &mut out[k];
+            anyhow::ensure!(buf.len() == self.page_size, "bad buffer size");
+            let mut done = 0usize;
+            while done < self.page_size {
+                let rc = unsafe {
+                    libc::pread64(
+                        fd,
+                        buf[done..].as_mut_ptr() as *mut libc::c_void,
+                        (self.page_size - done) as libc::size_t,
+                        (p as i64 * self.page_size as i64 + done as i64) as libc::off64_t,
+                    )
+                };
+                anyhow::ensure!(rc > 0, "pread failed: {}", std::io::Error::last_os_error());
+                done += rc as usize;
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pread"
+    }
+}

@@ -1,0 +1,408 @@
+//! Index build pipeline: Vamana → page-node graph → on-disk layout.
+//!
+//! This is the pre-processing stage of Fig. 3: it owns every build-time
+//! decision (page capacity from the §4.2 equation, compressed-vector
+//! placement from the §4.3 memory budget, representative selection) and
+//! writes the final file set.
+
+use crate::dataset::VectorSet;
+use crate::layout::{page_capacity, CvPlacement, IdRemap, IndexMeta, PageWriter};
+use crate::pagegraph::{build_page_graph, GroupingParams, PageGraph};
+use crate::pq::{PqCodebook, PqEncoder};
+use crate::routing::RoutingIndex;
+use crate::util::{Stopwatch, WriteExt};
+use crate::vamana::{VamanaGraph, VamanaParams};
+use crate::Result;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// All build-time knobs. Defaults mirror the paper's SIFT configuration.
+#[derive(Debug, Clone)]
+pub struct BuildConfig {
+    pub page_size: usize,
+    /// Neighbor-entry budget per page (NB in DESIGN.md).
+    pub max_nbrs: usize,
+    /// Representatives per neighboring page.
+    pub reps_per_page: usize,
+    /// Hop bound `h` for grouping.
+    pub hops: usize,
+    /// PQ subspaces (must divide dim).
+    pub pq_m: usize,
+    pub pq_train_iters: usize,
+    /// Compressed-vector placement (§4.3). Drives page capacity.
+    pub cv_placement: CvPlacement,
+    /// LSH routing: #hyperplanes (0 disables) and sample fraction.
+    pub routing_bits: usize,
+    pub routing_sample_frac: f64,
+    pub vamana: VamanaParams,
+    pub seed: u64,
+}
+
+impl Default for BuildConfig {
+    fn default() -> Self {
+        Self {
+            page_size: super::DEFAULT_PAGE_SIZE,
+            max_nbrs: 48,
+            reps_per_page: 2,
+            hops: 2,
+            pq_m: 16,
+            pq_train_iters: 12,
+            cv_placement: CvPlacement::OnPage,
+            routing_bits: 32,
+            routing_sample_frac: 0.01,
+            vamana: VamanaParams::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// Paths of a built index.
+#[derive(Debug, Clone)]
+pub struct IndexFiles {
+    pub dir: PathBuf,
+}
+
+impl IndexFiles {
+    pub fn new(dir: &Path) -> Self {
+        Self { dir: dir.to_path_buf() }
+    }
+    pub fn pages(&self) -> PathBuf {
+        self.dir.join("pages.bin")
+    }
+    pub fn pq(&self) -> PathBuf {
+        self.dir.join("pq.bin")
+    }
+    pub fn memcodes(&self) -> PathBuf {
+        self.dir.join("memcodes.bin")
+    }
+    pub fn routing(&self) -> PathBuf {
+        self.dir.join("routing.bin")
+    }
+}
+
+/// Timings of the build phases (Table 5's construction column).
+#[derive(Debug, Clone, Default)]
+pub struct BuildReport {
+    pub vamana_secs: f64,
+    pub pq_secs: f64,
+    pub grouping_secs: f64,
+    pub write_secs: f64,
+    pub n_pages: usize,
+    pub capacity: usize,
+    pub avg_page_degree: f64,
+    /// Neighbor entries whose codes were dropped to fit pages.
+    pub truncated_nbrs: usize,
+}
+
+impl BuildReport {
+    pub fn total_secs(&self) -> f64 {
+        self.vamana_secs + self.pq_secs + self.grouping_secs + self.write_secs
+    }
+}
+
+pub struct IndexBuilder<'a> {
+    pub base: &'a VectorSet,
+    pub config: BuildConfig,
+}
+
+impl<'a> IndexBuilder<'a> {
+    pub fn new(base: &'a VectorSet, config: BuildConfig) -> Self {
+        Self { base, config }
+    }
+
+    /// Build everything and write the index into `dir`.
+    pub fn build(&self, dir: &Path) -> Result<BuildReport> {
+        std::fs::create_dir_all(dir)?;
+        let cfg = &self.config;
+        let base = self.base;
+        anyhow::ensure!(base.dim() % cfg.pq_m == 0, "pq_m {} must divide dim {}", cfg.pq_m, base.dim());
+        let mut report = BuildReport::default();
+        let mut sw = Stopwatch::new();
+
+        // 1. Vector-level Vamana graph.
+        sw.start();
+        let graph = VamanaGraph::build(base, &cfg.vamana);
+        sw.stop();
+        report.vamana_secs = sw.total().as_secs_f64();
+        sw.reset();
+
+        // 2. PQ codebooks + all codes.
+        sw.start();
+        let cb = PqCodebook::train(base, cfg.pq_m, cfg.pq_train_iters, cfg.seed ^ 0xC0DE);
+        let encoder = PqEncoder::new(&cb);
+        let codes = encoder.encode_all(base, cfg.vamana.nthreads);
+        sw.stop();
+        report.pq_secs = sw.total().as_secs_f64();
+        sw.reset();
+
+        // 3. Page capacity from the §4.2 equation, then grouping + page
+        //    graph derivation.
+        sw.start();
+        let capacity = page_capacity(
+            cfg.page_size,
+            base.dim() * base.dtype().size_bytes(),
+            cfg.max_nbrs,
+            cfg.pq_m,
+            cfg.cv_placement.mem_frac(),
+        );
+        let grouping = GroupingParams { capacity, hops: cfg.hops, seed: cfg.seed };
+        let pg = build_page_graph(base, &graph, &grouping, cfg.max_nbrs, cfg.reps_per_page);
+        sw.stop();
+        report.grouping_secs = sw.total().as_secs_f64();
+        sw.reset();
+        report.n_pages = pg.n_pages();
+        report.capacity = capacity;
+        report.avg_page_degree = pg.avg_page_degree();
+
+        // 4. Compressed-vector placement: the most-referenced neighbors go
+        //    to memory (§4.3 — one copy total, memory preferred for the
+        //    hottest codes since they save the most page space).
+        let mem_code_ids = self.select_mem_codes(&pg);
+
+        // 5. Write files.
+        sw.start();
+        report.truncated_nbrs = self.write_pages(dir, &pg, &codes, &mem_code_ids)?;
+        self.write_memcodes(dir, &pg.remap, &codes, &mem_code_ids)?;
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(IndexFiles::new(dir).pq())?);
+            cb.write_to(&mut f)?;
+        }
+        pg.remap.save(dir)?;
+        let routing = self.build_routing(&pg.remap)?;
+        if let Some(r) = &routing {
+            let mut f =
+                std::io::BufWriter::new(std::fs::File::create(IndexFiles::new(dir).routing())?);
+            r.write_to(&mut f)?;
+        }
+        let meta = IndexMeta {
+            dtype: base.dtype(),
+            dim: base.dim(),
+            n_vectors: base.len(),
+            n_pages: pg.n_pages(),
+            page_size: cfg.page_size,
+            capacity,
+            max_nbrs: cfg.max_nbrs,
+            pq_m: cb.m,
+            pq_k: cb.k,
+            cv_placement: cfg.cv_placement,
+            medoid_new_id: pg.remap.to_new(graph.medoid),
+            routing_bits: routing.as_ref().map(|r| r.bits).unwrap_or(0),
+        };
+        meta.save(dir)?;
+        sw.stop();
+        report.write_secs = sw.total().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Pick which vectors' codes live in memory: rank by how often they are
+    /// referenced as page neighbors; routing samples are added by
+    /// `write_memcodes` unconditionally.
+    fn select_mem_codes(&self, pg: &PageGraph) -> Vec<bool> {
+        let frac = self.config.cv_placement.mem_frac();
+        let n_slots = pg.remap.n_slots();
+        let mut in_mem = vec![false; n_slots];
+        if frac <= 0.0 {
+            return in_mem;
+        }
+        if frac >= 1.0 {
+            for s in 0..n_slots {
+                if pg.remap.to_orig(s as u32) != super::remap::INVALID {
+                    in_mem[s] = true;
+                }
+            }
+            return in_mem;
+        }
+        let mut refcount = vec![0u32; n_slots];
+        for nbrs in &pg.nbrs {
+            for &nb in nbrs {
+                refcount[nb as usize] += 1;
+            }
+        }
+        let budget = ((self.base.len() as f64) * frac) as usize;
+        let mut ranked: Vec<u32> = (0..n_slots as u32)
+            .filter(|&s| refcount[s as usize] > 0)
+            .collect();
+        ranked.sort_by(|&a, &b| {
+            refcount[b as usize]
+                .cmp(&refcount[a as usize])
+                .then(a.cmp(&b))
+        });
+        for &s in ranked.iter().take(budget) {
+            in_mem[s as usize] = true;
+        }
+        in_mem
+    }
+
+    fn write_pages(
+        &self,
+        dir: &Path,
+        pg: &PageGraph,
+        codes: &[u8],
+        mem_code_ids: &[bool],
+    ) -> Result<usize> {
+        let cfg = &self.config;
+        let base = self.base;
+        let m = cfg.pq_m;
+        let files = IndexFiles::new(dir);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(files.pages())?);
+        let mut buf = vec![0u8; cfg.page_size];
+        let mut truncated = 0usize;
+        for (p, members) in pg.pages.iter().enumerate() {
+            let vectors: Vec<(u32, &[u8])> =
+                members.iter().map(|&orig| (orig, base.raw(orig as usize))).collect();
+            let neighbors: Vec<(u32, Option<&[u8]>)> = pg.nbrs[p]
+                .iter()
+                .map(|&nb| {
+                    let orig = pg.remap.to_orig(nb) as usize;
+                    let code = if mem_code_ids[nb as usize] {
+                        None
+                    } else {
+                        Some(&codes[orig * m..(orig + 1) * m])
+                    };
+                    (nb, code)
+                })
+                .collect();
+            let mut w = PageWriter {
+                page_size: cfg.page_size,
+                vec_stride: base.dim() * base.dtype().size_bytes(),
+                pq_m: m,
+                vectors,
+                neighbors,
+            };
+            let before = w.neighbors.len();
+            w.truncate_to_fit();
+            truncated += before - w.neighbors.len();
+            w.serialize_into(&mut buf)?;
+            f.write_all(&buf)?;
+        }
+        f.flush()?;
+        Ok(truncated)
+    }
+
+    fn write_memcodes(
+        &self,
+        dir: &Path,
+        remap: &IdRemap,
+        codes: &[u8],
+        mem_code_ids: &[bool],
+    ) -> Result<()> {
+        let m = self.config.pq_m;
+        // Routing-sampled vectors must have in-memory codes for entry-point
+        // distance estimation; include them too.
+        let routing_ids = self.routing_sample_ids(remap);
+        let mut ids: Vec<u32> = mem_code_ids
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b)
+            .map(|(s, _)| s as u32)
+            .collect();
+        ids.extend(routing_ids);
+        ids.sort();
+        ids.dedup();
+
+        let files = IndexFiles::new(dir);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(files.memcodes())?);
+        f.write_u32(m as u32)?;
+        f.write_u64(ids.len() as u64)?;
+        for &new_id in &ids {
+            let orig = remap.to_orig(new_id) as usize;
+            f.write_u32(new_id)?;
+            f.write_all(&codes[orig * m..(orig + 1) * m])?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    /// The deterministic sample the routing index will contain (new ids).
+    fn routing_sample_ids(&self, remap: &IdRemap) -> Vec<u32> {
+        if self.config.routing_bits == 0 {
+            return Vec::new();
+        }
+        RoutingIndex::sample_ids(
+            self.base.len(),
+            self.config.routing_sample_frac,
+            self.config.seed ^ 0x40C7,
+        )
+        .into_iter()
+        .map(|orig| remap.to_new(orig))
+        .collect()
+    }
+
+    fn build_routing(&self, remap: &IdRemap) -> Result<Option<RoutingIndex>> {
+        if self.config.routing_bits == 0 {
+            return Ok(None);
+        }
+        // Build over original vectors, then remap bucket ids into new-id
+        // space (the search operates entirely on new ids). The sample is
+        // exactly `routing_sample_ids`, whose codes write_memcodes pinned
+        // in memory.
+        let sample = RoutingIndex::sample_ids(
+            self.base.len(),
+            self.config.routing_sample_frac,
+            self.config.seed ^ 0x40C7,
+        );
+        let mut idx = RoutingIndex::build_with_sample(
+            self.base,
+            &sample,
+            self.config.routing_bits,
+            self.config.seed ^ 0x40C7,
+        );
+        for ids in idx.buckets.values_mut() {
+            for id in ids.iter_mut() {
+                *id = remap.to_new(*id);
+            }
+        }
+        Ok(Some(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+
+    #[test]
+    fn build_writes_consistent_files() {
+        let spec = SynthSpec::new(DatasetKind::SiftLike, 400).with_dim(32).with_clusters(4);
+        let base = spec.generate(19);
+        let dir = std::env::temp_dir().join(format!("pageann-build-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = BuildConfig {
+            pq_m: 8,
+            vamana: VamanaParams { r: 10, l_build: 20, alpha: 1.2, seed: 3, nthreads: 2 },
+            ..Default::default()
+        };
+        let report = IndexBuilder::new(&base, cfg.clone()).build(&dir).unwrap();
+        assert!(report.n_pages > 0);
+        assert!(report.capacity > 1);
+        assert!(report.total_secs() > 0.0);
+
+        // Files exist and are consistent.
+        let meta = IndexMeta::load(&dir).unwrap();
+        assert_eq!(meta.n_vectors, 400);
+        assert_eq!(meta.n_pages, report.n_pages);
+        let pages_len = std::fs::metadata(dir.join("pages.bin")).unwrap().len() as usize;
+        assert_eq!(pages_len, meta.n_pages * meta.page_size);
+        let remap = IdRemap::load(&dir).unwrap();
+        assert_eq!(remap.capacity, meta.capacity);
+        // Every page parses.
+        let bytes = std::fs::read(dir.join("pages.bin")).unwrap();
+        let mut total_vecs = 0usize;
+        for p in 0..meta.n_pages {
+            let pr = crate::layout::PageRef::parse(
+                &bytes[p * meta.page_size..(p + 1) * meta.page_size],
+                meta.vec_stride(),
+                meta.pq_m,
+            )
+            .unwrap();
+            total_vecs += pr.n_vecs();
+            for j in 0..pr.n_nbrs() {
+                let nb = pr.nbr_id(j);
+                assert!((nb as usize) < remap.n_slots());
+                assert_ne!(remap.page_of(nb) as usize, p);
+            }
+        }
+        assert_eq!(total_vecs, 400);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,205 @@
+//! Index metadata header (meta.bin).
+
+use crate::dataset::Dtype;
+use crate::util::{ReadExt, WriteExt};
+use crate::Result;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x50414E4E; // "PANN"
+pub const VERSION: u32 = 3;
+
+/// Where compressed neighbor vectors live (paper §4.3 memory-disk
+/// coordination).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CvPlacement {
+    /// All codes inline on their referencing pages (severe memory pressure).
+    OnPage,
+    /// Codes of the hottest `frac` of vectors in memory, rest on page.
+    Hybrid { mem_frac: f64 },
+    /// All codes in memory; pages carry none and fit more vectors.
+    InMemory,
+}
+
+impl CvPlacement {
+    pub fn mem_frac(&self) -> f64 {
+        match self {
+            CvPlacement::OnPage => 0.0,
+            CvPlacement::Hybrid { mem_frac } => *mem_frac,
+            CvPlacement::InMemory => 1.0,
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            CvPlacement::OnPage => 0,
+            CvPlacement::Hybrid { .. } => 1,
+            CvPlacement::InMemory => 2,
+        }
+    }
+}
+
+/// Everything the query engine needs to interpret the index files.
+#[derive(Debug, Clone)]
+pub struct IndexMeta {
+    pub dtype: Dtype,
+    pub dim: usize,
+    /// Original vector count.
+    pub n_vectors: usize,
+    pub n_pages: usize,
+    pub page_size: usize,
+    /// Max vectors per page node; `page(id) = id / capacity` in new-id space.
+    pub capacity: usize,
+    /// Neighbor-entry budget used when sizing pages.
+    pub max_nbrs: usize,
+    pub pq_m: usize,
+    pub pq_k: usize,
+    pub cv_placement: CvPlacement,
+    /// Entry point (new-id space) when routing returns nothing.
+    pub medoid_new_id: u32,
+    /// LSH routing bits (0 = no routing index on disk).
+    pub routing_bits: usize,
+}
+
+impl IndexMeta {
+    pub fn vec_stride(&self) -> usize {
+        self.dim * self.dtype.size_bytes()
+    }
+
+    /// Total new-id slots (some unused on partially-filled pages).
+    pub fn n_slots(&self) -> usize {
+        self.n_pages * self.capacity
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_u32(MAGIC)?;
+        w.write_u32(VERSION)?;
+        w.write_u8(self.dtype.tag())?;
+        w.write_u32(self.dim as u32)?;
+        w.write_u64(self.n_vectors as u64)?;
+        w.write_u64(self.n_pages as u64)?;
+        w.write_u32(self.page_size as u32)?;
+        w.write_u32(self.capacity as u32)?;
+        w.write_u32(self.max_nbrs as u32)?;
+        w.write_u32(self.pq_m as u32)?;
+        w.write_u32(self.pq_k as u32)?;
+        w.write_u8(self.cv_placement.tag())?;
+        w.write_f32(self.cv_placement.mem_frac() as f32)?;
+        w.write_u32(self.medoid_new_id)?;
+        w.write_u32(self.routing_bits as u32)?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        anyhow::ensure!(r.read_u32v()? == MAGIC, "bad magic (not a PageANN index)");
+        let v = r.read_u32v()?;
+        anyhow::ensure!(v == VERSION, "index version {v} != supported {VERSION}");
+        let dtype = Dtype::from_tag(r.read_u8v()?)?;
+        let dim = r.read_u32v()? as usize;
+        let n_vectors = r.read_u64v()? as usize;
+        let n_pages = r.read_u64v()? as usize;
+        let page_size = r.read_u32v()? as usize;
+        let capacity = r.read_u32v()? as usize;
+        let max_nbrs = r.read_u32v()? as usize;
+        let pq_m = r.read_u32v()? as usize;
+        let pq_k = r.read_u32v()? as usize;
+        let tag = r.read_u8v()?;
+        let frac = r.read_f32v()? as f64;
+        let cv_placement = match tag {
+            0 => CvPlacement::OnPage,
+            1 => CvPlacement::Hybrid { mem_frac: frac },
+            2 => CvPlacement::InMemory,
+            _ => anyhow::bail!("unknown cv placement tag {tag}"),
+        };
+        let medoid_new_id = r.read_u32v()?;
+        let routing_bits = r.read_u32v()? as usize;
+        anyhow::ensure!(dim > 0 && capacity > 0 && page_size >= 512, "corrupt meta");
+        Ok(Self {
+            dtype,
+            dim,
+            n_vectors,
+            n_pages,
+            page_size,
+            capacity,
+            max_nbrs,
+            pq_m,
+            pq_k,
+            cv_placement,
+            medoid_new_id,
+            routing_bits,
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join("meta.bin"))?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(dir.join("meta.bin"))?);
+        Self::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> IndexMeta {
+        IndexMeta {
+            dtype: Dtype::U8,
+            dim: 128,
+            n_vectors: 100_000,
+            n_pages: 4000,
+            page_size: 4096,
+            capacity: 25,
+            max_nbrs: 48,
+            pq_m: 16,
+            pq_k: 256,
+            cv_placement: CvPlacement::Hybrid { mem_frac: 0.5 },
+            medoid_new_id: 17,
+            routing_bits: 32,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = meta();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let back = IndexMeta::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.dim, 128);
+        assert_eq!(back.n_pages, 4000);
+        assert_eq!(back.capacity, 25);
+        assert!(matches!(back.cv_placement, CvPlacement::Hybrid { mem_frac } if (mem_frac - 0.5).abs() < 1e-6));
+        assert_eq!(back.medoid_new_id, 17);
+        assert_eq!(back.n_slots(), 100_000);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        buf.write_u32(0xDEAD).unwrap();
+        buf.write_u32(VERSION).unwrap();
+        assert!(IndexMeta::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let m = meta();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        buf[4] = 99;
+        assert!(IndexMeta::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pageann-meta-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        meta().save(&dir).unwrap();
+        let back = IndexMeta::load(&dir).unwrap();
+        assert_eq!(back.n_vectors, 100_000);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,90 @@
+//! On-disk index layout (paper §4.2, Fig. 5).
+//!
+//! ```text
+//! index-dir/
+//!   meta.bin      header: magic, version, geometry, PQ params, CV placement
+//!   pages.bin     page i at byte offset i * page_size (see `page`)
+//!   pq.bin        PQ codebooks
+//!   memcodes.bin  compressed vectors resident in memory at query time
+//!   routing.bin   LSH routing index (planes + buckets over new-id space)
+//!   remap.bin     new-id ↔ original-id tables
+//! ```
+//!
+//! Each SSD page stores: the page node's full vectors (+ their original
+//! ids), the ids of neighbor *vectors* in other pages (new-id space, so
+//! `page = id / capacity` is one shift), and — depending on the CV placement
+//! mode — the PQ codes of those neighbors inline, so next-hop selection
+//! needs no extra I/O.
+
+mod builder;
+mod meta;
+mod page;
+mod remap;
+
+pub use builder::{BuildConfig, BuildReport, IndexBuilder, IndexFiles};
+pub use meta::{CvPlacement, IndexMeta, MAGIC, VERSION};
+pub use page::{PageRef, PageWriter, OVERHEAD_PER_NBR_ID, PAGE_HEADER_BYTES};
+pub use remap::IdRemap;
+
+/// Default SSD page size (bytes). 4 KiB mirrors the paper's main setup;
+/// benches also exercise 8 KiB.
+pub const DEFAULT_PAGE_SIZE: usize = 4096;
+
+/// Compute the page-node capacity (vectors per page) from the layout
+/// equation in §4.2:
+///
+/// `n = (P - header - NB·(id + flag? + (1-ρ)·M)) / (stride + orig_id)`
+///
+/// where `ρ` is the fraction of neighbor codes placed in memory.
+pub fn page_capacity(
+    page_size: usize,
+    vec_stride: usize,
+    max_nbrs: usize,
+    pq_m: usize,
+    mem_code_frac: f64,
+) -> usize {
+    let flag_bytes = if mem_code_frac > 0.0 && mem_code_frac < 1.0 {
+        crate::util::div_ceil(max_nbrs, 8)
+    } else {
+        0
+    };
+    let on_page_codes = ((1.0 - mem_code_frac) * max_nbrs as f64).ceil() as usize;
+    let nbr_bytes = max_nbrs * 4 + flag_bytes + on_page_codes * pq_m;
+    let avail = page_size.saturating_sub(PAGE_HEADER_BYTES + nbr_bytes);
+    (avail / (vec_stride + 4)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_matches_paper_shape() {
+        // SIFT-like: 128-d u8 → stride 128; 4K page, 48 nbrs, M=16.
+        let on_page = page_capacity(4096, 128, 48, 16, 0.0);
+        let in_mem = page_capacity(4096, 128, 48, 16, 1.0);
+        // All codes in memory → strictly more vectors per page (paper §4.3:
+        // freed disk space is reallocated to vectors).
+        assert!(in_mem > on_page, "{in_mem} vs {on_page}");
+        // Sanity: a 4K page of 132-byte slots holds ~20-30 vectors.
+        assert!((10..32).contains(&on_page), "{on_page}");
+        assert!((20..32).contains(&in_mem), "{in_mem}");
+    }
+
+    #[test]
+    fn capacity_monotone_in_mem_frac() {
+        let mut prev = 0;
+        for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let c = page_capacity(4096, 384, 48, 12, f);
+            assert!(c >= prev, "frac {f}: {c} < {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn capacity_never_zero() {
+        // Degenerate: tiny page, huge vectors — still at least 1 (the page
+        // then spans logically; the builder asserts real fit separately).
+        assert_eq!(page_capacity(512, 4096, 64, 16, 0.0), 1);
+    }
+}

@@ -1,0 +1,370 @@
+//! Page serialization: the exact byte layout of one SSD page (Fig. 5).
+//!
+//! ```text
+//! [u16 n_vecs][u16 n_nbrs][u8 flags]          5-byte header
+//! [orig ids:  u32 × n_vecs]                   result reporting
+//! [vectors:   n_vecs × stride]                exact distances
+//! [nbr ids:   u32 × n_nbrs]                   topology (new-id space)
+//! [bitmap:    ceil(n_nbrs/8)]                 iff flags&1: bit=code inline
+//! [codes:     M × (#inline)]                  ADC next-hop selection
+//! ```
+//!
+//! `PageRef` is a zero-copy view over a page buffer; the searcher never
+//! materializes an owned page.
+
+use crate::Result;
+
+pub const PAGE_HEADER_BYTES: usize = 5;
+pub const OVERHEAD_PER_NBR_ID: usize = 4;
+
+const FLAG_BITMAP: u8 = 1;
+
+/// Serializer for one page.
+pub struct PageWriter<'a> {
+    pub page_size: usize,
+    pub vec_stride: usize,
+    pub pq_m: usize,
+    /// (orig_id, raw vector bytes) of the page node's members.
+    pub vectors: Vec<(u32, &'a [u8])>,
+    /// (new_id, Option<code>) neighbor entries; `None` = code lives in
+    /// memory at query time.
+    pub neighbors: Vec<(u32, Option<&'a [u8]>)>,
+}
+
+impl<'a> PageWriter<'a> {
+    /// Exact serialized size for the current contents.
+    pub fn serialized_size(&self) -> usize {
+        let inline = self.neighbors.iter().filter(|(_, c)| c.is_some()).count();
+        let any_memory = self.neighbors.iter().any(|(_, c)| c.is_none());
+        let bitmap = if any_memory && inline > 0 {
+            crate::util::div_ceil(self.neighbors.len(), 8)
+        } else if any_memory {
+            // all-memory: bitmap still written (all zeros) when mixed mode
+            // is possible; we omit it and clear the flag instead.
+            0
+        } else {
+            0
+        };
+        PAGE_HEADER_BYTES
+            + self.vectors.len() * (4 + self.vec_stride)
+            + self.neighbors.len() * 4
+            + bitmap
+            + inline * self.pq_m
+    }
+
+    /// True if the contents fit the page.
+    pub fn fits(&self) -> bool {
+        self.serialized_size() <= self.page_size
+    }
+
+    /// Drop lowest-priority neighbors (the tail — callers pre-sort by
+    /// priority) until the page fits.
+    pub fn truncate_to_fit(&mut self) {
+        while !self.fits() && !self.neighbors.is_empty() {
+            self.neighbors.pop();
+        }
+    }
+
+    /// Serialize into `out` (must be exactly `page_size`; tail is zeroed).
+    pub fn serialize_into(&self, out: &mut [u8]) -> Result<()> {
+        anyhow::ensure!(out.len() == self.page_size, "bad page buffer size");
+        anyhow::ensure!(self.fits(), "page overflow: {} > {}", self.serialized_size(), self.page_size);
+        anyhow::ensure!(self.vectors.len() < u16::MAX as usize, "too many vectors");
+        anyhow::ensure!(self.neighbors.len() < u16::MAX as usize, "too many neighbors");
+        out.fill(0);
+
+        let inline = self.neighbors.iter().filter(|(_, c)| c.is_some()).count();
+        let mixed = inline > 0 && inline < self.neighbors.len();
+        let all_inline = inline == self.neighbors.len() && !self.neighbors.is_empty();
+        let flags = if mixed { FLAG_BITMAP } else { 0 };
+
+        out[0..2].copy_from_slice(&(self.vectors.len() as u16).to_le_bytes());
+        out[2..4].copy_from_slice(&(self.neighbors.len() as u16).to_le_bytes());
+        out[4] = flags
+            | if all_inline { 2 } else { 0 };
+
+        let mut off = PAGE_HEADER_BYTES;
+        for (oid, _) in &self.vectors {
+            out[off..off + 4].copy_from_slice(&oid.to_le_bytes());
+            off += 4;
+        }
+        for (_, bytes) in &self.vectors {
+            anyhow::ensure!(bytes.len() == self.vec_stride, "vector stride mismatch");
+            out[off..off + self.vec_stride].copy_from_slice(bytes);
+            off += self.vec_stride;
+        }
+        for (nid, _) in &self.neighbors {
+            out[off..off + 4].copy_from_slice(&nid.to_le_bytes());
+            off += 4;
+        }
+        if mixed {
+            let bitmap_off = off;
+            off += crate::util::div_ceil(self.neighbors.len(), 8);
+            for (i, (_, code)) in self.neighbors.iter().enumerate() {
+                if code.is_some() {
+                    out[bitmap_off + i / 8] |= 1 << (i % 8);
+                }
+            }
+        }
+        for (_, code) in &self.neighbors {
+            if let Some(c) = code {
+                anyhow::ensure!(c.len() == self.pq_m, "code length mismatch");
+                out[off..off + self.pq_m].copy_from_slice(c);
+                off += self.pq_m;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Zero-copy reader over one serialized page.
+#[derive(Clone, Copy)]
+pub struct PageRef<'a> {
+    buf: &'a [u8],
+    vec_stride: usize,
+    pq_m: usize,
+    n_vecs: usize,
+    n_nbrs: usize,
+    flags: u8,
+}
+
+impl<'a> PageRef<'a> {
+    pub fn parse(buf: &'a [u8], vec_stride: usize, pq_m: usize) -> Result<Self> {
+        anyhow::ensure!(buf.len() >= PAGE_HEADER_BYTES, "page too small");
+        let n_vecs = u16::from_le_bytes([buf[0], buf[1]]) as usize;
+        let n_nbrs = u16::from_le_bytes([buf[2], buf[3]]) as usize;
+        let flags = buf[4];
+        let p = Self { buf, vec_stride, pq_m, n_vecs, n_nbrs, flags };
+        anyhow::ensure!(p.codes_end() <= buf.len(), "corrupt page: overruns buffer");
+        Ok(p)
+    }
+
+    #[inline]
+    pub fn n_vecs(&self) -> usize {
+        self.n_vecs
+    }
+
+    #[inline]
+    pub fn n_nbrs(&self) -> usize {
+        self.n_nbrs
+    }
+
+    #[inline]
+    fn orig_ids_off(&self) -> usize {
+        PAGE_HEADER_BYTES
+    }
+
+    #[inline]
+    fn vectors_off(&self) -> usize {
+        self.orig_ids_off() + self.n_vecs * 4
+    }
+
+    #[inline]
+    fn nbr_ids_off(&self) -> usize {
+        self.vectors_off() + self.n_vecs * self.vec_stride
+    }
+
+    #[inline]
+    fn bitmap_off(&self) -> usize {
+        self.nbr_ids_off() + self.n_nbrs * 4
+    }
+
+    #[inline]
+    fn has_bitmap(&self) -> bool {
+        self.flags & FLAG_BITMAP != 0
+    }
+
+    #[inline]
+    fn all_inline(&self) -> bool {
+        self.flags & 2 != 0
+    }
+
+    #[inline]
+    fn bitmap_len(&self) -> usize {
+        if self.has_bitmap() {
+            crate::util::div_ceil(self.n_nbrs, 8)
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    fn codes_off(&self) -> usize {
+        self.bitmap_off() + self.bitmap_len()
+    }
+
+    fn inline_count(&self) -> usize {
+        if self.all_inline() {
+            self.n_nbrs
+        } else if self.has_bitmap() {
+            let bm = &self.buf[self.bitmap_off()..self.bitmap_off() + self.bitmap_len()];
+            bm.iter().map(|b| b.count_ones() as usize).sum()
+        } else {
+            0
+        }
+    }
+
+    fn codes_end(&self) -> usize {
+        self.codes_off() + self.inline_count() * self.pq_m
+    }
+
+    /// Original id of member vector `i`.
+    #[inline]
+    pub fn orig_id(&self, i: usize) -> u32 {
+        let o = self.orig_ids_off() + i * 4;
+        u32::from_le_bytes([self.buf[o], self.buf[o + 1], self.buf[o + 2], self.buf[o + 3]])
+    }
+
+    /// Raw bytes of member vector `i`.
+    #[inline]
+    pub fn vector(&self, i: usize) -> &'a [u8] {
+        let o = self.vectors_off() + i * self.vec_stride;
+        &self.buf[o..o + self.vec_stride]
+    }
+
+    /// The contiguous block of all member vectors (batch scans).
+    #[inline]
+    pub fn vectors_block(&self) -> &'a [u8] {
+        let o = self.vectors_off();
+        &self.buf[o..o + self.n_vecs * self.vec_stride]
+    }
+
+    /// New-id of neighbor `j`.
+    #[inline]
+    pub fn nbr_id(&self, j: usize) -> u32 {
+        let o = self.nbr_ids_off() + j * 4;
+        u32::from_le_bytes([self.buf[o], self.buf[o + 1], self.buf[o + 2], self.buf[o + 3]])
+    }
+
+    /// Inline PQ code of neighbor `j`, or `None` if its code lives in
+    /// memory.
+    pub fn nbr_code(&self, j: usize) -> Option<&'a [u8]> {
+        if self.all_inline() {
+            let o = self.codes_off() + j * self.pq_m;
+            return Some(&self.buf[o..o + self.pq_m]);
+        }
+        if !self.has_bitmap() {
+            return None;
+        }
+        let bm_off = self.bitmap_off();
+        if self.buf[bm_off + j / 8] & (1 << (j % 8)) == 0 {
+            return None;
+        }
+        // Rank: number of set bits before j.
+        let mut rank = 0usize;
+        for b in 0..j / 8 {
+            rank += self.buf[bm_off + b].count_ones() as usize;
+        }
+        let partial = self.buf[bm_off + j / 8] & ((1u16 << (j % 8)) as u8).wrapping_sub(1);
+        rank += partial.count_ones() as usize;
+        let o = self.codes_off() + rank * self.pq_m;
+        Some(&self.buf[o..o + self.pq_m])
+    }
+
+    /// Bytes of this page that carry payload (for read-amplification).
+    pub fn used_bytes(&self) -> usize {
+        self.codes_end()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_vectors(n: usize, stride: usize) -> Vec<(u32, Vec<u8>)> {
+        (0..n).map(|i| (100 + i as u32, vec![i as u8; stride])).collect()
+    }
+
+    #[test]
+    fn roundtrip_all_inline() {
+        let stride = 16;
+        let m = 4;
+        let vecs = mk_vectors(3, stride);
+        let codes: Vec<Vec<u8>> = (0..5).map(|j| vec![j as u8; m]).collect();
+        let w = PageWriter {
+            page_size: 512,
+            vec_stride: stride,
+            pq_m: m,
+            vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
+            neighbors: (0..5).map(|j| (j as u32 * 7, Some(codes[j].as_slice()))).collect(),
+        };
+        let mut buf = vec![0u8; 512];
+        w.serialize_into(&mut buf).unwrap();
+        let p = PageRef::parse(&buf, stride, m).unwrap();
+        assert_eq!(p.n_vecs(), 3);
+        assert_eq!(p.n_nbrs(), 5);
+        assert_eq!(p.orig_id(1), 101);
+        assert_eq!(p.vector(2), &vec![2u8; stride][..]);
+        assert_eq!(p.nbr_id(3), 21);
+        assert_eq!(p.nbr_code(4).unwrap(), &vec![4u8; m][..]);
+        assert_eq!(p.vectors_block().len(), 3 * stride);
+    }
+
+    #[test]
+    fn roundtrip_no_codes() {
+        let w = PageWriter {
+            page_size: 256,
+            vec_stride: 8,
+            pq_m: 4,
+            vectors: vec![(7, &[1u8; 8])],
+            neighbors: vec![(11, None), (12, None)],
+        };
+        let mut buf = vec![0u8; 256];
+        w.serialize_into(&mut buf).unwrap();
+        let p = PageRef::parse(&buf, 8, 4).unwrap();
+        assert_eq!(p.nbr_code(0), None);
+        assert_eq!(p.nbr_code(1), None);
+        assert_eq!(p.nbr_id(1), 12);
+    }
+
+    #[test]
+    fn roundtrip_mixed_codes_bitmap_rank() {
+        let m = 3;
+        let c1 = vec![9u8; m];
+        let c2 = vec![17u8; m];
+        // inline at positions 1 and 9 (crosses a byte boundary in bitmap).
+        let mut neighbors: Vec<(u32, Option<&[u8]>)> = (0..12).map(|j| (j, None)).collect();
+        neighbors[1].1 = Some(c1.as_slice());
+        neighbors[9].1 = Some(c2.as_slice());
+        let w = PageWriter { page_size: 256, vec_stride: 4, pq_m: m, vectors: vec![(0, &[0u8; 4])], neighbors };
+        let mut buf = vec![0u8; 256];
+        w.serialize_into(&mut buf).unwrap();
+        let p = PageRef::parse(&buf, 4, m).unwrap();
+        assert_eq!(p.nbr_code(0), None);
+        assert_eq!(p.nbr_code(1).unwrap(), &c1[..]);
+        assert_eq!(p.nbr_code(5), None);
+        assert_eq!(p.nbr_code(9).unwrap(), &c2[..]);
+        assert_eq!(p.nbr_code(11), None);
+        assert!(p.used_bytes() < 256);
+    }
+
+    #[test]
+    fn overflow_rejected_and_truncate_fixes() {
+        let stride = 64;
+        let vecs = mk_vectors(3, stride);
+        let code = vec![0u8; 8];
+        let mut w = PageWriter {
+            page_size: 256,
+            vec_stride: stride,
+            pq_m: 8,
+            vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
+            neighbors: (0..20).map(|j| (j, Some(code.as_slice()))).collect(),
+        };
+        let mut buf = vec![0u8; 256];
+        assert!(w.serialize_into(&mut buf).is_err());
+        w.truncate_to_fit();
+        assert!(w.fits());
+        w.serialize_into(&mut buf).unwrap();
+        let p = PageRef::parse(&buf, stride, 8).unwrap();
+        assert_eq!(p.n_vecs(), 3);
+        assert!(p.n_nbrs() < 20);
+    }
+
+    #[test]
+    fn corrupt_header_detected() {
+        let mut buf = vec![0u8; 64];
+        buf[0..2].copy_from_slice(&100u16.to_le_bytes()); // 100 vecs can't fit
+        buf[2..4].copy_from_slice(&0u16.to_le_bytes());
+        assert!(PageRef::parse(&buf, 32, 4).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Vector-id reassignment tables (paper §5: "Vector ID reassignment").
+//!
+//! After page grouping, vectors get new ids `page_idx * capacity + offset`
+//! so the searcher recovers the page of any id with one division. Pages may
+//! be partially filled, so the new-id space has holes (`INVALID`).
+
+use crate::util::{ReadExt, WriteExt};
+use crate::Result;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const INVALID: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+pub struct IdRemap {
+    /// new-id (slot) → original id, `INVALID` for unused slots.
+    pub new_to_orig: Vec<u32>,
+    /// original id → new id.
+    pub orig_to_new: Vec<u32>,
+    pub capacity: usize,
+}
+
+impl IdRemap {
+    /// Build from the page grouping: `pages[p]` = original ids in page `p`.
+    pub fn from_pages(pages: &[Vec<u32>], capacity: usize, n_vectors: usize) -> Self {
+        let mut new_to_orig = vec![INVALID; pages.len() * capacity];
+        let mut orig_to_new = vec![INVALID; n_vectors];
+        for (p, members) in pages.iter().enumerate() {
+            assert!(members.len() <= capacity, "page {p} overfull");
+            for (off, &orig) in members.iter().enumerate() {
+                let new_id = (p * capacity + off) as u32;
+                new_to_orig[new_id as usize] = orig;
+                debug_assert_eq!(orig_to_new[orig as usize], INVALID, "vector {orig} grouped twice");
+                orig_to_new[orig as usize] = new_id;
+            }
+        }
+        Self { new_to_orig, orig_to_new, capacity }
+    }
+
+    #[inline]
+    pub fn page_of(&self, new_id: u32) -> u32 {
+        new_id / self.capacity as u32
+    }
+
+    #[inline]
+    pub fn to_orig(&self, new_id: u32) -> u32 {
+        self.new_to_orig[new_id as usize]
+    }
+
+    #[inline]
+    pub fn to_new(&self, orig_id: u32) -> u32 {
+        self.orig_to_new[orig_id as usize]
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.new_to_orig.len()
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_u32(self.capacity as u32)?;
+        w.write_u64(self.new_to_orig.len() as u64)?;
+        w.write_u64(self.orig_to_new.len() as u64)?;
+        w.write_u32_slice(&self.new_to_orig)?;
+        w.write_u32_slice(&self.orig_to_new)?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let capacity = r.read_u32v()? as usize;
+        anyhow::ensure!(capacity > 0, "corrupt remap");
+        let n_new = r.read_u64v()? as usize;
+        let n_orig = r.read_u64v()? as usize;
+        let new_to_orig = r.read_u32_vec(n_new)?;
+        let orig_to_new = r.read_u32_vec(n_orig)?;
+        Ok(Self { new_to_orig, orig_to_new, capacity })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join("remap.bin"))?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(dir.join("remap.bin"))?);
+        Self::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bijection_over_valid_slots() {
+        let pages = vec![vec![5u32, 2], vec![0u32, 1, 3], vec![4u32]];
+        let r = IdRemap::from_pages(&pages, 3, 6);
+        assert_eq!(r.n_slots(), 9);
+        for orig in 0..6u32 {
+            let n = r.to_new(orig);
+            assert_ne!(n, INVALID);
+            assert_eq!(r.to_orig(n), orig);
+        }
+        // Page lookup.
+        assert_eq!(r.page_of(r.to_new(5)), 0);
+        assert_eq!(r.page_of(r.to_new(3)), 1);
+        assert_eq!(r.page_of(r.to_new(4)), 2);
+        // Holes are INVALID.
+        assert_eq!(r.to_orig(2), INVALID); // page0 slot 2 unused
+    }
+
+    #[test]
+    #[should_panic(expected = "overfull")]
+    fn overfull_page_panics() {
+        let pages = vec![vec![0u32, 1, 2, 3]];
+        let _ = IdRemap::from_pages(&pages, 3, 4);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let pages = vec![vec![1u32, 0], vec![2u32]];
+        let r = IdRemap::from_pages(&pages, 2, 3);
+        let mut buf = Vec::new();
+        r.write_to(&mut buf).unwrap();
+        let back = IdRemap::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.new_to_orig, r.new_to_orig);
+        assert_eq!(back.orig_to_new, r.orig_to_new);
+        assert_eq!(back.capacity, 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! PageANN — scalable disk-based ANN search with a page-aligned graph.
+//! See DESIGN.md for the system inventory and experiment index.
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod dataset;
+pub mod distance;
+pub mod engine;
+pub mod io;
+pub mod layout;
+pub mod memplan;
+pub mod metrics;
+pub mod pagegraph;
+pub mod pq;
+pub mod proptest;
+pub mod routing;
+pub mod runtime;
+pub mod search;
+pub mod util;
+pub mod vamana;
+
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,195 @@
+//! PageANN CLI: build indexes, search them, and regenerate the paper's
+//! experiments.
+//!
+//! ```text
+//! pageann build  --out <dir> [--kind sift|spacev|deep] [--n 60000]
+//!                [--placement onpage|hybrid:<frac>|inmem] [--page-size 4096]
+//! pageann search --index <dir> [--kind sift] [--n 60000] [--k 10] [--l 64]
+//!                [--queries 100] [--sim-ssd]
+//! pageann experiment <id>|all [--scale xs|s|m] [--workdir target/experiments]
+//! pageann info
+//! ```
+//!
+//! (Arg parsing is hand-rolled: the offline vendor set has no clap.)
+
+use pageann::bench::{list_experiments, run_experiment, ExperimentCtx, Scale};
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, OpenOptions, PageAnnIndex};
+use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
+use pageann::Result;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs + positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.flags.get(key).map(|v| v.parse()).transpose()?.unwrap_or(default))
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn dataset_kind(s: &str) -> Result<DatasetKind> {
+    Ok(match s {
+        "sift" => DatasetKind::SiftLike,
+        "spacev" => DatasetKind::SpacevLike,
+        "deep" => DatasetKind::DeepLike,
+        _ => anyhow::bail!("unknown dataset kind {s} (sift|spacev|deep)"),
+    })
+}
+
+fn placement(s: &str) -> Result<CvPlacement> {
+    Ok(match s {
+        "onpage" => CvPlacement::OnPage,
+        "inmem" => CvPlacement::InMemory,
+        other => match other.strip_prefix("hybrid:") {
+            Some(f) => CvPlacement::Hybrid { mem_frac: f.parse()? },
+            None => anyhow::bail!("unknown placement {s} (onpage|hybrid:<frac>|inmem)"),
+        },
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("build") => cmd_build(&args),
+        Some("search") => cmd_search(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: pageann <build|search|experiment|info> [flags]");
+            eprintln!("experiments: {}", list_experiments().join(", "));
+            Ok(())
+        }
+    }
+}
+
+fn cmd_build(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out", "target/index"));
+    let kind = dataset_kind(&args.get("kind", "sift"))?;
+    let n = args.get_usize("n", 60_000)?;
+    let cv = placement(&args.get("placement", "onpage"))?;
+    let spec = SynthSpec::new(kind, n);
+    eprintln!("synthesizing {} n={n}...", spec.name());
+    let base = spec.generate(0xDA7A);
+    let cfg = BuildConfig {
+        page_size: args.get_usize("page-size", 4096)?,
+        cv_placement: cv,
+        pq_m: args.get_usize("pq-m", 16)?,
+        ..Default::default()
+    };
+    eprintln!("building index into {}...", out.display());
+    let report = IndexBuilder::new(&base, cfg).build(&out)?;
+    println!(
+        "built: {} pages × {}B, capacity {} vecs/page, avg page degree {:.1}",
+        report.n_pages,
+        args.get_usize("page-size", 4096)?,
+        report.capacity,
+        report.avg_page_degree
+    );
+    println!(
+        "times: vamana {:.1}s, pq {:.1}s, grouping {:.1}s, write {:.1}s",
+        report.vamana_secs, report.pq_secs, report.grouping_secs, report.write_secs
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("index", "target/index"));
+    let kind = dataset_kind(&args.get("kind", "sift"))?;
+    let n = args.get_usize("n", 60_000)?;
+    let k = args.get_usize("k", 10)?;
+    let l = args.get_usize("l", 64)?;
+    let nq = args.get_usize("queries", 100)?;
+    let threads = args.get_usize("threads", 16)?;
+
+    let spec = SynthSpec::new(kind, n);
+    eprintln!("regenerating workload for ground truth...");
+    let w = Workload::synthesize(&spec, nq, k, 0xDA7A);
+    let opts = OpenOptions {
+        sim_ssd: args.has("sim-ssd").then(Default::default),
+        ..Default::default()
+    };
+    let idx = PageAnnIndex::open(&dir, opts)?;
+    let rep = run_workload(&idx, &w.queries, Some(&w.gt), k, l, threads);
+    println!(
+        "recall@{k}={:.4}  qps={:.1}  mean={:.2}ms p50={:.2}ms p99={:.2}ms  meanIOs={:.1}  readamp={:.2}",
+        rep.summary.recall,
+        rep.summary.qps(),
+        rep.summary.mean_latency_ms(),
+        rep.summary.latency.p50_ms(),
+        rep.summary.latency.p99_ms(),
+        rep.summary.mean_ios(),
+        rep.summary.totals.read_amplification(),
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let scale = Scale::parse(&args.get("scale", "s"))?;
+    let workdir = PathBuf::from(args.get("workdir", "target/experiments"));
+    let results = PathBuf::from(args.get("results", "results"));
+    let mut ctx = ExperimentCtx::new(scale, &workdir, &results)?;
+    if args.has("no-sim-ssd") {
+        ctx.sim = None;
+    }
+    let ids: Vec<&str> = if id == "all" { list_experiments() } else { vec![id] };
+    for id in ids {
+        eprintln!("=== running {id} ===");
+        for table in run_experiment(&mut ctx, id)? {
+            println!("{}", table.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("pageann {} — PageANN reproduction (rust + JAX + Pallas)", env!("CARGO_PKG_VERSION"));
+    match pageann::runtime::XlaRuntime::cpu() {
+        Ok(rt) => println!("pjrt: platform={} devices={}", rt.platform(), rt.device_count()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    match pageann::runtime::ArtifactSet::load(std::path::Path::new("artifacts")) {
+        Ok(a) => println!("artifacts: {}", a.names().join(", ")),
+        Err(e) => println!("artifacts: {e}"),
+    }
+    println!("host threads: {}", pageann::util::num_threads());
+    Ok(())
+}

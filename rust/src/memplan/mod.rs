@@ -1,0 +1,156 @@
+//! Memory-disk coordination (paper §4.3): given a host-memory budget,
+//! decide what lives in memory — routing index, compressed vectors, cached
+//! pages — and therefore how the index is built (CV placement changes page
+//! capacity and graph size).
+//!
+//! The three regimes of the paper:
+//! 1. **severe** (budget ≪ code table): all codes on-page; memory only
+//!    holds the tiny routing index.
+//! 2. **moderate**: hybrid — the hottest codes move to memory.
+//! 3. **ample** (budget ≥ code table): all codes in memory, pages fit more
+//!    vectors (smaller graph), leftover budget pins hot pages.
+
+use crate::layout::CvPlacement;
+
+/// A concrete plan for one (dataset, budget) pair.
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    pub budget_bytes: usize,
+    pub cv_placement: CvPlacement,
+    pub routing_bits: usize,
+    pub routing_sample_frac: f64,
+    /// Bytes left for the warm-up page cache after codes + routing.
+    pub cache_budget_bytes: usize,
+}
+
+/// Summary of what a plan will consume (for experiment reporting).
+#[derive(Debug, Clone)]
+pub struct PlanEstimate {
+    pub routing_bytes: usize,
+    pub code_bytes: usize,
+    pub cache_bytes: usize,
+}
+
+/// Derive the plan. `dataset_bytes` is the raw vector payload (the paper's
+/// memory-ratio denominator); `n_vectors`, `dim`, `pq_m` size the tables.
+pub fn plan(
+    budget_bytes: usize,
+    n_vectors: usize,
+    dim: usize,
+    pq_m: usize,
+) -> MemoryPlan {
+    let code_table = n_vectors * pq_m;
+
+    // Routing tier: scale the sample with the budget, floor at a token
+    // sample (the paper's 0.05% configuration still routes).
+    let (routing_bits, routing_sample_frac) = if budget_bytes < code_table / 4 {
+        (32usize, 0.002f64)
+    } else if budget_bytes < code_table * 2 {
+        (32, 0.01)
+    } else {
+        (32, 0.02)
+    };
+    let routing_bytes = routing_cost(n_vectors, dim, pq_m, routing_bits, routing_sample_frac);
+    let after_routing = budget_bytes.saturating_sub(routing_bytes);
+
+    // CV placement tiers (§4.3 / Fig. 11 inflection points).
+    let cv_placement = if after_routing < (code_table as f64 * 0.35) as usize {
+        CvPlacement::OnPage
+    } else if after_routing < code_table {
+        let mem_frac = (after_routing as f64 / code_table as f64 * 0.9).clamp(0.05, 0.95);
+        CvPlacement::Hybrid { mem_frac }
+    } else {
+        CvPlacement::InMemory
+    };
+
+    let code_bytes = (code_table as f64 * cv_placement.mem_frac()) as usize;
+    let cache_budget_bytes = after_routing.saturating_sub(code_bytes);
+
+    MemoryPlan { budget_bytes, cv_placement, routing_bits, routing_sample_frac, cache_budget_bytes }
+}
+
+/// Rough memory cost of the routing tier: planes + buckets + pinned sample
+/// codes (which write_memcodes adds on top of the CV placement).
+pub fn routing_cost(n_vectors: usize, dim: usize, pq_m: usize, bits: usize, frac: f64) -> usize {
+    let planes = bits * dim * 4;
+    let sample = (n_vectors as f64 * frac) as usize;
+    planes + sample * (4 + 4 + pq_m) // bucket id + memcode id + code
+}
+
+impl MemoryPlan {
+    pub fn estimate(&self, n_vectors: usize, dim: usize, pq_m: usize) -> PlanEstimate {
+        PlanEstimate {
+            routing_bytes: routing_cost(n_vectors, dim, pq_m, self.routing_bits, self.routing_sample_frac),
+            code_bytes: (n_vectors as f64 * pq_m as f64 * self.cv_placement.mem_frac()) as usize,
+            cache_bytes: self.cache_budget_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 100_000;
+    const DIM: usize = 128;
+    const M: usize = 16;
+
+    fn dataset_bytes() -> usize {
+        N * DIM // u8 SIFT-like
+    }
+
+    #[test]
+    fn severe_budget_keeps_codes_on_page() {
+        // 0.05% of dataset — the paper's Table 4 headline point.
+        let p = plan(dataset_bytes() / 2000, N, DIM, M);
+        assert!(matches!(p.cv_placement, CvPlacement::OnPage), "{:?}", p.cv_placement);
+        assert_eq!(p.cache_budget_bytes, 0);
+    }
+
+    #[test]
+    fn moderate_budget_goes_hybrid() {
+        // 10% of dataset ≈ 0.8 × code table for these params.
+        let p = plan(dataset_bytes() / 10, N, DIM, M);
+        match p.cv_placement {
+            CvPlacement::Hybrid { mem_frac } => {
+                assert!(mem_frac > 0.2 && mem_frac < 0.95, "{mem_frac}");
+            }
+            other => panic!("expected hybrid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ample_budget_goes_in_memory_with_cache() {
+        // 30% of dataset ≫ code table.
+        let p = plan(dataset_bytes() * 3 / 10, N, DIM, M);
+        assert!(matches!(p.cv_placement, CvPlacement::InMemory));
+        assert!(p.cache_budget_bytes > 0);
+        let est = p.estimate(N, DIM, M);
+        assert!(est.cache_bytes > 0 && est.code_bytes == N * M);
+    }
+
+    #[test]
+    fn plan_is_monotone_in_budget() {
+        let mut last_frac = -1.0;
+        for ratio in [0.001, 0.01, 0.05, 0.1, 0.2, 0.3, 0.5] {
+            let p = plan((dataset_bytes() as f64 * ratio) as usize, N, DIM, M);
+            let frac = p.cv_placement.mem_frac();
+            assert!(frac >= last_frac, "mem_frac not monotone at ratio {ratio}");
+            last_frac = frac;
+        }
+    }
+
+    #[test]
+    fn estimate_fits_budget_approximately() {
+        for ratio in [0.05, 0.1, 0.3] {
+            let budget = (dataset_bytes() as f64 * ratio) as usize;
+            let p = plan(budget, N, DIM, M);
+            let est = p.estimate(N, DIM, M);
+            let total = est.routing_bytes + est.code_bytes + est.cache_bytes;
+            assert!(
+                total <= budget + budget / 5,
+                "plan overshoots at ratio {ratio}: {total} > {budget}"
+            );
+        }
+    }
+}

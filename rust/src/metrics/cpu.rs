@@ -1,0 +1,83 @@
+//! Process CPU utilization sampling from /proc (Table 5's CPU column).
+
+use std::time::Instant;
+
+/// Measures process CPU utilization (% of one core; >100% means more than
+/// one core busy) between `start()` and `stop()`.
+pub struct CpuMeter {
+    start_wall: Instant,
+    start_cpu: f64,
+}
+
+/// Total user+system CPU seconds consumed by this process so far.
+fn process_cpu_seconds() -> f64 {
+    // /proc/self/stat fields 14,15 (utime, stime) in clock ticks.
+    let Ok(stat) = std::fs::read_to_string("/proc/self/stat") else {
+        return 0.0;
+    };
+    // The comm field may contain spaces; skip to after the closing paren.
+    let Some(rest) = stat.rsplit_once(')').map(|(_, r)| r) else {
+        return 0.0;
+    };
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    // After ") ", field index 11 = utime, 12 = stime (0-based in `rest`).
+    if fields.len() < 13 {
+        return 0.0;
+    }
+    let utime: f64 = fields[11].parse().unwrap_or(0.0);
+    let stime: f64 = fields[12].parse().unwrap_or(0.0);
+    let hz = ticks_per_second();
+    (utime + stime) / hz
+}
+
+fn ticks_per_second() -> f64 {
+    // SC_CLK_TCK is 100 on every Linux we target.
+    let v = unsafe { libc::sysconf(libc::_SC_CLK_TCK) };
+    if v > 0 {
+        v as f64
+    } else {
+        100.0
+    }
+}
+
+impl CpuMeter {
+    pub fn start() -> Self {
+        Self { start_wall: Instant::now(), start_cpu: process_cpu_seconds() }
+    }
+
+    /// CPU utilization since `start()`, in percent of one core.
+    pub fn utilization_pct(&self) -> f64 {
+        let wall = self.start_wall.elapsed().as_secs_f64();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        let cpu = process_cpu_seconds() - self.start_cpu;
+        (cpu / wall) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_loop_registers_cpu() {
+        let meter = CpuMeter::start();
+        // Burn ~30ms of CPU.
+        let t = Instant::now();
+        let mut x = 0u64;
+        while t.elapsed().as_millis() < 30 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(x);
+        let pct = meter.utilization_pct();
+        assert!(pct > 20.0, "cpu meter too low: {pct}");
+        assert!(pct < 3000.0, "cpu meter absurd: {pct}");
+    }
+
+    #[test]
+    fn clk_tck_sane() {
+        let hz = ticks_per_second();
+        assert!(hz >= 50.0 && hz <= 1000.0, "{hz}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Latency histogram with log-spaced buckets (1µs … 10s) for percentile
+//! reporting without storing every sample.
+
+use std::time::Duration;
+
+const BUCKETS: usize = 200;
+const MIN_US: f64 = 1.0;
+const MAX_US: f64 = 10_000_000.0; // 10 s
+
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= MIN_US {
+            return 0;
+        }
+        let frac = (us.ln() - MIN_US.ln()) / (MAX_US.ln() - MIN_US.ln());
+        ((frac * BUCKETS as f64) as usize).min(BUCKETS - 1)
+    }
+
+    /// Representative (geometric-mid) latency of bucket `b`, in µs.
+    fn bucket_value(b: usize) -> f64 {
+        let frac = (b as f64 + 0.5) / BUCKETS as f64;
+        (MIN_US.ln() + frac * (MAX_US.ln() - MIN_US.ln())).exp()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.counts[Self::bucket_of(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Approximate percentile (0.0–1.0) in µs.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(b);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_us(0.50) / 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_us(0.99) / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles_track_samples() {
+        let mut h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 10);
+        let mean = h.mean_us() / 1e3;
+        assert!((mean - 14.5).abs() < 0.1, "{mean}");
+        // p50 around 5ms (log buckets — allow wide slack).
+        let p50 = h.p50_ms();
+        assert!(p50 > 2.0 && p50 < 9.0, "{p50}");
+        // p99 near the 100ms outlier.
+        let p99 = h.p99_ms();
+        assert!(p99 > 50.0, "{p99}");
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_millis(10));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.percentile_us(1.0) >= 9_000.0);
+    }
+
+    #[test]
+    fn extremes_clamped() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1));
+        h.record(Duration::from_secs(100));
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(0.0) >= 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Query metrics: the quantities every table and figure in the paper
+//! reports — latency (mean + percentiles), throughput (QPS), mean I/Os,
+//! read amplification, I/O-vs-compute breakdown (Fig. 2), and CPU
+//! utilization (Table 5).
+
+mod cpu;
+mod histogram;
+
+pub use cpu::CpuMeter;
+pub use histogram::LatencyHistogram;
+
+use std::time::Duration;
+
+/// Per-query statistics, filled in by the searcher.
+#[derive(Debug, Clone, Default)]
+pub struct QueryStats {
+    /// Disk page reads issued (cache hits excluded).
+    pub ios: u64,
+    /// Bytes fetched from disk.
+    pub bytes_read: u64,
+    /// Bytes of fetched data actually consumed (vectors scanned + topology
+    /// used) — numerator of read-amplification's inverse.
+    pub bytes_used: u64,
+    /// Pages served from the in-memory cache.
+    pub cache_hits: u64,
+    /// Graph hops (batched expansion rounds).
+    pub hops: u64,
+    /// Number of exact distance computations.
+    pub exact_dists: u64,
+    /// Number of ADC (compressed) distance computations.
+    pub approx_dists: u64,
+    /// Wall time inside I/O waits.
+    pub io_time: Duration,
+    /// Wall time in distance computation / heap maintenance.
+    pub compute_time: Duration,
+    /// End-to-end query latency.
+    pub total_time: Duration,
+}
+
+impl QueryStats {
+    pub fn merge(&mut self, other: &QueryStats) {
+        self.ios += other.ios;
+        self.bytes_read += other.bytes_read;
+        self.bytes_used += other.bytes_used;
+        self.cache_hits += other.cache_hits;
+        self.hops += other.hops;
+        self.exact_dists += other.exact_dists;
+        self.approx_dists += other.approx_dists;
+        self.io_time += other.io_time;
+        self.compute_time += other.compute_time;
+        self.total_time += other.total_time;
+    }
+
+    /// Read amplification: bytes fetched / bytes useful. 1.0 is ideal.
+    pub fn read_amplification(&self) -> f64 {
+        if self.bytes_used == 0 {
+            return if self.bytes_read == 0 { 1.0 } else { f64::INFINITY };
+        }
+        self.bytes_read as f64 / self.bytes_used as f64
+    }
+}
+
+/// Aggregate over a batch of queries.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub queries: u64,
+    pub wall: Duration,
+    pub totals: QueryStats,
+    pub latency: LatencyHistogram,
+    pub recall: f64,
+}
+
+impl RunSummary {
+    pub fn qps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.queries as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        self.totals.total_time.as_secs_f64() * 1e3 / self.queries as f64
+    }
+
+    pub fn mean_ios(&self) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        self.totals.ios as f64 / self.queries as f64
+    }
+
+    pub fn io_fraction(&self) -> f64 {
+        let tot = self.totals.total_time.as_secs_f64();
+        if tot == 0.0 {
+            return 0.0;
+        }
+        self.totals.io_time.as_secs_f64() / tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_amplification_edge_cases() {
+        let mut s = QueryStats::default();
+        assert_eq!(s.read_amplification(), 1.0);
+        s.bytes_read = 4096;
+        assert_eq!(s.read_amplification(), f64::INFINITY);
+        s.bytes_used = 2048;
+        assert_eq!(s.read_amplification(), 2.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = QueryStats { ios: 2, bytes_read: 100, ..Default::default() };
+        let b = QueryStats { ios: 3, bytes_read: 50, hops: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.ios, 5);
+        assert_eq!(a.bytes_read, 150);
+        assert_eq!(a.hops, 1);
+    }
+
+    #[test]
+    fn summary_rates() {
+        let mut r = RunSummary { queries: 100, wall: Duration::from_secs(2), ..Default::default() };
+        r.totals.total_time = Duration::from_secs(1);
+        r.totals.io_time = Duration::from_millis(900);
+        r.totals.ios = 500;
+        assert!((r.qps() - 50.0).abs() < 1e-9);
+        assert!((r.mean_latency_ms() - 10.0).abs() < 1e-9);
+        assert!((r.mean_ios() - 5.0).abs() < 1e-9);
+        assert!((r.io_fraction() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let r = RunSummary::default();
+        assert_eq!(r.qps(), 0.0);
+        assert_eq!(r.mean_latency_ms(), 0.0);
+        assert_eq!(r.mean_ios(), 0.0);
+        assert_eq!(r.io_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Hop-bounded proximity grouping (Algorithm 1 lines 1–13).
+
+use crate::dataset::VectorSet;
+use crate::util::XorShift;
+use crate::vamana::VamanaGraph;
+
+#[derive(Debug, Clone)]
+pub struct GroupingParams {
+    /// Page-node capacity `n` (vectors per page).
+    pub capacity: usize,
+    /// Hop bound `h` for candidate collection.
+    pub hops: usize,
+    pub seed: u64,
+}
+
+impl Default for GroupingParams {
+    fn default() -> Self {
+        Self { capacity: 16, hops: 2, seed: 42 }
+    }
+}
+
+/// Group all vectors into pages of at most `capacity` members.
+///
+/// Seeds are taken in a deterministic shuffled order. For each seed we BFS
+/// up to `hops` levels over the vector graph, restricted to ungrouped
+/// vectors (matching `ungroupedNbrsWithinHops` in the paper), sort the
+/// candidates by distance to the seed and keep the closest `capacity - 1`.
+/// If the neighborhood is exhausted (tail of construction), the page is
+/// back-filled from the ungrouped pool (Alg. 1 lines 9–11).
+pub fn group_into_pages(
+    base: &VectorSet,
+    graph: &VamanaGraph,
+    params: &GroupingParams,
+) -> Vec<Vec<u32>> {
+    let n = base.len();
+    let cap = params.capacity.max(1);
+    let mut grouped = vec![false; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = XorShift::new(params.seed);
+    rng.shuffle(&mut order);
+
+    // Ungrouped pool for O(1) back-fill extraction: a cursor over `order`.
+    let mut cursor = 0usize;
+    let mut pages: Vec<Vec<u32>> = Vec::with_capacity(n / cap + 1);
+
+    let mut bfs_buf: Vec<u32> = Vec::new();
+    let mut depth_buf: Vec<usize> = Vec::new();
+    let mut in_frontier = vec![false; n];
+
+    for &seed in order.iter() {
+        if grouped[seed as usize] {
+            continue;
+        }
+        let mut page = Vec::with_capacity(cap);
+        grouped[seed as usize] = true;
+        page.push(seed);
+
+        if cap > 1 {
+            // BFS over ungrouped vectors within `hops`.
+            bfs_buf.clear();
+            depth_buf.clear();
+            bfs_buf.push(seed);
+            depth_buf.push(0);
+            in_frontier[seed as usize] = true;
+            let mut head = 0usize;
+            let mut candidates: Vec<u32> = Vec::new();
+            while head < bfs_buf.len() {
+                let v = bfs_buf[head];
+                let d = depth_buf[head];
+                head += 1;
+                if d >= params.hops {
+                    continue;
+                }
+                for &nb in &graph.adj[v as usize] {
+                    if in_frontier[nb as usize] || grouped[nb as usize] {
+                        continue;
+                    }
+                    in_frontier[nb as usize] = true;
+                    bfs_buf.push(nb);
+                    depth_buf.push(d + 1);
+                    candidates.push(nb);
+                }
+            }
+            for &v in &bfs_buf {
+                in_frontier[v as usize] = false;
+            }
+
+            // Keep the capacity-1 closest candidates to the seed.
+            let sq = base.get_f32(seed as usize);
+            let mut scored: Vec<(f32, u32)> = candidates
+                .into_iter()
+                .map(|c| (crate::distance::l2sq_query(&sq, base.view(c as usize)), c))
+                .collect();
+            scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for &(_, c) in scored.iter().take(cap - 1) {
+                grouped[c as usize] = true;
+                page.push(c);
+            }
+
+            // Back-fill from the ungrouped pool.
+            while page.len() < cap {
+                while cursor < order.len() && grouped[order[cursor] as usize] {
+                    cursor += 1;
+                }
+                if cursor >= order.len() {
+                    break;
+                }
+                let v = order[cursor];
+                grouped[v as usize] = true;
+                page.push(v);
+            }
+        }
+        pages.push(page);
+    }
+    pages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+    use crate::vamana::VamanaParams;
+
+    fn setup(n: usize) -> (VectorSet, VamanaGraph) {
+        let spec = SynthSpec::new(DatasetKind::DeepLike, n).with_dim(12).with_clusters(6);
+        let base = spec.generate(3);
+        let g = VamanaGraph::build(
+            &base,
+            &VamanaParams { r: 10, l_build: 20, alpha: 1.2, seed: 2, nthreads: 2 },
+        );
+        (base, g)
+    }
+
+    #[test]
+    fn partition_is_exact_and_bounded() {
+        let (base, g) = setup(500);
+        let pages = group_into_pages(&base, &g, &GroupingParams { capacity: 7, hops: 2, seed: 9 });
+        let mut seen = vec![false; 500];
+        for p in &pages {
+            assert!(!p.is_empty() && p.len() <= 7);
+            for &v in p {
+                assert!(!seen[v as usize]);
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // All but the tail pages should be full (back-fill guarantees it).
+        let full = pages.iter().filter(|p| p.len() == 7).count();
+        assert!(full >= pages.len() - 1, "{full}/{}", pages.len());
+    }
+
+    #[test]
+    fn pages_are_spatially_coherent() {
+        // Mean intra-page distance must be well below the global mean
+        // distance — that's the clustering property the page graph relies
+        // on (wasted-read elimination).
+        let (base, g) = setup(600);
+        let pages = group_into_pages(&base, &g, &GroupingParams { capacity: 8, hops: 2, seed: 9 });
+        let mut rng = XorShift::new(1);
+        let mut intra = 0f64;
+        let mut intra_n = 0usize;
+        for p in pages.iter().take(30) {
+            for i in 0..p.len() {
+                for j in (i + 1)..p.len() {
+                    intra += crate::distance::l2sq_f32(
+                        &base.get_f32(p[i] as usize),
+                        &base.get_f32(p[j] as usize),
+                    ) as f64;
+                    intra_n += 1;
+                }
+            }
+        }
+        let mut global = 0f64;
+        for _ in 0..2000 {
+            let a = rng.next_below(600);
+            let b = rng.next_below(600);
+            global += crate::distance::l2sq_f32(&base.get_f32(a), &base.get_f32(b)) as f64 / 2000.0;
+        }
+        let intra_mean = intra / intra_n as f64;
+        assert!(
+            intra_mean < global * 0.6,
+            "pages not coherent: intra {intra_mean:.3} vs global {global:.3}"
+        );
+    }
+
+    #[test]
+    fn capacity_one_degenerates_to_singletons() {
+        let (base, g) = setup(100);
+        let pages = group_into_pages(&base, &g, &GroupingParams { capacity: 1, hops: 1, seed: 0 });
+        assert_eq!(pages.len(), 100);
+        assert!(pages.iter().all(|p| p.len() == 1));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (base, g) = setup(200);
+        let p1 = group_into_pages(&base, &g, &GroupingParams { capacity: 5, hops: 2, seed: 7 });
+        let p2 = group_into_pages(&base, &g, &GroupingParams { capacity: 5, hops: 2, seed: 7 });
+        assert_eq!(p1, p2);
+    }
+}

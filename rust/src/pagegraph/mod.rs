@@ -1,0 +1,171 @@
+//! Page-node graph construction (paper §4.1, Algorithm 1).
+//!
+//! Vectors are grouped into page nodes by hop-bounded proximity clustering
+//! over the Vamana graph: take an ungrouped seed, collect its ungrouped
+//! neighbors within `h` hops, keep the `n-1` closest, fill stragglers from
+//! the ungrouped pool. Page-level edges are then derived by aggregating the
+//! vector-level edges that cross page boundaries, dropping intra-page edges
+//! and merging duplicates — keeping at most `reps_per_page` representative
+//! vectors per neighboring page (closest-first), which is the paper's
+//! "representative vectors" device for bounding per-page topology size.
+
+mod grouping;
+
+pub use grouping::{group_into_pages, GroupingParams};
+
+use crate::dataset::VectorSet;
+use crate::layout::IdRemap;
+use crate::vamana::VamanaGraph;
+
+/// The page-node graph in new-id space, ready for the layout writer.
+pub struct PageGraph {
+    /// `pages[p]` = original vector ids of page `p`'s members (ordered:
+    /// member offset in the page = index here).
+    pub pages: Vec<Vec<u32>>,
+    /// `nbrs[p]` = neighbor entries of page `p`: new-ids of representative
+    /// vectors in *other* pages, priority-ordered (closest reps first).
+    pub nbrs: Vec<Vec<u32>>,
+    pub remap: IdRemap,
+    pub capacity: usize,
+}
+
+/// Derive the page-node graph from a vector-level Vamana graph.
+///
+/// `max_nbrs` bounds neighbor entries per page; `reps_per_page` bounds how
+/// many representatives a single neighboring page may contribute.
+pub fn build_page_graph(
+    base: &VectorSet,
+    graph: &VamanaGraph,
+    params: &GroupingParams,
+    max_nbrs: usize,
+    reps_per_page: usize,
+) -> PageGraph {
+    let pages = group_into_pages(base, graph, params);
+    let remap = IdRemap::from_pages(&pages, params.capacity, base.len());
+
+    // Aggregate external edges per page (Alg. 1 lines 14-26) with
+    // representative selection.
+    let n_pages = pages.len();
+    let mut nbrs: Vec<Vec<u32>> = Vec::with_capacity(n_pages);
+    for (p, members) in pages.iter().enumerate() {
+        // target page -> (distance of edge source to member centroid proxy,
+        // new-id of the external endpoint). We rank candidate reps by the
+        // *edge distance* (d(source member, external endpoint)): short
+        // cross-page edges are exactly the original graph's strongest
+        // connections (robust-pruned), so they are the best reps.
+        let mut per_page: std::collections::HashMap<u32, Vec<(f32, u32)>> =
+            std::collections::HashMap::new();
+        for &orig in members {
+            let vq = base.get_f32(orig as usize);
+            for &nb_orig in &graph.adj[orig as usize] {
+                let nb_new = remap.to_new(nb_orig);
+                let nb_page = remap.page_of(nb_new);
+                if nb_page as usize == p {
+                    continue; // intra-page edge: merged away
+                }
+                let d = crate::distance::l2sq_query(&vq, base.view(nb_orig as usize));
+                per_page.entry(nb_page).or_default().push((d, nb_new));
+            }
+        }
+        // Per neighboring page: dedup endpoints, keep closest reps.
+        let mut entries: Vec<(f32, u32)> = Vec::new();
+        for (_, mut cands) in per_page {
+            cands.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            cands.dedup_by_key(|&mut (_, id)| id);
+            for &(d, id) in cands.iter().take(reps_per_page) {
+                entries.push((d, id));
+            }
+        }
+        // Priority order across all neighbor pages, capped.
+        entries.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        entries.truncate(max_nbrs);
+        nbrs.push(entries.into_iter().map(|(_, id)| id).collect());
+    }
+
+    PageGraph { pages, nbrs, remap, capacity: params.capacity }
+}
+
+impl PageGraph {
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn avg_page_degree(&self) -> f64 {
+        let total: usize = self.nbrs.iter().map(|n| n.len()).sum();
+        total as f64 / self.n_pages().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+    use crate::vamana::VamanaParams;
+
+    fn setup() -> (VectorSet, VamanaGraph) {
+        let spec = SynthSpec::new(DatasetKind::DeepLike, 600).with_dim(16).with_clusters(8);
+        let base = spec.generate(12);
+        let g = VamanaGraph::build(
+            &base,
+            &VamanaParams { r: 12, l_build: 24, alpha: 1.2, seed: 4, nthreads: 4 },
+        );
+        (base, g)
+    }
+
+    #[test]
+    fn page_graph_invariants() {
+        let (base, g) = setup();
+        let params = GroupingParams { capacity: 8, hops: 2, seed: 1 };
+        let pg = build_page_graph(&base, &g, &params, 32, 2);
+
+        // Every vector appears in exactly one page.
+        let mut seen = vec![false; base.len()];
+        for page in &pg.pages {
+            assert!(page.len() <= 8);
+            for &v in page {
+                assert!(!seen[v as usize], "vector {v} in two pages");
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+
+        // Neighbor entries: valid slots, never the owning page, ≤ cap,
+        // no duplicate endpoints.
+        for (p, nbrs) in pg.nbrs.iter().enumerate() {
+            assert!(nbrs.len() <= 32);
+            let set: std::collections::HashSet<_> = nbrs.iter().collect();
+            assert_eq!(set.len(), nbrs.len(), "dup endpoint in page {p}");
+            for &nb in nbrs {
+                assert_ne!(pg.remap.page_of(nb) as usize, p, "self-edge on page {p}");
+                // Endpoints must be occupied slots, not holes.
+                assert_ne!(pg.remap.to_orig(nb), u32::MAX, "neighbor {nb} is a hole");
+            }
+        }
+    }
+
+    #[test]
+    fn reps_per_page_bound_holds() {
+        let (base, g) = setup();
+        let params = GroupingParams { capacity: 8, hops: 2, seed: 1 };
+        let pg = build_page_graph(&base, &g, &params, 64, 2);
+        for (p, nbrs) in pg.nbrs.iter().enumerate() {
+            let mut count: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+            for &nb in nbrs {
+                *count.entry(pg.remap.page_of(nb)).or_default() += 1;
+            }
+            for (tp, c) in count {
+                assert!(c <= 2, "page {p}: {c} reps for neighbor page {tp}");
+            }
+        }
+    }
+
+    #[test]
+    fn page_count_shrinks_graph() {
+        let (base, g) = setup();
+        let params = GroupingParams { capacity: 8, hops: 2, seed: 1 };
+        let pg = build_page_graph(&base, &g, &params, 32, 2);
+        // ~600/8 pages; mild slack for stragglers.
+        assert!(pg.n_pages() >= 75 && pg.n_pages() <= 100, "{}", pg.n_pages());
+        assert!(pg.avg_page_degree() > 2.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! PQ codebooks, encoding, and ADC lookup tables.
+
+use super::kmeans::kmeans;
+use crate::dataset::VectorSet;
+use crate::distance::l2sq_f32;
+use crate::util::{parallel_for, ReadExt, WriteExt, XorShift};
+use crate::Result;
+use std::io::{Read, Write};
+
+/// A compressed vector: one centroid index per subspace.
+pub type PqCode = Vec<u8>;
+
+/// Trained PQ codebooks: `m` subspaces × `k ≤ 256` centroids × `dsub` dims.
+#[derive(Debug, Clone)]
+pub struct PqCodebook {
+    pub dim: usize,
+    pub m: usize,
+    pub k: usize,
+    pub dsub: usize,
+    /// m × k × dsub, row-major.
+    pub centroids: Vec<f32>,
+}
+
+impl PqCodebook {
+    /// Train on (a sample of) `data`. `m` must divide the dimension.
+    pub fn train(data: &VectorSet, m: usize, iters: usize, seed: u64) -> Self {
+        let dim = data.dim();
+        assert!(m > 0 && dim % m == 0, "m={m} must divide dim={dim}");
+        let dsub = dim / m;
+        let k = 256usize.min(data.len().max(1));
+        // Sample up to 64k training vectors.
+        let mut rng = XorShift::new(seed);
+        let n_train = data.len().min(65_536);
+        let idx = rng.sample_indices(data.len(), n_train);
+        // Decode the sample once.
+        let mut sample = vec![0f32; n_train * dim];
+        for (r, &i) in idx.iter().enumerate() {
+            data.decode_into(i, &mut sample[r * dim..(r + 1) * dim]);
+        }
+        let mut centroids = vec![0f32; m * k * dsub];
+        for sub in 0..m {
+            // Slice out the subspace columns.
+            let mut subdata = vec![0f32; n_train * dsub];
+            for r in 0..n_train {
+                subdata[r * dsub..(r + 1) * dsub]
+                    .copy_from_slice(&sample[r * dim + sub * dsub..r * dim + (sub + 1) * dsub]);
+            }
+            let km = kmeans(&subdata, dsub, k, iters, seed.wrapping_add(sub as u64));
+            centroids[sub * k * dsub..(sub + 1) * k * dsub].copy_from_slice(&km.centroids);
+        }
+        Self { dim, m, k, dsub, centroids }
+    }
+
+    #[inline]
+    pub fn centroid(&self, sub: usize, c: usize) -> &[f32] {
+        let base = (sub * self.k + c) * self.dsub;
+        &self.centroids[base..base + self.dsub]
+    }
+
+    /// Bytes per compressed vector.
+    pub fn code_bytes(&self) -> usize {
+        self.m
+    }
+
+    /// Build the per-query ADC lookup table (m × k squared distances).
+    pub fn build_lut(&self, query: &[f32]) -> AdcLut {
+        assert_eq!(query.len(), self.dim);
+        let mut table = vec![0f32; self.m * self.k];
+        for sub in 0..self.m {
+            let qsub = &query[sub * self.dsub..(sub + 1) * self.dsub];
+            for c in 0..self.k {
+                table[sub * self.k + c] = l2sq_f32(qsub, self.centroid(sub, c));
+            }
+        }
+        AdcLut { m: self.m, k: self.k, table }
+    }
+
+    /// Decode a code back to the (approximate) vector.
+    pub fn decode(&self, code: &[u8]) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim];
+        for sub in 0..self.m {
+            out[sub * self.dsub..(sub + 1) * self.dsub]
+                .copy_from_slice(self.centroid(sub, code[sub] as usize));
+        }
+        out
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_u32(self.dim as u32)?;
+        w.write_u32(self.m as u32)?;
+        w.write_u32(self.k as u32)?;
+        w.write_f32_slice(&self.centroids)?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let dim = r.read_u32v()? as usize;
+        let m = r.read_u32v()? as usize;
+        let k = r.read_u32v()? as usize;
+        anyhow::ensure!(m > 0 && dim % m == 0 && k > 0 && k <= 256, "corrupt codebook header");
+        let dsub = dim / m;
+        let centroids = r.read_f32_vec(m * k * dsub)?;
+        Ok(Self { dim, m, k, dsub, centroids })
+    }
+}
+
+/// Per-query lookup table for asymmetric distance computation.
+pub struct AdcLut {
+    pub m: usize,
+    pub k: usize,
+    /// m × k squared subspace distances.
+    pub table: Vec<f32>,
+}
+
+impl AdcLut {
+    /// Approximate squared distance to the vector with `code`.
+    #[inline]
+    pub fn distance(&self, code: &[u8]) -> f32 {
+        debug_assert_eq!(code.len(), self.m);
+        let mut s = 0f32;
+        for (sub, &c) in code.iter().enumerate() {
+            s += self.table[sub * self.k + c as usize];
+        }
+        s
+    }
+}
+
+/// Encoder: assigns each subvector to its nearest centroid.
+pub struct PqEncoder<'a> {
+    cb: &'a PqCodebook,
+}
+
+impl<'a> PqEncoder<'a> {
+    pub fn new(cb: &'a PqCodebook) -> Self {
+        Self { cb }
+    }
+
+    pub fn encode(&self, v: &[f32]) -> PqCode {
+        let cb = self.cb;
+        let mut code = vec![0u8; cb.m];
+        for sub in 0..cb.m {
+            let vsub = &v[sub * cb.dsub..(sub + 1) * cb.dsub];
+            let mut best = 0usize;
+            let mut bestd = f32::INFINITY;
+            for c in 0..cb.k {
+                let d = l2sq_f32(vsub, cb.centroid(sub, c));
+                if d < bestd {
+                    bestd = d;
+                    best = c;
+                }
+            }
+            code[sub] = best as u8;
+        }
+        code
+    }
+
+    /// Encode a whole set in parallel into a packed n × m byte matrix.
+    pub fn encode_all(&self, data: &VectorSet, nthreads: usize) -> Vec<u8> {
+        let m = self.cb.m;
+        let rows = parallel_for(data.len(), nthreads, |i| self.encode(&data.get_f32(i)));
+        let mut out = vec![0u8; data.len() * m];
+        for (i, code) in rows.into_iter().enumerate() {
+            out[i * m..(i + 1) * m].copy_from_slice(&code);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+
+    fn small_set() -> VectorSet {
+        SynthSpec::new(DatasetKind::DeepLike, 400).with_dim(16).with_clusters(4).generate(8)
+    }
+
+    #[test]
+    fn encode_decode_reduces_error_vs_random_code() {
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 12, 7);
+        let enc = PqEncoder::new(&cb);
+        let mut err_enc = 0f64;
+        let mut err_rand = 0f64;
+        let mut rng = XorShift::new(3);
+        for i in 0..100 {
+            let v = data.get_f32(i);
+            let code = enc.encode(&v);
+            let rand_code: Vec<u8> = (0..cb.m).map(|_| rng.next_below(cb.k) as u8).collect();
+            err_enc += l2sq_f32(&v, &cb.decode(&code)) as f64;
+            err_rand += l2sq_f32(&v, &cb.decode(&rand_code)) as f64;
+        }
+        assert!(err_enc * 3.0 < err_rand, "enc {err_enc} rand {err_rand}");
+    }
+
+    #[test]
+    fn lut_distance_equals_decode_distance_per_subspace() {
+        // ADC(lut, code) must equal the exact sum of subspace distances to
+        // the code's centroids (that's its definition).
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 8, 11);
+        let enc = PqEncoder::new(&cb);
+        let q = data.get_f32(0);
+        let lut = cb.build_lut(&q);
+        for i in [1usize, 17, 200] {
+            let code = enc.encode(&data.get_f32(i));
+            let adc = lut.distance(&code);
+            let mut manual = 0f32;
+            for sub in 0..cb.m {
+                manual += l2sq_f32(
+                    &q[sub * cb.dsub..(sub + 1) * cb.dsub],
+                    cb.centroid(sub, code[sub] as usize),
+                );
+            }
+            assert!((adc - manual).abs() < 1e-4, "{adc} vs {manual}");
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 5, 13);
+        let mut buf = Vec::new();
+        cb.write_to(&mut buf).unwrap();
+        let back = PqCodebook::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.dim, cb.dim);
+        assert_eq!(back.m, cb.m);
+        assert_eq!(back.k, cb.k);
+        assert_eq!(back.centroids, cb.centroids);
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let mut buf = Vec::new();
+        buf.write_u32(16).unwrap();
+        buf.write_u32(3).unwrap(); // 3 does not divide 16
+        buf.write_u32(256).unwrap();
+        assert!(PqCodebook::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn encode_all_matches_single() {
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 5, 17);
+        let enc = PqEncoder::new(&cb);
+        let packed = enc.encode_all(&data, 4);
+        for i in [0usize, 5, 399] {
+            assert_eq!(&packed[i * 4..(i + 1) * 4], enc.encode(&data.get_f32(i)).as_slice());
+        }
+    }
+
+    use crate::util::XorShift;
+}

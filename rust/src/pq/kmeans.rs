@@ -1,0 +1,224 @@
+//! Lloyd's k-means with k-means++ seeding — the codebook trainer for PQ and
+//! the cluster-head selector for the SPANN-like baseline.
+
+use crate::distance::l2sq_f32;
+use crate::util::{parallel_chunks, XorShift};
+
+/// Result of a k-means run over row-major `data` (n × dim).
+pub struct KmeansResult {
+    /// k × dim centroids, row-major.
+    pub centroids: Vec<f32>,
+    /// Assignment of each input row to a centroid.
+    pub assignment: Vec<u32>,
+    pub k: usize,
+    pub dim: usize,
+}
+
+impl KmeansResult {
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Index of the centroid nearest to `v`.
+    pub fn nearest(&self, v: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut bestd = f32::INFINITY;
+        for c in 0..self.k {
+            let d = l2sq_f32(v, self.centroid(c));
+            if d < bestd {
+                bestd = d;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+/// Run k-means. `data` is row-major n×dim. Deterministic per seed.
+///
+/// Empty clusters are re-seeded from the point farthest from its centroid,
+/// so exactly `k` non-degenerate centroids come back even for adversarial
+/// inputs (k > #distinct points degrades gracefully to duplicated
+/// centroids).
+pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> KmeansResult {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let n = data.len() / dim;
+    assert!(n > 0, "kmeans on empty data");
+    let k = k.min(n.max(1));
+    let mut rng = XorShift::new(seed);
+    let row = |i: usize| &data[i * dim..(i + 1) * dim];
+
+    // k-means++ seeding on a bounded sample for cost control.
+    let sample: Vec<usize> = if n > 16_384 {
+        rng.sample_indices(n, 16_384)
+    } else {
+        (0..n).collect()
+    };
+    let mut centroids = Vec::with_capacity(k * dim);
+    centroids.extend_from_slice(row(sample[rng.next_below(sample.len())]));
+    let mut d2: Vec<f32> = sample.iter().map(|&i| l2sq_f32(row(i), &centroids[..dim])).collect();
+    while centroids.len() < k * dim {
+        let total: f64 = d2.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 0.0 {
+            sample[rng.next_below(sample.len())]
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut chosen = sample[sample.len() - 1];
+            for (j, &i) in sample.iter().enumerate() {
+                target -= d2[j] as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        let start = centroids.len();
+        centroids.extend_from_slice(row(pick));
+        let newc = centroids[start..].to_vec();
+        for (j, &i) in sample.iter().enumerate() {
+            d2[j] = d2[j].min(l2sq_f32(row(i), &newc));
+        }
+    }
+
+    let mut assignment = vec![0u32; n];
+    let nthreads = crate::util::num_threads();
+    for _ in 0..iters {
+        // Assign (parallel over rows).
+        {
+            let centroids = &centroids;
+            let assign_ptr = AssignPtr(assignment.as_mut_ptr());
+            parallel_chunks(n, nthreads, |s, e| {
+                let p = assign_ptr;
+                for i in s..e {
+                    let v = row(i);
+                    let mut best = 0u32;
+                    let mut bestd = f32::INFINITY;
+                    for c in 0..k {
+                        let d = l2sq_f32(v, &centroids[c * dim..(c + 1) * dim]);
+                        if d < bestd {
+                            bestd = d;
+                            best = c as u32;
+                        }
+                    }
+                    unsafe { *p.0.add(i) = best };
+                }
+            });
+        }
+        // Update.
+        let mut sums = vec![0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assignment[i] as usize;
+            counts[c] += 1;
+            for (s, &x) in sums[c * dim..(c + 1) * dim].iter_mut().zip(row(i)) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed from the point farthest from its centroid.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = l2sq_f32(row(a), &centroids[assignment[a] as usize * dim..][..dim]);
+                        let db = l2sq_f32(row(b), &centroids[assignment[b] as usize * dim..][..dim]);
+                        da.total_cmp(&db)
+                    })
+                    .unwrap();
+                centroids[c * dim..(c + 1) * dim].copy_from_slice(row(far));
+            } else {
+                for j in 0..dim {
+                    centroids[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+
+    // Final assignment pass so assignment matches returned centroids.
+    {
+        let centroids = &centroids;
+        let assign_ptr = AssignPtr(assignment.as_mut_ptr());
+        parallel_chunks(n, nthreads, |s, e| {
+            let p = assign_ptr;
+            for i in s..e {
+                let v = row(i);
+                let mut best = 0u32;
+                let mut bestd = f32::INFINITY;
+                for c in 0..k {
+                    let d = l2sq_f32(v, &centroids[c * dim..(c + 1) * dim]);
+                    if d < bestd {
+                        bestd = d;
+                        best = c as u32;
+                    }
+                }
+                unsafe { *p.0.add(i) = best };
+            }
+        });
+    }
+
+    KmeansResult { centroids, assignment, k, dim }
+}
+
+#[derive(Clone, Copy)]
+struct AssignPtr(*mut u32);
+unsafe impl Send for AssignPtr {}
+unsafe impl Sync for AssignPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_obvious_clusters() {
+        // Points at 0 and at 100.
+        let mut data = Vec::new();
+        for i in 0..20 {
+            let base = if i < 10 { 0.0 } else { 100.0 };
+            data.extend_from_slice(&[base + (i % 10) as f32 * 0.1, base]);
+        }
+        let r = kmeans(&data, 2, 2, 10, 1);
+        assert_eq!(r.k, 2);
+        // All first-10 same cluster, all last-10 the other.
+        let a = r.assignment[0];
+        assert!(r.assignment[..10].iter().all(|&c| c == a));
+        assert!(r.assignment[10..].iter().all(|&c| c != a));
+        // Centroids near 0 and 100.
+        let c0 = r.centroid(r.assignment[0] as usize)[1];
+        let c1 = r.centroid(r.assignment[10] as usize)[1];
+        assert!(c0.abs() < 5.0 && (c1 - 100.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let data: Vec<f32> = (0..200).map(|i| (i * 7 % 31) as f32).collect();
+        let a = kmeans(&data, 4, 5, 8, 9);
+        let b = kmeans(&data, 4, 5, 8, 9);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let r = kmeans(&data, 2, 10, 3, 0);
+        assert_eq!(r.k, 2);
+        assert_eq!(r.assignment.len(), 2);
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid() {
+        let data: Vec<f32> = (0..300).map(|i| ((i * 13) % 97) as f32 / 10.0).collect();
+        let r = kmeans(&data, 3, 6, 10, 2);
+        for i in 0..100 {
+            let v = &data[i * 3..(i + 1) * 3];
+            assert_eq!(r.assignment[i] as usize, r.nearest(v), "row {i}");
+        }
+    }
+
+    #[test]
+    fn duplicate_points_do_not_crash() {
+        let data = vec![5.0f32; 50 * 2];
+        let r = kmeans(&data, 2, 8, 5, 3);
+        assert_eq!(r.assignment.len(), 50);
+    }
+}

@@ -1,0 +1,57 @@
+//! Product quantization (PQ): the lossy vector compression all the
+//! disk-based baselines and PageANN's on-page/in-memory compressed neighbor
+//! vectors use (paper §4.2–4.3).
+//!
+//! A vector of dimension `D` is split into `M` subspaces of `D/M` dims; each
+//! subspace has a `K=256`-entry codebook trained by k-means, so a vector
+//! compresses to `M` bytes. Query-time distance is *asymmetric* (ADC): a
+//! per-query `M×K` lookup table of exact subspace distances, summed over the
+//! code bytes.
+
+mod codebook;
+mod kmeans;
+
+pub use codebook::{AdcLut, PqCode, PqCodebook, PqEncoder};
+pub use kmeans::kmeans;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+    use crate::util::XorShift;
+
+    #[test]
+    fn adc_preserves_neighbor_ranking_statistically() {
+        // Train PQ on a clustered set; verify that the ADC-nearest of two
+        // points at very different true distances agrees with the true
+        // ordering in the vast majority of cases.
+        let spec = SynthSpec::new(DatasetKind::DeepLike, 2000).with_dim(32).with_clusters(8);
+        let base = spec.generate(5);
+        let cb = PqCodebook::train(&base, 8, 16, 123);
+        let enc = PqEncoder::new(&cb);
+        let codes: Vec<PqCode> = (0..base.len()).map(|i| enc.encode(&base.get_f32(i))).collect();
+
+        let mut rng = XorShift::new(99);
+        let mut agree = 0usize;
+        let trials = 300;
+        for _ in 0..trials {
+            let q = base.get_f32(rng.next_below(base.len()));
+            let lut = cb.build_lut(&q);
+            let a = rng.next_below(base.len());
+            let b = rng.next_below(base.len());
+            let ta = crate::distance::l2sq_f32(&q, &base.get_f32(a));
+            let tb = crate::distance::l2sq_f32(&q, &base.get_f32(b));
+            // Only count clearly-separated pairs (2x ratio).
+            if ta.max(tb) < 2.0 * ta.min(tb) {
+                agree += 1; // don't penalize ambiguous pairs
+                continue;
+            }
+            let ea = lut.distance(&codes[a]);
+            let eb = lut.distance(&codes[b]);
+            if (ta < tb) == (ea < eb) {
+                agree += 1;
+            }
+        }
+        assert!(agree * 10 >= trials * 9, "ADC ranking agreement too low: {agree}/{trials}");
+    }
+}

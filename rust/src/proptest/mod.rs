@@ -1,0 +1,88 @@
+//! Minimal property-testing harness (the offline vendor set has no
+//! proptest crate): deterministic generators over a seeded [`XorShift`]
+//! stream plus a `forall` runner that reports the failing seed so any
+//! counterexample is reproducible with `PAGEANN_PROP_SEED=<seed>`.
+
+use crate::util::XorShift;
+
+/// Number of cases per property (override with PAGEANN_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("PAGEANN_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` on `cases` generated inputs. On panic, re-raises with the
+/// offending case index and seed in the message.
+pub fn forall<G, T, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut XorShift) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(T),
+{
+    let base_seed: u64 = std::env::var("PAGEANN_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x9A0B5EED);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E3779B97F4A7C15);
+        let mut rng = XorShift::new(seed);
+        let input = gen(&mut rng);
+        let desc = format!("{input:?}");
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".into());
+            panic!(
+                "property `{name}` failed on case {case} (PAGEANN_PROP_SEED={seed}):\n  input: {}\n  cause: {msg}",
+                truncate(&desc, 400)
+            );
+        }
+    }
+}
+
+fn truncate(s: &str, n: usize) -> &str {
+    if s.len() <= n {
+        s
+    } else {
+        &s[..s.char_indices().take_while(|&(i, _)| i < n).count()]
+    }
+}
+
+// ---- common generators -------------------------------------------------
+
+/// Random f32 vector with entries in roughly [-scale, scale].
+pub fn gen_vec(rng: &mut XorShift, dim: usize, scale: f32) -> Vec<f32> {
+    (0..dim).map(|_| rng.next_gaussian() * scale).collect()
+}
+
+/// Random dimension from a menu of awkward sizes.
+pub fn gen_dim(rng: &mut XorShift) -> usize {
+    const DIMS: [usize; 7] = [1, 3, 4, 8, 31, 96, 128];
+    DIMS[rng.next_below(DIMS.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 16, |rng| rng.next_below(100), |x| assert!(x < 100));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `bad` failed")]
+    fn forall_reports_failures_with_seed() {
+        forall("bad", 16, |rng| rng.next_below(100), |x| assert!(x < 1, "x={x}"));
+    }
+
+    #[test]
+    fn generators_shape() {
+        let mut rng = XorShift::new(1);
+        assert_eq!(gen_vec(&mut rng, 8, 2.0).len(), 8);
+        let d = gen_dim(&mut rng);
+        assert!(d >= 1 && d <= 128);
+    }
+}

@@ -1,0 +1,296 @@
+//! Hyperplane-LSH routing: planes, buckets, Hamming-radius probing.
+
+use crate::dataset::VectorSet;
+use crate::util::{ReadExt, WriteExt, XorShift};
+use crate::Result;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+/// In-memory routing index: `bits ≤ 64` hyperplanes + hash buckets over a
+/// sample of the base vectors.
+pub struct RoutingIndex {
+    pub dim: usize,
+    pub bits: usize,
+    /// bits × dim hyperplane normals, row-major.
+    pub planes: Vec<f32>,
+    /// code → sampled vector ids.
+    pub buckets: HashMap<u64, Vec<u32>>,
+    /// Number of sampled vectors (for memory accounting).
+    pub n_sampled: usize,
+}
+
+impl RoutingIndex {
+    /// Build from a `sample_frac` fraction of `base` using `bits`
+    /// hyperplanes. Deterministic per seed.
+    pub fn build(base: &VectorSet, sample_frac: f64, bits: usize, seed: u64) -> Self {
+        let ids = Self::sample_ids(base.len(), sample_frac, seed);
+        Self::build_with_sample(base, &ids, bits, seed)
+    }
+
+    /// The deterministic sample `build` would draw — exposed so callers
+    /// (the index builder) can guarantee side tables cover exactly the
+    /// sampled ids.
+    pub fn sample_ids(n: usize, sample_frac: f64, seed: u64) -> Vec<u32> {
+        let mut rng = XorShift::new(seed ^ 0x5A4D);
+        let n_sample = ((n as f64 * sample_frac).round() as usize).clamp(n.min(64), n);
+        rng.sample_indices(n, n_sample).into_iter().map(|i| i as u32).collect()
+    }
+
+    /// Build from an explicit sample id list.
+    pub fn build_with_sample(base: &VectorSet, ids: &[u32], bits: usize, seed: u64) -> Self {
+        assert!(bits > 0 && bits <= 64);
+        let dim = base.dim();
+        let mut rng = XorShift::new(seed);
+        let planes: Vec<f32> = (0..bits * dim).map(|_| rng.next_gaussian()).collect();
+        let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut buf = vec![0f32; dim];
+        for &id in ids {
+            base.decode_into(id as usize, &mut buf);
+            let code = encode(&planes, bits, &buf);
+            buckets.entry(code).or_default().push(id);
+        }
+        Self { dim, bits, planes, buckets, n_sampled: ids.len() }
+    }
+
+    /// Hash a query vector to its code.
+    pub fn encode_query(&self, q: &[f32]) -> u64 {
+        encode(&self.planes, self.bits, q)
+    }
+
+    /// Pack kernel-produced sign bits (0.0/1.0 per plane) into a code —
+    /// used when the XLA `hash_encode` artifact does the projection.
+    pub fn pack_bits(&self, bits: &[f32]) -> u64 {
+        debug_assert_eq!(bits.len(), self.bits);
+        let mut code = 0u64;
+        for (i, &b) in bits.iter().enumerate() {
+            if b > 0.5 {
+                code |= 1 << i;
+            }
+        }
+        code
+    }
+
+    /// All sampled ids in buckets within Hamming distance `radius` of the
+    /// query's code, capped at `max_entries` (closest buckets first).
+    pub fn entry_points(&self, q: &[f32], radius: usize, max_entries: usize) -> Vec<u32> {
+        self.entry_points_for_code(self.encode_query(q), radius, max_entries)
+    }
+
+    /// Probe by precomputed code (the XLA-kernel path).
+    pub fn entry_points_for_code(&self, code: u64, radius: usize, max_entries: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        // Radius-ordered probe: exact bucket, then Hamming-1, then Hamming-2…
+        for r in 0..=radius.min(self.bits) {
+            probe_at_radius(code, self.bits, r, &mut |c| {
+                if let Some(ids) = self.buckets.get(&c) {
+                    for &id in ids {
+                        if out.len() < max_entries {
+                            out.push(id);
+                        }
+                    }
+                }
+                out.len() < max_entries
+            });
+            if out.len() >= max_entries {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Approximate resident bytes (planes + bucket table) for memory plans.
+    pub fn memory_bytes(&self) -> usize {
+        let planes = self.planes.len() * 4;
+        let ids: usize = self.buckets.values().map(|v| v.len() * 4 + 16).sum();
+        planes + ids + self.buckets.len() * 8
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_u32(self.dim as u32)?;
+        w.write_u32(self.bits as u32)?;
+        w.write_u32(self.n_sampled as u32)?;
+        w.write_f32_slice(&self.planes)?;
+        w.write_u32(self.buckets.len() as u32)?;
+        let mut keys: Vec<u64> = self.buckets.keys().copied().collect();
+        keys.sort();
+        for k in keys {
+            let ids = &self.buckets[&k];
+            w.write_u64(k)?;
+            w.write_u32(ids.len() as u32)?;
+            w.write_u32_slice(ids)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let dim = r.read_u32v()? as usize;
+        let bits = r.read_u32v()? as usize;
+        anyhow::ensure!(bits > 0 && bits <= 64 && dim > 0, "corrupt routing header");
+        let n_sampled = r.read_u32v()? as usize;
+        let planes = r.read_f32_vec(bits * dim)?;
+        let n_buckets = r.read_u32v()? as usize;
+        let mut buckets = HashMap::with_capacity(n_buckets);
+        for _ in 0..n_buckets {
+            let k = r.read_u64v()?;
+            let n = r.read_u32v()? as usize;
+            buckets.insert(k, r.read_u32_vec(n)?);
+        }
+        Ok(Self { dim, bits, planes, buckets, n_sampled })
+    }
+}
+
+#[inline]
+fn encode(planes: &[f32], bits: usize, v: &[f32]) -> u64 {
+    let dim = v.len();
+    let mut code = 0u64;
+    for b in 0..bits {
+        let row = &planes[b * dim..(b + 1) * dim];
+        let mut dot = 0f32;
+        for (p, x) in row.iter().zip(v) {
+            dot += p * x;
+        }
+        if dot > 0.0 {
+            code |= 1 << b;
+        }
+    }
+    code
+}
+
+/// Visit every code at exactly Hamming distance `r` from `code` (over `bits`
+/// bit positions). `f` returns false to stop early.
+fn probe_at_radius(code: u64, bits: usize, r: usize, f: &mut impl FnMut(u64) -> bool) {
+    if r == 0 {
+        f(code);
+        return;
+    }
+    // Enumerate r-subsets of bit positions (bounded: r ≤ 2 in practice).
+    let mut positions = vec![0usize; r];
+    fn rec(
+        code: u64,
+        bits: usize,
+        r: usize,
+        start: usize,
+        depth: usize,
+        positions: &mut [usize],
+        f: &mut impl FnMut(u64) -> bool,
+    ) -> bool {
+        if depth == r {
+            let mut c = code;
+            for &p in positions.iter() {
+                c ^= 1 << p;
+            }
+            return f(c);
+        }
+        for p in start..bits {
+            positions[depth] = p;
+            if !rec(code, bits, r, p + 1, depth + 1, positions, f) {
+                return false;
+            }
+        }
+        true
+    }
+    rec(code, bits, r, 0, 0, &mut positions, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+
+    fn base() -> VectorSet {
+        SynthSpec::new(DatasetKind::SiftLike, 1000).with_dim(32).with_clusters(8).generate(2)
+    }
+
+    #[test]
+    fn codes_are_stable_and_bucketed() {
+        let b = base();
+        let idx = RoutingIndex::build(&b, 0.5, 16, 3);
+        let total: usize = idx.buckets.values().map(|v| v.len()).sum();
+        assert_eq!(total, idx.n_sampled);
+        // Same vector → same code.
+        let v = b.get_f32(10);
+        assert_eq!(idx.encode_query(&v), idx.encode_query(&v));
+    }
+
+    #[test]
+    fn pack_bits_matches_encode() {
+        let b = base();
+        let idx = RoutingIndex::build(&b, 0.1, 16, 3);
+        let q = b.get_f32(0);
+        // Simulate kernel output.
+        let dim = idx.dim;
+        let bits: Vec<f32> = (0..idx.bits)
+            .map(|bi| {
+                let row = &idx.planes[bi * dim..(bi + 1) * dim];
+                let dot: f32 = row.iter().zip(&q).map(|(p, x)| p * x).sum();
+                if dot > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        assert_eq!(idx.pack_bits(&bits), idx.encode_query(&q));
+    }
+
+    #[test]
+    fn probe_radius_enumerates_correct_counts() {
+        let mut count0 = 0;
+        probe_at_radius(0b1010, 8, 0, &mut |_| {
+            count0 += 1;
+            true
+        });
+        assert_eq!(count0, 1);
+        let mut count1 = 0;
+        probe_at_radius(0b1010, 8, 1, &mut |c| {
+            assert_eq!((c ^ 0b1010).count_ones(), 1);
+            count1 += 1;
+            true
+        });
+        assert_eq!(count1, 8);
+        let mut count2 = 0;
+        probe_at_radius(0, 8, 2, &mut |c| {
+            assert_eq!(c.count_ones(), 2);
+            count2 += 1;
+            true
+        });
+        assert_eq!(count2, 28); // C(8,2)
+    }
+
+    #[test]
+    fn max_entries_respected() {
+        let b = base();
+        let idx = RoutingIndex::build(&b, 1.0, 8, 3);
+        let q = b.get_f32(1);
+        let e = idx.entry_points(&q, 2, 5);
+        assert!(e.len() <= 5);
+        assert!(!e.is_empty());
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let b = base();
+        let idx = RoutingIndex::build(&b, 0.3, 12, 9);
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        let back = RoutingIndex::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.dim, idx.dim);
+        assert_eq!(back.bits, idx.bits);
+        assert_eq!(back.planes, idx.planes);
+        assert_eq!(back.buckets.len(), idx.buckets.len());
+        let q = b.get_f32(7);
+        assert_eq!(
+            back.entry_points(&q, 1, 10),
+            idx.entry_points(&q, 1, 10)
+        );
+    }
+
+    #[test]
+    fn memory_accounting_positive_and_monotone() {
+        let b = base();
+        let small = RoutingIndex::build(&b, 0.1, 8, 1);
+        let big = RoutingIndex::build(&b, 0.9, 8, 1);
+        assert!(small.memory_bytes() > 0);
+        assert!(big.memory_bytes() > small.memory_bytes());
+    }
+}

@@ -1,0 +1,61 @@
+//! Lightweight in-memory routing index (paper §4.3, "caching for fast
+//! lightweight indexing").
+//!
+//! A sample of base vectors is projected onto `H` random hyperplanes; the
+//! sign pattern forms an `H`-bit binary code, and sampled vector ids are
+//! bucketed by code. A query is encoded the same way and all buckets within
+//! a small Hamming radius `r` are probed; the hits become entry points for
+//! the on-disk page-graph traversal, cutting the search-path length.
+//!
+//! The hyperplane projection itself is the Layer-1 `hash_encode` kernel at
+//! query time when the XLA backend is active; this module owns the planes,
+//! buckets, serialization, and a native projection fallback.
+
+mod hyperplane;
+
+pub use hyperplane::RoutingIndex;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+
+    #[test]
+    fn routing_entry_points_are_close_on_average() {
+        // Entry points produced by the router should be much closer to the
+        // query than random vectors are — that's its whole job.
+        let spec = SynthSpec::new(DatasetKind::DeepLike, 3000).with_dim(32).with_clusters(16);
+        let base = spec.generate(4);
+        let queries = spec.generate_queries(20, 4, 77);
+        let idx = RoutingIndex::build(&base, 0.2, 16, 21);
+
+        let mut rng = crate::util::XorShift::new(5);
+        let mut closer = 0usize;
+        let mut total = 0usize;
+        for qi in 0..queries.len() {
+            let q = queries.get_f32(qi);
+            let entries = idx.entry_points(&q, 2, 8);
+            if entries.is_empty() {
+                continue;
+            }
+            let de: f32 = entries
+                .iter()
+                .map(|&id| crate::distance::l2sq_query(&q, base.view(id as usize)))
+                .fold(f32::INFINITY, f32::min);
+            let dr: f32 = (0..entries.len())
+                .map(|_| {
+                    crate::distance::l2sq_query(
+                        &q,
+                        base.view(rng.next_below(base.len())),
+                    )
+                })
+                .fold(f32::INFINITY, f32::min);
+            total += 1;
+            if de <= dr {
+                closer += 1;
+            }
+        }
+        assert!(total >= 15, "router returned entries for too few queries: {total}");
+        assert!(closer * 10 >= total * 7, "router not better than random: {closer}/{total}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Artifact manifest: names, shapes and dtypes of the HLO artifacts emitted
+//! by `python/compile/aot.py`.
+//!
+//! The python side writes `artifacts/manifest.txt` with one line per
+//! artifact: `name<TAB>file<TAB>key=value,...`. We parse it here so the two
+//! sides cannot silently drift: the rust loader refuses shape mismatches at
+//! startup rather than producing garbage distances at query time.
+
+use crate::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    /// Free-form key=value metadata (shapes, dtypes, block sizes).
+    pub meta: HashMap<String, String>,
+}
+
+impl Artifact {
+    /// Integer metadata accessor, e.g. `dim`, `page_batch`, `vecs_per_page`.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        let v = self
+            .meta
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact {}: missing meta key {key}", self.name))?;
+        Ok(v.parse()?)
+    }
+}
+
+/// The set of artifacts in an `artifacts/` directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, Artifact>,
+}
+
+impl ArtifactSet {
+    /// Parse `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", manifest.display()))?;
+        let mut artifacts = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (name, file, kv) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(n), Some(f), Some(kv)) => (n, f, kv),
+                _ => anyhow::bail!("manifest line {}: malformed: {line}", lineno + 1),
+            };
+            let mut meta = HashMap::new();
+            for pair in kv.split(',').filter(|s| !s.is_empty()) {
+                if let Some((k, v)) = pair.split_once('=') {
+                    meta.insert(k.to_string(), v.to_string());
+                }
+            }
+            artifacts.insert(
+                name.to_string(),
+                Artifact { name: name.to_string(), file: dir.join(file), meta },
+            );
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pageann-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\npage_scan\tpage_scan.hlo.txt\tdim=128,page_batch=8,vecs_per_page=16\n",
+        )
+        .unwrap();
+        let set = ArtifactSet::load(&dir).unwrap();
+        let a = set.get("page_scan").unwrap();
+        assert_eq!(a.meta_usize("dim").unwrap(), 128);
+        assert_eq!(a.meta_usize("page_batch").unwrap(), 8);
+        assert!(set.get("nope").is_err());
+        assert!(a.meta_usize("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = ArtifactSet::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,93 @@
+//! PJRT runtime — loads AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! Executables are wrapped in a small pool so concurrent query threads can
+//! each hold one without serializing on a single lock.
+
+mod artifact;
+mod pool;
+
+pub use artifact::{Artifact, ArtifactSet};
+pub use pool::ExecPool;
+
+use crate::Result;
+use std::path::Path;
+
+/// A PJRT CPU client; executables compiled from `artifacts/` hang off it.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client })
+    }
+
+    /// Human-readable platform string, e.g. `cpu`.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Run a compiled executable on `f32` literals shaped per `shapes`, returning
+/// the flattened `f32` contents of the (single-tuple) output.
+///
+/// This is the narrow waist the search hot path uses.
+pub fn execute_f32(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[(&[f32], &[i64])],
+) -> Result<Vec<f32>> {
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (data, shape) in inputs {
+        let lit = xla::Literal::vec1(data).reshape(shape)?;
+        lits.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True → 1-tuple output.
+    let out = result.to_tuple1()?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+/// Like [`execute_f32`] but for artifacts returning `n_outputs` arrays.
+pub fn execute_f32_multi(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[(&[f32], &[i64])],
+    n_outputs: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (data, shape) in inputs {
+        let lit = xla::Literal::vec1(data).reshape(shape)?;
+        lits.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+    anyhow::ensure!(
+        parts.len() == n_outputs,
+        "expected {n_outputs} outputs, got {}",
+        parts.len()
+    );
+    parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+}

@@ -1,0 +1,65 @@
+//! Executable pool: N compiled copies of one artifact behind per-slot locks,
+//! so concurrent query threads execute without a global serialization point.
+//!
+//! `xla::PjRtLoadedExecutable` holds raw pointers and is not `Send`/`Sync`
+//! by declaration, but the underlying PJRT CPU executable is immutable after
+//! compilation and `Execute` is documented thread-compatible; we additionally
+//! serialize every call behind a `Mutex`, so moving the handle across
+//! threads is sound. `SendExec` encodes that argument.
+
+use crate::Result;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Wrapper asserting cross-thread use of a compiled executable is safe under
+/// the pool's external locking discipline (see module docs).
+pub struct SendExec(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+
+impl Deref for SendExec {
+    type Target = xla::PjRtLoadedExecutable;
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+pub struct ExecPool {
+    slots: Vec<Mutex<SendExec>>,
+    next: AtomicUsize,
+}
+
+impl ExecPool {
+    /// Compile `n` copies of the artifact at `path` on `rt`.
+    pub fn new(rt: &super::XlaRuntime, path: &std::path::Path, n: usize) -> Result<Self> {
+        anyhow::ensure!(n > 0, "pool size must be > 0");
+        let mut slots = Vec::with_capacity(n);
+        for _ in 0..n {
+            slots.push(Mutex::new(SendExec(rt.load_hlo_text(path)?)));
+        }
+        Ok(Self { slots, next: AtomicUsize::new(0) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Acquire an executable: try-lock each slot starting from a rotating
+    /// index; if all are busy, block on the rotating one.
+    pub fn acquire(&self) -> MutexGuard<'_, SendExec> {
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        for i in 0..self.slots.len() {
+            let idx = (start + i) % self.slots.len();
+            if let Ok(g) = self.slots[idx].try_lock() {
+                return g;
+            }
+        }
+        // All busy: block (poisoning only happens if an execute panicked,
+        // which we treat as fatal).
+        self.slots[start].lock().expect("executable lock poisoned")
+    }
+}

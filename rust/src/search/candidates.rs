@@ -1,0 +1,151 @@
+//! The candidate set of Algorithm 2: a capacity-bounded pool of
+//! (estimated distance, vector id) pairs ordered by distance, tracking
+//! which entries have been expanded.
+//!
+//! Implemented as a sorted vector with binary-search insertion — for the
+//! pool sizes the paper uses (L ≤ a few hundred) this beats heap-based
+//! structures on constant factors and gives O(1) `pop_closest_unvisited`
+//! via a moving cursor.
+
+pub struct CandidateSet {
+    /// Sorted ascending by (distance, id).
+    entries: Vec<Entry>,
+    capacity: usize,
+    /// Index of the first possibly-unvisited entry.
+    cursor: usize,
+}
+
+#[derive(Clone, Copy)]
+struct Entry {
+    dist: f32,
+    id: u32,
+    visited: bool,
+}
+
+impl CandidateSet {
+    pub fn new(capacity: usize) -> Self {
+        Self { entries: Vec::with_capacity(capacity + 1), capacity: capacity.max(1), cursor: 0 }
+    }
+
+    pub fn reset(&mut self, capacity: usize) {
+        self.entries.clear();
+        self.capacity = capacity.max(1);
+        self.cursor = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert if it beats the current worst (or there is room). Returns
+    /// whether the candidate was accepted.
+    pub fn push(&mut self, dist: f32, id: u32) -> bool {
+        if self.entries.len() >= self.capacity {
+            let worst = self.entries[self.entries.len() - 1];
+            if dist > worst.dist || (dist == worst.dist && id >= worst.id) {
+                return false;
+            }
+        }
+        let at = self
+            .entries
+            .partition_point(|e| (e.dist, e.id) <= (dist, id));
+        self.entries.insert(at, Entry { dist, id, visited: false });
+        if at < self.cursor {
+            self.cursor = at;
+        }
+        if self.entries.len() > self.capacity {
+            self.entries.pop();
+        }
+        true
+    }
+
+    /// Closest entry not yet expanded, marking it expanded.
+    pub fn pop_closest_unvisited(&mut self) -> Option<u32> {
+        while self.cursor < self.entries.len() {
+            if !self.entries[self.cursor].visited {
+                self.entries[self.cursor].visited = true;
+                let id = self.entries[self.cursor].id;
+                self.cursor += 1;
+                return Some(id);
+            }
+            self.cursor += 1;
+        }
+        None
+    }
+
+    pub fn has_unvisited(&self) -> bool {
+        self.entries[self.cursor.min(self.entries.len())..]
+            .iter()
+            .any(|e| !e.visited)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_distance_order() {
+        let mut c = CandidateSet::new(8);
+        for (d, id) in [(5.0, 1), (1.0, 2), (3.0, 3)] {
+            assert!(c.push(d, id));
+        }
+        assert_eq!(c.pop_closest_unvisited(), Some(2));
+        assert_eq!(c.pop_closest_unvisited(), Some(3));
+        assert_eq!(c.pop_closest_unvisited(), Some(1));
+        assert_eq!(c.pop_closest_unvisited(), None);
+        assert!(!c.has_unvisited());
+    }
+
+    #[test]
+    fn capacity_evicts_worst() {
+        let mut c = CandidateSet::new(2);
+        assert!(c.push(1.0, 1));
+        assert!(c.push(2.0, 2));
+        assert!(!c.push(3.0, 3), "worse than worst must be rejected");
+        assert!(c.push(0.5, 4));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.pop_closest_unvisited(), Some(4));
+        assert_eq!(c.pop_closest_unvisited(), Some(1));
+        assert_eq!(c.pop_closest_unvisited(), None);
+    }
+
+    #[test]
+    fn closer_arrival_after_pops_is_seen() {
+        let mut c = CandidateSet::new(4);
+        c.push(5.0, 1);
+        assert_eq!(c.pop_closest_unvisited(), Some(1));
+        // A closer candidate arrives after the cursor moved past index 0.
+        assert!(c.push(1.0, 2));
+        assert!(c.has_unvisited());
+        assert_eq!(c.pop_closest_unvisited(), Some(2));
+    }
+
+    #[test]
+    fn duplicate_distances_handled() {
+        let mut c = CandidateSet::new(4);
+        c.push(1.0, 10);
+        c.push(1.0, 11);
+        c.push(1.0, 9);
+        let a = c.pop_closest_unvisited().unwrap();
+        let b = c.pop_closest_unvisited().unwrap();
+        let d = c.pop_closest_unvisited().unwrap();
+        assert_eq!(vec![a, b, d], vec![9, 10, 11]); // id tie-break
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = CandidateSet::new(2);
+        c.push(1.0, 1);
+        c.pop_closest_unvisited();
+        c.reset(3);
+        assert!(c.is_empty());
+        assert!(!c.has_unvisited());
+        c.push(2.0, 5);
+        assert_eq!(c.pop_closest_unvisited(), Some(5));
+    }
+}

@@ -1,0 +1,319 @@
+//! Page-granular best-first search (paper §4.4, Algorithm 2).
+//!
+//! The traversal works on *page nodes*: each expansion round pops up to `b`
+//! closest unvisited candidate vectors, maps them to unvisited pages, reads
+//! those pages in one batched I/O, scans every resident vector exactly
+//! (result set), and pushes every neighbor entry with an ADC-estimated
+//! distance (candidate set). One graph hop == one page read, which is the
+//! paper's central I/O property.
+
+mod candidates;
+
+pub use candidates::CandidateSet;
+
+use crate::cache::{MemCodes, PageCache};
+use crate::dataset::Dtype;
+use crate::distance::BatchScanner;
+use crate::io::PageStore;
+use crate::layout::{IndexMeta, PageRef};
+use crate::metrics::QueryStats;
+use crate::pq::AdcLut;
+use crate::Result;
+use std::time::Instant;
+
+/// Tunables of one search (paper notation: L = pool, b = I/O batch).
+#[derive(Debug, Clone)]
+pub struct SearchParams {
+    pub k: usize,
+    /// Candidate-set capacity (search list size) — the recall knob.
+    pub l: usize,
+    /// Pages per batched I/O round.
+    pub io_batch: usize,
+    /// Hamming probe radius for routing entry.
+    pub routing_radius: usize,
+    /// Max entry points taken from the router.
+    pub max_entries: usize,
+    /// Overlap exact-distance computation with the next async read
+    /// (paper §5 I/O-computation pipeline).
+    pub pipeline: bool,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { k: 10, l: 64, io_batch: 5, routing_radius: 2, max_entries: 16, pipeline: true }
+    }
+}
+
+/// Per-thread reusable search state (buffers sized on first use).
+pub struct SearchScratch {
+    candidates: CandidateSet,
+    /// Visited marks, epoch-stamped so clearing is O(1).
+    visited_vec: Vec<u32>,
+    visited_page: Vec<u32>,
+    epoch: u32,
+    results: Vec<(f32, u32)>,
+    page_bufs: Vec<Vec<u8>>,
+    page_ids: Vec<u32>,
+    /// Every page touched by the last search (warm-up frequency input).
+    pages_touched: Vec<u32>,
+    dist_buf: Vec<f32>,
+}
+
+impl SearchScratch {
+    pub fn new() -> Self {
+        Self {
+            candidates: CandidateSet::new(64),
+            visited_vec: Vec::new(),
+            visited_page: Vec::new(),
+            epoch: 0,
+            results: Vec::new(),
+            page_bufs: Vec::new(),
+            page_ids: Vec::new(),
+            pages_touched: Vec::new(),
+            dist_buf: Vec::new(),
+        }
+    }
+
+    /// Results of the last search (all scanned vectors, sorted at the end).
+    pub fn results_for_warmup(&self) -> &[(f32, u32)] {
+        &self.results
+    }
+
+    /// Pages touched by the last search.
+    pub fn visited_pages_for_warmup(&self) -> Vec<u32> {
+        self.pages_touched.clone()
+    }
+
+    fn reset(&mut self, n_slots: usize, n_pages: usize, l: usize) {
+        if self.visited_vec.len() < n_slots {
+            self.visited_vec.resize(n_slots, 0);
+        }
+        if self.visited_page.len() < n_pages {
+            self.visited_page.resize(n_pages, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Epoch wrapped: hard-clear.
+            self.visited_vec.fill(0);
+            self.visited_page.fill(0);
+            self.epoch = 1;
+        }
+        self.candidates.reset(l);
+        self.results.clear();
+        self.pages_touched.clear();
+    }
+}
+
+impl Default for SearchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything a search needs to see of the opened index.
+pub struct SearchContext<'a> {
+    pub meta: &'a IndexMeta,
+    pub store: &'a dyn PageStore,
+    pub cache: &'a PageCache,
+    pub memcodes: &'a MemCodes,
+    pub scanner: &'a dyn BatchScanner,
+}
+
+/// Run Algorithm 2. `entries` are entry-point vector ids (new-id space)
+/// from the router (or the medoid fallback); `lut` is the query's ADC
+/// table. Returns the top-k `(distance, original_id)` pairs.
+pub fn search_pages(
+    ctx: &SearchContext<'_>,
+    query: &[f32],
+    lut: &AdcLut,
+    entries: &[u32],
+    params: &SearchParams,
+    scratch: &mut SearchScratch,
+    stats: &mut QueryStats,
+) -> Result<Vec<(f32, u32)>> {
+    let meta = ctx.meta;
+    let capacity = meta.capacity as u32;
+    let dtype: Dtype = meta.dtype;
+    let stride = meta.vec_stride();
+    scratch.reset(meta.n_slots(), meta.n_pages, params.l);
+    let epoch = scratch.epoch;
+
+    // Seed candidates (Alg. 2 lines 4-7): estimated distance from resident
+    // codes where available; entries without codes get pushed with d=0 so
+    // they are expanded first.
+    for &e in entries.iter().take(params.max_entries.max(1)) {
+        if scratch.visited_vec[e as usize] == epoch {
+            continue;
+        }
+        scratch.visited_vec[e as usize] = epoch; // mark seeded (not yet expanded)
+        let d = ctx.memcodes.get(e).map(|c| lut.distance(c)).unwrap_or(0.0);
+        scratch.candidates.push(d, e);
+        stats.approx_dists += 1;
+    }
+
+    // Exact scans deferred until the next I/O wait (paper §5 pipeline);
+    // owned buffers cycle back into the scratch pool after scanning.
+    enum Deferred<'c> {
+        Owned(Vec<u8>),
+        Cached(&'c [u8]),
+    }
+    let mut deferred: Vec<Deferred<'_>> = Vec::new();
+
+    // Drains `deferred`: exact distances into the result set.
+    macro_rules! scan_deferred {
+        () => {{
+            let t_cpu = Instant::now();
+            for item in deferred.drain(..) {
+                let bytes: &[u8] = match &item {
+                    Deferred::Owned(b) => b,
+                    Deferred::Cached(b) => b,
+                };
+                let page = PageRef::parse(&bytes[..meta.page_size], stride, meta.pq_m)?;
+                let nv = page.n_vecs();
+                if scratch.dist_buf.len() < nv {
+                    scratch.dist_buf.resize(nv, 0.0);
+                }
+                ctx.scanner
+                    .scan(query, page.vectors_block(), dtype, nv, &mut scratch.dist_buf);
+                stats.exact_dists += nv as u64;
+                for i in 0..nv {
+                    scratch.results.push((scratch.dist_buf[i], page.orig_id(i)));
+                }
+                if let Deferred::Owned(buf) = item {
+                    scratch.page_bufs.push(buf); // back to the pool
+                }
+            }
+            stats.compute_time += t_cpu.elapsed();
+        }};
+    }
+
+    // Main loop (lines 8-28).
+    while scratch.candidates.has_unvisited() {
+        stats.hops += 1;
+        // Collect up to `io_batch` unvisited pages (lines 10-18).
+        scratch.page_ids.clear();
+        while scratch.page_ids.len() < params.io_batch {
+            let Some(v) = scratch.candidates.pop_closest_unvisited() else {
+                break;
+            };
+            let p = v / capacity;
+            if scratch.visited_page[p as usize] != epoch {
+                scratch.visited_page[p as usize] = epoch;
+                scratch.page_ids.push(p);
+                scratch.pages_touched.push(p);
+            }
+        }
+        if scratch.page_ids.is_empty() {
+            continue;
+        }
+
+        // Partition into cached / disk (cache hits served from memory).
+        let mut disk_ids: Vec<u32> = Vec::with_capacity(scratch.page_ids.len());
+        let mut cached_bytes: Vec<&[u8]> = Vec::new();
+        for &p in scratch.page_ids.iter() {
+            if let Some(bytes) = ctx.cache.get(p) {
+                cached_bytes.push(bytes);
+                stats.cache_hits += 1;
+            } else {
+                disk_ids.push(p);
+            }
+        }
+
+        // Take buffers from the pool for the disk reads.
+        let mut disk_bufs: Vec<Vec<u8>> = Vec::with_capacity(disk_ids.len());
+        for _ in 0..disk_ids.len() {
+            disk_bufs.push(
+                scratch
+                    .page_bufs
+                    .pop()
+                    .unwrap_or_else(|| vec![0u8; meta.page_size]),
+            );
+        }
+
+        // Submit the batch read (line 19). In pipelined mode the exact
+        // scans deferred from the previous hop execute while the device
+        // works — the §5 I/O-computation overlap.
+        let t_submit = Instant::now();
+        let pending = ctx.store.begin_read(&disk_ids, &mut disk_bufs)?;
+        let submit_time = t_submit.elapsed();
+        if params.pipeline {
+            scan_deferred!();
+        }
+        let t_wait = Instant::now();
+        pending.wait()?;
+        stats.io_time += submit_time + t_wait.elapsed();
+        stats.ios += disk_ids.len() as u64;
+        stats.bytes_read += (disk_ids.len() * meta.page_size) as u64;
+
+        // Topology phase (lines 24-26): neighbor entries → candidate set
+        // with ADC estimates. Never deferred — the next hop's page
+        // selection depends on it.
+        let t_cpu = Instant::now();
+        for (is_disk, bytes) in disk_bufs
+            .iter()
+            .map(|b| (true, b.as_slice()))
+            .chain(cached_bytes.iter().map(|b| (false, *b)))
+        {
+            let page = PageRef::parse(&bytes[..meta.page_size], stride, meta.pq_m)?;
+            if is_disk {
+                stats.bytes_used += page.used_bytes() as u64;
+            }
+            for j in 0..page.n_nbrs() {
+                let nb = page.nbr_id(j);
+                if scratch.visited_vec[nb as usize] == epoch {
+                    continue;
+                }
+                let code = page.nbr_code(j).or_else(|| ctx.memcodes.get(nb));
+                let Some(code) = code else {
+                    // Build guarantees one copy exists; treat miss as a
+                    // corrupt index rather than silently skipping.
+                    anyhow::bail!("no compressed vector for neighbor {nb}");
+                };
+                let d = lut.distance(code);
+                stats.approx_dists += 1;
+                // Only mark visited when accepted into the pool; rejected
+                // candidates may re-enter later via a closer page.
+                if scratch.candidates.push(d, nb) {
+                    scratch.visited_vec[nb as usize] = epoch;
+                }
+            }
+        }
+        stats.compute_time += t_cpu.elapsed();
+
+        // Queue the exact scans (lines 21-23): deferred in pipelined mode,
+        // immediate otherwise.
+        for buf in disk_bufs {
+            deferred.push(Deferred::Owned(buf));
+        }
+        for bytes in cached_bytes {
+            deferred.push(Deferred::Cached(bytes));
+        }
+        if !params.pipeline {
+            scan_deferred!();
+        }
+    }
+    // Drain the tail of the pipeline.
+    scan_deferred!();
+
+    // Final ranking (lines 29-30).
+    let t_cpu = Instant::now();
+    scratch
+        .results
+        .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    scratch.results.dedup_by_key(|r| r.1);
+    let out: Vec<(f32, u32)> = scratch.results.iter().take(params.k).copied().collect();
+    stats.compute_time += t_cpu.elapsed();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_default_match_paper() {
+        let p = SearchParams::default();
+        assert_eq!(p.io_batch, 5); // paper §6.1: batch size fixed at 5
+        assert_eq!(p.k, 10); // recall@10
+    }
+}

@@ -1,0 +1,155 @@
+//! Little-endian binary encoding helpers for the index file formats.
+//!
+//! Everything on disk (meta.bin, pages.bin, pq.bin, routing.bin, remap.bin,
+//! and the fvecs/bvecs dataset formats) goes through these, so endianness
+//! and width decisions live in exactly one place.
+
+use std::io::{self, Read, Write};
+
+pub trait WriteExt: Write {
+    #[inline]
+    fn write_u8(&mut self, v: u8) -> io::Result<()> {
+        self.write_all(&[v])
+    }
+    #[inline]
+    fn write_u16(&mut self, v: u16) -> io::Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) -> io::Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) -> io::Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+    #[inline]
+    fn write_f32(&mut self, v: f32) -> io::Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+    fn write_f32_slice(&mut self, vs: &[f32]) -> io::Result<()> {
+        for &v in vs {
+            self.write_f32(v)?;
+        }
+        Ok(())
+    }
+    fn write_u32_slice(&mut self, vs: &[u32]) -> io::Result<()> {
+        for &v in vs {
+            self.write_u32(v)?;
+        }
+        Ok(())
+    }
+}
+impl<W: Write + ?Sized> WriteExt for W {}
+
+pub trait ReadExt: Read {
+    #[inline]
+    fn read_u8v(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+    #[inline]
+    fn read_u16v(&mut self) -> io::Result<u16> {
+        let mut b = [0u8; 2];
+        self.read_exact(&mut b)?;
+        Ok(u16::from_le_bytes(b))
+    }
+    #[inline]
+    fn read_u32v(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    #[inline]
+    fn read_u64v(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    #[inline]
+    fn read_f32v(&mut self) -> io::Result<f32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+    fn read_f32_vec(&mut self, n: usize) -> io::Result<Vec<f32>> {
+        let mut out = vec![0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        self.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(out)
+    }
+    fn read_u32_vec(&mut self, n: usize) -> io::Result<Vec<u32>> {
+        let mut out = vec![0u32; n];
+        let mut buf = vec![0u8; n * 4];
+        self.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            out[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(out)
+    }
+}
+impl<R: Read + ?Sized> ReadExt for R {}
+
+/// Decode a `f32` slice from raw little-endian bytes (zero-copy caller owns
+/// the buffer; used by the page deserializer on the hot path).
+#[inline]
+pub fn f32_from_le(buf: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(buf.len(), out.len() * 4);
+    for (i, c) in buf.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut buf = Vec::new();
+        buf.write_u8(7).unwrap();
+        buf.write_u16(300).unwrap();
+        buf.write_u32(70000).unwrap();
+        buf.write_u64(1 << 40).unwrap();
+        buf.write_f32(3.5).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(c.read_u8v().unwrap(), 7);
+        assert_eq!(c.read_u16v().unwrap(), 300);
+        assert_eq!(c.read_u32v().unwrap(), 70000);
+        assert_eq!(c.read_u64v().unwrap(), 1 << 40);
+        assert_eq!(c.read_f32v().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn roundtrip_slices() {
+        let f = vec![1.0f32, -2.5, 1e-8, f32::MAX];
+        let u = vec![0u32, 1, u32::MAX];
+        let mut buf = Vec::new();
+        buf.write_f32_slice(&f).unwrap();
+        buf.write_u32_slice(&u).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(c.read_f32_vec(4).unwrap(), f);
+        assert_eq!(c.read_u32_vec(3).unwrap(), u);
+    }
+
+    #[test]
+    fn f32_from_le_matches() {
+        let vals = [0.5f32, -1.25, 3e7];
+        let mut bytes = Vec::new();
+        bytes.write_f32_slice(&vals).unwrap();
+        let mut out = [0f32; 3];
+        f32_from_le(&bytes, &mut out);
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let mut c = Cursor::new(vec![1u8, 2]);
+        assert!(c.read_u32v().is_err());
+    }
+}

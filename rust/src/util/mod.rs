@@ -1,0 +1,46 @@
+//! Small shared utilities: deterministic RNG, timing, binary encoding
+//! helpers, and a scoped parallel-for built on `std::thread` (the build is
+//! fully offline — no rayon/tokio — so the crate carries its own).
+
+pub mod binio;
+mod parallel;
+mod rng;
+mod timer;
+
+pub use binio::{ReadExt, WriteExt};
+pub use parallel::{num_threads, parallel_chunks, parallel_for};
+pub use rng::XorShift;
+pub use timer::{format_duration, Stopwatch};
+
+/// Ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    div_ceil(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_edges() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_edges() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+}

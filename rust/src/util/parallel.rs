@@ -1,0 +1,108 @@
+//! Minimal data-parallel helpers on `std::thread::scope` — the offline build
+//! has no rayon, and the workloads here (ground-truth brute force, Vamana
+//! construction, query fan-out) are embarrassingly parallel over index
+//! ranges.
+
+/// Number of worker threads to use by default (host parallelism, capped).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(32)
+}
+
+/// Run `f(start, end)` over `nthreads` contiguous chunks of `[0, n)`.
+///
+/// `f` is called once per chunk, from separate threads. Chunks are
+/// near-equal-sized; the remainder is spread over the first chunks.
+pub fn parallel_chunks<F>(n: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let base = n / nthreads;
+    let rem = n % nthreads;
+    std::thread::scope(|s| {
+        let mut start = 0usize;
+        for t in 0..nthreads {
+            let len = base + usize::from(t < rem);
+            let end = start + len;
+            let fref = &f;
+            s.spawn(move || fref(start, end));
+            start = end;
+        }
+    });
+}
+
+/// Parallel map over `[0, n)` producing a `Vec<T>` in index order.
+///
+/// Work is split into contiguous chunks (one per thread); each element is
+/// produced by `f(i)`.
+pub fn parallel_for<T, F>(n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_chunks(n, nthreads, |start, end| {
+            // SAFETY: chunks are disjoint index ranges, so each slot is
+            // written by exactly one thread; T: Send.
+            let p = out_ptr;
+            for i in start..end {
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+struct SendPtr<T>(*mut T);
+// Manual impls: derived Copy/Clone would require `T: Copy`, but the raw
+// pointer itself is always freely copyable.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        for n in [0usize, 1, 7, 100, 1001] {
+            for t in [1usize, 2, 3, 8] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                parallel_chunks(n, t, |s, e| {
+                    for i in s..e {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_preserves_order() {
+        let v = parallel_for(1000, 8, |i| i * 3);
+        assert_eq!(v.len(), 1000);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 3);
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let v = parallel_for(5, 1, |i| i);
+        assert_eq!(v, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Wall-clock stopwatch and duration formatting used by the bench harness
+//! and the per-query phase timers (I/O vs compute breakdown, Fig. 2).
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop many times, read the total.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { total: Duration::ZERO, started: None }
+    }
+
+    #[inline]
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    #[inline]
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.total += t.elapsed();
+        }
+    }
+
+    /// Total accumulated time (excludes a currently-running interval).
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total.as_secs_f64() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Human formatting: `1.23 µs`, `4.56 ms`, `7.89 s`.
+pub fn format_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        let first = sw.total();
+        assert!(first >= Duration::from_millis(2));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.total() > first);
+        sw.reset();
+        assert_eq!(sw.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn formatting_units() {
+        assert!(format_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(format_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(format_duration(Duration::from_micros(5)).ends_with(" µs"));
+        assert!(format_duration(Duration::from_nanos(5)).ends_with(" ns"));
+    }
+}

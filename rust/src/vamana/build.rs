@@ -1,0 +1,295 @@
+//! Vamana construction: robust prune + bidirectional insertion.
+
+use super::greedy::SearchScratch;
+use crate::dataset::VectorSet;
+use crate::distance::{l2sq_f32, l2sq_query};
+use crate::util::{parallel_chunks, XorShift};
+use std::sync::Mutex;
+
+/// Construction parameters (paper notation: R = degree bound, L = build
+/// beam width, α = prune slack).
+#[derive(Debug, Clone)]
+pub struct VamanaParams {
+    pub r: usize,
+    pub l_build: usize,
+    pub alpha: f32,
+    pub seed: u64,
+    pub nthreads: usize,
+}
+
+impl Default for VamanaParams {
+    fn default() -> Self {
+        Self { r: 24, l_build: 64, alpha: 1.2, seed: 42, nthreads: crate::util::num_threads() }
+    }
+}
+
+/// The built graph: bounded-degree adjacency plus the medoid entry point.
+pub struct VamanaGraph {
+    pub adj: Vec<Vec<u32>>,
+    pub medoid: u32,
+    pub params_r: usize,
+}
+
+impl VamanaGraph {
+    /// Build over `base`. Deterministic for fixed (params, base) modulo
+    /// insertion-order races between threads; we process points in batches
+    /// with per-node locks, like the reference implementation.
+    pub fn build(base: &VectorSet, params: &VamanaParams) -> Self {
+        let n = base.len();
+        assert!(n > 0);
+        let r = params.r.max(2);
+        let mut rng = XorShift::new(params.seed);
+
+        // --- medoid: point closest to the dataset mean (sampled mean for
+        // large sets).
+        let medoid = find_medoid(base, &mut rng);
+
+        // --- random R-regular init.
+        let adj: Vec<Mutex<Vec<u32>>> = (0..n)
+            .map(|i| {
+                let mut nbrs = Vec::with_capacity(r);
+                while nbrs.len() < r.min(n - 1) {
+                    let c = rng.next_below(n) as u32;
+                    if c as usize != i && !nbrs.contains(&c) {
+                        nbrs.push(c);
+                    }
+                }
+                Mutex::new(nbrs)
+            })
+            .collect();
+
+        // --- two passes: α=1.0 then α=params.alpha.
+        for &alpha in &[1.0f32, params.alpha] {
+            // Randomized order each pass.
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut order);
+            let order = &order;
+            let adj_ref = &adj;
+
+            parallel_chunks(n, params.nthreads, |s, e| {
+                let mut scratch = SearchScratch::default();
+                for &p in &order[s..e] {
+                    let q = base.get_f32(p as usize);
+                    // Greedy search over the *current* graph (lock-snapshot
+                    // adjacency reads).
+                    let _ = greedy_search_locked(
+                        base,
+                        adj_ref,
+                        medoid,
+                        &q,
+                        params.l_build,
+                        1,
+                        &mut scratch,
+                    );
+                    // Candidate pool: visited nodes + current neighbors.
+                    let mut cands: Vec<(f32, u32)> = scratch
+                        .visited_ids()
+                        .filter(|&v| v != p)
+                        .map(|v| (l2sq_query(&q, base.view(v as usize)), v))
+                        .collect();
+                    {
+                        let cur = adj_ref[p as usize].lock().unwrap();
+                        for &v in cur.iter() {
+                            if v != p && !cands.iter().any(|&(_, c)| c == v) {
+                                cands.push((l2sq_query(&q, base.view(v as usize)), v));
+                            }
+                        }
+                    }
+                    let pruned = robust_prune(base, p, cands, alpha, r);
+                    {
+                        let mut cur = adj_ref[p as usize].lock().unwrap();
+                        *cur = pruned.clone();
+                    }
+                    // Reverse edges with overflow re-prune.
+                    for &nb in &pruned {
+                        let mut nbadj = adj_ref[nb as usize].lock().unwrap();
+                        if !nbadj.contains(&p) {
+                            nbadj.push(p);
+                            if nbadj.len() > r {
+                                let nbq = base.get_f32(nb as usize);
+                                let cands: Vec<(f32, u32)> = nbadj
+                                    .iter()
+                                    .map(|&v| (l2sq_query(&nbq, base.view(v as usize)), v))
+                                    .collect();
+                                *nbadj = robust_prune(base, nb, cands, alpha, r);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+
+        let adj: Vec<Vec<u32>> = adj.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        Self { adj, medoid, params_r: r }
+    }
+
+    /// Average out-degree (reported in Table 1 context).
+    pub fn avg_degree(&self) -> f64 {
+        let total: usize = self.adj.iter().map(|a| a.len()).sum();
+        total as f64 / self.adj.len().max(1) as f64
+    }
+}
+
+/// Robust prune (DiskANN Alg. 2): repeatedly take the closest candidate,
+/// then drop every candidate that is α-dominated by it.
+fn robust_prune(
+    base: &VectorSet,
+    p: u32,
+    mut cands: Vec<(f32, u32)>,
+    alpha: f32,
+    r: usize,
+) -> Vec<u32> {
+    cands.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    cands.dedup_by_key(|&mut (_, id)| id);
+    let mut out: Vec<u32> = Vec::with_capacity(r);
+    let mut out_vecs: Vec<Vec<f32>> = Vec::with_capacity(r);
+    'next: for &(d_pc, c) in &cands {
+        if c == p {
+            continue;
+        }
+        for ov in &out_vecs {
+            let d_oc = l2sq_f32(ov, &base.get_f32(c as usize));
+            // Squared distances: α-rule applies to α²·d² vs d².
+            if alpha * alpha * d_oc <= d_pc {
+                continue 'next;
+            }
+        }
+        out.push(c);
+        out_vecs.push(base.get_f32(c as usize));
+        if out.len() >= r {
+            break;
+        }
+    }
+    out
+}
+
+/// Medoid: the point nearest the (sampled) dataset mean.
+fn find_medoid(base: &VectorSet, rng: &mut XorShift) -> u32 {
+    let n = base.len();
+    let dim = base.dim();
+    let sample = rng.sample_indices(n, n.min(10_000));
+    let mut mean = vec![0f64; dim];
+    let mut buf = vec![0f32; dim];
+    for &i in &sample {
+        base.decode_into(i, &mut buf);
+        for (m, &x) in mean.iter_mut().zip(&buf) {
+            *m += x as f64;
+        }
+    }
+    let meanf: Vec<f32> = mean.iter().map(|&m| (m / sample.len() as f64) as f32).collect();
+    let mut best = 0u32;
+    let mut bestd = f32::INFINITY;
+    for &i in &sample {
+        let d = l2sq_query(&meanf, base.view(i));
+        if d < bestd {
+            bestd = d;
+            best = i as u32;
+        }
+    }
+    best
+}
+
+/// Greedy search reading adjacency through per-node locks (construction
+/// time only; the query path uses the immutable graph).
+fn greedy_search_locked(
+    base: &VectorSet,
+    adj: &[Mutex<Vec<u32>>],
+    entry: u32,
+    query: &[f32],
+    l: usize,
+    k: usize,
+    scratch: &mut SearchScratch,
+) -> Vec<(f32, u32)> {
+    // Inlined best-first loop (mirrors greedy.rs, but neighbor lists are
+    // cloned under their lock).
+    let l = l.max(k).max(1);
+    let mut beam: Vec<(f32, u32, bool)> = Vec::with_capacity(l + 1);
+    let mut visited = scratchhack(scratch);
+    visited.clear();
+    visited.insert(entry);
+    beam.push((l2sq_query(query, base.view(entry as usize)), entry, false));
+
+    loop {
+        let Some(pos) = beam.iter().position(|&(_, _, x)| !x) else { break };
+        beam[pos].2 = true;
+        let v = beam[pos].1;
+        let nbrs = adj[v as usize].lock().unwrap().clone();
+        for n in nbrs {
+            if !visited.insert(n) {
+                continue;
+            }
+            let d = l2sq_query(query, base.view(n as usize));
+            if beam.len() < l {
+                let at = beam.partition_point(|&(bd, _, _)| bd <= d);
+                beam.insert(at, (d, n, false));
+            } else if d < beam[l - 1].0 {
+                let at = beam.partition_point(|&(bd, _, _)| bd <= d);
+                beam.insert(at, (d, n, false));
+                beam.truncate(l);
+            }
+        }
+    }
+    let out = beam.iter().take(k).map(|&(d, id, _)| (d, id)).collect();
+    putback(scratch, visited);
+    out
+}
+
+// Scratch plumbing: reuse the visited set allocation across points.
+fn scratchhack(s: &mut SearchScratch) -> std::collections::HashSet<u32> {
+    std::mem::take(s.visited_mut())
+}
+fn putback(s: &mut SearchScratch, v: std::collections::HashSet<u32>) {
+    *s.visited_mut() = v;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+
+    #[test]
+    fn robust_prune_drops_dominated() {
+        // p at origin; candidates at 1.0 and 1.1 in the same direction:
+        // the second is dominated (d(c1,c2) small, α·d small vs d(p,c2)).
+        let base = VectorSet::from_f32(1, &[0.0, 1.0, 1.1, -5.0]);
+        let cands = vec![(1.0f32, 1u32), (1.21f32, 2u32), (25.0f32, 3u32)];
+        let out = robust_prune(&base, 0, cands, 1.2, 4);
+        assert!(out.contains(&1));
+        assert!(!out.contains(&2), "1.1 should be dominated by 1.0");
+        assert!(out.contains(&3), "opposite direction survives");
+    }
+
+    #[test]
+    fn robust_prune_respects_degree_bound() {
+        let rows: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let base = VectorSet::from_f32(1, &rows);
+        let cands: Vec<(f32, u32)> =
+            (1..50).map(|i| ((i * i) as f32, i as u32)).collect();
+        let out = robust_prune(&base, 0, cands, 100.0, 8); // huge α disables domination
+        assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn medoid_is_central() {
+        let spec = SynthSpec::new(DatasetKind::DeepLike, 300).with_dim(8).with_clusters(1);
+        let base = spec.generate(2);
+        let mut rng = XorShift::new(1);
+        let m = find_medoid(&base, &mut rng) as usize;
+        // Medoid distance to mean must be at most the median point's.
+        let dim = base.dim();
+        let mut mean = vec![0f32; dim];
+        for i in 0..base.len() {
+            for (s, x) in mean.iter_mut().zip(base.get_f32(i)) {
+                *s += x / base.len() as f32;
+            }
+        }
+        let dm = l2sq_f32(&mean, &base.get_f32(m));
+        let mut better = 0;
+        for i in 0..base.len() {
+            if l2sq_f32(&mean, &base.get_f32(i)) < dm {
+                better += 1;
+            }
+        }
+        assert!(better < base.len() / 10, "medoid not central: {better} closer");
+    }
+}

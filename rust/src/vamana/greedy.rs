@@ -1,0 +1,172 @@
+//! Greedy (best-first) beam search over an in-memory adjacency list — used
+//! during Vamana construction and by the in-memory half of the baselines.
+
+use crate::dataset::VectorSet;
+use crate::distance::l2sq_query;
+
+/// Reusable scratch buffers for greedy search (zero-alloc on the hot path).
+#[derive(Default)]
+pub struct SearchScratch {
+    /// (distance, id, expanded) beam, kept sorted ascending by distance.
+    beam: Vec<(f32, u32, bool)>,
+    visited: std::collections::HashSet<u32>,
+}
+
+/// Best-first search: returns the `k` closest (distance, id) found, and
+/// records every expanded node in `scratch.visited` (the candidate set
+/// robust_prune consumes during construction).
+///
+/// `l` is the beam width (search list size); `k ≤ l`.
+pub fn greedy_search(
+    base: &VectorSet,
+    adj: &[Vec<u32>],
+    entry: u32,
+    query: &[f32],
+    l: usize,
+    k: usize,
+    scratch: &mut SearchScratch,
+) -> Vec<(f32, u32)> {
+    greedy_search_multi(base, adj, &[entry], query, l, k, scratch)
+}
+
+/// Like [`greedy_search`] but seeded with several entry points.
+pub fn greedy_search_multi(
+    base: &VectorSet,
+    adj: &[Vec<u32>],
+    entries: &[u32],
+    query: &[f32],
+    l: usize,
+    k: usize,
+    scratch: &mut SearchScratch,
+) -> Vec<(f32, u32)> {
+    let l = l.max(k).max(1);
+    let beam = &mut scratch.beam;
+    let visited = &mut scratch.visited;
+    beam.clear();
+    visited.clear();
+
+    for &e in entries {
+        if visited.insert(e) {
+            let d = l2sq_query(query, base.view(e as usize));
+            beam.push((d, e, false));
+        }
+    }
+    beam.sort_by(|a, b| a.0.total_cmp(&b.0));
+    beam.truncate(l);
+
+    loop {
+        // Closest unexpanded beam entry.
+        let Some(pos) = beam.iter().position(|&(_, _, expanded)| !expanded) else {
+            break;
+        };
+        beam[pos].2 = true;
+        let v = beam[pos].1;
+
+        for &n in &adj[v as usize] {
+            if !visited.insert(n) {
+                continue;
+            }
+            let d = l2sq_query(query, base.view(n as usize));
+            // Insert into the sorted beam if it beats the current worst (or
+            // the beam has room).
+            if beam.len() < l {
+                let at = beam.partition_point(|&(bd, _, _)| bd <= d);
+                beam.insert(at, (d, n, false));
+            } else if d < beam[l - 1].0 {
+                let at = beam.partition_point(|&(bd, _, _)| bd <= d);
+                beam.insert(at, (d, n, false));
+                beam.truncate(l);
+            }
+        }
+    }
+
+    beam.iter().take(k).map(|&(d, id, _)| (d, id)).collect()
+}
+
+impl SearchScratch {
+    /// Nodes expanded/visited during the last search (construction uses
+    /// these as prune candidates).
+    pub fn visited_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.visited.iter().copied()
+    }
+
+    /// Direct access to the visited set (construction-time reuse).
+    pub fn visited_mut(&mut self) -> &mut std::collections::HashSet<u32> {
+        &mut self.visited
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::VectorSet;
+
+    /// Line graph over points on a number line: 0-1-2-…-9.
+    fn line_world() -> (VectorSet, Vec<Vec<u32>>) {
+        let rows: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let base = VectorSet::from_f32(1, &rows);
+        let adj: Vec<Vec<u32>> = (0..10)
+            .map(|i: u32| {
+                let mut v = Vec::new();
+                if i > 0 {
+                    v.push(i - 1);
+                }
+                if i < 9 {
+                    v.push(i + 1);
+                }
+                v
+            })
+            .collect();
+        (base, adj)
+    }
+
+    #[test]
+    fn walks_the_line_to_the_target() {
+        let (base, adj) = line_world();
+        let mut s = SearchScratch::default();
+        let out = greedy_search(&base, &adj, 0, &[8.7], 4, 2, &mut s);
+        assert_eq!(out[0].1, 9);
+        assert_eq!(out[1].1, 8);
+    }
+
+    #[test]
+    fn k_results_sorted_by_distance() {
+        let (base, adj) = line_world();
+        let mut s = SearchScratch::default();
+        let out = greedy_search(&base, &adj, 5, &[3.2], 6, 4, &mut s);
+        assert_eq!(out.len(), 4);
+        for w in out.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        assert_eq!(out[0].1, 3);
+    }
+
+    #[test]
+    fn beam_width_one_is_pure_greedy() {
+        let (base, adj) = line_world();
+        let mut s = SearchScratch::default();
+        let out = greedy_search(&base, &adj, 0, &[9.0], 1, 1, &mut s);
+        assert_eq!(out[0].1, 9);
+    }
+
+    #[test]
+    fn visited_contains_path() {
+        let (base, adj) = line_world();
+        let mut s = SearchScratch::default();
+        let _ = greedy_search(&base, &adj, 0, &[9.0], 2, 1, &mut s);
+        let visited: std::collections::HashSet<u32> = s.visited_ids().collect();
+        for i in 0..10 {
+            assert!(visited.contains(&i), "node {i} not visited");
+        }
+    }
+
+    #[test]
+    fn multi_entry_dedups() {
+        let (base, adj) = line_world();
+        let mut s = SearchScratch::default();
+        let out = greedy_search_multi(&base, &adj, &[0, 0, 9], &[4.5], 10, 10, &mut s);
+        // All 10 nodes reachable; no duplicates in results.
+        let ids: std::collections::HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids.len(), out.len());
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration: AOT artifacts (python/jax/pallas → HLO text) load, compile
+//! and execute through the PJRT runtime, and agree numerically with the
+//! native rust distance backend.
+//!
+//! Requires `make artifacts` to have run; tests skip (with a loud message)
+//! when the artifacts directory is absent so `cargo test` stays runnable in
+//! a fresh checkout.
+
+use pageann::dataset::Dtype;
+use pageann::distance::{BatchScanner, NativeBatch, XlaBatch};
+use pageann::runtime::{execute_f32, execute_f32_multi, ArtifactSet, XlaRuntime};
+use pageann::util::XorShift;
+use std::path::Path;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactSet::load(&dir) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn l2_batch_artifact_matches_native() {
+    let Some(arts) = artifacts() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    assert!(rt.device_count() >= 1);
+
+    for &dim in &[96usize, 100, 128] {
+        let xla = XlaBatch::load(&rt, &arts, dim, 1).unwrap();
+        let rows = xla.rows();
+        let mut rng = XorShift::new(dim as u64);
+        let query: Vec<f32> = (0..dim).map(|_| rng.next_gaussian() * 10.0).collect();
+        // Raw u8 block (SIFT-like) — exercises dtype decode in the backend.
+        let n = rows + rows / 2; // force a split across two artifact calls
+        let block: Vec<u8> = (0..n * dim).map(|_| rng.next_below(256) as u8).collect();
+
+        let mut got = vec![0f32; n];
+        xla.scan(&query, &block, Dtype::U8, n, &mut got);
+        let mut want = vec![0f32; n];
+        NativeBatch.scan(&query, &block, Dtype::U8, n, &mut want);
+        for i in 0..n {
+            let tol = 1e-3 * want[i].max(1.0);
+            assert!(
+                (got[i] - want[i]).abs() <= tol,
+                "dim={dim} row {i}: xla {} vs native {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pq_adc_artifact_matches_reference() {
+    let Some(arts) = artifacts() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let art = arts.get("pq_adc_m16").unwrap();
+    let m = art.meta_usize("m").unwrap();
+    let k = art.meta_usize("k").unwrap();
+    let rows = art.meta_usize("rows").unwrap();
+    let exe = rt.load_hlo_text(&art.file).unwrap();
+
+    let mut rng = XorShift::new(7);
+    let lut: Vec<f32> = (0..m * k).map(|_| rng.next_f32() * 100.0).collect();
+    let codes_int: Vec<usize> = (0..rows * m).map(|_| rng.next_below(k)).collect();
+    let codes_f: Vec<f32> = codes_int.iter().map(|&c| c as f32).collect();
+
+    let got = execute_f32(
+        &exe,
+        &[(&lut, &[m as i64, k as i64]), (&codes_f, &[rows as i64, m as i64])],
+    )
+    .unwrap();
+    assert_eq!(got.len(), rows);
+    for r in 0..rows {
+        let want: f32 = (0..m).map(|s| lut[s * k + codes_int[r * m + s]]).sum();
+        assert!((got[r] - want).abs() <= 1e-2 * want.max(1.0), "row {r}: {} vs {want}", got[r]);
+    }
+}
+
+#[test]
+fn hash_encode_artifact_matches_native_signs() {
+    let Some(arts) = artifacts() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let art = arts.get("hash_encode_d128_h32").unwrap();
+    let dim = art.meta_usize("dim").unwrap();
+    let bits = art.meta_usize("bits").unwrap();
+    let exe = rt.load_hlo_text(&art.file).unwrap();
+
+    let mut rng = XorShift::new(17);
+    let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+    let planes: Vec<f32> = (0..bits * dim).map(|_| rng.next_gaussian()).collect();
+    let got = execute_f32(&exe, &[(&q, &[dim as i64]), (&planes, &[bits as i64, dim as i64])])
+        .unwrap();
+    assert_eq!(got.len(), bits);
+    for b in 0..bits {
+        let dot: f32 = planes[b * dim..(b + 1) * dim].iter().zip(&q).map(|(p, x)| p * x).sum();
+        let want = if dot > 0.0 { 1.0 } else { 0.0 };
+        assert_eq!(got[b], want, "bit {b} (dot={dot})");
+    }
+}
+
+#[test]
+fn page_scan_fused_artifact_returns_both_outputs() {
+    let Some(arts) = artifacts() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let art = arts.get("page_scan_d128_m16").unwrap();
+    let (dim, rows, m, k) = (
+        art.meta_usize("dim").unwrap(),
+        art.meta_usize("rows").unwrap(),
+        art.meta_usize("m").unwrap(),
+        art.meta_usize("k").unwrap(),
+    );
+    let exe = rt.load_hlo_text(&art.file).unwrap();
+
+    let mut rng = XorShift::new(23);
+    let q: Vec<f32> = (0..dim).map(|_| rng.next_f32()).collect();
+    let block: Vec<f32> = (0..rows * dim).map(|_| rng.next_f32()).collect();
+    let lut: Vec<f32> = (0..m * k).map(|_| rng.next_f32()).collect();
+    let codes_int: Vec<usize> = (0..rows * m).map(|_| rng.next_below(k)).collect();
+    let codes: Vec<f32> = codes_int.iter().map(|&c| c as f32).collect();
+
+    let outs = execute_f32_multi(
+        &exe,
+        &[
+            (&q, &[dim as i64]),
+            (&block, &[rows as i64, dim as i64]),
+            (&lut, &[m as i64, k as i64]),
+            (&codes, &[rows as i64, m as i64]),
+        ],
+        2,
+    )
+    .unwrap();
+    assert_eq!(outs[0].len(), rows);
+    assert_eq!(outs[1].len(), rows);
+    // Spot-check both outputs against scalar math.
+    for r in [0usize, rows / 2, rows - 1] {
+        let exact: f32 = (0..dim).map(|j| {
+            let d = block[r * dim + j] - q[j];
+            d * d
+        }).sum();
+        assert!((outs[0][r] - exact).abs() <= 1e-3 * exact.max(1.0));
+        let adc: f32 = (0..m).map(|s| lut[s * k + codes_int[r * m + s]]).sum();
+        assert!((outs[1][r] - adc).abs() <= 1e-3 * adc.max(1.0));
+    }
+}

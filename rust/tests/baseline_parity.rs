@@ -1,0 +1,143 @@
+//! Cross-scheme comparisons on one shared workload: the architectural
+//! ordering claims of the paper must hold at test scale.
+
+use pageann::baselines::{DiskAnnIndex, DiskAnnLike, SpannLike, StarlingLike};
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, tune_to_recall, AnnSystem, OpenOptions, PageAnnIndex};
+use pageann::io::SsdModel;
+use pageann::layout::{BuildConfig, IndexBuilder};
+use pageann::vamana::VamanaParams;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("pageann-parity-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn vamana() -> VamanaParams {
+    VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 }
+}
+
+fn workload() -> Workload {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 4000).with_dim(32).with_clusters(16);
+    Workload::synthesize(&spec, 40, 10, 99)
+}
+
+/// PageANN needs fewer I/Os than DiskANN at the same recall — the paper's
+/// central claim (Table 3's Mean I/Os column).
+#[test]
+fn pageann_beats_diskann_on_ios_at_equal_recall() {
+    let w = workload();
+    let d1 = tmpdir("pa");
+    let d2 = tmpdir("da");
+
+    let cfg = BuildConfig { pq_m: 8, vamana: vamana(), ..Default::default() };
+    IndexBuilder::new(&w.base, cfg).build(&d1).unwrap();
+    let pa = PageAnnIndex::open(&d1, OpenOptions::default()).unwrap();
+
+    let da_idx = DiskAnnIndex::build(&w.base, &vamana(), 8, 4096, &d2).unwrap();
+    let da = DiskAnnLike::open(da_idx, 5).unwrap();
+
+    let (_, rep_pa) = tune_to_recall(&pa, &w.queries, &w.gt, 10, 0.9, 4);
+    let (_, rep_da) = tune_to_recall(&da, &w.queries, &w.gt, 10, 0.9, 4);
+    assert!(rep_pa.summary.recall >= 0.88, "pageann recall {}", rep_pa.summary.recall);
+    assert!(rep_da.summary.recall >= 0.88, "diskann recall {}", rep_da.summary.recall);
+    assert!(
+        rep_pa.summary.mean_ios() < rep_da.summary.mean_ios(),
+        "pageann {} IOs !< diskann {} IOs",
+        rep_pa.summary.mean_ios(),
+        rep_da.summary.mean_ios()
+    );
+    // And read amplification must be near 1 vs well above 1 (Table 1).
+    let amp_pa = rep_pa.summary.totals.read_amplification();
+    let amp_da = rep_da.summary.totals.read_amplification();
+    assert!(amp_pa < 1.5, "pageann amp {amp_pa}");
+    assert!(amp_da > amp_pa * 1.5, "diskann amp {amp_da} vs pageann {amp_pa}");
+
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+/// Under the NVMe timing model, fewer I/Os must translate to lower
+/// latency (Fig. 7's ordering), not just fewer syscalls.
+#[test]
+fn pageann_latency_beats_diskann_under_ssd_model() {
+    let w = workload();
+    let d1 = tmpdir("pa-sim");
+    let d2 = tmpdir("da-sim");
+    let model = SsdModel::default();
+
+    let cfg = BuildConfig { pq_m: 8, vamana: vamana(), ..Default::default() };
+    IndexBuilder::new(&w.base, cfg).build(&d1).unwrap();
+    let pa = PageAnnIndex::open(
+        &d1,
+        OpenOptions { sim_ssd: Some(model.clone()), ..Default::default() },
+    )
+    .unwrap();
+    let da_idx = DiskAnnIndex::build(&w.base, &vamana(), 8, 4096, &d2).unwrap();
+    let da = DiskAnnLike::open(da_idx, 5).unwrap().with_sim_ssd(model);
+
+    let (_, rep_pa) = tune_to_recall(&pa, &w.queries, &w.gt, 10, 0.9, 4);
+    let (_, rep_da) = tune_to_recall(&da, &w.queries, &w.gt, 10, 0.9, 4);
+    assert!(
+        rep_pa.summary.mean_latency_ms() < rep_da.summary.mean_latency_ms(),
+        "pageann {}ms !< diskann {}ms",
+        rep_pa.summary.mean_latency_ms(),
+        rep_da.summary.mean_latency_ms()
+    );
+    // And I/O must dominate both (Fig. 2's >90% claim holds loosely here).
+    assert!(rep_pa.summary.io_fraction() > 0.5, "{}", rep_pa.summary.io_fraction());
+    assert!(rep_da.summary.io_fraction() > 0.5, "{}", rep_da.summary.io_fraction());
+
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+/// All five schemes return *correct* neighbors — same ground truth, high
+/// recall, valid original ids.
+#[test]
+fn all_schemes_agree_on_easy_queries() {
+    let w = workload();
+    let base_dir = tmpdir("agree");
+
+    let mut systems: Vec<Box<dyn AnnSystem>> = Vec::new();
+    {
+        let d = base_dir.join("pa");
+        IndexBuilder::new(&w.base, BuildConfig { pq_m: 8, vamana: vamana(), ..Default::default() })
+            .build(&d)
+            .unwrap();
+        systems.push(Box::new(PageAnnIndex::open(&d, OpenOptions::default()).unwrap()));
+    }
+    {
+        let d = base_dir.join("da");
+        let idx = DiskAnnIndex::build(&w.base, &vamana(), 8, 4096, &d).unwrap();
+        systems.push(Box::new(DiskAnnLike::open(idx, 5).unwrap()));
+    }
+    {
+        let d = base_dir.join("st");
+        systems.push(Box::new(
+            StarlingLike::build(&w.base, &vamana(), 8, 4096, &d, 5).unwrap(),
+        ));
+    }
+    {
+        let d = base_dir.join("sp");
+        systems.push(Box::new(SpannLike::build(&w.base, 64, 1.5, 4096, &d, 4).unwrap()));
+    }
+
+    for sys in &systems {
+        let rep = run_workload(sys.as_ref(), &w.queries, Some(&w.gt), 10, 120, 4);
+        assert!(
+            rep.summary.recall >= 0.85,
+            "{} recall {}",
+            sys.name(),
+            rep.summary.recall
+        );
+        for ids in &rep.results {
+            assert!(ids.iter().all(|&id| (id as usize) < w.base.len()), "{}", sys.name());
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), ids.len(), "{} returned duplicates", sys.name());
+        }
+    }
+    std::fs::remove_dir_all(&base_dir).unwrap();
+}

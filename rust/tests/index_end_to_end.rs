@@ -1,0 +1,154 @@
+//! End-to-end: synthesize a workload, build a PageANN index on disk, open
+//! it, and verify recall/IO/latency behaviour across the three §4.3
+//! memory regimes.
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, AnnSystem, OpenOptions, PageAnnIndex};
+use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
+use pageann::metrics::QueryStats;
+use pageann::search::{SearchParams, SearchScratch};
+use pageann::vamana::VamanaParams;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("pageann-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn small_workload() -> Workload {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 3000).with_dim(32).with_clusters(16);
+    Workload::synthesize(&spec, 40, 10, 77)
+}
+
+fn build_cfg(cv: CvPlacement) -> BuildConfig {
+    BuildConfig {
+        pq_m: 8,
+        cv_placement: cv,
+        routing_sample_frac: 0.03,
+        vamana: VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 },
+        ..Default::default()
+    }
+}
+
+fn check_regime(tag: &str, cv: CvPlacement, min_recall: f64) {
+    let w = small_workload();
+    let dir = tmpdir(tag);
+    let report = IndexBuilder::new(&w.base, build_cfg(cv)).build(&dir).unwrap();
+    assert!(report.n_pages > 0);
+
+    let idx = PageAnnIndex::open(&dir, OpenOptions::default()).unwrap();
+    let rep = run_workload(&idx, &w.queries, Some(&w.gt), 10, 80, 4);
+    assert!(
+        rep.summary.recall >= min_recall,
+        "{tag}: recall {} < {min_recall}",
+        rep.summary.recall
+    );
+    // One hop = one page: mean IOs must be far below the vector-graph hop
+    // count a DiskANN-style search would need (~L).
+    assert!(rep.summary.mean_ios() < 80.0, "{tag}: {} IOs", rep.summary.mean_ios());
+    assert!(rep.summary.mean_latency_ms() > 0.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn recall_on_page_regime() {
+    check_regime("onpage", CvPlacement::OnPage, 0.85);
+}
+
+#[test]
+fn recall_hybrid_regime() {
+    check_regime("hybrid", CvPlacement::Hybrid { mem_frac: 0.5 }, 0.85);
+}
+
+#[test]
+fn recall_in_memory_regime() {
+    check_regime("inmem", CvPlacement::InMemory, 0.85);
+}
+
+#[test]
+fn in_memory_placement_shrinks_page_count() {
+    let w = small_workload();
+    let d1 = tmpdir("shrink-a");
+    let d2 = tmpdir("shrink-b");
+    let r_onpage = IndexBuilder::new(&w.base, build_cfg(CvPlacement::OnPage)).build(&d1).unwrap();
+    let r_inmem = IndexBuilder::new(&w.base, build_cfg(CvPlacement::InMemory)).build(&d2).unwrap();
+    // §4.3: freeing page space for vectors shrinks the page-node graph.
+    assert!(
+        r_inmem.n_pages < r_onpage.n_pages,
+        "inmem {} !< onpage {}",
+        r_inmem.n_pages,
+        r_onpage.n_pages
+    );
+    assert!(r_inmem.capacity > r_onpage.capacity);
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+#[test]
+fn warmup_cache_reduces_ios() {
+    let w = small_workload();
+    let dir = tmpdir("warm");
+    IndexBuilder::new(&w.base, build_cfg(CvPlacement::OnPage)).build(&dir).unwrap();
+
+    let mut idx = PageAnnIndex::open(&dir, OpenOptions::default()).unwrap();
+    let before = run_workload(&idx, &w.queries, Some(&w.gt), 10, 60, 2);
+    // Cache half the pages' worth of budget.
+    let budget = idx.meta.n_pages * idx.meta.page_size / 2;
+    idx.warmup(&w.queries, budget).unwrap();
+    assert!(idx.cache_pages() > 0);
+    let after = run_workload(&idx, &w.queries, Some(&w.gt), 10, 60, 2);
+    assert!(
+        after.summary.mean_ios() < before.summary.mean_ios() * 0.8,
+        "cache didn't cut IOs: {} -> {}",
+        before.summary.mean_ios(),
+        after.summary.mean_ios()
+    );
+    assert!(after.summary.totals.cache_hits > 0);
+    // Recall unchanged by caching.
+    assert!((after.summary.recall - before.summary.recall).abs() < 0.05);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn larger_l_improves_recall_and_costs_more_io() {
+    let w = small_workload();
+    let dir = tmpdir("ltrade");
+    IndexBuilder::new(&w.base, build_cfg(CvPlacement::OnPage)).build(&dir).unwrap();
+    let idx = PageAnnIndex::open(&dir, OpenOptions::default()).unwrap();
+    let lo = run_workload(&idx, &w.queries, Some(&w.gt), 10, 12, 2);
+    let hi = run_workload(&idx, &w.queries, Some(&w.gt), 10, 150, 2);
+    assert!(hi.summary.recall >= lo.summary.recall, "{} vs {}", hi.summary.recall, lo.summary.recall);
+    assert!(hi.summary.mean_ios() > lo.summary.mean_ios());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn direct_search_api_reports_stats() {
+    let w = small_workload();
+    let dir = tmpdir("direct");
+    IndexBuilder::new(&w.base, build_cfg(CvPlacement::OnPage)).build(&dir).unwrap();
+    let idx = PageAnnIndex::open(&dir, OpenOptions::default()).unwrap();
+    let mut scratch = SearchScratch::new();
+    let mut stats = QueryStats::default();
+    let q = w.queries.get_f32(0);
+    let out = idx
+        .search(&q, &SearchParams { k: 10, l: 64, ..Default::default() }, &mut scratch, &mut stats)
+        .unwrap();
+    assert_eq!(out.len(), 10);
+    // Distances ascending, ids valid.
+    for win in out.windows(2) {
+        assert!(win[0].0 <= win[1].0);
+    }
+    assert!(out.iter().all(|&(_, id)| (id as usize) < w.base.len()));
+    assert!(stats.ios > 0);
+    assert!(stats.hops > 0);
+    assert!(stats.exact_dists > 0);
+    assert!(stats.approx_dists > 0);
+    assert!(stats.bytes_read >= stats.ios * 4096);
+    // Read amplification should be low (most of each page useful).
+    assert!(stats.read_amplification() < 3.0, "{}", stats.read_amplification());
+    assert_eq!(idx.name(), "PageANN");
+    assert!(idx.memory_bytes() > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,30 @@
+//! Navigability regression: the synthetic workloads must support greedy
+//! graph search from a single entry point — the property every scheme in
+//! the paper depends on. Guards the dataset generator against regressions
+//! toward non-navigable (isolated-blob) structure.
+
+use pageann::dataset::{recall_at_k, DatasetKind, SynthSpec, Workload};
+use pageann::vamana::{greedy_search, SearchScratch, VamanaGraph, VamanaParams};
+
+fn greedy_recall(w: &Workload, g: &VamanaGraph, l: usize) -> f64 {
+    let mut results = Vec::new();
+    for qi in 0..w.queries.len() {
+        let q = w.queries.get_f32(qi);
+        let mut s = SearchScratch::default();
+        let found = greedy_search(&w.base, &g.adj, g.medoid, &q, l, 10, &mut s);
+        results.push(found.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
+    }
+    recall_at_k(&results, &w.gt, 10)
+}
+
+#[test]
+fn default_specs_are_navigable_at_full_dim() {
+    let vp = VamanaParams { r: 24, l_build: 48, alpha: 1.2, seed: 0xBEEF, nthreads: 8 };
+    for kind in [DatasetKind::SiftLike, DatasetKind::SpacevLike, DatasetKind::DeepLike] {
+        let spec = SynthSpec::new(kind, 6_000);
+        let w = Workload::synthesize(&spec, 32, 10, 0xDA7A);
+        let g = VamanaGraph::build(&w.base, &vp);
+        let r = greedy_recall(&w, &g, 100);
+        assert!(r >= 0.9, "{}: greedy-from-medoid recall {r}", kind.name());
+    }
+}

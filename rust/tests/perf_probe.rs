@@ -1,0 +1,50 @@
+//! §Perf probes (run with --ignored): before/after measurements for the
+//! optimization log in EXPERIMENTS.md.
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{run_workload, OpenOptions, PageAnnIndex};
+use pageann::io::SsdModel;
+use pageann::layout::{BuildConfig, IndexBuilder};
+use pageann::search::SearchParams;
+use pageann::vamana::VamanaParams;
+
+#[test]
+#[ignore]
+fn perf_pipeline_on_off() {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 20_000);
+    let w = Workload::synthesize(&spec, 128, 10, 0xDA7A);
+    let dir = std::env::temp_dir().join("pageann-perf-pipe");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = BuildConfig {
+        vamana: VamanaParams { r: 24, l_build: 48, alpha: 1.2, seed: 1, nthreads: 16 },
+        ..Default::default()
+    };
+    IndexBuilder::new(&w.base, cfg).build(&dir).unwrap();
+    for pipeline in [false, true] {
+        let params = SearchParams { pipeline, ..Default::default() };
+        let idx = PageAnnIndex::open(
+            &dir,
+            OpenOptions { sim_ssd: Some(SsdModel::default()), params, ..Default::default() },
+        )
+        .unwrap();
+        // 3 repetitions, take the best (noise robustness).
+        let mut best_ms = f64::INFINITY;
+        let mut rep_keep = None;
+        for _ in 0..3 {
+            let rep = run_workload(&idx, &w.queries, Some(&w.gt), 10, 64, 1);
+            if rep.summary.mean_latency_ms() < best_ms {
+                best_ms = rep.summary.mean_latency_ms();
+                rep_keep = Some(rep);
+            }
+        }
+        let rep = rep_keep.unwrap();
+        eprintln!(
+            "pipeline={pipeline}: mean={:.3}ms io={:.3}ms compute={:.3}ms ios={:.1} recall={:.4}",
+            best_ms,
+            rep.summary.totals.io_time.as_secs_f64() * 1e3 / rep.summary.queries as f64,
+            rep.summary.totals.compute_time.as_secs_f64() * 1e3 / rep.summary.queries as f64,
+            rep.summary.mean_ios(),
+            rep.summary.recall
+        );
+    }
+}

@@ -1,0 +1,296 @@
+//! Property-based tests over the core invariants: page serde roundtrip,
+//! remap bijectivity, grouping partition, candidate-set ordering, PQ/LUT
+//! consistency, routing probe correctness, distance-kernel agreement.
+
+use pageann::dataset::{DatasetKind, Dtype, SynthSpec, VectorSet};
+use pageann::distance::{l2sq_f32, l2sq_query, BatchScanner, NativeBatch};
+use pageann::layout::{IdRemap, PageRef, PageWriter};
+use pageann::pagegraph::{group_into_pages, GroupingParams};
+use pageann::pq::{PqCodebook, PqEncoder};
+use pageann::proptest::{default_cases, forall, gen_dim, gen_vec};
+use pageann::routing::RoutingIndex;
+use pageann::search::CandidateSet;
+use pageann::util::XorShift;
+use pageann::vamana::{VamanaGraph, VamanaParams};
+
+#[test]
+fn prop_distance_kernels_agree_across_dtypes() {
+    forall(
+        "distance-dtype-agreement",
+        default_cases(),
+        |rng| {
+            let dim = gen_dim(rng);
+            let q = gen_vec(rng, dim, 50.0);
+            let v = gen_vec(rng, dim, 50.0);
+            (dim, q, v)
+        },
+        |(dim, q, v)| {
+            // Quantize v into each dtype and compare the dispatcher against
+            // direct f32 math on the quantized values.
+            for dtype in [Dtype::U8, Dtype::I8, Dtype::F32] {
+                let mut set = VectorSet::new(dtype, dim, 1);
+                set.set_from_f32(0, &v);
+                let got = l2sq_query(&q, set.view(0));
+                let want = l2sq_f32(&q, &set.get_f32(0));
+                let tol = 1e-3 * want.max(1.0);
+                assert!((got - want).abs() <= tol, "{dtype:?}: {got} vs {want}");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_batch_scanner_matches_pointwise() {
+    forall(
+        "batch-scan-pointwise",
+        default_cases(),
+        |rng| {
+            let dim = gen_dim(rng);
+            let n = 1 + rng.next_below(40);
+            let q = gen_vec(rng, dim, 10.0);
+            let mut set = VectorSet::new(Dtype::F32, dim, n);
+            for i in 0..n {
+                let v = gen_vec(rng, dim, 10.0);
+                set.set_from_f32(i, &v);
+            }
+            (q, set)
+        },
+        |(q, set)| {
+            let n = set.len();
+            let mut out = vec![0f32; n];
+            NativeBatch.scan(&q, set.as_bytes(), set.dtype(), n, &mut out);
+            for i in 0..n {
+                let want = l2sq_query(&q, set.view(i));
+                assert!((out[i] - want).abs() <= 1e-3 * want.max(1.0));
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_page_serde_roundtrip() {
+    forall(
+        "page-roundtrip",
+        default_cases(),
+        |rng| {
+            let stride = [8usize, 32, 96, 128][rng.next_below(4)];
+            let m = [4usize, 8, 16][rng.next_below(3)];
+            let page_size = [2048usize, 4096][rng.next_below(2)];
+            let n_vecs = 1 + rng.next_below(12);
+            let n_nbrs = rng.next_below(30);
+            let vectors: Vec<(u32, Vec<u8>)> = (0..n_vecs)
+                .map(|_| {
+                    (rng.next_u64() as u32, (0..stride).map(|_| rng.next_below(256) as u8).collect())
+                })
+                .collect();
+            let neighbors: Vec<(u32, Option<Vec<u8>>)> = (0..n_nbrs)
+                .map(|_| {
+                    let id = rng.next_u64() as u32;
+                    let code = if rng.next_f32() < 0.6 {
+                        Some((0..m).map(|_| rng.next_below(256) as u8).collect())
+                    } else {
+                        None
+                    };
+                    (id, code)
+                })
+                .collect();
+            (stride, m, page_size, vectors, neighbors)
+        },
+        |(stride, m, page_size, vectors, neighbors)| {
+            let mut w = PageWriter {
+                page_size,
+                vec_stride: stride,
+                pq_m: m,
+                vectors: vectors.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
+                neighbors: neighbors.iter().map(|(id, c)| (*id, c.as_deref())).collect(),
+            };
+            w.truncate_to_fit();
+            if !w.fits() {
+                return; // vectors alone exceed the page; builder never does this
+            }
+            let kept = w.neighbors.len();
+            let mut buf = vec![0u8; page_size];
+            w.serialize_into(&mut buf).unwrap();
+            let p = PageRef::parse(&buf, stride, m).unwrap();
+            assert_eq!(p.n_vecs(), vectors.len());
+            assert_eq!(p.n_nbrs(), kept);
+            for (i, (oid, v)) in vectors.iter().enumerate() {
+                assert_eq!(p.orig_id(i), *oid);
+                assert_eq!(p.vector(i), v.as_slice());
+            }
+            for (j, (nid, code)) in neighbors.iter().take(kept).enumerate() {
+                assert_eq!(p.nbr_id(j), *nid);
+                assert_eq!(p.nbr_code(j), code.as_deref());
+            }
+            assert!(p.used_bytes() <= page_size);
+        },
+    );
+}
+
+#[test]
+fn prop_remap_bijective_and_page_stable() {
+    forall(
+        "remap-bijection",
+        default_cases(),
+        |rng| {
+            let n = 5 + rng.next_below(200);
+            let cap = 1 + rng.next_below(8);
+            // Random partition into pages of ≤ cap.
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            let mut pages = Vec::new();
+            let mut it = ids.into_iter().peekable();
+            while it.peek().is_some() {
+                let take = 1 + rng.next_below(cap);
+                pages.push(it.by_ref().take(take).collect::<Vec<u32>>());
+            }
+            (n, cap, pages)
+        },
+        |(n, cap, pages)| {
+            let r = IdRemap::from_pages(&pages, cap, n);
+            for orig in 0..n as u32 {
+                let new = r.to_new(orig);
+                assert_eq!(r.to_orig(new), orig);
+                let page = r.page_of(new) as usize;
+                assert!(pages[page].contains(&orig));
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_candidate_set_total_order() {
+    forall(
+        "candidate-order",
+        default_cases(),
+        |rng| {
+            let cap = 1 + rng.next_below(32);
+            let n = rng.next_below(200);
+            let items: Vec<(f32, u32)> =
+                (0..n).map(|i| (rng.next_f32(), i as u32)).collect();
+            (cap, items)
+        },
+        |(cap, items)| {
+            let mut c = CandidateSet::new(cap);
+            for &(d, id) in &items {
+                c.push(d, id);
+            }
+            // Pops come out in non-decreasing distance order and are the
+            // cap smallest distances seen.
+            let mut popped = Vec::new();
+            while let Some(id) = c.pop_closest_unvisited() {
+                popped.push(id);
+            }
+            assert!(popped.len() <= cap);
+            let dist_of = |id: u32| items[id as usize].0;
+            for w in popped.windows(2) {
+                assert!(dist_of(w[0]) <= dist_of(w[1]));
+            }
+            if !items.is_empty() && !popped.is_empty() {
+                let mut sorted: Vec<f32> = items.iter().map(|&(d, _)| d).collect();
+                sorted.sort_by(|a, b| a.total_cmp(b));
+                // The closest item overall must have been popped first.
+                assert_eq!(dist_of(popped[0]), sorted[0]);
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pq_adc_equals_decoded_distance() {
+    forall(
+        "pq-adc-consistency",
+        24, // training is expensive; fewer cases
+        |rng| {
+            let dim = [16usize, 32][rng.next_below(2)];
+            let m = [4usize, 8][rng.next_below(2)];
+            let n = 300;
+            let spec = SynthSpec::new(DatasetKind::DeepLike, n).with_dim(dim).with_clusters(5);
+            let base = spec.generate(rng.next_u64());
+            let q = gen_vec(rng, dim, 1.0);
+            (base, m, q)
+        },
+        |(base, m, q)| {
+            let cb = PqCodebook::train(&base, m, 6, 9);
+            let enc = PqEncoder::new(&cb);
+            let lut = cb.build_lut(&q);
+            for i in [0usize, 7, 150, 299] {
+                let code = enc.encode(&base.get_f32(i));
+                let adc = lut.distance(&code);
+                let decoded = cb.decode(&code);
+                let exact = l2sq_f32(&q, &decoded);
+                assert!(
+                    (adc - exact).abs() <= 1e-2 * exact.max(1.0),
+                    "vector {i}: adc {adc} vs decoded-exact {exact}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_grouping_partitions_any_graph() {
+    forall(
+        "grouping-partition",
+        12,
+        |rng| {
+            let n = 100 + rng.next_below(400);
+            let cap = 1 + rng.next_below(10);
+            let hops = 1 + rng.next_below(3);
+            let spec = SynthSpec::new(DatasetKind::SiftLike, n).with_dim(16).with_clusters(4);
+            let base = spec.generate(rng.next_u64());
+            (base, cap, hops, rng.next_u64())
+        },
+        |(base, cap, hops, seed)| {
+            let g = VamanaGraph::build(
+                &base,
+                &VamanaParams { r: 8, l_build: 16, alpha: 1.2, seed: 1, nthreads: 2 },
+            );
+            let pages =
+                group_into_pages(&base, &g, &GroupingParams { capacity: cap, hops, seed });
+            let mut seen = vec![false; base.len()];
+            for p in &pages {
+                assert!(!p.is_empty() && p.len() <= cap);
+                for &v in p {
+                    assert!(!seen[v as usize], "duplicate {v}");
+                    seen[v as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "not a partition");
+        },
+    );
+}
+
+#[test]
+fn prop_routing_probe_returns_sampled_ids_only() {
+    forall(
+        "routing-membership",
+        24,
+        |rng| {
+            let n = 200 + rng.next_below(500);
+            let bits = 4 + rng.next_below(28);
+            let frac = 0.05 + rng.next_f64() * 0.4;
+            let spec = SynthSpec::new(DatasetKind::DeepLike, n).with_dim(12).with_clusters(4);
+            (spec.generate(rng.next_u64()), bits, frac, rng.next_u64())
+        },
+        |(base, bits, frac, seed)| {
+            let idx = RoutingIndex::build(&base, frac, bits, seed);
+            let sampled: std::collections::HashSet<u32> =
+                idx.buckets.values().flatten().copied().collect();
+            assert_eq!(sampled.len(), idx.n_sampled);
+            let mut rng = XorShift::new(seed ^ 1);
+            for _ in 0..10 {
+                let q = base.get_f32(rng.next_below(base.len()));
+                for id in idx.entry_points(&q, 2, 16) {
+                    assert!(sampled.contains(&id), "non-sampled id {id} returned");
+                }
+            }
+            // Radius-0 self probe: a sampled vector must find its own
+            // bucket (its code is its bucket key).
+            let &any = sampled.iter().next().unwrap();
+            let q = base.get_f32(any as usize);
+            let hits = idx.entry_points(&q, 0, usize::MAX);
+            assert!(hits.contains(&any));
+        },
+    );
+}
