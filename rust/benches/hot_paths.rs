@@ -9,7 +9,7 @@
 
 use pageann::bench::{ns_per_op, time_loop};
 use pageann::dataset::{DatasetKind, Dtype, SynthSpec};
-use pageann::distance::{BatchScanner, NativeBatch, XlaBatch};
+use pageann::distance::{kernels, scalar_kernels, BatchScanner, NativeBatch, ScalarBatch, XlaBatch};
 use pageann::io::open_auto;
 use pageann::layout::{PageRef, PageWriter};
 use pageann::pq::{PqCodebook, PqEncoder};
@@ -17,7 +17,8 @@ use pageann::search::CandidateSet;
 use pageann::util::XorShift;
 
 fn main() {
-    println!("# hot-path microbenchmarks");
+    // Selected ISA first, so every row below is attributable to a kernel set.
+    println!("# hot-path microbenchmarks (simd isa: {})", kernels().isa);
     bench_distance();
     bench_pq();
     bench_page_serde();
@@ -26,31 +27,65 @@ fn main() {
     bench_xla();
 }
 
+/// Time one scanner over a block; returns ns/vec.
+fn time_scan(
+    scanner: &dyn BatchScanner,
+    q: &[f32],
+    block: &[u8],
+    dtype: Dtype,
+    rows: usize,
+    out: &mut [f32],
+) -> f64 {
+    let (mean, _) = time_loop(20, 200, || {
+        scanner.scan(q, block, dtype, rows, out);
+        std::hint::black_box(&out);
+    });
+    ns_per_op(mean, rows)
+}
+
 fn bench_distance() {
     let mut rng = XorShift::new(1);
     let dim = 128;
     let rows = 256;
     let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
-    let block_u8: Vec<u8> = (0..rows * dim).map(|_| rng.next_below(256) as u8).collect();
     let mut out = vec![0f32; rows];
-    let (mean, _) = time_loop(20, 200, || {
-        NativeBatch.scan(&q, &block_u8, Dtype::U8, rows, &mut out);
-        std::hint::black_box(&out);
-    });
+    let isa = kernels().isa;
+
+    // u8 (SIFT-like): scalar baseline vs dispatched, with the speedup the
+    // acceptance gate watches (≥2x on an AVX2 host).
+    let block_u8: Vec<u8> = (0..rows * dim).map(|_| rng.next_below(256) as u8).collect();
+    let scalar_ns = time_scan(&ScalarBatch, &q, &block_u8, Dtype::U8, rows, &mut out);
+    let simd_ns = time_scan(&NativeBatch, &q, &block_u8, Dtype::U8, rows, &mut out);
+    println!("l2_u8_d128_scalar          {scalar_ns:>10.1} ns/vec ({rows} vecs/scan)");
     println!(
-        "native_l2_u8_d128          {:>10.1} ns/vec ({} vecs/scan)",
-        ns_per_op(mean, rows),
-        rows
+        "l2_u8_d128_{isa:<6}          {simd_ns:>8.1} ns/vec ({:.2}x vs scalar)",
+        scalar_ns / simd_ns.max(1e-9)
     );
 
+    // i8 (SPACEV-like, dim 100).
+    let dim_i8 = 100;
+    let block_i8: Vec<u8> =
+        (0..rows * dim_i8).map(|_| (rng.next_below(256) as i16 - 128) as i8 as u8).collect();
+    let q100: Vec<f32> = (0..dim_i8).map(|_| rng.next_gaussian() * 40.0).collect();
+    let scalar_ns = time_scan(&ScalarBatch, &q100, &block_i8, Dtype::I8, rows, &mut out);
+    let simd_ns = time_scan(&NativeBatch, &q100, &block_i8, Dtype::I8, rows, &mut out);
+    println!("l2_i8_d100_scalar          {scalar_ns:>10.1} ns/vec");
+    println!(
+        "l2_i8_d100_{isa:<6}          {simd_ns:>8.1} ns/vec ({:.2}x vs scalar)",
+        scalar_ns / simd_ns.max(1e-9)
+    );
+
+    // f32 (DEEP-like layout, unaligned page offsets in real scans).
     let block_f32: Vec<u8> = (0..rows * dim)
         .flat_map(|_| rng.next_gaussian().to_le_bytes())
         .collect();
-    let (mean, _) = time_loop(20, 200, || {
-        NativeBatch.scan(&q, &block_f32, Dtype::F32, rows, &mut out);
-        std::hint::black_box(&out);
-    });
-    println!("native_l2_f32_d128         {:>10.1} ns/vec", ns_per_op(mean, rows));
+    let scalar_ns = time_scan(&ScalarBatch, &q, &block_f32, Dtype::F32, rows, &mut out);
+    let simd_ns = time_scan(&NativeBatch, &q, &block_f32, Dtype::F32, rows, &mut out);
+    println!("l2_f32_d128_scalar         {scalar_ns:>10.1} ns/vec");
+    println!(
+        "l2_f32_d128_{isa:<6}         {simd_ns:>8.1} ns/vec ({:.2}x vs scalar)",
+        scalar_ns / simd_ns.max(1e-9)
+    );
 }
 
 fn bench_pq() {
@@ -60,13 +95,17 @@ fn bench_pq() {
     let enc = PqEncoder::new(&cb);
     let q = base.get_f32(0);
 
+    // LUT build into a reused scratch buffer (the hot-path entry point).
+    let mut lut_scratch = pageann::pq::AdcLut::empty();
     let (mean, _) = time_loop(3, 30, || {
-        std::hint::black_box(cb.build_lut(&q));
+        cb.build_lut_into(&q, &mut lut_scratch);
+        std::hint::black_box(&lut_scratch);
     });
     println!("pq_lut_build_m16_d128      {:>10.1} ns/query", ns_per_op(mean, 1));
 
     let lut = cb.build_lut(&q);
-    let codes: Vec<Vec<u8>> = (0..512).map(|i| enc.encode(&base.get_f32(i))).collect();
+    let n_codes = 512usize;
+    let codes: Vec<Vec<u8>> = (0..n_codes).map(|i| enc.encode(&base.get_f32(i))).collect();
     let (mean, _) = time_loop(20, 500, || {
         let mut s = 0f32;
         for c in &codes {
@@ -74,7 +113,35 @@ fn bench_pq() {
         }
         std::hint::black_box(s);
     });
-    println!("pq_adc_distance_m16        {:>10.1} ns/code", ns_per_op(mean, codes.len()));
+    let per_code_ns = ns_per_op(mean, n_codes);
+    println!("pq_adc_distance_m16        {per_code_ns:>10.1} ns/code (per-code scalar)");
+
+    // Batched ADC over a contiguous n × m block — the search topology path.
+    let packed: Vec<u8> = codes.iter().flatten().copied().collect();
+    let mut dists = vec![0f32; n_codes];
+    let (mean, _) = time_loop(20, 500, || {
+        lut.distance_batch(&packed, n_codes, &mut dists);
+        std::hint::black_box(&dists);
+    });
+    let batch_ns = ns_per_op(mean, n_codes);
+    // NEON maps adc_batch to the scalar kernel (no gather); label the row
+    // by the kernel that actually ran, not the table's overall ISA.
+    let adc_isa = if kernels().adc_batch == scalar_kernels().adc_batch {
+        "scalar"
+    } else {
+        kernels().isa
+    };
+    println!(
+        "pq_adc_batch_m16_{adc_isa:<6}    {batch_ns:>9.1} ns/code ({:.2}x vs per-code)",
+        per_code_ns / batch_ns.max(1e-9)
+    );
+
+    // Scalar batch kernel for reference (isolates the gather win).
+    let (mean, _) = time_loop(20, 500, || {
+        (scalar_kernels().adc_batch)(lut.table(), lut.m(), lut.k(), &packed, n_codes, &mut dists);
+        std::hint::black_box(&dists);
+    });
+    println!("pq_adc_batch_m16_scalar    {:>10.1} ns/code", ns_per_op(mean, n_codes));
 }
 
 fn bench_page_serde() {
@@ -151,7 +218,14 @@ fn bench_xla() {
         println!("xla_l2_batch               SKIPPED (run `make artifacts`)");
         return;
     };
-    let rt = pageann::runtime::XlaRuntime::cpu().unwrap();
+    // Stub runtime (no `xla` feature) errors here; skip rather than panic.
+    let rt = match pageann::runtime::XlaRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("xla_l2_batch               SKIPPED ({e})");
+            return;
+        }
+    };
     let xla = XlaBatch::load(&rt, &arts, 128, 1).unwrap();
     let rows = xla.rows();
     let mut rng = XorShift::new(11);

@@ -20,7 +20,7 @@ use crate::engine::AnnSystem;
 use crate::io::{open_auto, PageStore, SimSsdStore, SsdModel};
 use crate::metrics::QueryStats;
 use crate::pq::{PqCodebook, PqEncoder};
-use crate::search::CandidateSet;
+use crate::search::{CandidateSet, TopReservoir};
 use crate::util::WriteExt;
 use crate::vamana::{VamanaGraph, VamanaParams};
 use crate::Result;
@@ -101,7 +101,11 @@ thread_local! {
 struct BeamScratch {
     visited: std::collections::HashSet<u32>,
     bufs: Vec<Vec<u8>>,
-    results: Vec<(f32, u32)>,
+    results: TopReservoir,
+    /// Gathered neighbor ids/codes for the per-round batched ADC call.
+    nbr_ids: Vec<u32>,
+    nbr_codes: Vec<u8>,
+    nbr_dists: Vec<f32>,
 }
 
 impl BeamSearcher {
@@ -125,7 +129,7 @@ impl BeamSearcher {
         let m = idx.pq.m;
         let mut cands = CandidateSet::new(l);
         scratch.visited.clear();
-        scratch.results.clear();
+        scratch.results.reset(l.max(k));
 
         let entry = idx.medoid;
         scratch.visited.insert(entry);
@@ -164,6 +168,10 @@ impl BeamSearcher {
             stats.io_time += t_io.elapsed();
 
             let t_cpu = Instant::now();
+            // Gather this round's unvisited neighbors, then score them with
+            // one batched ADC call instead of per-neighbor table walks.
+            scratch.nbr_ids.clear();
+            scratch.nbr_codes.clear();
             for &v in &nodes {
                 let p = idx.layout.page_of(v);
                 let slot = pages.iter().position(|&x| x == p).unwrap();
@@ -172,24 +180,28 @@ impl BeamSearcher {
                 // Exact distance on the full vector.
                 let d = l2sq_query(query, crate::dataset::VectorView { bytes: rec.vector(), dtype: idx.dtype });
                 stats.exact_dists += 1;
-                scratch.results.push((d, v));
-                // Neighbors by PQ distance.
+                scratch.results.push(d, v);
                 for j in 0..rec.n_nbrs() {
                     let nb = rec.nbr(j);
                     if !scratch.visited.insert(nb) {
                         continue;
                     }
-                    let dd = lut.distance(&idx.codes[nb as usize * m..(nb as usize + 1) * m]);
-                    stats.approx_dists += 1;
-                    cands.push(dd, nb);
+                    scratch.nbr_ids.push(nb);
+                    scratch
+                        .nbr_codes
+                        .extend_from_slice(&idx.codes[nb as usize * m..(nb as usize + 1) * m]);
                 }
+            }
+            let n_gathered = scratch.nbr_ids.len();
+            lut.score_into(&scratch.nbr_codes, n_gathered, &mut scratch.nbr_dists);
+            stats.approx_dists += n_gathered as u64;
+            for i in 0..n_gathered {
+                cands.push(scratch.nbr_dists[i], scratch.nbr_ids[i]);
             }
             stats.compute_time += t_cpu.elapsed();
         }
 
-        scratch.results.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        scratch.results.dedup_by_key(|r| r.1);
-        scratch.results.iter().take(k).map(|&(_, id)| id).collect()
+        scratch.results.sorted().into_iter().take(k).map(|(_, id)| id).collect()
     }
 
     fn memory_bytes(&self) -> usize {

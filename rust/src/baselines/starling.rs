@@ -19,7 +19,7 @@ use crate::io::{open_auto, PageStore, SimSsdStore, SsdModel};
 use crate::metrics::QueryStats;
 use crate::pagegraph::{group_into_pages, GroupingParams};
 use crate::pq::{PqCodebook, PqEncoder};
-use crate::search::CandidateSet;
+use crate::search::{CandidateSet, TopReservoir};
 use crate::vamana::{VamanaGraph, VamanaParams};
 use crate::Result;
 use std::cell::RefCell;
@@ -49,7 +49,11 @@ struct Scratch {
     visited: std::collections::HashSet<u32>,
     visited_pages: std::collections::HashSet<u32>,
     bufs: Vec<Vec<u8>>,
-    results: Vec<(f32, u32)>,
+    results: TopReservoir,
+    /// Gathered neighbor ids/codes for the per-round batched ADC call.
+    nbr_ids: Vec<u32>,
+    nbr_codes: Vec<u8>,
+    nbr_dists: Vec<f32>,
 }
 
 impl StarlingLike {
@@ -170,7 +174,7 @@ impl StarlingLike {
         let mut cands = CandidateSet::new(l);
         scratch.visited.clear();
         scratch.visited_pages.clear();
-        scratch.results.clear();
+        scratch.results.reset(l.max(k));
 
         let entry = self.medoid_new;
         scratch.visited.insert(entry);
@@ -209,6 +213,10 @@ impl StarlingLike {
             stats.io_time += t_io.elapsed();
 
             let t_cpu = Instant::now();
+            // Gather the round's unvisited neighbors for one batched ADC
+            // call (block search scans whole pages, so rounds gather many).
+            scratch.nbr_ids.clear();
+            scratch.nbr_codes.clear();
             for (slot, &p) in pages.iter().enumerate() {
                 // Scan every record in the block.
                 for s in 0..npp {
@@ -222,28 +230,34 @@ impl StarlingLike {
                     stats.bytes_used += rec.used_bytes() as u64;
                     let d = l2sq_query(query, VectorView { bytes: rec.vector(), dtype: self.dtype });
                     stats.exact_dists += 1;
-                    scratch.results.push((d, new_id));
+                    scratch.results.push(d, new_id);
                     for j in 0..rec.n_nbrs() {
                         let nb = rec.nbr(j);
                         if !scratch.visited.insert(nb) {
                             continue;
                         }
-                        let dd = lut.distance(&self.codes[nb as usize * m..(nb as usize + 1) * m]);
-                        stats.approx_dists += 1;
-                        cands.push(dd, nb);
+                        scratch.nbr_ids.push(nb);
+                        scratch
+                            .nbr_codes
+                            .extend_from_slice(&self.codes[nb as usize * m..(nb as usize + 1) * m]);
                     }
                 }
+            }
+            let n_gathered = scratch.nbr_ids.len();
+            lut.score_into(&scratch.nbr_codes, n_gathered, &mut scratch.nbr_dists);
+            stats.approx_dists += n_gathered as u64;
+            for i in 0..n_gathered {
+                cands.push(scratch.nbr_dists[i], scratch.nbr_ids[i]);
             }
             stats.compute_time += t_cpu.elapsed();
         }
 
-        scratch.results.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        scratch.results.dedup_by_key(|r| r.1);
         scratch
             .results
-            .iter()
+            .sorted()
+            .into_iter()
             .take(k)
-            .map(|&(_, new_id)| self.new_to_orig[new_id as usize])
+            .map(|(_, new_id)| self.new_to_orig[new_id as usize])
             .collect()
     }
 }

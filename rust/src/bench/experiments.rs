@@ -714,31 +714,65 @@ fn abl_c(ctx: &mut ExperimentCtx) -> Result<Vec<Table>> {
     };
     IndexBuilder::new(&w.base, cfg).build(&dir)?;
 
-    // Native backend.
+    // Native backend (SIMD kernels selected by runtime dispatch).
     let native = PageAnnIndex::open(
         &dir,
         OpenOptions { sim_ssd: ctx.sim.clone(), ..Default::default() },
     )?;
+    let native_isa = crate::distance::kernels().isa;
     let (l, rep_n) = tune_to_recall(&native, &w.queries, &w.gt, 10, TARGET_RECALL, ctx.threads);
     t.row(vec![
-        "native".into(),
+        format!("native({native_isa})"),
         fmt_f(rep_n.summary.recall, 4),
         fmt_f(rep_n.summary.mean_latency_ms(), 2),
         fmt_f(rep_n.summary.qps(), 1),
     ]);
 
-    // XLA backend (skipped gracefully when artifacts are absent).
+    // Scalar-oracle *scanner*: same index, same L. Only the exact page
+    // scans are pinned to scalar — LUT build and batched ADC stay on the
+    // dispatched kernels, so the traversal (and hence the scanned set) is
+    // identical by construction. The strict recall-identity assert below
+    // is sound because this workload is SIFT-like (u8): queries decode to
+    // integer-valued f32 and every subtraction/square/sum stays an exact
+    // integer < 2^24, so scalar and FMA kernels agree bit-for-bit. (On an
+    // f32 dataset, rounding could flip a near-tie at the k boundary — use
+    // a one-flip tolerance there.) For a fully scalar pipeline, run the
+    // binary with PAGEANN_SIMD=scalar instead.
+    let scalar_idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions {
+            sim_ssd: ctx.sim.clone(),
+            scanner: Some(Box::new(crate::distance::ScalarBatch)),
+            ..Default::default()
+        },
+    )?;
+    let rep_s = run_workload(&scalar_idx, &w.queries, Some(&w.gt), 10, l, ctx.threads);
+    anyhow::ensure!(
+        (rep_s.summary.recall - rep_n.summary.recall).abs() < 1e-9,
+        "scalar/simd scanner recall divergence: {} vs {}",
+        rep_s.summary.recall,
+        rep_n.summary.recall
+    );
+    t.row(vec![
+        "scalar-scan".into(),
+        fmt_f(rep_s.summary.recall, 4),
+        fmt_f(rep_s.summary.mean_latency_ms(), 2),
+        fmt_f(rep_s.summary.qps(), 1),
+    ]);
+
+    // XLA backend (skipped gracefully when artifacts or PJRT are absent).
     let arts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    match crate::runtime::ArtifactSet::load(&arts_dir) {
+    match crate::runtime::ArtifactSet::load(&arts_dir)
+        .and_then(|arts| Ok((arts, crate::runtime::XlaRuntime::cpu()?)))
+    {
         Err(e) => {
             eprintln!("[ablC] skipping xla backend: {e}");
             t.row(vec!["xla".into(), "-".into(), "-".into(), "-".into()]);
         }
-        Ok(arts) => {
+        Ok((arts, rt)) => {
             // The runtime must outlive the executables; one per process is
             // fine for an experiment binary.
-            let rt: &'static crate::runtime::XlaRuntime =
-                Box::leak(Box::new(crate::runtime::XlaRuntime::cpu()?));
+            let rt: &'static crate::runtime::XlaRuntime = Box::leak(Box::new(rt));
             let scanner = crate::distance::XlaBatch::load(rt, &arts, 128, ctx.threads)?;
             let xla_idx = PageAnnIndex::open(
                 &dir,

@@ -1,10 +1,12 @@
 //! Distance computation backends.
 //!
-//! Two implementations of the same batch-distance interface:
+//! Three implementations of the same batch-distance interface:
 //!
-//! * [`native`] — hand-unrolled scalar kernels per dtype (u8/i8/f32). This is
-//!   the rust-layer correctness oracle and the default hot-path backend for
-//!   tiny batches where PJRT dispatch overhead dominates.
+//! * [`simd`] — explicit `std::arch` kernels (AVX2+FMA / NEON) selected once
+//!   at startup by runtime CPU-feature dispatch. This is the default hot
+//!   path: [`NativeBatch`] and the free functions below route through it.
+//! * [`native`] — hand-unrolled scalar kernels per dtype (u8/i8/f32): the
+//!   rust-layer correctness oracle, pinned by [`ScalarBatch`].
 //! * [`xla_backend`] — executes the AOT-compiled Pallas/JAX page-scan
 //!   artifact through PJRT. Used for large batch scans; the backend choice
 //!   is an ablation (`paper_experiments ablC`).
@@ -13,33 +15,58 @@
 //! identical and we skip the sqrt everywhere, like the reference systems).
 
 mod native;
+pub mod simd;
 mod xla_backend;
 
-pub use native::{l2sq_f32, l2sq_f32_i8, l2sq_f32_u8, norm_sq_f32, BatchScanner, NativeBatch};
+pub use native::{BatchScanner, NativeBatch, ScalarBatch};
+pub use simd::{kernels, scalar_kernels, Kernels};
 pub use xla_backend::XlaBatch;
 
+// Scalar oracle kernels, exported for tests/benches that pin the baseline.
+pub use native::{
+    l2sq_f32 as l2sq_f32_scalar, l2sq_f32_i8 as l2sq_f32_i8_scalar,
+    l2sq_f32_u8 as l2sq_f32_u8_scalar, norm_sq_f32 as norm_sq_f32_scalar,
+};
+
 use crate::dataset::{Dtype, VectorView};
+
+/// Squared L2 between two f32 slices of equal length (dispatched).
+#[inline]
+pub fn l2sq_f32(a: &[f32], b: &[f32]) -> f32 {
+    (simd::kernels().l2sq_f32)(a, b)
+}
+
+/// Squared L2 between an f32 query and a u8 vector (dispatched).
+#[inline]
+pub fn l2sq_f32_u8(a: &[f32], b: &[u8]) -> f32 {
+    (simd::kernels().l2sq_f32_u8)(a, b)
+}
+
+/// Squared L2 between an f32 query and an i8 vector (dispatched).
+#[inline]
+pub fn l2sq_f32_i8(a: &[f32], b: &[i8]) -> f32 {
+    (simd::kernels().l2sq_f32_i8)(a, b)
+}
+
+/// Squared norm of an f32 slice (dispatched).
+#[inline]
+pub fn norm_sq_f32(a: &[f32]) -> f32 {
+    (simd::kernels().norm_sq_f32)(a)
+}
 
 /// Squared L2 between an f32 query and a raw-dtype vector.
 #[inline]
 pub fn l2sq_query(query: &[f32], v: VectorView<'_>) -> f32 {
+    let ks = simd::kernels();
     match v.dtype {
-        Dtype::F32 => l2sq_f32(query, bytemuck_f32(v.bytes)),
-        Dtype::U8 => l2sq_f32_u8(query, v.bytes),
-        Dtype::I8 => l2sq_f32_i8(query, unsafe {
+        // Page buffers slice f32 rows at unaligned byte offsets, so the
+        // f32 arm reads little-endian bytes rather than casting the slice.
+        Dtype::F32 => (ks.l2sq_f32_bytes)(query, v.bytes),
+        Dtype::U8 => (ks.l2sq_f32_u8)(query, v.bytes),
+        Dtype::I8 => (ks.l2sq_f32_i8)(query, unsafe {
             std::slice::from_raw_parts(v.bytes.as_ptr() as *const i8, v.bytes.len())
         }),
     }
-}
-
-/// Reinterpret little-endian raw bytes as f32. Callers guarantee alignment
-/// by construction (vector sets allocate `Vec<u8>` and offsets are multiples
-/// of 4 bytes for f32 data).
-#[inline]
-pub(crate) fn bytemuck_f32(bytes: &[u8]) -> &[f32] {
-    debug_assert_eq!(bytes.len() % 4, 0);
-    debug_assert_eq!(bytes.as_ptr() as usize % 4, 0, "unaligned f32 view");
-    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
 }
 
 #[cfg(test)]

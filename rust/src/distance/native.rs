@@ -1,8 +1,10 @@
-//! Native (pure-rust) distance kernels.
+//! Scalar (pure-rust) distance kernels and the batch-scanner trait.
 //!
-//! These are written as 4-way unrolled scalar loops; rustc/LLVM
-//! auto-vectorizes them to SSE/AVX on x86-64. They serve as the correctness
-//! oracle for the XLA backend and as the low-latency path for small batches.
+//! The kernels are 4-way unrolled scalar loops; rustc/LLVM auto-vectorizes
+//! them to SSE/AVX on x86-64. They are the **correctness oracle** for the
+//! explicit-SIMD kernels in [`super::simd`] and for the XLA backend. The
+//! hot path goes through [`NativeBatch`], which calls the runtime-dispatched
+//! kernel table; [`ScalarBatch`] pins the oracle for A/B runs.
 
 /// Squared L2 between two f32 slices of equal length.
 #[inline]
@@ -92,7 +94,7 @@ pub fn norm_sq_f32(a: &[f32]) -> f32 {
     s
 }
 
-use crate::dataset::{Dtype, VectorView};
+use crate::dataset::Dtype;
 
 /// Batch scanner interface: distances from one query to a packed block of
 /// vectors. Both the native and XLA backends implement this, so the search
@@ -106,23 +108,77 @@ pub trait BatchScanner: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// The native batch scanner.
+/// The native batch scanner: rows scored with the runtime-dispatched SIMD
+/// kernels (AVX2/NEON when available, scalar otherwise).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeBatch;
 
+/// Scan a packed row-major block with an explicit kernel table. The kernel
+/// fn pointer is hoisted out of the row loop (one indirect target → fully
+/// predicted).
+#[inline]
+fn scan_with(
+    ks: &'static crate::distance::simd::Kernels,
+    query: &[f32],
+    block: &[u8],
+    dtype: Dtype,
+    n: usize,
+    out: &mut [f32],
+) {
+    let d = query.len();
+    let stride = d * dtype.size_bytes();
+    debug_assert!(block.len() >= n * stride);
+    match dtype {
+        Dtype::U8 => {
+            let f = ks.l2sq_f32_u8;
+            for i in 0..n {
+                out[i] = f(query, &block[i * stride..(i + 1) * stride]);
+            }
+        }
+        Dtype::I8 => {
+            let f = ks.l2sq_f32_i8;
+            for i in 0..n {
+                let bytes = &block[i * stride..(i + 1) * stride];
+                let v = unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len())
+                };
+                out[i] = f(query, v);
+            }
+        }
+        Dtype::F32 => {
+            // Page buffers slice f32 rows at odd byte offsets (5-byte
+            // header), so go through the alignment-safe bytes kernel.
+            let f = ks.l2sq_f32_bytes;
+            for i in 0..n {
+                out[i] = f(query, &block[i * stride..(i + 1) * stride]);
+            }
+        }
+    }
+}
+
 impl BatchScanner for NativeBatch {
     fn scan(&self, query: &[f32], block: &[u8], dtype: Dtype, n: usize, out: &mut [f32]) {
-        let d = query.len();
-        let stride = d * dtype.size_bytes();
-        debug_assert!(block.len() >= n * stride);
-        for i in 0..n {
-            let bytes = &block[i * stride..(i + 1) * stride];
-            out[i] = crate::distance::l2sq_query(query, VectorView { bytes, dtype });
-        }
+        scan_with(crate::distance::simd::kernels(), query, block, dtype, n, out);
     }
 
     fn name(&self) -> &'static str {
-        "native"
+        crate::distance::simd::kernels().isa
+    }
+}
+
+/// The scalar-oracle batch scanner: identical semantics to [`NativeBatch`]
+/// but pinned to the unrolled scalar kernels regardless of host ISA. Used
+/// by the recall-parity checks and as the baseline in the hot-path benches.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScalarBatch;
+
+impl BatchScanner for ScalarBatch {
+    fn scan(&self, query: &[f32], block: &[u8], dtype: Dtype, n: usize, out: &mut [f32]) {
+        scan_with(crate::distance::simd::scalar_kernels(), query, block, dtype, n, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "scalar"
     }
 }
 

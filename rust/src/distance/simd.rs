@@ -1,0 +1,615 @@
+//! Explicit-SIMD distance/ADC kernels with one-time runtime dispatch.
+//!
+//! # Dispatch contract
+//!
+//! [`kernels()`] returns a `&'static Kernels` — a table of plain function
+//! pointers selected **once** per process (first call, `OnceLock`) by CPU
+//! feature detection:
+//!
+//! * x86-64 with AVX2+FMA → 256-bit kernels (`isa = "avx2"`), including a
+//!   gather-based batched ADC.
+//! * aarch64 → NEON kernels (`isa = "neon"`; NEON is part of the aarch64
+//!   baseline, so no detection is needed). The batched ADC stays scalar —
+//!   NEON has no gather, and the table walk is load-bound either way.
+//! * anything else → the unrolled scalar kernels from
+//!   [`super::native`] (`isa = "scalar"`), which double as the
+//!   correctness oracle for every SIMD path.
+//!
+//! `PAGEANN_SIMD=scalar` forces the scalar table (A/B runs, debugging);
+//! `PAGEANN_SIMD=avx2|neon` requests an ISA and silently falls back to
+//! scalar when the host cannot run it, so a forced value can never fault.
+//!
+//! Every kernel tolerates **unaligned** inputs (`loadu` / byte loads): page
+//! buffers slice vectors at odd offsets (5-byte header + 4·n id table), so
+//! alignment is a property callers cannot promise. All kernels follow the
+//! same contract as the scalar oracle: equal-length inputs, squared-L2
+//! semantics, and ≤1e-4 relative divergence (FMA contraction) — asserted by
+//! `tests/simd_kernels.rs` across dims, dtypes and offsets.
+//!
+//! The ADC kernel signature is shaped for [`crate::pq::AdcLut`]: a flat
+//! `m × k` f32 table (row stride `k`), row-major `n × m` code bytes, and an
+//! `out[..n]` distance buffer. Code values are always `< k` by construction
+//! (PQ encoding), which is what makes the unchecked gather sound.
+
+use super::native;
+use std::sync::OnceLock;
+
+/// Largest PQ subspace count the batched ADC kernels support; wider codes
+/// fall back to the scalar row loop. Matches the memcodes format bound.
+pub const ADC_MAX_M: usize = 64;
+
+/// The dispatched kernel table. All members are plain `fn` pointers so the
+/// indirect call is branch-predictor friendly and `Send + Sync` for free.
+pub struct Kernels {
+    /// Which implementation was selected ("avx2", "neon", "scalar").
+    pub isa: &'static str,
+    /// Squared L2 between two f32 slices of equal length.
+    pub l2sq_f32: fn(&[f32], &[f32]) -> f32,
+    /// Squared L2 between an f32 query and little-endian f32 bytes
+    /// (`b.len() == 4 * a.len()`, any alignment — the page-scan case).
+    pub l2sq_f32_bytes: fn(&[f32], &[u8]) -> f32,
+    /// Squared L2 between an f32 query and a u8 vector.
+    pub l2sq_f32_u8: fn(&[f32], &[u8]) -> f32,
+    /// Squared L2 between an f32 query and an i8 vector.
+    pub l2sq_f32_i8: fn(&[f32], &[i8]) -> f32,
+    /// Squared norm of an f32 slice.
+    pub norm_sq_f32: fn(&[f32]) -> f32,
+    /// Batched ADC: `out[i] = Σ_s table[s*k + codes[i*m + s]]` for
+    /// `i in 0..n`. `table` is `m × k` row-major; codes are `n × m`.
+    pub adc_batch: fn(table: &[f32], m: usize, k: usize, codes: &[u8], n: usize, out: &mut [f32]),
+}
+
+/// The process-wide kernel table (selected once, then immutable).
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    static SELECTED: OnceLock<&'static Kernels> = OnceLock::new();
+    *SELECTED.get_or_init(select)
+}
+
+/// The scalar kernel table — the correctness oracle, always available.
+pub fn scalar_kernels() -> &'static Kernels {
+    &SCALAR
+}
+
+fn select() -> &'static Kernels {
+    let forced = std::env::var("PAGEANN_SIMD").ok();
+    if forced.as_deref() == Some("scalar") {
+        return &SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if forced.as_deref().map(|f| f == "avx2").unwrap_or(true)
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+        {
+            return &AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if forced.as_deref().map(|f| f == "neon").unwrap_or(true) {
+            return &NEON;
+        }
+    }
+    &SCALAR
+}
+
+// ---- scalar fallback ----------------------------------------------------
+
+static SCALAR: Kernels = Kernels {
+    isa: "scalar",
+    l2sq_f32: native::l2sq_f32,
+    l2sq_f32_bytes: scalar_l2sq_f32_bytes,
+    l2sq_f32_u8: native::l2sq_f32_u8,
+    l2sq_f32_i8: native::l2sq_f32_i8,
+    norm_sq_f32: native::norm_sq_f32,
+    adc_batch: scalar_adc_batch,
+};
+
+/// Scalar oracle for the bytes-as-f32 kernel (alignment-safe by reading
+/// each element with `from_le_bytes`).
+pub fn scalar_l2sq_f32_bytes(a: &[f32], b: &[u8]) -> f32 {
+    debug_assert_eq!(a.len() * 4, b.len());
+    let mut s = 0f32;
+    for (x, c) in a.iter().zip(b.chunks_exact(4)) {
+        let y = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Scalar oracle for the batched ADC: 4-way unrolled over subspaces with a
+/// strength-reduced table offset (no `sub * k` multiply per byte).
+pub fn scalar_adc_batch(table: &[f32], m: usize, k: usize, codes: &[u8], n: usize, out: &mut [f32]) {
+    debug_assert!(codes.len() >= n * m);
+    debug_assert!(out.len() >= n);
+    debug_assert_eq!(table.len(), m * k);
+    for i in 0..n {
+        let code = &codes[i * m..(i + 1) * m];
+        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+        let mut base = 0usize;
+        let pairs = m / 4;
+        for j in 0..pairs {
+            let c = &code[j * 4..j * 4 + 4];
+            s0 += table[base + c[0] as usize];
+            s1 += table[base + k + c[1] as usize];
+            s2 += table[base + 2 * k + c[2] as usize];
+            s3 += table[base + 3 * k + c[3] as usize];
+            base += 4 * k;
+        }
+        let mut s = (s0 + s1) + (s2 + s3);
+        for &c in &code[pairs * 4..] {
+            s += table[base + c as usize];
+            base += k;
+        }
+        out[i] = s;
+    }
+}
+
+// ---- AVX2 + FMA ---------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    isa: "avx2",
+    l2sq_f32: avx2::l2sq_f32,
+    l2sq_f32_bytes: avx2::l2sq_f32_bytes,
+    l2sq_f32_u8: avx2::l2sq_f32_u8,
+    l2sq_f32_i8: avx2::l2sq_f32_i8,
+    norm_sq_f32: avx2::norm_sq_f32,
+    adc_batch: avx2::adc_batch,
+};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2+FMA kernels. The safe wrappers are only ever reachable through
+    //! [`super::select`], which verifies `avx2 && fma` first — that is the
+    //! safety argument for every `unsafe` block below.
+    use super::ADC_MAX_M;
+    use std::arch::x86_64::*;
+
+    /// Sum the 8 lanes of an AVX register.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    pub fn l2sq_f32(a: &[f32], b: &[f32]) -> f32 {
+        // Hard assert: the unsafe body does unchecked loads, so a length
+        // mismatch must panic (not UB) even in release builds.
+        assert_eq!(a.len(), b.len());
+        unsafe { l2sq_f32_imp(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn l2sq_f32_imp(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc0 = _mm256_fmadd_ps(d, d, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    pub fn l2sq_f32_bytes(a: &[f32], b: &[u8]) -> f32 {
+        assert_eq!(a.len() * 4, b.len());
+        unsafe { l2sq_f32_bytes_imp(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn l2sq_f32_bytes_imp(a: &[f32], b: &[u8]) -> f32 {
+        // x86 is little-endian, so the raw bytes ARE the f32 payload;
+        // `loadu` has no alignment requirement.
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i * 4) as *const f32),
+            );
+            let d1 = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add((i + 8) * 4) as *const f32),
+            );
+            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i * 4) as *const f32),
+            );
+            acc0 = _mm256_fmadd_ps(d, d, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let y = (pb.add(i * 4) as *const f32).read_unaligned();
+            let d = *a.get_unchecked(i) - y;
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    pub fn l2sq_f32_u8(a: &[f32], b: &[u8]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        unsafe { l2sq_f32_u8_imp(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn l2sq_f32_u8_imp(a: &[f32], b: &[u8]) -> f32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let bytes = _mm_loadu_si128(pb.add(i) as *const __m128i);
+            let lo = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+            let hi = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(bytes)));
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), lo);
+            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), hi);
+            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let bytes = _mm_loadl_epi64(pb.add(i) as *const __m128i);
+            let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), v);
+            acc0 = _mm256_fmadd_ps(d, d, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    pub fn l2sq_f32_i8(a: &[f32], b: &[i8]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        unsafe { l2sq_f32_i8_imp(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn l2sq_f32_i8_imp(a: &[f32], b: &[i8]) -> f32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let bytes = _mm_loadu_si128(pb.add(i) as *const __m128i);
+            let lo = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+            let hi = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(bytes)));
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), lo);
+            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), hi);
+            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let bytes = _mm_loadl_epi64(pb.add(i) as *const __m128i);
+            let v = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), v);
+            acc0 = _mm256_fmadd_ps(d, d, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    pub fn norm_sq_f32(a: &[f32]) -> f32 {
+        unsafe { norm_sq_f32_imp(a) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn norm_sq_f32_imp(a: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(pa.add(i));
+            acc = _mm256_fmadd_ps(v, v, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let x = *a.get_unchecked(i);
+            s += x * x;
+            i += 1;
+        }
+        s
+    }
+
+    pub fn adc_batch(table: &[f32], m: usize, k: usize, codes: &[u8], n: usize, out: &mut [f32]) {
+        // Hard asserts: the unsafe body gathers/stores unchecked.
+        assert!(codes.len() >= n * m);
+        assert!(out.len() >= n);
+        assert_eq!(table.len(), m * k);
+        if m == 0 || m > ADC_MAX_M || k == 0 {
+            return super::scalar_adc_batch(table, m, k, codes, n, out);
+        }
+        unsafe { adc_batch_imp(table, m, k, codes, n, out) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn adc_batch_imp(
+        table: &[f32],
+        m: usize,
+        k: usize,
+        codes: &[u8],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        // 8 codes per iteration: transpose their bytes to subspace-major so
+        // each subspace contributes one 8-wide gather into its table row.
+        let mut tmp = [0u8; 8 * ADC_MAX_M];
+        // Valid code values are < k (PQ encoding), but codes come from
+        // on-disk pages/memcodes — clamp so a corrupt byte yields a wrong
+        // distance instead of an out-of-bounds gather (the scalar path
+        // bounds-checks; this is the SIMD equivalent of that guarantee).
+        let max_idx = _mm256_set1_epi32((k - 1) as i32);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            for r in 0..8 {
+                let row = codes.as_ptr().add((i + r) * m);
+                for s in 0..m {
+                    *tmp.get_unchecked_mut(s * 8 + r) = *row.add(s);
+                }
+            }
+            let mut acc = _mm256_setzero_ps();
+            let mut base = table.as_ptr();
+            for s in 0..m {
+                let idx =
+                    _mm256_cvtepu8_epi32(_mm_loadl_epi64(tmp.as_ptr().add(s * 8) as *const __m128i));
+                let idx = _mm256_min_epi32(idx, max_idx);
+                acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(base, idx));
+                base = base.add(k);
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), acc);
+            i += 8;
+        }
+        if i < n {
+            super::scalar_adc_batch(table, m, k, &codes[i * m..], n - i, &mut out[i..]);
+        }
+    }
+}
+
+// ---- NEON ---------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    isa: "neon",
+    l2sq_f32: neon::l2sq_f32,
+    l2sq_f32_bytes: neon::l2sq_f32_bytes,
+    l2sq_f32_u8: neon::l2sq_f32_u8,
+    l2sq_f32_i8: neon::l2sq_f32_i8,
+    norm_sq_f32: neon::norm_sq_f32,
+    // No NEON gather; the unrolled scalar table walk is already load-bound.
+    adc_batch: scalar_adc_batch,
+};
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON kernels. NEON is part of the aarch64 baseline target features,
+    //! so the intrinsics are unconditionally available.
+    use std::arch::aarch64::*;
+
+    pub fn l2sq_f32(a: &[f32], b: &[f32]) -> f32 {
+        // Hard assert: the unsafe body does unchecked loads, so a length
+        // mismatch must panic (not UB) even in release builds.
+        assert_eq!(a.len(), b.len());
+        unsafe {
+            let n = a.len();
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+                acc0 = vfmaq_f32(acc0, d0, d0);
+                acc1 = vfmaq_f32(acc1, d1, d1);
+                i += 8;
+            }
+            if i + 4 <= n {
+                let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                acc0 = vfmaq_f32(acc0, d, d);
+                i += 4;
+            }
+            let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+                s += d * d;
+                i += 1;
+            }
+            s
+        }
+    }
+
+    pub fn l2sq_f32_bytes(a: &[f32], b: &[u8]) -> f32 {
+        assert_eq!(a.len() * 4, b.len());
+        unsafe {
+            // Byte loads have alignment 1; reinterpret to f32 lanes (LE).
+            let n = a.len();
+            let pa = a.as_ptr();
+            let pb = b.as_ptr();
+            let mut acc = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let v = vreinterpretq_f32_u8(vld1q_u8(pb.add(i * 4)));
+                let d = vsubq_f32(vld1q_f32(pa.add(i)), v);
+                acc = vfmaq_f32(acc, d, d);
+                i += 4;
+            }
+            let mut s = vaddvq_f32(acc);
+            while i < n {
+                let y = (pb.add(i * 4) as *const f32).read_unaligned();
+                let d = *a.get_unchecked(i) - y;
+                s += d * d;
+                i += 1;
+            }
+            s
+        }
+    }
+
+    pub fn l2sq_f32_u8(a: &[f32], b: &[u8]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        unsafe {
+            let n = a.len();
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let wide = vmovl_u8(vld1_u8(pb.add(i)));
+                let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+                let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+                let d0 = vsubq_f32(vld1q_f32(pa.add(i)), lo);
+                let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), hi);
+                acc0 = vfmaq_f32(acc0, d0, d0);
+                acc1 = vfmaq_f32(acc1, d1, d1);
+                i += 8;
+            }
+            let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
+                s += d * d;
+                i += 1;
+            }
+            s
+        }
+    }
+
+    pub fn l2sq_f32_i8(a: &[f32], b: &[i8]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        unsafe {
+            let n = a.len();
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let wide = vmovl_s8(vld1_s8(pb.add(i)));
+                let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(wide)));
+                let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(wide)));
+                let d0 = vsubq_f32(vld1q_f32(pa.add(i)), lo);
+                let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), hi);
+                acc0 = vfmaq_f32(acc0, d0, d0);
+                acc1 = vfmaq_f32(acc1, d1, d1);
+                i += 8;
+            }
+            let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
+                s += d * d;
+                i += 1;
+            }
+            s
+        }
+    }
+
+    pub fn norm_sq_f32(a: &[f32]) -> f32 {
+        unsafe {
+            let n = a.len();
+            let pa = a.as_ptr();
+            let mut acc = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let v = vld1q_f32(pa.add(i));
+                acc = vfmaq_f32(acc, v, v);
+                i += 4;
+            }
+            let mut s = vaddvq_f32(acc);
+            while i < n {
+                let x = *a.get_unchecked(i);
+                s += x * x;
+                i += 1;
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn dispatch_is_stable_and_named() {
+        let k1 = kernels();
+        let k2 = kernels();
+        assert!(std::ptr::eq(k1, k2), "dispatch must select once");
+        assert!(["avx2", "neon", "scalar"].contains(&k1.isa));
+        assert_eq!(scalar_kernels().isa, "scalar");
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_spot() {
+        // The exhaustive property sweep lives in tests/simd_kernels.rs;
+        // this is a fast in-crate smoke check.
+        let mut rng = XorShift::new(42);
+        let n = 128;
+        let a: Vec<f32> = (0..n).map(|_| rng.next_gaussian() * 10.0).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_gaussian() * 10.0).collect();
+        let got = (kernels().l2sq_f32)(&a, &b);
+        let want = (scalar_kernels().l2sq_f32)(&a, &b);
+        assert!((got - want).abs() <= 1e-4 * want.max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn adc_batch_matches_scalar() {
+        let mut rng = XorShift::new(7);
+        let (m, k, n) = (16usize, 256usize, 37usize);
+        let table: Vec<f32> = (0..m * k).map(|_| rng.next_f32() * 100.0).collect();
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.next_below(k) as u8).collect();
+        let mut got = vec![0f32; n];
+        let mut want = vec![0f32; n];
+        (kernels().adc_batch)(&table, m, k, &codes, n, &mut got);
+        scalar_adc_batch(&table, m, k, &codes, n, &mut want);
+        for i in 0..n {
+            assert!((got[i] - want[i]).abs() <= 1e-4 * want[i].max(1.0), "row {i}");
+        }
+    }
+}

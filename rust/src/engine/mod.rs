@@ -128,7 +128,6 @@ impl PageAnnIndex {
         stats: &mut QueryStats,
     ) -> Result<Vec<(f32, u32)>> {
         let t0 = std::time::Instant::now();
-        let lut = self.pq.build_lut(query);
         let entries = self.entries(query);
         let ctx = SearchContext {
             meta: &self.meta,
@@ -136,8 +135,9 @@ impl PageAnnIndex {
             cache: &self.cache,
             memcodes: &self.memcodes,
             scanner: self.scanner.as_ref(),
+            pq: &self.pq,
         };
-        let out = search_pages(&ctx, query, &lut, &entries, params, scratch, stats)?;
+        let out = search_pages(&ctx, query, &entries, params, scratch, stats)?;
         stats.total_time += t0.elapsed();
         Ok(out)
     }
@@ -155,7 +155,7 @@ impl PageAnnIndex {
             let q = queries.get_f32(qi);
             let mut stats = QueryStats::default();
             self.search(&q, &params, &mut scratch, &mut stats)?;
-            for p in scratch.visited_pages_for_warmup() {
+            for &p in scratch.visited_pages_for_warmup() {
                 *freq.entry(p).or_default() += 1;
             }
         }

@@ -27,18 +27,22 @@ pub fn run_workload(
     nthreads: usize,
 ) -> WorkloadReport {
     let n = queries.len();
+    let nthreads = nthreads.max(1);
     let next = AtomicUsize::new(0);
     let agg: Mutex<(QueryStats, LatencyHistogram)> =
         Mutex::new((QueryStats::default(), LatencyHistogram::new()));
-    let results: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+    // Per-thread result buffers, merged once at the end — no per-query
+    // mutex traffic on the hot loop.
+    let done: Mutex<Vec<Vec<(usize, Vec<u32>)>>> = Mutex::new(Vec::with_capacity(nthreads));
 
     let cpu = CpuMeter::start();
     let wall_start = Instant::now();
     std::thread::scope(|s| {
-        for _ in 0..nthreads.max(1) {
+        for _ in 0..nthreads {
             s.spawn(|| {
                 let mut local = QueryStats::default();
                 let mut hist = LatencyHistogram::new();
+                let mut mine: Vec<(usize, Vec<u32>)> = Vec::with_capacity(n / nthreads + 1);
                 loop {
                     let qi = next.fetch_add(1, Ordering::Relaxed);
                     if qi >= n {
@@ -52,11 +56,13 @@ pub fn run_workload(
                     stats.total_time = dt;
                     hist.record(dt);
                     local.merge(&stats);
-                    *results[qi].lock().unwrap() = ids;
+                    mine.push((qi, ids));
                 }
                 let mut g = agg.lock().unwrap();
                 g.0.merge(&local);
                 g.1.merge(&hist);
+                drop(g);
+                done.lock().unwrap().push(mine);
             });
         }
     });
@@ -64,7 +70,12 @@ pub fn run_workload(
     let cpu_pct = cpu.utilization_pct();
 
     let (totals, latency) = agg.into_inner().unwrap();
-    let results: Vec<Vec<u32>> = results.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    let mut results: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for batch in done.into_inner().unwrap() {
+        for (qi, ids) in batch {
+            results[qi] = ids;
+        }
+    }
     let recall = match gt {
         Some(gt) => recall_at_k(&results, gt, k),
         None => f64::NAN,

@@ -64,15 +64,32 @@ impl PqCodebook {
 
     /// Build the per-query ADC lookup table (m × k squared distances).
     pub fn build_lut(&self, query: &[f32]) -> AdcLut {
+        let mut lut = AdcLut::empty();
+        self.build_lut_into(query, &mut lut);
+        lut
+    }
+
+    /// Build the ADC table into a caller-owned [`AdcLut`], reusing its
+    /// allocation. This is the hot-path entry: the search scratch owns one
+    /// `AdcLut` per thread, so steady-state queries allocate nothing here.
+    pub fn build_lut_into(&self, query: &[f32], lut: &mut AdcLut) {
         assert_eq!(query.len(), self.dim);
-        let mut table = vec![0f32; self.m * self.k];
+        lut.m = self.m;
+        lut.k = self.k;
+        // The fill loop writes every slot, so only the length matters —
+        // avoid the zeroing memset on the steady-state (same-size) path.
+        if lut.table.len() != self.m * self.k {
+            lut.table.resize(self.m * self.k, 0.0);
+        }
+        let l2 = crate::distance::simd::kernels().l2sq_f32;
         for sub in 0..self.m {
             let qsub = &query[sub * self.dsub..(sub + 1) * self.dsub];
-            for c in 0..self.k {
-                table[sub * self.k + c] = l2sq_f32(qsub, self.centroid(sub, c));
+            let row = &mut lut.table[sub * self.k..(sub + 1) * self.k];
+            let centroids = &self.centroids[sub * self.k * self.dsub..(sub + 1) * self.k * self.dsub];
+            for (c, slot) in row.iter_mut().enumerate() {
+                *slot = l2(qsub, &centroids[c * self.dsub..(c + 1) * self.dsub]);
             }
         }
-        AdcLut { m: self.m, k: self.k, table }
     }
 
     /// Decode a code back to the (approximate) vector.
@@ -105,23 +122,76 @@ impl PqCodebook {
 }
 
 /// Per-query lookup table for asymmetric distance computation.
+///
+/// Layout: a flat `m × k` f32 table, subspace-major (row stride `k`), which
+/// is exactly the shape the SIMD `adc_batch` kernel gathers from — one
+/// contiguous table row per subspace. Fields are private so the layout
+/// contract between this type and `distance::simd` stays in one file.
 pub struct AdcLut {
-    pub m: usize,
-    pub k: usize,
-    /// m × k squared subspace distances.
-    pub table: Vec<f32>,
+    m: usize,
+    k: usize,
+    /// m × k squared subspace distances, row stride `k`.
+    table: Vec<f32>,
+}
+
+impl Default for AdcLut {
+    fn default() -> Self {
+        Self::empty()
+    }
 }
 
 impl AdcLut {
-    /// Approximate squared distance to the vector with `code`.
+    /// An empty table; fill with [`PqCodebook::build_lut_into`].
+    pub fn empty() -> Self {
+        Self { m: 0, k: 0, table: Vec::new() }
+    }
+
+    /// Subspace count of the codes this table scores.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Centroids per subspace.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The raw `m × k` table (benches, artifact interop).
+    pub fn table(&self) -> &[f32] {
+        &self.table
+    }
+
+    /// Approximate squared distance to the vector with `code` (delegates to
+    /// the scalar ADC kernel — one source of truth for the table walk).
     #[inline]
     pub fn distance(&self, code: &[u8]) -> f32 {
         debug_assert_eq!(code.len(), self.m);
-        let mut s = 0f32;
-        for (sub, &c) in code.iter().enumerate() {
-            s += self.table[sub * self.k + c as usize];
+        let mut out = [0f32; 1];
+        crate::distance::simd::scalar_adc_batch(&self.table, self.m, self.k, code, 1, &mut out);
+        out[0]
+    }
+
+    /// Batched ADC: score `n` codes packed row-major (`n × m`) into
+    /// `out[..n]` with the dispatched SIMD kernel. Equivalent to `n` calls
+    /// to [`Self::distance`] (asserted by the property suite).
+    #[inline]
+    pub fn distance_batch(&self, codes: &[u8], n: usize, out: &mut [f32]) {
+        debug_assert!(codes.len() >= n * self.m);
+        debug_assert!(out.len() >= n);
+        (crate::distance::simd::kernels().adc_batch)(&self.table, self.m, self.k, codes, n, out);
+    }
+
+    /// [`Self::distance_batch`] into a scratch-owned `Vec`, growing it as
+    /// needed. The shared entry point for the gather-then-batch topology
+    /// phases (PageANN search and the beam-search baselines).
+    #[inline]
+    pub fn score_into(&self, codes: &[u8], n: usize, out: &mut Vec<f32>) {
+        if out.len() < n {
+            out.resize(n, 0.0);
         }
-        s
+        self.distance_batch(codes, n, out);
     }
 }
 

@@ -8,6 +8,15 @@
 //!
 //! Executables are wrapped in a small pool so concurrent query threads can
 //! each hold one without serializing on a single lock.
+//!
+//! # The `xla` feature
+//!
+//! The `xla` (xla_extension) crate is not vendored, so the default build
+//! compiles a **stub** with the same API surface: constructors return a
+//! descriptive error and nothing else is reachable (a pool can only exist
+//! if construction succeeded). Artifact-manifest parsing ([`ArtifactSet`])
+//! is pure rust and always available. Enable `--features xla` *and* add the
+//! dependency to get real PJRT execution.
 
 mod artifact;
 mod pool;
@@ -18,11 +27,23 @@ pub use pool::ExecPool;
 use crate::Result;
 use std::path::Path;
 
+/// A compiled-executable handle. With the `xla` feature this is the real
+/// `PjRtLoadedExecutable` (re-exported via [`pool::SendExec`]'s `Deref`);
+/// without it, an unconstructible stub.
+#[cfg(feature = "xla")]
+pub type LoadedExec = xla::PjRtLoadedExecutable;
+#[cfg(not(feature = "xla"))]
+pub type LoadedExec = pool::SendExec;
+
 /// A PJRT CPU client; executables compiled from `artifacts/` hang off it.
 pub struct XlaRuntime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
+    #[cfg(not(feature = "xla"))]
+    _private: (),
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -41,7 +62,7 @@ impl XlaRuntime {
     }
 
     /// Load one HLO-text artifact and compile it.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedExec> {
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
         let comp = xla::XlaComputation::from_proto(&proto);
         Ok(self.client.compile(&comp)?)
@@ -52,14 +73,35 @@ impl XlaRuntime {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Stub: always fails with an actionable message.
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT support not compiled in: rebuild with `--features xla` \
+             (requires the xla_extension crate as a dependency)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn load_hlo_text(&self, _path: &Path) -> Result<LoadedExec> {
+        anyhow::bail!("PJRT support not compiled in (enable the `xla` feature)")
+    }
+}
+
 /// Run a compiled executable on `f32` literals shaped per `shapes`, returning
 /// the flattened `f32` contents of the (single-tuple) output.
 ///
 /// This is the narrow waist the search hot path uses.
-pub fn execute_f32(
-    exe: &xla::PjRtLoadedExecutable,
-    inputs: &[(&[f32], &[i64])],
-) -> Result<Vec<f32>> {
+#[cfg(feature = "xla")]
+pub fn execute_f32(exe: &LoadedExec, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
     let mut lits = Vec::with_capacity(inputs.len());
     for (data, shape) in inputs {
         let lit = xla::Literal::vec1(data).reshape(shape)?;
@@ -72,8 +114,9 @@ pub fn execute_f32(
 }
 
 /// Like [`execute_f32`] but for artifacts returning `n_outputs` arrays.
+#[cfg(feature = "xla")]
 pub fn execute_f32_multi(
-    exe: &xla::PjRtLoadedExecutable,
+    exe: &LoadedExec,
     inputs: &[(&[f32], &[i64])],
     n_outputs: usize,
 ) -> Result<Vec<Vec<f32>>> {
@@ -90,4 +133,20 @@ pub fn execute_f32_multi(
         parts.len()
     );
     parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+}
+
+/// Stub: unreachable in practice (no executable can be constructed).
+#[cfg(not(feature = "xla"))]
+pub fn execute_f32(_exe: &LoadedExec, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+    anyhow::bail!("PJRT support not compiled in (enable the `xla` feature)")
+}
+
+/// Stub: unreachable in practice (no executable can be constructed).
+#[cfg(not(feature = "xla"))]
+pub fn execute_f32_multi(
+    _exe: &LoadedExec,
+    _inputs: &[(&[f32], &[i64])],
+    _n_outputs: usize,
+) -> Result<Vec<Vec<f32>>> {
+    anyhow::bail!("PJRT support not compiled in (enable the `xla` feature)")
 }

@@ -6,23 +6,35 @@
 //! compilation and `Execute` is documented thread-compatible; we additionally
 //! serialize every call behind a `Mutex`, so moving the handle across
 //! threads is sound. `SendExec` encodes that argument.
+//!
+//! Without the `xla` feature, `SendExec` is an empty stub and
+//! [`ExecPool::new`] always errors, so no pool (and hence no executable)
+//! can ever exist in a stub build.
 
 use crate::Result;
+#[cfg(feature = "xla")]
 use std::ops::Deref;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 /// Wrapper asserting cross-thread use of a compiled executable is safe under
 /// the pool's external locking discipline (see module docs).
+#[cfg(feature = "xla")]
 pub struct SendExec(xla::PjRtLoadedExecutable);
+#[cfg(feature = "xla")]
 unsafe impl Send for SendExec {}
 
+#[cfg(feature = "xla")]
 impl Deref for SendExec {
     type Target = xla::PjRtLoadedExecutable;
     fn deref(&self) -> &Self::Target {
         &self.0
     }
 }
+
+/// Stub executable handle (never constructed — `ExecPool::new` errors).
+#[cfg(not(feature = "xla"))]
+pub struct SendExec(());
 
 pub struct ExecPool {
     slots: Vec<Mutex<SendExec>>,
@@ -31,6 +43,7 @@ pub struct ExecPool {
 
 impl ExecPool {
     /// Compile `n` copies of the artifact at `path` on `rt`.
+    #[cfg(feature = "xla")]
     pub fn new(rt: &super::XlaRuntime, path: &std::path::Path, n: usize) -> Result<Self> {
         anyhow::ensure!(n > 0, "pool size must be > 0");
         let mut slots = Vec::with_capacity(n);
@@ -38,6 +51,12 @@ impl ExecPool {
             slots.push(Mutex::new(SendExec(rt.load_hlo_text(path)?)));
         }
         Ok(Self { slots, next: AtomicUsize::new(0) })
+    }
+
+    /// Stub: compilation is impossible without the `xla` feature.
+    #[cfg(not(feature = "xla"))]
+    pub fn new(_rt: &super::XlaRuntime, _path: &std::path::Path, _n: usize) -> Result<Self> {
+        anyhow::bail!("PJRT support not compiled in (enable the `xla` feature)")
     }
 
     pub fn len(&self) -> usize {

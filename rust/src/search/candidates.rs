@@ -84,9 +84,160 @@ impl CandidateSet {
     }
 }
 
+/// Bounded top-L result reservoir: keeps the `cap` smallest `(dist, id)`
+/// pairs seen, as a binary max-heap ordered by `(dist, id)`.
+///
+/// Replaces the old push-everything-then-sort-then-dedup results vector:
+/// a search scanning P pages × V vectors/page now does O(P·V·log L) heap
+/// work on a cache-resident L-sized buffer instead of growing an unbounded
+/// vector and sorting it at the end. Because the ordering includes the id
+/// tiebreak, the retained set — and therefore the final top-k — is
+/// identical to what the full sort produced.
+pub struct TopReservoir {
+    cap: usize,
+    /// Max-heap by (dist, id): `heap[0]` is the current worst survivor.
+    heap: Vec<(f32, u32)>,
+}
+
+#[inline]
+fn res_gt(a: (f32, u32), b: (f32, u32)) -> bool {
+    // Total order (distances are finite; total_cmp for safety), id tiebreak.
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)) == std::cmp::Ordering::Greater
+}
+
+impl Default for TopReservoir {
+    /// Placeholder capacity; every search calls [`TopReservoir::reset`]
+    /// with the real bound before pushing.
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+impl TopReservoir {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), heap: Vec::with_capacity(cap.max(1)) }
+    }
+
+    /// Clear and re-bound the reservoir (per-query reset; keeps the
+    /// allocation).
+    pub fn reset(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        self.heap.clear();
+        self.heap.reserve(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer one result. O(1) when it loses to the current worst (the
+    /// common case once the reservoir is warm).
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u32) {
+        if self.heap.len() < self.cap {
+            self.heap.push((dist, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if res_gt(self.heap[0], (dist, id)) {
+            self.heap[0] = (dist, id);
+            self.sift_down(0);
+        }
+    }
+
+    /// Contents sorted ascending by (dist, id), deduplicated by id.
+    pub fn sorted(&self) -> Vec<(f32, u32)> {
+        let mut v = self.heap.clone();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        v.dedup_by_key(|r| r.1);
+        v
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if res_gt(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < n && res_gt(self.heap[l], self.heap[largest]) {
+                largest = l;
+            }
+            if r < n && res_gt(self.heap[r], self.heap[largest]) {
+                largest = r;
+            }
+            if largest == i {
+                return;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reservoir_keeps_smallest() {
+        let mut r = TopReservoir::new(3);
+        for (d, id) in [(5.0, 1), (1.0, 2), (3.0, 3), (0.5, 4), (9.0, 5)] {
+            r.push(d, id);
+        }
+        assert_eq!(r.sorted(), vec![(0.5, 4), (1.0, 2), (3.0, 3)]);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn reservoir_matches_full_sort() {
+        let mut rng = crate::util::XorShift::new(31);
+        for cap in [1usize, 4, 17, 64] {
+            let items: Vec<(f32, u32)> =
+                (0..300u32).map(|i| (rng.next_f32() * 10.0, i)).collect();
+            let mut r = TopReservoir::new(cap);
+            for &(d, id) in &items {
+                r.push(d, id);
+            }
+            let mut want = items.clone();
+            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            want.truncate(cap);
+            assert_eq!(r.sorted(), want, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn reservoir_reset_rebounds() {
+        let mut r = TopReservoir::new(2);
+        r.push(1.0, 1);
+        r.push(2.0, 2);
+        r.reset(1);
+        assert!(r.is_empty());
+        r.push(4.0, 9);
+        r.push(3.0, 8);
+        assert_eq!(r.sorted(), vec![(3.0, 8)]);
+    }
+
+    #[test]
+    fn reservoir_id_tiebreak_matches_sort() {
+        let mut r = TopReservoir::new(2);
+        for id in [7u32, 3, 5, 1] {
+            r.push(2.0, id);
+        }
+        assert_eq!(r.sorted(), vec![(2.0, 1), (2.0, 3)]);
+    }
 
     #[test]
     fn pops_in_distance_order() {

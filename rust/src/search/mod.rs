@@ -6,10 +6,20 @@
 //! (result set), and pushes every neighbor entry with an ADC-estimated
 //! distance (candidate set). One graph hop == one page read, which is the
 //! paper's central I/O property.
+//!
+//! CPU-side structure (the §5 pipeline only overlaps work if these finish
+//! inside an I/O wait):
+//! * exact scans go through the dispatched SIMD scanner
+//!   ([`crate::distance::NativeBatch`]);
+//! * neighbor ADC estimation is **batched**: codes are gathered into a
+//!   contiguous scratch block per hop and scored with one
+//!   [`AdcLut::distance_batch`] call instead of per-neighbor table walks;
+//! * the per-query LUT is built into a scratch-owned buffer and the result
+//!   set is a bounded top-L reservoir — zero steady-state allocations.
 
 mod candidates;
 
-pub use candidates::CandidateSet;
+pub use candidates::{CandidateSet, TopReservoir};
 
 use crate::cache::{MemCodes, PageCache};
 use crate::dataset::Dtype;
@@ -17,7 +27,7 @@ use crate::distance::BatchScanner;
 use crate::io::PageStore;
 use crate::layout::{IndexMeta, PageRef};
 use crate::metrics::QueryStats;
-use crate::pq::AdcLut;
+use crate::pq::{AdcLut, PqCodebook};
 use crate::Result;
 use std::time::Instant;
 
@@ -51,12 +61,20 @@ pub struct SearchScratch {
     visited_vec: Vec<u32>,
     visited_page: Vec<u32>,
     epoch: u32,
-    results: Vec<(f32, u32)>,
+    /// Bounded top-L result reservoir (exact distances).
+    results: TopReservoir,
     page_bufs: Vec<Vec<u8>>,
     page_ids: Vec<u32>,
     /// Every page touched by the last search (warm-up frequency input).
     pages_touched: Vec<u32>,
     dist_buf: Vec<f32>,
+    /// Per-query ADC table, rebuilt in place (no per-query allocation).
+    lut: AdcLut,
+    /// Gathered neighbor ids / codes / distances for the batched topology
+    /// phase; cleared per hop, capacity retained.
+    nbr_ids: Vec<u32>,
+    nbr_codes: Vec<u8>,
+    nbr_dists: Vec<f32>,
 }
 
 impl SearchScratch {
@@ -66,25 +84,29 @@ impl SearchScratch {
             visited_vec: Vec::new(),
             visited_page: Vec::new(),
             epoch: 0,
-            results: Vec::new(),
+            results: TopReservoir::new(64),
             page_bufs: Vec::new(),
             page_ids: Vec::new(),
             pages_touched: Vec::new(),
             dist_buf: Vec::new(),
+            lut: AdcLut::empty(),
+            nbr_ids: Vec::new(),
+            nbr_codes: Vec::new(),
+            nbr_dists: Vec::new(),
         }
     }
 
-    /// Results of the last search (all scanned vectors, sorted at the end).
-    pub fn results_for_warmup(&self) -> &[(f32, u32)] {
-        &self.results
+    /// Results of the last search (top-L scanned vectors, sorted).
+    pub fn results_for_warmup(&self) -> Vec<(f32, u32)> {
+        self.results.sorted()
     }
 
-    /// Pages touched by the last search.
-    pub fn visited_pages_for_warmup(&self) -> Vec<u32> {
-        self.pages_touched.clone()
+    /// Pages touched by the last search (borrowed; no per-call clone).
+    pub fn visited_pages_for_warmup(&self) -> &[u32] {
+        &self.pages_touched
     }
 
-    fn reset(&mut self, n_slots: usize, n_pages: usize, l: usize) {
+    fn reset(&mut self, n_slots: usize, n_pages: usize, l: usize, k: usize) {
         if self.visited_vec.len() < n_slots {
             self.visited_vec.resize(n_slots, 0);
         }
@@ -99,7 +121,7 @@ impl SearchScratch {
             self.epoch = 1;
         }
         self.candidates.reset(l);
-        self.results.clear();
+        self.results.reset(l.max(k));
         self.pages_touched.clear();
     }
 }
@@ -117,15 +139,16 @@ pub struct SearchContext<'a> {
     pub cache: &'a PageCache,
     pub memcodes: &'a MemCodes,
     pub scanner: &'a dyn BatchScanner,
+    pub pq: &'a PqCodebook,
 }
 
 /// Run Algorithm 2. `entries` are entry-point vector ids (new-id space)
-/// from the router (or the medoid fallback); `lut` is the query's ADC
-/// table. Returns the top-k `(distance, original_id)` pairs.
+/// from the router (or the medoid fallback). The per-query ADC table is
+/// built into `scratch` from `ctx.pq`. Returns the top-k
+/// `(distance, original_id)` pairs.
 pub fn search_pages(
     ctx: &SearchContext<'_>,
     query: &[f32],
-    lut: &AdcLut,
     entries: &[u32],
     params: &SearchParams,
     scratch: &mut SearchScratch,
@@ -135,8 +158,14 @@ pub fn search_pages(
     let capacity = meta.capacity as u32;
     let dtype: Dtype = meta.dtype;
     let stride = meta.vec_stride();
-    scratch.reset(meta.n_slots(), meta.n_pages, params.l);
+    scratch.reset(meta.n_slots(), meta.n_pages, params.l, params.k);
     let epoch = scratch.epoch;
+
+    // Per-query ADC table into the scratch-owned buffer.
+    let t_lut = Instant::now();
+    ctx.pq.build_lut_into(query, &mut scratch.lut);
+    stats.compute_time += t_lut.elapsed();
+    let pq_m = scratch.lut.m();
 
     // Seed candidates (Alg. 2 lines 4-7): estimated distance from resident
     // codes where available; entries without codes get pushed with d=0 so
@@ -146,7 +175,7 @@ pub fn search_pages(
             continue;
         }
         scratch.visited_vec[e as usize] = epoch; // mark seeded (not yet expanded)
-        let d = ctx.memcodes.get(e).map(|c| lut.distance(c)).unwrap_or(0.0);
+        let d = ctx.memcodes.get(e).map(|c| scratch.lut.distance(c)).unwrap_or(0.0);
         scratch.candidates.push(d, e);
         stats.approx_dists += 1;
     }
@@ -159,7 +188,7 @@ pub fn search_pages(
     }
     let mut deferred: Vec<Deferred<'_>> = Vec::new();
 
-    // Drains `deferred`: exact distances into the result set.
+    // Drains `deferred`: exact distances into the result reservoir.
     macro_rules! scan_deferred {
         () => {{
             let t_cpu = Instant::now();
@@ -177,7 +206,7 @@ pub fn search_pages(
                     .scan(query, page.vectors_block(), dtype, nv, &mut scratch.dist_buf);
                 stats.exact_dists += nv as u64;
                 for i in 0..nv {
-                    scratch.results.push((scratch.dist_buf[i], page.orig_id(i)));
+                    scratch.results.push(scratch.dist_buf[i], page.orig_id(i));
                 }
                 if let Deferred::Owned(buf) = item {
                     scratch.page_bufs.push(buf); // back to the pool
@@ -247,8 +276,12 @@ pub fn search_pages(
 
         // Topology phase (lines 24-26): neighbor entries → candidate set
         // with ADC estimates. Never deferred — the next hop's page
-        // selection depends on it.
+        // selection depends on it. Runs in two passes: gather all unvisited
+        // neighbors' codes into one contiguous scratch block, score them
+        // with a single batched ADC call, then push.
         let t_cpu = Instant::now();
+        scratch.nbr_ids.clear();
+        scratch.nbr_codes.clear();
         for (is_disk, bytes) in disk_bufs
             .iter()
             .map(|b| (true, b.as_slice()))
@@ -269,13 +302,28 @@ pub fn search_pages(
                     // corrupt index rather than silently skipping.
                     anyhow::bail!("no compressed vector for neighbor {nb}");
                 };
-                let d = lut.distance(code);
-                stats.approx_dists += 1;
-                // Only mark visited when accepted into the pool; rejected
-                // candidates may re-enter later via a closer page.
-                if scratch.candidates.push(d, nb) {
-                    scratch.visited_vec[nb as usize] = epoch;
-                }
+                debug_assert_eq!(code.len(), pq_m);
+                scratch.nbr_ids.push(nb);
+                scratch.nbr_codes.extend_from_slice(code);
+            }
+        }
+        let n_gathered = scratch.nbr_ids.len();
+        scratch
+            .lut
+            .score_into(&scratch.nbr_codes, n_gathered, &mut scratch.nbr_dists);
+        stats.approx_dists += n_gathered as u64;
+        for i in 0..n_gathered {
+            let nb = scratch.nbr_ids[i];
+            // A neighbor can be gathered twice in one round (shared by two
+            // pages); the epoch re-check keeps the second copy from
+            // double-entering the pool.
+            if scratch.visited_vec[nb as usize] == epoch {
+                continue;
+            }
+            // Only mark visited when accepted into the pool; rejected
+            // candidates may re-enter later via a closer page.
+            if scratch.candidates.push(scratch.nbr_dists[i], nb) {
+                scratch.visited_vec[nb as usize] = epoch;
             }
         }
         stats.compute_time += t_cpu.elapsed();
@@ -295,13 +343,11 @@ pub fn search_pages(
     // Drain the tail of the pipeline.
     scan_deferred!();
 
-    // Final ranking (lines 29-30).
+    // Final ranking (lines 29-30): the reservoir already holds the top-L
+    // by (dist, id); sort it and cut to k.
     let t_cpu = Instant::now();
-    scratch
-        .results
-        .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-    scratch.results.dedup_by_key(|r| r.1);
-    let out: Vec<(f32, u32)> = scratch.results.iter().take(params.k).copied().collect();
+    let mut out = scratch.results.sorted();
+    out.truncate(params.k);
     stats.compute_time += t_cpu.elapsed();
     Ok(out)
 }

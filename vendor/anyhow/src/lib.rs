@@ -1,0 +1,156 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io access), so the workspace
+//! carries the small subset of anyhow's API that the codebase uses:
+//!
+//! * [`Error`] — a boxed dynamic error with `Display`/`Debug` and a blanket
+//!   `From<E: std::error::Error>` conversion (so `?` works on io/parse/etc.
+//!   errors inside functions returning [`Result`]).
+//! * [`Result<T>`] — `std::result::Result<T, Error>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the three macros the code calls.
+//!
+//! Deliberately omitted (unused here): `Context`, downcasting, backtraces.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed dynamic error. Like the real `anyhow::Error`, this type does
+/// **not** implement `std::error::Error` itself — that is what makes the
+/// blanket `From<E: StdError>` impl coherent.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Self {
+        Self { inner: Box::new(e) }
+    }
+
+    /// Construct from a plain message (what `anyhow!("...")` expands to).
+    pub fn msg<M: fmt::Display + fmt::Debug + Send + Sync + 'static>(msg: M) -> Self {
+        Self { inner: Box::new(MessageError(msg)) }
+    }
+
+    /// The source chain's root-most error, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.inner.source()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut src = self.inner.source();
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_err().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 7);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert!(f(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(f(7).unwrap_err().to_string().contains("x != 7"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!("plain {}", 5);
+        assert_eq!(e.to_string(), "plain 5");
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        fn p(s: &str) -> Result<usize> {
+            Ok(s.parse()?)
+        }
+        assert_eq!(p("42").unwrap(), 42);
+        assert!(p("nope").is_err());
+    }
+}
