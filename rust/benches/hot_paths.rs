@@ -124,13 +124,9 @@ fn bench_pq() {
         std::hint::black_box(&dists);
     });
     let batch_ns = ns_per_op(mean, n_codes);
-    // NEON maps adc_batch to the scalar kernel (no gather); label the row
-    // by the kernel that actually ran, not the table's overall ISA.
-    let adc_isa = if kernels().adc_batch == scalar_kernels().adc_batch {
-        "scalar"
-    } else {
-        kernels().isa
-    };
+    // NEON maps adc_batch to the scalar kernel (no gather); the table
+    // carries the label of the kernel that actually ran.
+    let adc_isa = kernels().adc_isa;
     println!(
         "pq_adc_batch_m16_{adc_isa:<6}    {batch_ns:>9.1} ns/code ({:.2}x vs per-code)",
         per_code_ns / batch_ns.max(1e-9)
@@ -141,7 +137,52 @@ fn bench_pq() {
         (scalar_kernels().adc_batch)(lut.table(), lut.m(), lut.k(), &packed, n_codes, &mut dists);
         std::hint::black_box(&dists);
     });
-    println!("pq_adc_batch_m16_scalar    {:>10.1} ns/code", ns_per_op(mean, n_codes));
+    let adc8_scalar_ns = ns_per_op(mean, n_codes);
+    println!("pq_adc_batch_m16_scalar    {adc8_scalar_ns:>10.1} ns/code");
+
+    // PQ4 fast-scan: same data, k=16 codebooks, nibble-packed codes scored
+    // by the in-register shuffle kernel — the acceptance gate watches its
+    // speedup over the gather-based adc8 row above.
+    let cb4 = PqCodebook::train_with_k(&base, 16, 16, 8, 3);
+    let enc4 = PqEncoder::new(&cb4);
+    let lut4 = cb4.build_lut(&q);
+    let packed4: Vec<u8> =
+        (0..n_codes).flat_map(|i| enc4.encode_packed(&base.get_f32(i))).collect();
+    let (mean, _) = time_loop(20, 500, || {
+        lut4.distance_batch(&packed4, n_codes, &mut dists);
+        std::hint::black_box(&dists);
+    });
+    let adc4_ns = ns_per_op(mean, n_codes);
+    let adc4_isa = kernels().adc4_isa;
+    let speedup = batch_ns / adc4_ns.max(1e-9);
+    println!("pq_adc4_batch_m16_{adc4_isa:<6}   {adc4_ns:>9.1} ns/code ({speedup:.2}x vs adc8 {adc_isa})");
+
+    let (mean, _) = time_loop(20, 500, || {
+        (scalar_kernels().adc4_batch)(
+            lut4.q4_table(),
+            lut4.m(),
+            &packed4,
+            n_codes,
+            lut4.q4_scale(),
+            lut4.q4_bias(),
+            &mut dists,
+        );
+        std::hint::black_box(&dists);
+    });
+    let adc4_scalar_ns = ns_per_op(mean, n_codes);
+    println!("pq_adc4_batch_m16_scalar   {adc4_scalar_ns:>10.1} ns/code");
+
+    // Machine-readable ADC perf trajectory (ISSUE 2 docs/CI satellite):
+    // one JSON per bench run so dashboards can diff hot-path numbers
+    // across PRs without scraping stdout.
+    let json = format!(
+        "{{\n  \"bench\": \"adc_hot_path\",\n  \"isa\": \"{isa}\",\n  \"m\": 16,\n  \"pq8_k\": 256,\n  \"pq4_k\": 16,\n  \"n_codes\": {n_codes},\n  \"rows\": [\n    {{\"name\": \"adc8_batch\", \"kernel\": \"{adc_isa}\", \"ns_per_code\": {batch_ns:.2}}},\n    {{\"name\": \"adc8_batch_scalar\", \"kernel\": \"scalar\", \"ns_per_code\": {adc8_scalar_ns:.2}}},\n    {{\"name\": \"adc4_batch\", \"kernel\": \"{adc4_isa}\", \"ns_per_code\": {adc4_ns:.2}}},\n    {{\"name\": \"adc4_batch_scalar\", \"kernel\": \"scalar\", \"ns_per_code\": {adc4_scalar_ns:.2}}}\n  ],\n  \"adc4_vs_adc8_speedup\": {speedup:.3}\n}}\n",
+        isa = kernels().isa,
+    );
+    match std::fs::write("BENCH_adc.json", &json) {
+        Ok(()) => println!("# wrote BENCH_adc.json"),
+        Err(e) => println!("# BENCH_adc.json not written: {e}"),
+    }
 }
 
 fn bench_page_serde() {
@@ -152,7 +193,7 @@ fn bench_page_serde() {
     let w = PageWriter {
         page_size: 4096,
         vec_stride: stride,
-        pq_m: m,
+        code_bytes: m,
         vectors: vec_data.iter().enumerate().map(|(i, v)| (i as u32, v.as_slice())).collect(),
         neighbors: (0..24).map(|j| (j, Some(code.as_slice()))).collect(),
     };

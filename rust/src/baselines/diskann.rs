@@ -36,7 +36,8 @@ pub struct DiskAnnIndex {
     pub dim: usize,
     pub medoid: u32,
     pub pq: PqCodebook,
-    /// All PQ codes, dense (n × m) — DiskANN's resident memory.
+    /// All PQ codes, dense (n × code_bytes, storage width) — DiskANN's
+    /// resident memory.
     pub codes: Vec<u8>,
     pub dir: std::path::PathBuf,
 }
@@ -126,14 +127,16 @@ impl BeamSearcher {
     ) -> Vec<u32> {
         let idx = &self.index;
         let lut = idx.pq.build_lut(query);
-        let m = idx.pq.m;
+        // Storage stride of one code (nibble-packed when the codebook is
+        // PQ4) — the baselines are code-width-agnostic.
+        let cw = idx.pq.code_bytes();
         let mut cands = CandidateSet::new(l);
         scratch.visited.clear();
         scratch.results.reset(l.max(k));
 
         let entry = idx.medoid;
         scratch.visited.insert(entry);
-        cands.push(lut.distance(&idx.codes[entry as usize * m..(entry as usize + 1) * m]), entry);
+        cands.push(lut.distance(&idx.codes[entry as usize * cw..(entry as usize + 1) * cw]), entry);
         stats.approx_dists += 1;
 
         let mut nodes: Vec<u32> = Vec::with_capacity(self.beam);
@@ -189,7 +192,7 @@ impl BeamSearcher {
                     scratch.nbr_ids.push(nb);
                     scratch
                         .nbr_codes
-                        .extend_from_slice(&idx.codes[nb as usize * m..(nb as usize + 1) * m]);
+                        .extend_from_slice(&idx.codes[nb as usize * cw..(nb as usize + 1) * cw]);
                 }
             }
             let n_gathered = scratch.nbr_ids.len();

@@ -111,17 +111,19 @@ impl StarlingLike {
         }
         layout.write_file(&dir.join("records.bin"), &reordered, &adj_new)?;
 
-        // PQ codes in new-id space.
+        // PQ codes in new-id space (storage width — nibble-packed if the
+        // codebook ever trains as PQ4; the search below is width-agnostic).
         let pq = PqCodebook::train(base, pq_m, 12, 0x57A1);
         let enc = PqEncoder::new(&pq);
-        let mut codes = vec![0u8; n_slots * pq_m];
+        let cw = pq.code_bytes();
+        let mut codes = vec![0u8; n_slots * cw];
         for new_id in 0..n_slots {
             let orig = new_to_orig[new_id];
             if orig == u32::MAX {
                 continue;
             }
-            let code = enc.encode(&base.get_f32(orig as usize));
-            codes[new_id * pq_m..(new_id + 1) * pq_m].copy_from_slice(&code);
+            let code = enc.encode_packed(&base.get_f32(orig as usize));
+            codes[new_id * cw..(new_id + 1) * cw].copy_from_slice(&code);
         }
 
         let store = open_auto(&dir.join("records.bin"), page_size)?;
@@ -169,7 +171,8 @@ impl StarlingLike {
         scratch: &mut Scratch,
     ) -> Vec<u32> {
         let lut = self.pq.build_lut(query);
-        let m = self.pq.m;
+        // Storage stride of one code (width-agnostic, like DiskANN's).
+        let cw = self.pq.code_bytes();
         let npp = self.layout.nodes_per_page();
         let mut cands = CandidateSet::new(l);
         scratch.visited.clear();
@@ -178,7 +181,7 @@ impl StarlingLike {
 
         let entry = self.medoid_new;
         scratch.visited.insert(entry);
-        cands.push(lut.distance(&self.codes[entry as usize * m..(entry as usize + 1) * m]), entry);
+        cands.push(lut.distance(&self.codes[entry as usize * cw..(entry as usize + 1) * cw]), entry);
         stats.approx_dists += 1;
 
         let mut pages: Vec<u32> = Vec::with_capacity(self.beam);
@@ -239,7 +242,7 @@ impl StarlingLike {
                         scratch.nbr_ids.push(nb);
                         scratch
                             .nbr_codes
-                            .extend_from_slice(&self.codes[nb as usize * m..(nb as usize + 1) * m]);
+                            .extend_from_slice(&self.codes[nb as usize * cw..(nb as usize + 1) * cw]);
                     }
                 }
             }

@@ -142,7 +142,9 @@ fn config_fingerprint(kind: SchemeKind, w: &Workload, budget: usize) -> String {
     match kind {
         SchemeKind::PageAnn => {
             let m = super::schemes::default_pq_m(dim);
-            let plan = crate::memplan::plan(budget, n, dim, m);
+            // Plan against the storage width (these schemes build PQ8, so
+            // k = 256; a PQ4 scheme would pass its halved stride here).
+            let plan = crate::memplan::plan(budget, n, dim, crate::pq::storage_bytes(m, 256));
             // Bucket the cache budget to pages/64 so near-identical budgets
             // share a build.
             let cache_bucket = plan.cache_budget_bytes / (PAGE_SIZE * 64);

@@ -103,7 +103,9 @@ pub fn instantiate_scheme(
     match kind {
         SchemeKind::PageAnn => {
             let default_m = default_pq_m(dim);
-            let plan = memplan::plan(budget_bytes, n, dim, default_m);
+            // Storage width of one code: this scheme builds PQ8 (k = 256),
+            // so the stride equals m; a PQ4 scheme would halve it here.
+            let plan = memplan::plan(budget_bytes, n, dim, crate::pq::storage_bytes(default_m, 256));
             let cfg = BuildConfig {
                 page_size,
                 pq_m: default_m,

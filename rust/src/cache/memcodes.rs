@@ -1,12 +1,14 @@
 //! Resident compressed-vector table (memcodes.bin): the query-time half of
 //! the §4.3 memory-disk coordination.
 //!
-//! Two layouts behind one lookup:
+//! Two layouts behind one lookup (entry stride = the *storage* code width:
+//! `M` bytes for PQ8, `⌈M/2⌉` nibble-packed bytes for PQ4 — the header's
+//! first word, which must match `IndexMeta::code_bytes()`):
 //! * **sparse** — (sorted new-id array, packed codes), O(log n) binary
-//!   search, 4+M bytes/entry; used for OnPage/Hybrid placements where only
-//!   routing samples / hot neighbors are resident.
-//! * **dense** — flat `n_slots × M` array, O(1); used for InMemory
-//!   placement where every valid slot has a code.
+//!   search, 4+code_bytes bytes/entry; used for OnPage/Hybrid placements
+//!   where only routing samples / hot neighbors are resident.
+//! * **dense** — flat `n_slots × code_bytes` array, O(1); used for
+//!   InMemory placement where every valid slot has a code.
 
 use crate::util::ReadExt;
 use crate::Result;
@@ -14,7 +16,10 @@ use std::io::Read;
 use std::path::Path;
 
 pub struct MemCodes {
-    m: usize,
+    /// Bytes per stored code — the *storage* width (`⌈pq_m/2⌉` for
+    /// nibble-packed PQ4 indexes, `pq_m` otherwise); must equal
+    /// `IndexMeta::code_bytes()` of the owning index.
+    code_bytes: usize,
     repr: Repr,
 }
 
@@ -24,15 +29,15 @@ enum Repr {
 }
 
 impl MemCodes {
-    pub fn empty(m: usize) -> Self {
-        Self { m, repr: Repr::Sparse { ids: Vec::new(), codes: Vec::new() } }
+    pub fn empty(code_bytes: usize) -> Self {
+        Self { code_bytes, repr: Repr::Sparse { ids: Vec::new(), codes: Vec::new() } }
     }
 
     /// Load memcodes.bin. Switches to the dense layout when the table
     /// covers most of the slot space (the InMemory regime).
     pub fn load(dir: &Path, n_slots: usize) -> Result<Self> {
         let mut f = std::io::BufReader::new(std::fs::File::open(dir.join("memcodes.bin"))?);
-        let m = f.read_u32v()? as usize;
+        let m = f.read_u32v()? as usize; // storage stride, not subspaces
         let n = f.read_u64v()? as usize;
         anyhow::ensure!(m > 0 && m <= 64, "corrupt memcodes header");
         let mut ids = Vec::with_capacity(n);
@@ -51,15 +56,16 @@ impl MemCodes {
                 anyhow::ensure!(id < n_slots, "memcode id {id} out of slot range");
                 dense[id * m..(id + 1) * m].copy_from_slice(&codes[i * m..(i + 1) * m]);
             }
-            Ok(Self { m, repr: Repr::Dense { codes: dense } })
+            Ok(Self { code_bytes: m, repr: Repr::Dense { codes: dense } })
         } else {
-            Ok(Self { m, repr: Repr::Sparse { ids, codes } })
+            Ok(Self { code_bytes: m, repr: Repr::Sparse { ids, codes } })
         }
     }
 
+    /// Bytes per stored code (the storage stride, PQ4-aware).
     #[inline]
-    pub fn m(&self) -> usize {
-        self.m
+    pub fn code_bytes(&self) -> usize {
+        self.code_bytes
     }
 
     /// Code for `new_id`, if resident.
@@ -68,11 +74,11 @@ impl MemCodes {
         match &self.repr {
             Repr::Sparse { ids, codes } => {
                 let i = ids.binary_search(&new_id).ok()?;
-                Some(&codes[i * self.m..(i + 1) * self.m])
+                Some(&codes[i * self.code_bytes..(i + 1) * self.code_bytes])
             }
             Repr::Dense { codes } => {
-                let o = new_id as usize * self.m;
-                codes.get(o..o + self.m)
+                let o = new_id as usize * self.code_bytes;
+                codes.get(o..o + self.code_bytes)
             }
         }
     }
@@ -80,7 +86,7 @@ impl MemCodes {
     pub fn len(&self) -> usize {
         match &self.repr {
             Repr::Sparse { ids, .. } => ids.len(),
-            Repr::Dense { codes } => codes.len() / self.m,
+            Repr::Dense { codes } => codes.len() / self.code_bytes,
         }
     }
 

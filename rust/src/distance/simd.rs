@@ -30,6 +30,22 @@
 //! `m × k` f32 table (row stride `k`), row-major `n × m` code bytes, and an
 //! `out[..n]` distance buffer. Code values are always `< k` by construction
 //! (PQ encoding), which is what makes the unchecked gather sound.
+//!
+//! # PQ4 fast-scan (`adc4_batch`)
+//!
+//! When `k ≤ 16` an entire u8-quantized LUT row fits one 128-bit register,
+//! so ADC needs no gather at all: the nibble codes become shuffle indices
+//! (`pshufb` on x86, `tbl` on aarch64) and 16 codes are scored per shuffle
+//! — the FAISS fast-scan trick. The quantized table is `m × 16` u8 rows
+//! (built per query by [`crate::pq::AdcLut`]): per-subspace minimum folded
+//! into a single `bias`, one shared `scale = max row range / 255`. The
+//! kernel contract is **bit-exact** with [`scalar_adc4_batch`]: the nibble
+//! sums are exact integers (≤ 64·255 < 2¹⁶) and both paths dequantize with
+//! the same unfused `sum as f32 * scale + bias`, so tests assert `to_bits`
+//! equality rather than a tolerance. Codes are nibble-packed, subspace `s`
+//! in byte `s/2`, even `s` in the low nibble; any corrupt nibble still
+//! lands inside the 16-byte row, so the shuffle is memory-safe by
+//! construction.
 
 use super::native;
 use std::sync::OnceLock;
@@ -43,6 +59,13 @@ pub const ADC_MAX_M: usize = 64;
 pub struct Kernels {
     /// Which implementation was selected ("avx2", "neon", "scalar").
     pub isa: &'static str,
+    /// Which implementation `adc_batch` actually runs — NEON has no gather,
+    /// so its table routes adc8 to the scalar walk. Benches label rows from
+    /// this rather than comparing function pointers (whose equality rustc
+    /// does not guarantee to be meaningful).
+    pub adc_isa: &'static str,
+    /// Which implementation `adc4_batch` actually runs.
+    pub adc4_isa: &'static str,
     /// Squared L2 between two f32 slices of equal length.
     pub l2sq_f32: fn(&[f32], &[f32]) -> f32,
     /// Squared L2 between an f32 query and little-endian f32 bytes
@@ -57,6 +80,13 @@ pub struct Kernels {
     /// Batched ADC: `out[i] = Σ_s table[s*k + codes[i*m + s]]` for
     /// `i in 0..n`. `table` is `m × k` row-major; codes are `n × m`.
     pub adc_batch: fn(table: &[f32], m: usize, k: usize, codes: &[u8], n: usize, out: &mut [f32]),
+    /// Batched PQ4 fast-scan ADC over nibble-packed codes:
+    /// `out[i] = (Σ_s qtable[s*16 + nib(i, s)]) as f32 * scale + bias`,
+    /// where `qtable` is `m × 16` u8-quantized rows and codes are
+    /// `n × ceil(m/2)` bytes (subspace `s` in byte `s/2`, even `s` in the
+    /// low nibble). Bit-exact with [`scalar_adc4_batch`].
+    pub adc4_batch:
+        fn(qtable: &[u8], m: usize, codes: &[u8], n: usize, scale: f32, bias: f32, out: &mut [f32]),
 }
 
 /// The process-wide kernel table (selected once, then immutable).
@@ -98,12 +128,15 @@ fn select() -> &'static Kernels {
 
 static SCALAR: Kernels = Kernels {
     isa: "scalar",
+    adc_isa: "scalar",
+    adc4_isa: "scalar",
     l2sq_f32: native::l2sq_f32,
     l2sq_f32_bytes: scalar_l2sq_f32_bytes,
     l2sq_f32_u8: native::l2sq_f32_u8,
     l2sq_f32_i8: native::l2sq_f32_i8,
     norm_sq_f32: native::norm_sq_f32,
     adc_batch: scalar_adc_batch,
+    adc4_batch: scalar_adc4_batch,
 };
 
 /// Scalar oracle for the bytes-as-f32 kernel (alignment-safe by reading
@@ -147,17 +180,50 @@ pub fn scalar_adc_batch(table: &[f32], m: usize, k: usize, codes: &[u8], n: usiz
     }
 }
 
+/// Scalar oracle for the PQ4 fast-scan ADC (and the reference the SIMD
+/// kernels must match **bit-for-bit**): exact integer nibble sums, then one
+/// unfused `sum * scale + bias` dequant per code.
+pub fn scalar_adc4_batch(
+    qtable: &[u8],
+    m: usize,
+    codes: &[u8],
+    n: usize,
+    scale: f32,
+    bias: f32,
+    out: &mut [f32],
+) {
+    let cw = (m + 1) / 2;
+    debug_assert!(codes.len() >= n * cw);
+    debug_assert!(out.len() >= n);
+    debug_assert_eq!(qtable.len(), m * 16);
+    for i in 0..n {
+        let code = &codes[i * cw..(i + 1) * cw];
+        let mut sum = 0u32;
+        let mut row = 0usize;
+        for s in 0..m {
+            let b = code[s / 2];
+            let nib = (if s % 2 == 0 { b & 0x0f } else { b >> 4 }) as usize;
+            sum += qtable[row + nib] as u32;
+            row += 16;
+        }
+        out[i] = sum as f32 * scale + bias;
+    }
+}
+
 // ---- AVX2 + FMA ---------------------------------------------------------
 
 #[cfg(target_arch = "x86_64")]
 static AVX2: Kernels = Kernels {
     isa: "avx2",
+    adc_isa: "avx2",
+    adc4_isa: "avx2",
     l2sq_f32: avx2::l2sq_f32,
     l2sq_f32_bytes: avx2::l2sq_f32_bytes,
     l2sq_f32_u8: avx2::l2sq_f32_u8,
     l2sq_f32_i8: avx2::l2sq_f32_i8,
     norm_sq_f32: avx2::norm_sq_f32,
     adc_batch: avx2::adc_batch,
+    adc4_batch: avx2::adc4_batch,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -413,6 +479,91 @@ mod avx2 {
             super::scalar_adc_batch(table, m, k, &codes[i * m..], n - i, &mut out[i..]);
         }
     }
+
+    pub fn adc4_batch(
+        qtable: &[u8],
+        m: usize,
+        codes: &[u8],
+        n: usize,
+        scale: f32,
+        bias: f32,
+        out: &mut [f32],
+    ) {
+        // Hard asserts: the unsafe body loads/stores unchecked.
+        let cw = (m + 1) / 2;
+        assert!(codes.len() >= n * cw);
+        assert!(out.len() >= n);
+        assert_eq!(qtable.len(), m * 16);
+        if m == 0 || m > ADC_MAX_M {
+            return super::scalar_adc4_batch(qtable, m, codes, n, scale, bias, out);
+        }
+        unsafe { adc4_batch_imp(qtable, m, codes, n, scale, bias, out) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn adc4_batch_imp(
+        qtable: &[u8],
+        m: usize,
+        codes: &[u8],
+        n: usize,
+        scale: f32,
+        bias: f32,
+        out: &mut [f32],
+    ) {
+        // 16 codes per iteration: transpose their packed bytes to
+        // byte-column-major, then each column feeds two in-register row
+        // lookups (`pshufb` with the low / high nibbles as indices) — no
+        // gather. u16 accumulators cannot overflow: m ≤ 64 rows of ≤ 255.
+        let cw = (m + 1) / 2;
+        let mut tmp = [0u8; 16 * ((ADC_MAX_M + 1) / 2)];
+        let lo_mask = _mm_set1_epi8(0x0f);
+        let zero = _mm_setzero_si128();
+        let scale_v = _mm256_set1_ps(scale);
+        let bias_v = _mm256_set1_ps(bias);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            for r in 0..16 {
+                let row = codes.as_ptr().add((i + r) * cw);
+                for t in 0..cw {
+                    *tmp.get_unchecked_mut(t * 16 + r) = *row.add(t);
+                }
+            }
+            let mut acc_lo = _mm_setzero_si128(); // u16 sums, codes i..i+8
+            let mut acc_hi = _mm_setzero_si128(); // u16 sums, codes i+8..i+16
+            for t in 0..cw {
+                let bytes = _mm_loadu_si128(tmp.as_ptr().add(t * 16) as *const __m128i);
+                let idx_lo = _mm_and_si128(bytes, lo_mask);
+                let row0 = _mm_loadu_si128(qtable.as_ptr().add(2 * t * 16) as *const __m128i);
+                let v0 = _mm_shuffle_epi8(row0, idx_lo);
+                acc_lo = _mm_add_epi16(acc_lo, _mm_unpacklo_epi8(v0, zero));
+                acc_hi = _mm_add_epi16(acc_hi, _mm_unpackhi_epi8(v0, zero));
+                if 2 * t + 1 < m {
+                    let idx_hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), lo_mask);
+                    let row1 =
+                        _mm_loadu_si128(qtable.as_ptr().add((2 * t + 1) * 16) as *const __m128i);
+                    let v1 = _mm_shuffle_epi8(row1, idx_hi);
+                    acc_lo = _mm_add_epi16(acc_lo, _mm_unpacklo_epi8(v1, zero));
+                    acc_hi = _mm_add_epi16(acc_hi, _mm_unpackhi_epi8(v1, zero));
+                }
+            }
+            // Dequantize with mul+add (NOT fma): must match the scalar
+            // oracle bit-for-bit.
+            let s_lo = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(acc_lo));
+            let s_hi = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(acc_hi));
+            _mm256_storeu_ps(
+                out.as_mut_ptr().add(i),
+                _mm256_add_ps(_mm256_mul_ps(s_lo, scale_v), bias_v),
+            );
+            _mm256_storeu_ps(
+                out.as_mut_ptr().add(i + 8),
+                _mm256_add_ps(_mm256_mul_ps(s_hi, scale_v), bias_v),
+            );
+            i += 16;
+        }
+        if i < n {
+            super::scalar_adc4_batch(qtable, m, &codes[i * cw..], n - i, scale, bias, &mut out[i..]);
+        }
+    }
 }
 
 // ---- NEON ---------------------------------------------------------------
@@ -420,6 +571,8 @@ mod avx2 {
 #[cfg(target_arch = "aarch64")]
 static NEON: Kernels = Kernels {
     isa: "neon",
+    adc_isa: "scalar",
+    adc4_isa: "neon",
     l2sq_f32: neon::l2sq_f32,
     l2sq_f32_bytes: neon::l2sq_f32_bytes,
     l2sq_f32_u8: neon::l2sq_f32_u8,
@@ -427,6 +580,8 @@ static NEON: Kernels = Kernels {
     norm_sq_f32: neon::norm_sq_f32,
     // No NEON gather; the unrolled scalar table walk is already load-bound.
     adc_batch: scalar_adc_batch,
+    // PQ4 needs no gather — `tbl` is the aarch64 shuffle.
+    adc4_batch: neon::adc4_batch,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -569,6 +724,82 @@ mod neon {
             s
         }
     }
+
+    pub fn adc4_batch(
+        qtable: &[u8],
+        m: usize,
+        codes: &[u8],
+        n: usize,
+        scale: f32,
+        bias: f32,
+        out: &mut [f32],
+    ) {
+        // Hard asserts: the unsafe body loads/stores unchecked.
+        let cw = (m + 1) / 2;
+        assert!(codes.len() >= n * cw);
+        assert!(out.len() >= n);
+        assert_eq!(qtable.len(), m * 16);
+        if m == 0 || m > super::ADC_MAX_M {
+            return super::scalar_adc4_batch(qtable, m, codes, n, scale, bias, out);
+        }
+        unsafe {
+            // Mirror of the AVX2 fast-scan: 16 codes per iteration,
+            // transposed to byte-column-major; `tbl` looks 16 nibbles up in
+            // one 16-byte row at once. u16 accumulators cannot overflow
+            // (m ≤ 64 rows of ≤ 255). Dequant is mul+add, not fma — the
+            // kernel is bit-exact with the scalar oracle.
+            let mut tmp = [0u8; 16 * ((super::ADC_MAX_M + 1) / 2)];
+            let lo_mask = vdupq_n_u8(0x0f);
+            let scale_v = vdupq_n_f32(scale);
+            let bias_v = vdupq_n_f32(bias);
+            let mut i = 0usize;
+            while i + 16 <= n {
+                for r in 0..16 {
+                    let row = codes.as_ptr().add((i + r) * cw);
+                    for t in 0..cw {
+                        *tmp.get_unchecked_mut(t * 16 + r) = *row.add(t);
+                    }
+                }
+                let mut acc_lo = vdupq_n_u16(0); // u16 sums, codes i..i+8
+                let mut acc_hi = vdupq_n_u16(0); // u16 sums, codes i+8..i+16
+                for t in 0..cw {
+                    let bytes = vld1q_u8(tmp.as_ptr().add(t * 16));
+                    let idx_lo = vandq_u8(bytes, lo_mask);
+                    let row0 = vld1q_u8(qtable.as_ptr().add(2 * t * 16));
+                    let v0 = vqtbl1q_u8(row0, idx_lo);
+                    acc_lo = vaddw_u8(acc_lo, vget_low_u8(v0));
+                    acc_hi = vaddw_u8(acc_hi, vget_high_u8(v0));
+                    if 2 * t + 1 < m {
+                        let idx_hi = vshrq_n_u8::<4>(bytes);
+                        let row1 = vld1q_u8(qtable.as_ptr().add((2 * t + 1) * 16));
+                        let v1 = vqtbl1q_u8(row1, idx_hi);
+                        acc_lo = vaddw_u8(acc_lo, vget_low_u8(v1));
+                        acc_hi = vaddw_u8(acc_hi, vget_high_u8(v1));
+                    }
+                }
+                let f0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(acc_lo)));
+                let f1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(acc_lo)));
+                let f2 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(acc_hi)));
+                let f3 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(acc_hi)));
+                vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(vmulq_f32(f0, scale_v), bias_v));
+                vst1q_f32(out.as_mut_ptr().add(i + 4), vaddq_f32(vmulq_f32(f1, scale_v), bias_v));
+                vst1q_f32(out.as_mut_ptr().add(i + 8), vaddq_f32(vmulq_f32(f2, scale_v), bias_v));
+                vst1q_f32(out.as_mut_ptr().add(i + 12), vaddq_f32(vmulq_f32(f3, scale_v), bias_v));
+                i += 16;
+            }
+            if i < n {
+                super::scalar_adc4_batch(
+                    qtable,
+                    m,
+                    &codes[i * cw..],
+                    n - i,
+                    scale,
+                    bias,
+                    &mut out[i..],
+                );
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -596,6 +827,25 @@ mod tests {
         let got = (kernels().l2sq_f32)(&a, &b);
         let want = (scalar_kernels().l2sq_f32)(&a, &b);
         assert!((got - want).abs() <= 1e-4 * want.max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn adc4_batch_matches_scalar_bit_exact() {
+        // The exhaustive m/n sweep lives in tests/simd_kernels.rs; this is
+        // a fast in-crate smoke check of the bit-exactness contract.
+        let mut rng = XorShift::new(11);
+        let (m, n) = (16usize, 53usize);
+        let cw = (m + 1) / 2;
+        let qtable: Vec<u8> = (0..m * 16).map(|_| rng.next_below(256) as u8).collect();
+        let codes: Vec<u8> = (0..n * cw).map(|_| rng.next_below(256) as u8).collect();
+        let (scale, bias) = (0.037f32, 1.25f32);
+        let mut got = vec![0f32; n];
+        let mut want = vec![0f32; n];
+        (kernels().adc4_batch)(&qtable, m, &codes, n, scale, bias, &mut got);
+        scalar_adc4_batch(&qtable, m, &codes, n, scale, bias, &mut want);
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
     }
 
     #[test]

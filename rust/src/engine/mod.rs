@@ -89,7 +89,18 @@ impl PageAnnIndex {
             let mut f = std::io::BufReader::new(std::fs::File::open(files.pq())?);
             PqCodebook::read_from(&mut f)?
         };
-        anyhow::ensure!(pq.m == meta.pq_m && pq.dim == meta.dim, "pq/meta mismatch");
+        anyhow::ensure!(
+            pq.m == meta.pq_m && pq.k == meta.pq_k && pq.dim == meta.dim,
+            "pq/meta mismatch"
+        );
+        // The stored code stride is width-dependent (PQ4 nibble-packs);
+        // refuse an index whose memcodes were written at the other width.
+        anyhow::ensure!(
+            memcodes.code_bytes() == meta.code_bytes(),
+            "memcodes stride {} != meta code width {}",
+            memcodes.code_bytes(),
+            meta.code_bytes()
+        );
         let routing = if meta.routing_bits > 0 {
             let mut f = std::io::BufReader::new(std::fs::File::open(files.routing())?);
             Some(RoutingIndex::read_from(&mut f)?)

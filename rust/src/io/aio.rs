@@ -5,6 +5,13 @@
 //! Each `read_pages` call creates its own set of iocbs over a per-thread
 //! AIO context, so the store is `Sync` without internal locking beyond the
 //! context pool.
+//!
+//! Error-path contract: once `io_submit` accepts an iocb the kernel owns it
+//! — and the buffer it points into — until `io_getevents` returns it. Every
+//! submit path here therefore goes through [`submit_all`], which reaps all
+//! in-flight iocbs before surfacing a submit failure (and propagates a reap
+//! failure instead of discarding it), so no error return ever leaves the
+//! kernel writing into freed memory.
 
 use super::PageStore;
 use crate::Result;
@@ -142,9 +149,16 @@ impl AioPageStore {
         let Some(ctx) = self.ctxs.lease() else {
             return self.fallback.read_pages(page_ids, out);
         };
-        let result = self.read_batch_on_ctx(ctx, page_ids, out);
-        self.ctxs.put_back(ctx);
-        result
+        match self.read_batch_on_ctx(ctx, page_ids, out) {
+            Ok(()) => {
+                self.ctxs.put_back(ctx);
+                Ok(())
+            }
+            // A clean ctx goes back to the pool; one with iocbs still in
+            // flight is destroyed (io_destroy blocks until the kernel
+            // releases the buffers) — see `dispose_ctx_on_error`.
+            Err(e) => Err(dispose_ctx_on_error(&self.ctxs, ctx, e)),
+        }
     }
 
     fn read_batch_on_ctx(
@@ -152,7 +166,7 @@ impl AioPageStore {
         ctx: libc::c_ulong,
         page_ids: &[u32],
         out: &mut [Vec<u8>],
-    ) -> Result<()> {
+    ) -> std::result::Result<(), AioBatchError> {
         let fd = self.file.as_raw_fd() as u32;
         let depth = self.ctxs.depth;
         let mut start = 0usize;
@@ -179,41 +193,102 @@ impl AioPageStore {
                 })
                 .collect();
             let mut ptrs: Vec<*mut Iocb> = iocbs.iter_mut().map(|c| c as *mut Iocb).collect();
-            let mut submitted = 0usize;
-            while submitted < n {
-                let rc = unsafe {
-                    io_submit(ctx, (n - submitted) as libc::c_long, ptrs[submitted..].as_mut_ptr())
-                };
-                anyhow::ensure!(rc > 0, "io_submit failed: {}", std::io::Error::last_os_error());
-                submitted += rc as usize;
-            }
-            let mut events = vec![IoEvent::default(); n];
-            let mut got = 0usize;
-            while got < n {
-                let rc = unsafe {
-                    io_getevents(
-                        ctx,
-                        1,
-                        (n - got) as libc::c_long,
-                        events[got..].as_mut_ptr(),
-                        std::ptr::null_mut(),
-                    )
-                };
-                anyhow::ensure!(rc > 0, "io_getevents failed: {}", std::io::Error::last_os_error());
-                got += rc as usize;
-            }
-            for ev in &events {
-                anyhow::ensure!(
-                    ev.res == self.page_size as i64,
-                    "aio read returned {} (want {})",
-                    ev.res,
-                    self.page_size
-                );
-            }
+            // submit_all reaps anything already in flight before it bails
+            // and reports what it could not collect, so the caller knows
+            // whether `iocbs`/`out` are safe to unwind (`outstanding == 0`)
+            // or the ctx must be destroyed first. Each chunk is fully
+            // reaped before the next one is built (`reap` blocks until all
+            // `n` complete).
+            submit_all(ctx, &mut ptrs, self.page_size, io_submit)?;
+            reap(ctx, n, self.page_size)?;
             start = end;
         }
         Ok(())
     }
+}
+
+/// The `io_submit`-shaped entry point [`submit_all`] drives. Tests inject a
+/// fault here; production passes [`io_submit`] itself.
+type SubmitFn = unsafe fn(libc::c_ulong, libc::c_long, *mut *mut Iocb) -> libc::c_long;
+
+/// Error from the submit/reap path. `outstanding > 0` means the kernel
+/// still owns that many iocbs on the ctx — the ctx must go through
+/// [`dispose_ctx_on_error`] (which destroys it) rather than back into the
+/// pool, or the next lease would reap this batch's stale completions as
+/// its own.
+struct AioBatchError {
+    outstanding: usize,
+    msg: String,
+}
+
+/// Route a failed batch's ctx to safety and produce the caller-facing
+/// error. A clean ctx (all completions collected, e.g. a short read) goes
+/// back to the pool. A dirty ctx is destroyed instead: `io_destroy`
+/// cancels what it can and **blocks until the kernel has released every
+/// remaining buffer**, so the caller may free its buffers the moment this
+/// returns — the module's no-use-after-free contract holds even here. The
+/// pool permanently shrinks by one ctx; overflow leases already fall back
+/// to pread.
+fn dispose_ctx_on_error(ctxs: &CtxPool, ctx: libc::c_ulong, e: AioBatchError) -> anyhow::Error {
+    if e.outstanding == 0 {
+        ctxs.put_back(ctx);
+        anyhow::anyhow!("{}", e.msg)
+    } else {
+        let rc = unsafe { io_destroy(ctx) };
+        if rc == 0 {
+            anyhow::anyhow!(
+                "{} ({} iocbs were outstanding; AIO ctx destroyed to reclaim kernel-owned buffers)",
+                e.msg,
+                e.outstanding
+            )
+        } else {
+            // Destruction itself failed: the kernel may still own the
+            // buffers. Nothing more can be done here, but the caller must
+            // not be told they were reclaimed.
+            anyhow::anyhow!(
+                "{} ({} iocbs outstanding AND io_destroy failed: {} — kernel may still own the read buffers)",
+                e.msg,
+                e.outstanding,
+                std::io::Error::last_os_error()
+            )
+        }
+    }
+}
+
+/// Submit every iocb in `ptrs`, looping over partial submissions. On a
+/// failed `io_submit` this **reaps everything already submitted before
+/// returning the error**: the kernel owns the iocbs and their target
+/// buffers until `io_getevents` yields them back, so bailing without the
+/// reap lets completions land in memory the caller has since freed
+/// (use-after-free). A reap failure on this path is folded into the
+/// returned error rather than discarded — a short read while unwinding
+/// must not be swallowed, and `outstanding` reports any iocbs the kernel
+/// still holds.
+fn submit_all(
+    ctx: libc::c_ulong,
+    ptrs: &mut [*mut Iocb],
+    page_size: usize,
+    submit: SubmitFn,
+) -> std::result::Result<(), AioBatchError> {
+    let n = ptrs.len();
+    let mut submitted = 0usize;
+    while submitted < n {
+        let rc =
+            unsafe { submit(ctx, (n - submitted) as libc::c_long, ptrs[submitted..].as_mut_ptr()) };
+        if rc <= 0 {
+            let err = std::io::Error::last_os_error();
+            let msg = format!("io_submit failed after {submitted}/{n}: {err}");
+            return match reap(ctx, submitted, page_size) {
+                Ok(()) => Err(AioBatchError { outstanding: 0, msg }),
+                Err(re) => Err(AioBatchError {
+                    outstanding: re.outstanding,
+                    msg: format!("{msg}; reaping in-flight reads also failed: {}", re.msg),
+                }),
+            };
+        }
+        submitted += rc as usize;
+    }
+    Ok(())
 }
 
 impl AioPageStore {
@@ -260,32 +335,35 @@ impl AioPageStore {
             })
             .collect();
         let mut ptrs: Vec<*mut Iocb> = iocbs.iter_mut().map(|c| c as *mut Iocb).collect();
-        let mut submitted = 0usize;
-        while submitted < n {
-            let rc = unsafe {
-                io_submit(ctx, (n - submitted) as libc::c_long, ptrs[submitted..].as_mut_ptr())
-            };
-            if rc <= 0 {
-                // Partial-submit failure: reap what went out, then bail.
-                let err = std::io::Error::last_os_error();
-                reap(ctx, submitted, self.page_size);
-                self.ctxs.put_back(ctx);
-                anyhow::bail!("io_submit failed: {err}");
-            }
-            submitted += rc as usize;
+        // Partial-submit failure: submit_all reaps what went out (and folds
+        // a reap error into the returned one instead of discarding it)
+        // before bailing; disposal then pools or destroys the ctx depending
+        // on whether the kernel still owns iocbs.
+        if let Err(e) = submit_all(ctx, &mut ptrs, self.page_size, io_submit) {
+            return Err(dispose_ctx_on_error(&self.ctxs, ctx, e));
         }
         let page_size = self.page_size;
         let ctxs = &self.ctxs;
         Ok(super::PendingRead::deferred(move || {
-            let result = reap(ctx, n, page_size);
-            ctxs.put_back(ctx);
-            result
+            match reap(ctx, n, page_size) {
+                Ok(()) => {
+                    ctxs.put_back(ctx);
+                    Ok(())
+                }
+                Err(e) => Err(dispose_ctx_on_error(ctxs, ctx, e)),
+            }
         }))
     }
 }
 
-/// Collect `n` completions on `ctx`, verifying full-page reads.
-fn reap(ctx: libc::c_ulong, n: usize, page_size: usize) -> Result<()> {
+/// Collect `n` completions on `ctx`, verifying full-page reads. Retries
+/// `EINTR` — an interrupted wait must not strand in-flight iocbs (the
+/// kernel would keep writing into buffers the caller then frees). A short
+/// read fails with `outstanding = 0` (every completion was collected; the
+/// ctx is clean); a hard `io_getevents` failure reports how many iocbs the
+/// kernel still owns so the caller can destroy the ctx instead of pooling
+/// it.
+fn reap(ctx: libc::c_ulong, n: usize, page_size: usize) -> std::result::Result<(), AioBatchError> {
     if n == 0 {
         return Ok(());
     }
@@ -301,15 +379,31 @@ fn reap(ctx: libc::c_ulong, n: usize, page_size: usize) -> Result<()> {
                 std::ptr::null_mut(),
             )
         };
-        anyhow::ensure!(rc > 0, "io_getevents failed: {}", std::io::Error::last_os_error());
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.raw_os_error() == Some(libc::EINTR) {
+                continue;
+            }
+            return Err(AioBatchError {
+                outstanding: n - got,
+                msg: format!("io_getevents failed with {got}/{n} reaped: {err}"),
+            });
+        }
+        if rc == 0 {
+            return Err(AioBatchError {
+                outstanding: n - got,
+                msg: format!("io_getevents returned 0 with {got}/{n} reaped"),
+            });
+        }
         got += rc as usize;
     }
     for ev in &events {
-        anyhow::ensure!(
-            ev.res == page_size as i64,
-            "aio read returned {} (want {page_size})",
-            ev.res
-        );
+        if ev.res != page_size as i64 {
+            return Err(AioBatchError {
+                outstanding: 0,
+                msg: format!("aio read returned {} (want {page_size})", ev.res),
+            });
+        }
     }
     Ok(())
 }
@@ -338,5 +432,142 @@ impl PageStore for AioPageStore {
 
     fn name(&self) -> &'static str {
         "linux-aio"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static FAULTY_CALLS: AtomicUsize = AtomicUsize::new(0);
+    static FAULTY2_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+    /// Fault injection for [`submit_all`]: submits exactly one iocb for
+    /// real on the first call, then fails with `EINVAL` — a deterministic
+    /// partial-submit failure with work genuinely in flight.
+    unsafe fn faulty_submit(
+        ctx: libc::c_ulong,
+        n: libc::c_long,
+        iocbs: *mut *mut Iocb,
+    ) -> libc::c_long {
+        if FAULTY_CALLS.fetch_add(1, Ordering::SeqCst) == 0 && n >= 1 {
+            io_submit(ctx, 1, iocbs)
+        } else {
+            *libc::__errno_location() = libc::EINVAL;
+            -1
+        }
+    }
+
+    /// Same shape with its own counter (tests run concurrently).
+    unsafe fn faulty_submit2(
+        ctx: libc::c_ulong,
+        n: libc::c_long,
+        iocbs: *mut *mut Iocb,
+    ) -> libc::c_long {
+        if FAULTY2_CALLS.fetch_add(1, Ordering::SeqCst) == 0 && n >= 1 {
+            io_submit(ctx, 1, iocbs)
+        } else {
+            *libc::__errno_location() = libc::EINVAL;
+            -1
+        }
+    }
+
+    fn mk_iocbs(fd: u32, bufs: &mut [Vec<u8>]) -> Vec<Iocb> {
+        bufs.iter_mut()
+            .enumerate()
+            .map(|(k, buf)| Iocb {
+                aio_data: k as u64,
+                aio_key: 0,
+                aio_rw_flags: 0,
+                aio_lio_opcode: IOCB_CMD_PREAD,
+                aio_reqprio: 0,
+                aio_fildes: fd,
+                aio_buf: buf.as_mut_ptr() as u64,
+                aio_nbytes: 4096,
+                aio_offset: (k * 4096) as i64,
+                aio_reserved2: 0,
+                aio_flags: 0,
+                aio_resfd: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn partial_submit_failure_reaps_in_flight_iocbs() {
+        let path =
+            std::env::temp_dir().join(format!("pageann-aio-fault-{}", std::process::id()));
+        crate::io::write_test_pages(&path, 4096, 8);
+        let store = match AioPageStore::open(&path, 4096) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("AIO unavailable in this environment: {e}");
+                let _ = std::fs::remove_file(&path);
+                return;
+            }
+        };
+        let ctx = store.ctxs.lease().expect("fresh store must have free ctxs");
+        let fd = store.file.as_raw_fd() as u32;
+        let mut bufs: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; 4096]).collect();
+        let mut iocbs = mk_iocbs(fd, &mut bufs);
+        let mut ptrs: Vec<*mut Iocb> = iocbs.iter_mut().map(|c| c as *mut Iocb).collect();
+        FAULTY_CALLS.store(0, Ordering::SeqCst);
+        let err = submit_all(ctx, &mut ptrs, 4096, faulty_submit).unwrap_err();
+        assert!(err.msg.contains("io_submit failed"), "unexpected error: {}", err.msg);
+        assert_eq!(err.outstanding, 0, "reap must have collected the in-flight iocb");
+        // The iocb submitted before the failure was reaped before the error
+        // surfaced: a zero-timeout getevents must find the ctx empty…
+        let mut events = [IoEvent::default(); 8];
+        let mut zero = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+        let rc = unsafe { io_getevents(ctx, 0, 8, events.as_mut_ptr(), &mut zero) };
+        assert_eq!(rc, 0, "in-flight iocbs left unreaped on the error path");
+        // …and its read has fully landed in the (still-live) buffer.
+        for (i, &b) in bufs[0].iter().enumerate() {
+            assert_eq!(b, (i % 251) as u8, "page 0 byte {i}");
+        }
+        store.ctxs.put_back(ctx);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn failed_submit_returns_ctx_and_store_keeps_working() {
+        // End-to-end on the disposal path: inject a partial-submit failure
+        // on a leased ctx, route it through `dispose_ctx_on_error` exactly
+        // as the public paths do (clean ctx → pooled), then verify the pool
+        // still serves correct batched reads.
+        let path =
+            std::env::temp_dir().join(format!("pageann-aio-recover-{}", std::process::id()));
+        crate::io::write_test_pages(&path, 4096, 8);
+        let store = match AioPageStore::open(&path, 4096) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("AIO unavailable in this environment: {e}");
+                let _ = std::fs::remove_file(&path);
+                return;
+            }
+        };
+        let free_before = store.ctxs.free.lock().unwrap().len();
+        let ctx = store.ctxs.lease().expect("fresh store must have free ctxs");
+        let fd = store.file.as_raw_fd() as u32;
+        let mut bufs: Vec<Vec<u8>> = (0..3).map(|_| vec![0u8; 4096]).collect();
+        let mut iocbs = mk_iocbs(fd, &mut bufs);
+        let mut ptrs: Vec<*mut Iocb> = iocbs.iter_mut().map(|c| c as *mut Iocb).collect();
+        FAULTY2_CALLS.store(0, Ordering::SeqCst);
+        let err = submit_all(ctx, &mut ptrs, 4096, faulty_submit2).unwrap_err();
+        assert_eq!(err.outstanding, 0);
+        let e = dispose_ctx_on_error(&store.ctxs, ctx, err);
+        assert!(e.to_string().contains("io_submit failed"), "unexpected error: {e}");
+        // The clean ctx went back to the pool, not into io_destroy.
+        assert_eq!(store.ctxs.free.lock().unwrap().len(), free_before);
+        // And the store still serves correct reads through the pool.
+        let ids = vec![3u32, 1, 7];
+        let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; 4096]).collect();
+        store.read_pages(&ids, &mut bufs).unwrap();
+        for (k, &p) in ids.iter().enumerate() {
+            for (i, &b) in bufs[k].iter().enumerate() {
+                assert_eq!(b, ((p as usize * 131 + i) % 251) as u8, "page {p} byte {i}");
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 }

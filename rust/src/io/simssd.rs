@@ -67,10 +67,14 @@ impl SimSsdStore {
         &self.model
     }
 
-    /// Acquire `n` queue slots, spinning (with yields) while the device is
-    /// saturated — this is what makes 16 threads contend like the paper's
-    /// Fig. 12 setup.
-    fn acquire_slots(&self, n: usize) {
+    /// Acquire `n` queue slots as an RAII lease, spinning (with yields)
+    /// while the device is saturated — this is what makes 16 threads
+    /// contend like the paper's Fig. 12 setup. The lease releases on drop,
+    /// so every exit (normal completion, an inner-store error unwinding
+    /// through `?`, a `PendingRead` dropped without `wait()`) gives the
+    /// slots back; leaking them would eventually deadlock every thread in
+    /// `acquire_slots`.
+    fn acquire_slots(&self, n: usize) -> SlotLease<'_> {
         loop {
             let cur = self.in_flight.load(Ordering::Acquire);
             if cur + n <= self.model.queue_depth
@@ -79,14 +83,28 @@ impl SimSsdStore {
                     .compare_exchange(cur, cur + n, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
             {
-                return;
+                return SlotLease { store: self, n };
             }
             std::thread::yield_now();
         }
     }
 
-    fn release_slots(&self, n: usize) {
-        self.in_flight.fetch_sub(n, Ordering::AcqRel);
+    #[cfg(test)]
+    fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+}
+
+/// RAII lease over `n` sim-SSD queue slots (see
+/// [`SimSsdStore::acquire_slots`]).
+struct SlotLease<'a> {
+    store: &'a SimSsdStore,
+    n: usize,
+}
+
+impl Drop for SlotLease<'_> {
+    fn drop(&mut self) {
+        self.store.in_flight.fetch_sub(self.n, Ordering::AcqRel);
     }
 }
 
@@ -104,7 +122,7 @@ impl PageStore for SimSsdStore {
             return Ok(());
         }
         let slots = page_ids.len().min(self.model.queue_depth);
-        self.acquire_slots(slots);
+        let _lease = self.acquire_slots(slots);
         let start = Instant::now();
         let result = self.inner.read_pages(page_ids, out);
         let target = self.model.batch_time(page_ids.len(), self.page_size());
@@ -122,7 +140,6 @@ impl PageStore for SimSsdStore {
                 std::thread::yield_now();
             }
         }
-        self.release_slots(slots);
         result
     }
 
@@ -135,11 +152,17 @@ impl PageStore for SimSsdStore {
             return Ok(super::PendingRead::ready());
         }
         let slots = page_ids.len().min(self.model.queue_depth);
-        self.acquire_slots(slots);
+        // The lease moves into the completion closure; it releases when the
+        // closure finishes — or, because `PendingRead::drop` runs the
+        // closure and a panic unwinds the lease either way, whenever the
+        // handle is dropped without `wait()`. An inner `begin_read` error
+        // releases via `?` unwinding the lease right here.
+        let lease = self.acquire_slots(slots);
         let start = Instant::now();
         let target = self.model.batch_time(page_ids.len(), self.page_size());
         let inner = self.inner.begin_read(page_ids, out)?;
         Ok(super::PendingRead::deferred(move || {
+            let _lease = lease;
             let result = inner.wait();
             // Enforce the modeled service time measured from submission —
             // overlapped computation between submit and wait comes "for
@@ -156,7 +179,6 @@ impl PageStore for SimSsdStore {
                     std::thread::yield_now();
                 }
             }
-            self.release_slots(slots);
             result
         }))
     }
@@ -191,6 +213,65 @@ mod tests {
         // Data still correct through the wrapper.
         assert_eq!(bufs[1][0], ((1 * 131) % 251) as u8);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Inner store whose async path always fails — exercises the
+    /// error-unwind slot accounting.
+    struct FailingStore;
+
+    impl PageStore for FailingStore {
+        fn page_size(&self) -> usize {
+            4096
+        }
+        fn n_pages(&self) -> usize {
+            8
+        }
+        fn read_pages(&self, _page_ids: &[u32], _out: &mut [Vec<u8>]) -> crate::Result<()> {
+            anyhow::bail!("injected device fault")
+        }
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    fn fast_model(queue_depth: usize) -> SsdModel {
+        SsdModel { base_latency: Duration::from_micros(10), bandwidth_bps: 1e10, queue_depth }
+    }
+
+    #[test]
+    fn dropped_pending_read_releases_queue_slots() {
+        let path = std::env::temp_dir().join(format!("pageann-sim-drop-{}", std::process::id()));
+        crate::io::write_test_pages(&path, 4096, 8);
+        let inner = Box::new(PreadPageStore::open(&path, 4096).unwrap());
+        let sim = SimSsdStore::new(inner, fast_model(2));
+        let ids = vec![0u32, 1];
+        // More drop-without-wait cycles than the queue depth: if any cycle
+        // leaked its slots, acquire_slots would spin forever below.
+        for round in 0..5 {
+            let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; 4096]).collect();
+            let pending = sim.begin_read(&ids, &mut bufs).unwrap();
+            drop(pending); // never waited
+            assert_eq!(sim.in_flight(), 0, "slots leaked after drop round {round}");
+        }
+        // The device is still usable at full queue depth.
+        let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; 4096]).collect();
+        sim.read_pages(&ids, &mut bufs).unwrap();
+        assert_eq!(bufs[1][0], (131 % 251) as u8);
+        assert_eq!(sim.in_flight(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn failed_begin_read_releases_queue_slots() {
+        let sim = SimSsdStore::new(Box::new(FailingStore), fast_model(2));
+        let ids = vec![0u32, 1];
+        for _ in 0..5 {
+            let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; 4096]).collect();
+            // The default `begin_read` reads synchronously, so the injected
+            // fault surfaces here — and must not strand the two slots.
+            assert!(sim.begin_read(&ids, &mut bufs).is_err());
+            assert_eq!(sim.in_flight(), 0, "slots leaked on the error path");
+        }
     }
 
     #[test]

@@ -28,6 +28,10 @@ pub struct BuildConfig {
     pub hops: usize,
     /// PQ subspaces (must divide dim).
     pub pq_m: usize,
+    /// Centroids per subspace (2..=256). `≤ 16` selects the nibble-packed
+    /// PQ4 layout: half the inline-code bytes per page and the fast-scan
+    /// shuffle ADC at query time.
+    pub pq_k: usize,
     pub pq_train_iters: usize,
     /// Compressed-vector placement (§4.3). Drives page capacity.
     pub cv_placement: CvPlacement,
@@ -46,6 +50,7 @@ impl Default for BuildConfig {
             reps_per_page: 2,
             hops: 2,
             pq_m: 16,
+            pq_k: 256,
             pq_train_iters: 12,
             cv_placement: CvPlacement::OnPage,
             routing_bits: 32,
@@ -116,6 +121,7 @@ impl<'a> IndexBuilder<'a> {
         let cfg = &self.config;
         let base = self.base;
         anyhow::ensure!(base.dim() % cfg.pq_m == 0, "pq_m {} must divide dim {}", cfg.pq_m, base.dim());
+        anyhow::ensure!((2..=256).contains(&cfg.pq_k), "pq_k {} out of range", cfg.pq_k);
         let mut report = BuildReport::default();
         let mut sw = Stopwatch::new();
 
@@ -126,23 +132,25 @@ impl<'a> IndexBuilder<'a> {
         report.vamana_secs = sw.total().as_secs_f64();
         sw.reset();
 
-        // 2. PQ codebooks + all codes.
+        // 2. PQ codebooks + all codes (stored width: nibble-packed for PQ4).
         sw.start();
-        let cb = PqCodebook::train(base, cfg.pq_m, cfg.pq_train_iters, cfg.seed ^ 0xC0DE);
+        let cb = PqCodebook::train_with_k(base, cfg.pq_m, cfg.pq_k, cfg.pq_train_iters, cfg.seed ^ 0xC0DE);
         let encoder = PqEncoder::new(&cb);
         let codes = encoder.encode_all(base, cfg.vamana.nthreads);
+        let code_w = cb.code_bytes();
         sw.stop();
         report.pq_secs = sw.total().as_secs_f64();
         sw.reset();
 
-        // 3. Page capacity from the §4.2 equation, then grouping + page
-        //    graph derivation.
+        // 3. Page capacity from the §4.2 equation (with the *stored* code
+        //    width — PQ4 pages fit more), then grouping + page graph
+        //    derivation.
         sw.start();
         let capacity = page_capacity(
             cfg.page_size,
             base.dim() * base.dtype().size_bytes(),
             cfg.max_nbrs,
-            cfg.pq_m,
+            code_w,
             cfg.cv_placement.mem_frac(),
         );
         let grouping = GroupingParams { capacity, hops: cfg.hops, seed: cfg.seed };
@@ -161,8 +169,8 @@ impl<'a> IndexBuilder<'a> {
 
         // 5. Write files.
         sw.start();
-        report.truncated_nbrs = self.write_pages(dir, &pg, &codes, &mem_code_ids)?;
-        self.write_memcodes(dir, &pg.remap, &codes, &mem_code_ids)?;
+        report.truncated_nbrs = self.write_pages(dir, &pg, &codes, code_w, &mem_code_ids)?;
+        self.write_memcodes(dir, &pg.remap, &codes, code_w, &mem_code_ids)?;
         {
             let mut f = std::io::BufWriter::new(std::fs::File::create(IndexFiles::new(dir).pq())?);
             cb.write_to(&mut f)?;
@@ -238,11 +246,11 @@ impl<'a> IndexBuilder<'a> {
         dir: &Path,
         pg: &PageGraph,
         codes: &[u8],
+        code_w: usize,
         mem_code_ids: &[bool],
     ) -> Result<usize> {
         let cfg = &self.config;
         let base = self.base;
-        let m = cfg.pq_m;
         let files = IndexFiles::new(dir);
         let mut f = std::io::BufWriter::new(std::fs::File::create(files.pages())?);
         let mut buf = vec![0u8; cfg.page_size];
@@ -257,7 +265,7 @@ impl<'a> IndexBuilder<'a> {
                     let code = if mem_code_ids[nb as usize] {
                         None
                     } else {
-                        Some(&codes[orig * m..(orig + 1) * m])
+                        Some(&codes[orig * code_w..(orig + 1) * code_w])
                     };
                     (nb, code)
                 })
@@ -265,7 +273,7 @@ impl<'a> IndexBuilder<'a> {
             let mut w = PageWriter {
                 page_size: cfg.page_size,
                 vec_stride: base.dim() * base.dtype().size_bytes(),
-                pq_m: m,
+                code_bytes: code_w,
                 vectors,
                 neighbors,
             };
@@ -284,9 +292,9 @@ impl<'a> IndexBuilder<'a> {
         dir: &Path,
         remap: &IdRemap,
         codes: &[u8],
+        code_w: usize,
         mem_code_ids: &[bool],
     ) -> Result<()> {
-        let m = self.config.pq_m;
         // Routing-sampled vectors must have in-memory codes for entry-point
         // distance estimation; include them too.
         let routing_ids = self.routing_sample_ids(remap);
@@ -302,12 +310,13 @@ impl<'a> IndexBuilder<'a> {
 
         let files = IndexFiles::new(dir);
         let mut f = std::io::BufWriter::new(std::fs::File::create(files.memcodes())?);
-        f.write_u32(m as u32)?;
+        // Header stores the *storage* stride (nibble-packed for PQ4).
+        f.write_u32(code_w as u32)?;
         f.write_u64(ids.len() as u64)?;
         for &new_id in &ids {
             let orig = remap.to_orig(new_id) as usize;
             f.write_u32(new_id)?;
-            f.write_all(&codes[orig * m..(orig + 1) * m])?;
+            f.write_all(&codes[orig * code_w..(orig + 1) * code_w])?;
         }
         f.flush()?;
         Ok(())
@@ -392,7 +401,7 @@ mod tests {
             let pr = crate::layout::PageRef::parse(
                 &bytes[p * meta.page_size..(p + 1) * meta.page_size],
                 meta.vec_stride(),
-                meta.pq_m,
+                meta.code_bytes(),
             )
             .unwrap();
             total_vecs += pr.n_vecs();
@@ -403,6 +412,50 @@ mod tests {
             }
         }
         assert_eq!(total_vecs, 400);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pq4_build_packs_nibble_codes_and_fits_more() {
+        let spec = SynthSpec::new(DatasetKind::SiftLike, 400).with_dim(32).with_clusters(4);
+        let base = spec.generate(23);
+        let dir = std::env::temp_dir().join(format!("pageann-build4-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = BuildConfig {
+            pq_m: 8,
+            pq_k: 16,
+            vamana: VamanaParams { r: 10, l_build: 20, alpha: 1.2, seed: 3, nthreads: 2 },
+            ..Default::default()
+        };
+        let report = IndexBuilder::new(&base, cfg).build(&dir).unwrap();
+        let meta = IndexMeta::load(&dir).unwrap();
+        assert_eq!(meta.pq_k, 16);
+        assert_eq!(meta.code_bytes(), 4); // m=8 nibble-packed
+        // PQ4 halves inline-code bytes, so capacity must be ≥ the PQ8 run
+        // with otherwise identical geometry.
+        let pq8_capacity = crate::layout::page_capacity(
+            meta.page_size,
+            meta.vec_stride(),
+            meta.max_nbrs,
+            8,
+            0.0,
+        );
+        assert!(report.capacity >= pq8_capacity, "{} < {pq8_capacity}", report.capacity);
+        // Every page parses with the packed stride and codes are in range.
+        let bytes = std::fs::read(dir.join("pages.bin")).unwrap();
+        for p in 0..meta.n_pages {
+            let pr = crate::layout::PageRef::parse(
+                &bytes[p * meta.page_size..(p + 1) * meta.page_size],
+                meta.vec_stride(),
+                meta.code_bytes(),
+            )
+            .unwrap();
+            for j in 0..pr.n_nbrs() {
+                if let Some(code) = pr.nbr_code(j) {
+                    assert_eq!(code.len(), meta.code_bytes());
+                }
+            }
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -7,7 +7,13 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 pub const MAGIC: u32 = 0x50414E4E; // "PANN"
-pub const VERSION: u32 = 3;
+/// On-disk format version. v4: PQ4 support — when `pq_k ≤ 16`, every code
+/// artifact (inline page codes, memcodes.bin) stores nibble-packed
+/// `⌈pq_m/2⌉`-byte codes instead of `pq_m` bytes; readers derive the stride
+/// from [`IndexMeta::code_bytes`]. v3 indexes with `pq_k > 16` are
+/// byte-identical, but the version gate forces a rebuild rather than risk a
+/// silent stride mismatch on small-k indexes.
+pub const VERSION: u32 = 4;
 
 /// Where compressed neighbor vectors live (paper §4.3 memory-disk
 /// coordination).
@@ -64,6 +70,15 @@ pub struct IndexMeta {
 impl IndexMeta {
     pub fn vec_stride(&self) -> usize {
         self.dim * self.dtype.size_bytes()
+    }
+
+    /// Bytes per stored PQ code: nibble-packed `⌈pq_m/2⌉` when the index
+    /// was built with a PQ4 codebook (`pq_k ≤ 16`), `pq_m` otherwise.
+    /// Delegates to [`crate::pq::storage_bytes`] — one packing rule shared
+    /// with the codebook — and is the stride readers use for page parsing
+    /// and memcodes.
+    pub fn code_bytes(&self) -> usize {
+        crate::pq::storage_bytes(self.pq_m, self.pq_k)
     }
 
     /// Total new-id slots (some unused on partially-filled pages).
@@ -174,6 +189,16 @@ mod tests {
         assert!(matches!(back.cv_placement, CvPlacement::Hybrid { mem_frac } if (mem_frac - 0.5).abs() < 1e-6));
         assert_eq!(back.medoid_new_id, 17);
         assert_eq!(back.n_slots(), 100_000);
+    }
+
+    #[test]
+    fn code_bytes_tracks_pq_k() {
+        let mut m = meta();
+        assert_eq!(m.code_bytes(), 16); // pq_k = 256 → one byte per subspace
+        m.pq_k = 16;
+        assert_eq!(m.code_bytes(), 8); // PQ4 → nibble-packed
+        m.pq_m = 5;
+        assert_eq!(m.code_bytes(), 3); // odd m rounds up
     }
 
     #[test]

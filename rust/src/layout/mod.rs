@@ -33,14 +33,17 @@ pub const DEFAULT_PAGE_SIZE: usize = 4096;
 /// Compute the page-node capacity (vectors per page) from the layout
 /// equation in §4.2:
 ///
-/// `n = (P - header - NB·(id + flag? + (1-ρ)·M)) / (stride + orig_id)`
+/// `n = (P - header - NB·(id + flag? + (1-ρ)·code_bytes)) / (stride + orig_id)`
 ///
-/// where `ρ` is the fraction of neighbor codes placed in memory.
+/// where `ρ` is the fraction of neighbor codes placed in memory and
+/// `code_bytes` is the *storage* width of one PQ code (`M` for PQ8,
+/// `⌈M/2⌉` for nibble-packed PQ4 — halving the inline-code bytes is what
+/// lets a PQ4 build pack more vectors per 4 KB page).
 pub fn page_capacity(
     page_size: usize,
     vec_stride: usize,
     max_nbrs: usize,
-    pq_m: usize,
+    code_bytes: usize,
     mem_code_frac: f64,
 ) -> usize {
     let flag_bytes = if mem_code_frac > 0.0 && mem_code_frac < 1.0 {
@@ -49,7 +52,7 @@ pub fn page_capacity(
         0
     };
     let on_page_codes = ((1.0 - mem_code_frac) * max_nbrs as f64).ceil() as usize;
-    let nbr_bytes = max_nbrs * 4 + flag_bytes + on_page_codes * pq_m;
+    let nbr_bytes = max_nbrs * 4 + flag_bytes + on_page_codes * code_bytes;
     let avail = page_size.saturating_sub(PAGE_HEADER_BYTES + nbr_bytes);
     (avail / (vec_stride + 4)).max(1)
 }
@@ -69,6 +72,18 @@ mod tests {
         // Sanity: a 4K page of 132-byte slots holds ~20-30 vectors.
         assert!((10..32).contains(&on_page), "{on_page}");
         assert!((20..32).contains(&in_mem), "{in_mem}");
+    }
+
+    #[test]
+    fn pq4_half_width_codes_fit_more() {
+        // Nibble-packed codes (m=16 → 8 bytes) free inline-code space that
+        // goes to vectors — the PQ4 capacity sits between PQ8-on-page and
+        // all-codes-in-memory.
+        let pq8 = page_capacity(4096, 128, 48, 16, 0.0);
+        let pq4 = page_capacity(4096, 128, 48, 8, 0.0);
+        let in_mem = page_capacity(4096, 128, 48, 16, 1.0);
+        assert!(pq4 > pq8, "{pq4} vs {pq8}");
+        assert!(pq4 <= in_mem, "{pq4} vs {in_mem}");
     }
 
     #[test]

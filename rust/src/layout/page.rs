@@ -6,8 +6,15 @@
 //! [vectors:   n_vecs × stride]                exact distances
 //! [nbr ids:   u32 × n_nbrs]                   topology (new-id space)
 //! [bitmap:    ceil(n_nbrs/8)]                 iff flags&1: bit=code inline
-//! [codes:     M × (#inline)]                  ADC next-hop selection
+//! [codes:     code_bytes × (#inline)]         ADC next-hop selection
 //! ```
+//!
+//! `code_bytes` is the *storage* width of one PQ code: `M` bytes for PQ8,
+//! `⌈M/2⌉` nibble-packed bytes for PQ4 (`meta.pq_k ≤ 16`) — so a PQ4 index
+//! spends half the inline-code bytes and packs more neighbors (or vectors)
+//! per page. This module is width-agnostic: it only moves opaque
+//! `code_bytes`-sized blobs; `IndexMeta::code_bytes()` is the single source
+//! of the stride at parse time.
 //!
 //! `PageRef` is a zero-copy view over a page buffer; the searcher never
 //! materializes an owned page.
@@ -23,7 +30,7 @@ const FLAG_BITMAP: u8 = 1;
 pub struct PageWriter<'a> {
     pub page_size: usize,
     pub vec_stride: usize,
-    pub pq_m: usize,
+    pub code_bytes: usize,
     /// (orig_id, raw vector bytes) of the page node's members.
     pub vectors: Vec<(u32, &'a [u8])>,
     /// (new_id, Option<code>) neighbor entries; `None` = code lives in
@@ -49,7 +56,7 @@ impl<'a> PageWriter<'a> {
             + self.vectors.len() * (4 + self.vec_stride)
             + self.neighbors.len() * 4
             + bitmap
-            + inline * self.pq_m
+            + inline * self.code_bytes
     }
 
     /// True if the contents fit the page.
@@ -108,9 +115,9 @@ impl<'a> PageWriter<'a> {
         }
         for (_, code) in &self.neighbors {
             if let Some(c) = code {
-                anyhow::ensure!(c.len() == self.pq_m, "code length mismatch");
-                out[off..off + self.pq_m].copy_from_slice(c);
-                off += self.pq_m;
+                anyhow::ensure!(c.len() == self.code_bytes, "code length mismatch");
+                out[off..off + self.code_bytes].copy_from_slice(c);
+                off += self.code_bytes;
             }
         }
         Ok(())
@@ -122,19 +129,19 @@ impl<'a> PageWriter<'a> {
 pub struct PageRef<'a> {
     buf: &'a [u8],
     vec_stride: usize,
-    pq_m: usize,
+    code_bytes: usize,
     n_vecs: usize,
     n_nbrs: usize,
     flags: u8,
 }
 
 impl<'a> PageRef<'a> {
-    pub fn parse(buf: &'a [u8], vec_stride: usize, pq_m: usize) -> Result<Self> {
+    pub fn parse(buf: &'a [u8], vec_stride: usize, code_bytes: usize) -> Result<Self> {
         anyhow::ensure!(buf.len() >= PAGE_HEADER_BYTES, "page too small");
         let n_vecs = u16::from_le_bytes([buf[0], buf[1]]) as usize;
         let n_nbrs = u16::from_le_bytes([buf[2], buf[3]]) as usize;
         let flags = buf[4];
-        let p = Self { buf, vec_stride, pq_m, n_vecs, n_nbrs, flags };
+        let p = Self { buf, vec_stride, code_bytes, n_vecs, n_nbrs, flags };
         anyhow::ensure!(p.codes_end() <= buf.len(), "corrupt page: overruns buffer");
         Ok(p)
     }
@@ -205,7 +212,7 @@ impl<'a> PageRef<'a> {
     }
 
     fn codes_end(&self) -> usize {
-        self.codes_off() + self.inline_count() * self.pq_m
+        self.codes_off() + self.inline_count() * self.code_bytes
     }
 
     /// Original id of member vector `i`.
@@ -240,8 +247,8 @@ impl<'a> PageRef<'a> {
     /// memory.
     pub fn nbr_code(&self, j: usize) -> Option<&'a [u8]> {
         if self.all_inline() {
-            let o = self.codes_off() + j * self.pq_m;
-            return Some(&self.buf[o..o + self.pq_m]);
+            let o = self.codes_off() + j * self.code_bytes;
+            return Some(&self.buf[o..o + self.code_bytes]);
         }
         if !self.has_bitmap() {
             return None;
@@ -257,8 +264,8 @@ impl<'a> PageRef<'a> {
         }
         let partial = self.buf[bm_off + j / 8] & ((1u16 << (j % 8)) as u8).wrapping_sub(1);
         rank += partial.count_ones() as usize;
-        let o = self.codes_off() + rank * self.pq_m;
-        Some(&self.buf[o..o + self.pq_m])
+        let o = self.codes_off() + rank * self.code_bytes;
+        Some(&self.buf[o..o + self.code_bytes])
     }
 
     /// Bytes of this page that carry payload (for read-amplification).
@@ -284,7 +291,7 @@ mod tests {
         let w = PageWriter {
             page_size: 512,
             vec_stride: stride,
-            pq_m: m,
+            code_bytes: m,
             vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
             neighbors: (0..5).map(|j| (j as u32 * 7, Some(codes[j].as_slice()))).collect(),
         };
@@ -305,7 +312,7 @@ mod tests {
         let w = PageWriter {
             page_size: 256,
             vec_stride: 8,
-            pq_m: 4,
+            code_bytes: 4,
             vectors: vec![(7, &[1u8; 8])],
             neighbors: vec![(11, None), (12, None)],
         };
@@ -326,7 +333,7 @@ mod tests {
         let mut neighbors: Vec<(u32, Option<&[u8]>)> = (0..12).map(|j| (j, None)).collect();
         neighbors[1].1 = Some(c1.as_slice());
         neighbors[9].1 = Some(c2.as_slice());
-        let w = PageWriter { page_size: 256, vec_stride: 4, pq_m: m, vectors: vec![(0, &[0u8; 4])], neighbors };
+        let w = PageWriter { page_size: 256, vec_stride: 4, code_bytes: m, vectors: vec![(0, &[0u8; 4])], neighbors };
         let mut buf = vec![0u8; 256];
         w.serialize_into(&mut buf).unwrap();
         let p = PageRef::parse(&buf, 4, m).unwrap();
@@ -346,7 +353,7 @@ mod tests {
         let mut w = PageWriter {
             page_size: 256,
             vec_stride: stride,
-            pq_m: 8,
+            code_bytes: 8,
             vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
             neighbors: (0..20).map(|j| (j, Some(code.as_slice()))).collect(),
         };

@@ -112,6 +112,7 @@ fn cmd_build(args: &Args) -> Result<()> {
         page_size: args.get_usize("page-size", 4096)?,
         cv_placement: cv,
         pq_m: args.get_usize("pq-m", 16)?,
+        pq_k: args.get_usize("pq-k", 256)?,
         ..Default::default()
     };
     eprintln!("building index into {}...", out.display());

@@ -32,14 +32,17 @@ pub struct PlanEstimate {
 }
 
 /// Derive the plan. `dataset_bytes` is the raw vector payload (the paper's
-/// memory-ratio denominator); `n_vectors`, `dim`, `pq_m` size the tables.
+/// memory-ratio denominator); `n_vectors`, `dim`, `code_bytes` size the
+/// tables. `code_bytes` is the *storage* width of one PQ code
+/// (`pq::storage_bytes(m, k)` — `⌈m/2⌉` for a PQ4 build), so nibble-packed
+/// indexes plan against their real footprint, not `m` bytes.
 pub fn plan(
     budget_bytes: usize,
     n_vectors: usize,
     dim: usize,
-    pq_m: usize,
+    code_bytes: usize,
 ) -> MemoryPlan {
-    let code_table = n_vectors * pq_m;
+    let code_table = n_vectors * code_bytes;
 
     // Routing tier: scale the sample with the budget, floor at a token
     // sample (the paper's 0.05% configuration still routes).
@@ -50,7 +53,7 @@ pub fn plan(
     } else {
         (32, 0.02)
     };
-    let routing_bytes = routing_cost(n_vectors, dim, pq_m, routing_bits, routing_sample_frac);
+    let routing_bytes = routing_cost(n_vectors, dim, code_bytes, routing_bits, routing_sample_frac);
     let after_routing = budget_bytes.saturating_sub(routing_bytes);
 
     // CV placement tiers (§4.3 / Fig. 11 inflection points).
@@ -63,25 +66,27 @@ pub fn plan(
         CvPlacement::InMemory
     };
 
-    let code_bytes = (code_table as f64 * cv_placement.mem_frac()) as usize;
-    let cache_budget_bytes = after_routing.saturating_sub(code_bytes);
+    let resident_code_bytes = (code_table as f64 * cv_placement.mem_frac()) as usize;
+    let cache_budget_bytes = after_routing.saturating_sub(resident_code_bytes);
 
     MemoryPlan { budget_bytes, cv_placement, routing_bits, routing_sample_frac, cache_budget_bytes }
 }
 
 /// Rough memory cost of the routing tier: planes + buckets + pinned sample
 /// codes (which write_memcodes adds on top of the CV placement).
-pub fn routing_cost(n_vectors: usize, dim: usize, pq_m: usize, bits: usize, frac: f64) -> usize {
+/// `code_bytes` is the storage width of one code (see [`plan`]).
+pub fn routing_cost(n_vectors: usize, dim: usize, code_bytes: usize, bits: usize, frac: f64) -> usize {
     let planes = bits * dim * 4;
     let sample = (n_vectors as f64 * frac) as usize;
-    planes + sample * (4 + 4 + pq_m) // bucket id + memcode id + code
+    planes + sample * (4 + 4 + code_bytes) // bucket id + memcode id + code
 }
 
 impl MemoryPlan {
-    pub fn estimate(&self, n_vectors: usize, dim: usize, pq_m: usize) -> PlanEstimate {
+    /// `code_bytes` is the storage width of one code (see [`plan`]).
+    pub fn estimate(&self, n_vectors: usize, dim: usize, code_bytes: usize) -> PlanEstimate {
         PlanEstimate {
-            routing_bytes: routing_cost(n_vectors, dim, pq_m, self.routing_bits, self.routing_sample_frac),
-            code_bytes: (n_vectors as f64 * pq_m as f64 * self.cv_placement.mem_frac()) as usize,
+            routing_bytes: routing_cost(n_vectors, dim, code_bytes, self.routing_bits, self.routing_sample_frac),
+            code_bytes: (n_vectors as f64 * code_bytes as f64 * self.cv_placement.mem_frac()) as usize,
             cache_bytes: self.cache_budget_bytes,
         }
     }

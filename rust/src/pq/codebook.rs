@@ -1,4 +1,17 @@
 //! PQ codebooks, encoding, and ADC lookup tables.
+//!
+//! Two code widths share every type here:
+//!
+//! * **PQ8** (`k ≤ 256`): one byte per subspace, `m` bytes per stored code.
+//! * **PQ4** (`k ≤ 16`): two subspace codes per byte (subspace `s` in byte
+//!   `s/2`, even `s` in the low nibble), `⌈m/2⌉` bytes per stored code.
+//!   Selected automatically whenever the trained `k` fits a nibble — see
+//!   [`PqCodebook::packed`] — and scored by the in-register shuffle
+//!   fast-scan kernel over a u8-quantized LUT ([`AdcLut`] builds the
+//!   quantized companion table per query).
+//!
+//! [`PqCodebook::code_bytes`] is the storage stride everywhere (pages,
+//! memcodes, baselines); callers never branch on the width themselves.
 
 use super::kmeans::kmeans;
 use crate::dataset::VectorSet;
@@ -7,8 +20,52 @@ use crate::util::{parallel_for, ReadExt, WriteExt, XorShift};
 use crate::Result;
 use std::io::{Read, Write};
 
-/// A compressed vector: one centroid index per subspace.
+/// A compressed vector: one centroid index per subspace (unpacked), or the
+/// nibble-packed storage form (see [`pack_nibbles`]).
 pub type PqCode = Vec<u8>;
+
+/// Largest `k` for which codes are nibble-packed (PQ4 fast-scan mode).
+pub const PQ4_MAX_K: usize = 16;
+
+/// Bytes one stored code of `m` subspaces with `k` centroids occupies:
+/// `⌈m/2⌉` nibble-packed for PQ4 (`k ≤ 16`), `m` otherwise. **The single
+/// source of the packing rule** — [`PqCodebook::code_bytes`] and
+/// `IndexMeta::code_bytes` both delegate here, so the predicate and the
+/// formula can never drift between the codebook and the on-disk metadata.
+pub fn storage_bytes(m: usize, k: usize) -> usize {
+    if k > 0 && k <= PQ4_MAX_K {
+        (m + 1) / 2
+    } else {
+        m
+    }
+}
+
+/// Pack one-byte-per-subspace PQ4 codes (values `< 16`) into nibbles:
+/// subspace `s` lands in byte `s/2`, even `s` in the low nibble.
+pub fn pack_nibbles(code: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; (code.len() + 1) / 2];
+    for (s, &c) in code.iter().enumerate() {
+        debug_assert!(c < 16, "PQ4 code {c} does not fit a nibble");
+        out[s / 2] |= if s % 2 == 0 { c & 0x0f } else { (c & 0x0f) << 4 };
+    }
+    out
+}
+
+/// Inverse of [`pack_nibbles`]: expand `⌈m/2⌉` packed bytes back to `m`
+/// one-byte-per-subspace codes.
+pub fn unpack_nibbles(packed: &[u8], m: usize) -> Vec<u8> {
+    debug_assert!(packed.len() >= (m + 1) / 2);
+    (0..m)
+        .map(|s| {
+            let b = packed[s / 2];
+            if s % 2 == 0 {
+                b & 0x0f
+            } else {
+                b >> 4
+            }
+        })
+        .collect()
+}
 
 /// Trained PQ codebooks: `m` subspaces × `k ≤ 256` centroids × `dsub` dims.
 #[derive(Debug, Clone)]
@@ -22,12 +79,34 @@ pub struct PqCodebook {
 }
 
 impl PqCodebook {
-    /// Train on (a sample of) `data`. `m` must divide the dimension.
+    /// Train on (a sample of) `data` with the default `k = 256` (PQ8).
+    /// `m` must divide the dimension.
     pub fn train(data: &VectorSet, m: usize, iters: usize, seed: u64) -> Self {
+        Self::train_with_k(data, m, 256, iters, seed)
+    }
+
+    /// Train with an explicit centroid budget `k_max ≤ 256`. `k_max ≤ 16`
+    /// selects the nibble-packed PQ4 layout (half the stored bytes per
+    /// code, fast-scan shuffle ADC). The storage width follows the
+    /// *requested* budget: a PQ8 request never drops into the PQ4 class
+    /// just because the training set is tiny (see the clamp below).
+    pub fn train_with_k(data: &VectorSet, m: usize, k_max: usize, iters: usize, seed: u64) -> Self {
         let dim = data.dim();
         assert!(m > 0 && dim % m == 0, "m={m} must divide dim={dim}");
+        assert!((2..=256).contains(&k_max), "k_max={k_max} out of range");
         let dsub = dim / m;
-        let k = 256usize.min(data.len().max(1));
+        // Clamp the budget to the data size so k-means is well-posed — but
+        // never across the PQ4/PQ8 width boundary: `k ≤ 16` flips every
+        // code artifact to nibble-packed storage and lossy u8-quantized
+        // ADC, and that format choice must be the caller's, not a side
+        // effect of a degenerate (≤ 16 vector) training set. On such sets a
+        // PQ8 request keeps `k = 17` and the extra centroid rows are
+        // duplicates (harmless: the encoder picks the first-best row).
+        let k = if k_max > PQ4_MAX_K {
+            k_max.min(data.len().max(PQ4_MAX_K + 1))
+        } else {
+            k_max.min(data.len().max(1))
+        };
         // Sample up to 64k training vectors.
         let mut rng = XorShift::new(seed);
         let n_train = data.len().min(65_536);
@@ -46,7 +125,16 @@ impl PqCodebook {
                     .copy_from_slice(&sample[r * dim + sub * dsub..r * dim + (sub + 1) * dsub]);
             }
             let km = kmeans(&subdata, dsub, k, iters, seed.wrapping_add(sub as u64));
-            centroids[sub * k * dsub..(sub + 1) * k * dsub].copy_from_slice(&km.centroids);
+            // k-means clamps to the point count internally; on degenerate
+            // sets (fewer points than the PQ8 floor above) duplicate the
+            // last centroid so every index < k stays a valid row.
+            let rows = km.k.min(k).max(1);
+            let dst = &mut centroids[sub * k * dsub..(sub + 1) * k * dsub];
+            dst[..rows * dsub].copy_from_slice(&km.centroids[..rows * dsub]);
+            for c in rows..k {
+                let (head, tail) = dst.split_at_mut(c * dsub);
+                tail[..dsub].copy_from_slice(&head[(rows - 1) * dsub..rows * dsub]);
+            }
         }
         Self { dim, m, k, dsub, centroids }
     }
@@ -57,9 +145,17 @@ impl PqCodebook {
         &self.centroids[base..base + self.dsub]
     }
 
-    /// Bytes per compressed vector.
+    /// True when codes are nibble-packed (PQ4: every centroid index fits a
+    /// nibble).
+    #[inline]
+    pub fn packed(&self) -> bool {
+        self.k <= PQ4_MAX_K
+    }
+
+    /// Bytes per *stored* compressed vector ([`storage_bytes`]) — the code
+    /// stride on pages, in memcodes and in the baselines' resident tables.
     pub fn code_bytes(&self) -> usize {
-        self.m
+        storage_bytes(self.m, self.k)
     }
 
     /// Build the per-query ADC lookup table (m × k squared distances).
@@ -76,6 +172,7 @@ impl PqCodebook {
         assert_eq!(query.len(), self.dim);
         lut.m = self.m;
         lut.k = self.k;
+        lut.code_bytes = self.code_bytes();
         // The fill loop writes every slot, so only the length matters —
         // avoid the zeroing memset on the steady-state (same-size) path.
         if lut.table.len() != self.m * self.k {
@@ -90,10 +187,28 @@ impl PqCodebook {
                 *slot = l2(qsub, &centroids[c * self.dsub..(c + 1) * self.dsub]);
             }
         }
+        if self.packed() {
+            lut.quantize_q4();
+        } else {
+            // Fully reset the fast-scan companion so a reused scratch LUT
+            // never exposes a previous PQ4 query's dequant constants.
+            lut.q4.clear();
+            lut.q4_scale = 1.0;
+            lut.q4_bias = 0.0;
+        }
     }
 
-    /// Decode a code back to the (approximate) vector.
+    /// Decode a code back to the (approximate) vector. Accepts either the
+    /// unpacked (`m`-byte) or the stored (`code_bytes`) form.
     pub fn decode(&self, code: &[u8]) -> Vec<f32> {
+        let unpacked;
+        let code = if self.packed() && code.len() == self.code_bytes() && self.code_bytes() < self.m
+        {
+            unpacked = unpack_nibbles(code, self.m);
+            &unpacked[..]
+        } else {
+            code
+        };
         let mut out = vec![0f32; self.dim];
         for sub in 0..self.m {
             out[sub * self.dsub..(sub + 1) * self.dsub]
@@ -103,6 +218,8 @@ impl PqCodebook {
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_u32(PQ_MAGIC)?;
+        w.write_u32(PQ_VERSION)?;
         w.write_u32(self.dim as u32)?;
         w.write_u32(self.m as u32)?;
         w.write_u32(self.k as u32)?;
@@ -111,7 +228,17 @@ impl PqCodebook {
     }
 
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
-        let dim = r.read_u32v()? as usize;
+        // v1 files (pre-PQ4) start directly with `dim`; versioned files
+        // start with a magic word that no plausible dimension collides
+        // with. Accept both so seed-era artifacts keep loading.
+        let first = r.read_u32v()?;
+        let dim = if first == PQ_MAGIC {
+            let v = r.read_u32v()?;
+            anyhow::ensure!(v == PQ_VERSION, "pq codebook version {v} != supported {PQ_VERSION}");
+            r.read_u32v()? as usize
+        } else {
+            first as usize
+        };
         let m = r.read_u32v()? as usize;
         let k = r.read_u32v()? as usize;
         anyhow::ensure!(m > 0 && dim % m == 0 && k > 0 && k <= 256, "corrupt codebook header");
@@ -121,17 +248,37 @@ impl PqCodebook {
     }
 }
 
+/// Magic prefix of versioned `pq.bin` headers ("PQCB"); absent in legacy
+/// (seed) files, which begin directly with `dim`.
+const PQ_MAGIC: u32 = 0x5051_4342;
+/// Current `pq.bin` format version. v2 = explicit versioning + PQ4-aware
+/// readers (`k ≤ 16` ⇒ nibble-packed code artifacts).
+const PQ_VERSION: u32 = 2;
+
 /// Per-query lookup table for asymmetric distance computation.
 ///
 /// Layout: a flat `m × k` f32 table, subspace-major (row stride `k`), which
 /// is exactly the shape the SIMD `adc_batch` kernel gathers from — one
-/// contiguous table row per subspace. Fields are private so the layout
-/// contract between this type and `distance::simd` stays in one file.
+/// contiguous table row per subspace. For PQ4 codebooks (`k ≤ 16`) the
+/// build also quantizes a `m × 16` u8 companion table (`q4`) for the
+/// fast-scan shuffle kernel: per-subspace row minima folded into `q4_bias`,
+/// one shared `q4_scale = max row range / 255`. Fields are private so the
+/// layout contract between this type and `distance::simd` stays in one
+/// file.
 pub struct AdcLut {
     m: usize,
     k: usize,
+    /// Bytes per stored code this table scores (`⌈m/2⌉` packed, else `m`).
+    code_bytes: usize,
     /// m × k squared subspace distances, row stride `k`.
     table: Vec<f32>,
+    /// u8-quantized `m × 16` fast-scan rows; empty unless PQ4.
+    q4: Vec<u8>,
+    /// Per-row minima scratch for the quantization pass (reused allocation,
+    /// like `table` — `build_lut_into` runs per query).
+    q4_lo: Vec<f32>,
+    q4_scale: f32,
+    q4_bias: f32,
 }
 
 impl Default for AdcLut {
@@ -143,7 +290,57 @@ impl Default for AdcLut {
 impl AdcLut {
     /// An empty table; fill with [`PqCodebook::build_lut_into`].
     pub fn empty() -> Self {
-        Self { m: 0, k: 0, table: Vec::new() }
+        Self {
+            m: 0,
+            k: 0,
+            code_bytes: 0,
+            table: Vec::new(),
+            q4: Vec::new(),
+            q4_lo: Vec::new(),
+            q4_scale: 1.0,
+            q4_bias: 0.0,
+        }
+    }
+
+    /// Quantize the f32 table into the PQ4 fast-scan companion: row minima
+    /// sum into the bias, the widest row range sets the shared scale, and
+    /// unused row slots (`k < 16`) saturate to 255 so a corrupt nibble
+    /// reads as "far" rather than out of bounds.
+    fn quantize_q4(&mut self) {
+        debug_assert!(self.k <= PQ4_MAX_K && self.k > 0);
+        if self.q4.len() != self.m * 16 {
+            self.q4.resize(self.m * 16, 0);
+        }
+        if self.q4_lo.len() != self.m {
+            self.q4_lo.resize(self.m, 0.0);
+        }
+        // One reduction pass: row minima (kept for the quantize loop) plus
+        // the widest row range, which fixes the shared scale.
+        let mut bias = 0f32;
+        let mut max_range = 0f32;
+        for s in 0..self.m {
+            let row = &self.table[s * self.k..(s + 1) * self.k];
+            let lo = row.iter().fold(f32::INFINITY, |a, &v| a.min(v));
+            let hi = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            self.q4_lo[s] = lo;
+            bias += lo;
+            max_range = max_range.max(hi - lo);
+        }
+        let scale = if max_range > 0.0 { max_range / 255.0 } else { 1.0 };
+        for s in 0..self.m {
+            let row = &self.table[s * self.k..(s + 1) * self.k];
+            let lo = self.q4_lo[s];
+            let out = &mut self.q4[s * 16..(s + 1) * 16];
+            for (c, slot) in out.iter_mut().enumerate() {
+                *slot = if c < self.k {
+                    ((row[c] - lo) / scale).round().min(255.0) as u8
+                } else {
+                    255
+                };
+            }
+        }
+        self.q4_scale = scale;
+        self.q4_bias = bias;
     }
 
     /// Subspace count of the codes this table scores.
@@ -158,29 +355,82 @@ impl AdcLut {
         self.k
     }
 
+    /// Bytes per stored code this table scores (`⌈m/2⌉` for PQ4, else `m`).
+    #[inline]
+    pub fn code_bytes(&self) -> usize {
+        self.code_bytes
+    }
+
+    /// True when this table scores nibble-packed PQ4 codes.
+    #[inline]
+    pub fn is_packed(&self) -> bool {
+        !self.q4.is_empty()
+    }
+
     /// The raw `m × k` table (benches, artifact interop).
     pub fn table(&self) -> &[f32] {
         &self.table
     }
 
-    /// Approximate squared distance to the vector with `code` (delegates to
-    /// the scalar ADC kernel — one source of truth for the table walk).
+    /// The PQ4 fast-scan companion (`m × 16` u8 rows; empty unless PQ4).
+    pub fn q4_table(&self) -> &[u8] {
+        &self.q4
+    }
+
+    /// Dequant scale of the PQ4 companion table (quantization step size).
+    pub fn q4_scale(&self) -> f32 {
+        self.q4_scale
+    }
+
+    /// Dequant bias of the PQ4 companion table (summed row minima).
+    pub fn q4_bias(&self) -> f32 {
+        self.q4_bias
+    }
+
+    /// Approximate squared distance to the vector with `code` in its stored
+    /// width (delegates to the scalar ADC kernel of the matching width —
+    /// one source of truth for the table walk).
     #[inline]
     pub fn distance(&self, code: &[u8]) -> f32 {
-        debug_assert_eq!(code.len(), self.m);
+        debug_assert_eq!(code.len(), self.code_bytes);
         let mut out = [0f32; 1];
-        crate::distance::simd::scalar_adc_batch(&self.table, self.m, self.k, code, 1, &mut out);
+        if self.is_packed() {
+            crate::distance::simd::scalar_adc4_batch(
+                &self.q4,
+                self.m,
+                code,
+                1,
+                self.q4_scale,
+                self.q4_bias,
+                &mut out,
+            );
+        } else {
+            crate::distance::simd::scalar_adc_batch(&self.table, self.m, self.k, code, 1, &mut out);
+        }
         out[0]
     }
 
-    /// Batched ADC: score `n` codes packed row-major (`n × m`) into
-    /// `out[..n]` with the dispatched SIMD kernel. Equivalent to `n` calls
-    /// to [`Self::distance`] (asserted by the property suite).
+    /// Batched ADC: score `n` codes packed row-major (`n × code_bytes`)
+    /// into `out[..n]` with the dispatched SIMD kernel of the matching code
+    /// width. Equivalent to `n` calls to [`Self::distance`] (asserted by
+    /// the property suite).
     #[inline]
     pub fn distance_batch(&self, codes: &[u8], n: usize, out: &mut [f32]) {
-        debug_assert!(codes.len() >= n * self.m);
+        debug_assert!(codes.len() >= n * self.code_bytes);
         debug_assert!(out.len() >= n);
-        (crate::distance::simd::kernels().adc_batch)(&self.table, self.m, self.k, codes, n, out);
+        if self.is_packed() {
+            (crate::distance::simd::kernels().adc4_batch)(
+                &self.q4,
+                self.m,
+                codes,
+                n,
+                self.q4_scale,
+                self.q4_bias,
+                out,
+            );
+        } else {
+            (crate::distance::simd::kernels().adc_batch)(&self.table, self.m, self.k, codes, n, out);
+        }
     }
 
     /// [`Self::distance_batch`] into a scratch-owned `Vec`, growing it as
@@ -205,6 +455,7 @@ impl<'a> PqEncoder<'a> {
         Self { cb }
     }
 
+    /// One centroid index per subspace (unpacked, `m` bytes).
     pub fn encode(&self, v: &[f32]) -> PqCode {
         let cb = self.cb;
         let mut code = vec![0u8; cb.m];
@@ -224,13 +475,26 @@ impl<'a> PqEncoder<'a> {
         code
     }
 
-    /// Encode a whole set in parallel into a packed n × m byte matrix.
+    /// Encode to the *storage* width ([`PqCodebook::code_bytes`]):
+    /// nibble-packed for PQ4 codebooks, identical to [`Self::encode`]
+    /// otherwise.
+    pub fn encode_packed(&self, v: &[f32]) -> PqCode {
+        let code = self.encode(v);
+        if self.cb.packed() {
+            pack_nibbles(&code)
+        } else {
+            code
+        }
+    }
+
+    /// Encode a whole set in parallel into a dense `n × code_bytes` matrix
+    /// (storage width — nibble-packed for PQ4).
     pub fn encode_all(&self, data: &VectorSet, nthreads: usize) -> Vec<u8> {
-        let m = self.cb.m;
-        let rows = parallel_for(data.len(), nthreads, |i| self.encode(&data.get_f32(i)));
-        let mut out = vec![0u8; data.len() * m];
+        let cw = self.cb.code_bytes();
+        let rows = parallel_for(data.len(), nthreads, |i| self.encode_packed(&data.get_f32(i)));
+        let mut out = vec![0u8; data.len() * cw];
         for (i, code) in rows.into_iter().enumerate() {
-            out[i * m..(i + 1) * m].copy_from_slice(&code);
+            out[i * cw..(i + 1) * cw].copy_from_slice(&code);
         }
         out
     }
@@ -317,6 +581,104 @@ mod tests {
         for i in [0usize, 5, 399] {
             assert_eq!(&packed[i * 4..(i + 1) * 4], enc.encode(&data.get_f32(i)).as_slice());
         }
+    }
+
+    #[test]
+    fn pq4_codebook_packs_two_codes_per_byte() {
+        let data = small_set();
+        let cb = PqCodebook::train_with_k(&data, 4, 16, 8, 21);
+        assert!(cb.packed());
+        assert_eq!(cb.k, 16);
+        assert_eq!(cb.code_bytes(), 2);
+        let enc = PqEncoder::new(&cb);
+        let v = data.get_f32(3);
+        let code = enc.encode(&v);
+        assert!(code.iter().all(|&c| c < 16));
+        let stored = enc.encode_packed(&v);
+        assert_eq!(stored.len(), 2);
+        assert_eq!(unpack_nibbles(&stored, 4), code);
+        // encode_all writes the storage width.
+        let all = enc.encode_all(&data, 2);
+        assert_eq!(all.len(), data.len() * 2);
+        assert_eq!(&all[3 * 2..4 * 2], stored.as_slice());
+        // decode accepts both widths and agrees.
+        assert_eq!(cb.decode(&stored), cb.decode(&code));
+    }
+
+    #[test]
+    fn pq4_adc_matches_f32_table_within_quantization_step() {
+        // The fast-scan path quantizes the LUT to u8; its error per code is
+        // bounded by m rounding errors of at most scale/2 each.
+        let data = small_set();
+        let cb = PqCodebook::train_with_k(&data, 4, 16, 10, 31);
+        let enc = PqEncoder::new(&cb);
+        let q = data.get_f32(0);
+        let lut = cb.build_lut(&q);
+        assert!(lut.is_packed());
+        for i in [1usize, 17, 200, 399] {
+            let code = enc.encode(&data.get_f32(i));
+            let exact: f32 =
+                (0..cb.m).map(|s| lut.table()[s * cb.k + code[s] as usize]).sum();
+            let got = lut.distance(&pack_nibbles(&code));
+            let bound = 0.5 * lut.q4_scale() * cb.m as f32 + 1e-3 * exact.abs().max(1.0);
+            assert!(
+                (got - exact).abs() <= bound,
+                "vector {i}: adc4 {got} vs table-sum {exact} (bound {bound})"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_dataset_does_not_flip_pq8_into_packed_mode() {
+        // A PQ8 request on a degenerate (≤ 16 vector) set must keep the
+        // one-byte-per-subspace width: the storage format follows the
+        // requested budget, never the data size.
+        let data = SynthSpec::new(DatasetKind::DeepLike, 10).with_dim(8).with_clusters(2).generate(3);
+        let cb = PqCodebook::train(&data, 2, 4, 1);
+        assert!(cb.k > PQ4_MAX_K, "trained k {} fell into the PQ4 class", cb.k);
+        assert!(!cb.packed());
+        assert_eq!(cb.code_bytes(), 2);
+        // Every centroid row is a valid slice (duplicates fill the tail)
+        // and encoding stays in range.
+        for sub in 0..cb.m {
+            for c in 0..cb.k {
+                assert_eq!(cb.centroid(sub, c).len(), cb.dsub);
+            }
+        }
+        let code = PqEncoder::new(&cb).encode(&data.get_f32(0));
+        assert!(code.iter().all(|&c| (c as usize) < cb.k));
+        // An explicit PQ4 request on the same tiny set still packs.
+        let cb4 = PqCodebook::train_with_k(&data, 2, 16, 4, 1);
+        assert!(cb4.packed());
+        assert_eq!(cb4.code_bytes(), 1);
+    }
+
+    #[test]
+    fn pq4_serialization_roundtrip_preserves_width() {
+        let data = small_set();
+        let cb = PqCodebook::train_with_k(&data, 4, 16, 5, 13);
+        let mut buf = Vec::new();
+        cb.write_to(&mut buf).unwrap();
+        let back = PqCodebook::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.k, cb.k);
+        assert!(back.packed());
+        assert_eq!(back.code_bytes(), cb.code_bytes());
+        assert_eq!(back.centroids, cb.centroids);
+    }
+
+    #[test]
+    fn legacy_unversioned_header_still_loads() {
+        // Seed-era pq.bin files start directly with `dim`.
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 5, 13);
+        let mut buf = Vec::new();
+        buf.write_u32(cb.dim as u32).unwrap();
+        buf.write_u32(cb.m as u32).unwrap();
+        buf.write_u32(cb.k as u32).unwrap();
+        buf.write_f32_slice(&cb.centroids).unwrap();
+        let back = PqCodebook::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.dim, cb.dim);
+        assert_eq!(back.centroids, cb.centroids);
     }
 
     use crate::util::XorShift;

@@ -3,15 +3,19 @@
 //! vectors use (paper §4.2–4.3).
 //!
 //! A vector of dimension `D` is split into `M` subspaces of `D/M` dims; each
-//! subspace has a `K=256`-entry codebook trained by k-means, so a vector
-//! compresses to `M` bytes. Query-time distance is *asymmetric* (ADC): a
+//! subspace has a `K`-entry codebook trained by k-means (`K = 256` by
+//! default, `K = 16` in the nibble-packed PQ4 fast-scan mode, which halves
+//! the stored bytes per code). Query-time distance is *asymmetric* (ADC): a
 //! per-query `M×K` lookup table of exact subspace distances, summed over the
-//! code bytes.
+//! code bytes — via an 8-wide gather for PQ8 and an in-register shuffle
+//! over a u8-quantized table for PQ4 (see `distance::simd`).
 
 mod codebook;
 mod kmeans;
 
-pub use codebook::{AdcLut, PqCode, PqCodebook, PqEncoder};
+pub use codebook::{
+    pack_nibbles, storage_bytes, unpack_nibbles, AdcLut, PqCode, PqCodebook, PqEncoder, PQ4_MAX_K,
+};
 pub use kmeans::kmeans;
 
 #[cfg(test)]

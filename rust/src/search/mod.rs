@@ -158,6 +158,9 @@ pub fn search_pages(
     let capacity = meta.capacity as u32;
     let dtype: Dtype = meta.dtype;
     let stride = meta.vec_stride();
+    // Storage bytes per PQ code (nibble-packed for PQ4 indexes) — the
+    // stride for page parsing, memcodes and the gathered-code scratch.
+    let code_w = meta.code_bytes();
     scratch.reset(meta.n_slots(), meta.n_pages, params.l, params.k);
     let epoch = scratch.epoch;
 
@@ -165,18 +168,21 @@ pub fn search_pages(
     let t_lut = Instant::now();
     ctx.pq.build_lut_into(query, &mut scratch.lut);
     stats.compute_time += t_lut.elapsed();
-    let pq_m = scratch.lut.m();
+    debug_assert_eq!(scratch.lut.code_bytes(), code_w);
 
     // Seed candidates (Alg. 2 lines 4-7): estimated distance from resident
     // codes where available; entries without codes get pushed with d=0 so
-    // they are expanded first.
+    // they are expanded first. Like the topology phase below, a seed is
+    // marked visited only when the pool accepts it — a rejected seed can
+    // still re-enter later via a closer page.
     for &e in entries.iter().take(params.max_entries.max(1)) {
         if scratch.visited_vec[e as usize] == epoch {
             continue;
         }
-        scratch.visited_vec[e as usize] = epoch; // mark seeded (not yet expanded)
         let d = ctx.memcodes.get(e).map(|c| scratch.lut.distance(c)).unwrap_or(0.0);
-        scratch.candidates.push(d, e);
+        if scratch.candidates.push(d, e) {
+            scratch.visited_vec[e as usize] = epoch; // seeded (not yet expanded)
+        }
         stats.approx_dists += 1;
     }
 
@@ -197,7 +203,7 @@ pub fn search_pages(
                     Deferred::Owned(b) => b,
                     Deferred::Cached(b) => b,
                 };
-                let page = PageRef::parse(&bytes[..meta.page_size], stride, meta.pq_m)?;
+                let page = PageRef::parse(&bytes[..meta.page_size], stride, code_w)?;
                 let nv = page.n_vecs();
                 if scratch.dist_buf.len() < nv {
                     scratch.dist_buf.resize(nv, 0.0);
@@ -218,7 +224,6 @@ pub fn search_pages(
 
     // Main loop (lines 8-28).
     while scratch.candidates.has_unvisited() {
-        stats.hops += 1;
         // Collect up to `io_batch` unvisited pages (lines 10-18).
         scratch.page_ids.clear();
         while scratch.page_ids.len() < params.io_batch {
@@ -233,8 +238,11 @@ pub fn search_pages(
             }
         }
         if scratch.page_ids.is_empty() {
+            // Popped candidates all mapped to already-visited pages — no
+            // page read happened, so this round is not a hop.
             continue;
         }
+        stats.hops += 1;
 
         // Partition into cached / disk (cache hits served from memory).
         let mut disk_ids: Vec<u32> = Vec::with_capacity(scratch.page_ids.len());
@@ -287,7 +295,7 @@ pub fn search_pages(
             .map(|b| (true, b.as_slice()))
             .chain(cached_bytes.iter().map(|b| (false, *b)))
         {
-            let page = PageRef::parse(&bytes[..meta.page_size], stride, meta.pq_m)?;
+            let page = PageRef::parse(&bytes[..meta.page_size], stride, code_w)?;
             if is_disk {
                 stats.bytes_used += page.used_bytes() as u64;
             }
@@ -302,7 +310,7 @@ pub fn search_pages(
                     // corrupt index rather than silently skipping.
                     anyhow::bail!("no compressed vector for neighbor {nb}");
                 };
-                debug_assert_eq!(code.len(), pq_m);
+                debug_assert_eq!(code.len(), code_w);
                 scratch.nbr_ids.push(nb);
                 scratch.nbr_codes.extend_from_slice(code);
             }

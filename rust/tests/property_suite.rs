@@ -6,7 +6,7 @@ use pageann::dataset::{DatasetKind, Dtype, SynthSpec, VectorSet};
 use pageann::distance::{l2sq_f32, l2sq_query, BatchScanner, NativeBatch};
 use pageann::layout::{IdRemap, PageRef, PageWriter};
 use pageann::pagegraph::{group_into_pages, GroupingParams};
-use pageann::pq::{PqCodebook, PqEncoder};
+use pageann::pq::{unpack_nibbles, PqCodebook, PqEncoder};
 use pageann::proptest::{default_cases, forall, gen_dim, gen_vec};
 use pageann::routing::RoutingIndex;
 use pageann::search::CandidateSet;
@@ -74,7 +74,9 @@ fn prop_page_serde_roundtrip() {
         default_cases(),
         |rng| {
             let stride = [8usize, 32, 96, 128][rng.next_below(4)];
-            let m = [4usize, 8, 16][rng.next_below(3)];
+            // Code *storage* widths, including the odd nibble-packed
+            // strides a PQ4 build produces (⌈m/2⌉ for odd m).
+            let m = [3usize, 4, 5, 8, 16][rng.next_below(5)];
             let page_size = [2048usize, 4096][rng.next_below(2)];
             let n_vecs = 1 + rng.next_below(12);
             let n_nbrs = rng.next_below(30);
@@ -100,7 +102,7 @@ fn prop_page_serde_roundtrip() {
             let mut w = PageWriter {
                 page_size,
                 vec_stride: stride,
-                pq_m: m,
+                code_bytes: m,
                 vectors: vectors.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
                 neighbors: neighbors.iter().map(|(id, c)| (*id, c.as_deref())).collect(),
             };
@@ -222,6 +224,48 @@ fn prop_pq_adc_equals_decoded_distance() {
                 assert!(
                     (adc - exact).abs() <= 1e-2 * exact.max(1.0),
                     "vector {i}: adc {adc} vs decoded-exact {exact}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pq4_adc_tracks_decoded_distance_within_quant_step() {
+    // The PQ4 fast-scan path quantizes the per-query LUT to u8, so its ADC
+    // may differ from the exact table sum by at most m rounding steps of
+    // scale/2 — on top of the PQ approximation itself. Also pins the
+    // pack → store → unpack identity against the unpacked encoder output.
+    forall(
+        "pq4-adc-consistency",
+        16, // training is expensive; fewer cases
+        |rng| {
+            let dim = [16usize, 32][rng.next_below(2)];
+            let m = [4usize, 8][rng.next_below(2)];
+            let n = 300;
+            let spec = SynthSpec::new(DatasetKind::DeepLike, n).with_dim(dim).with_clusters(5);
+            let base = spec.generate(rng.next_u64());
+            let q = gen_vec(rng, dim, 1.0);
+            (base, m, q)
+        },
+        |(base, m, q)| {
+            let cb = PqCodebook::train_with_k(&base, m, 16, 6, 9);
+            assert!(cb.packed());
+            assert_eq!(cb.code_bytes(), (m + 1) / 2);
+            let enc = PqEncoder::new(&cb);
+            let lut = cb.build_lut(&q);
+            for i in [0usize, 7, 150, 299] {
+                let v = base.get_f32(i);
+                let code = enc.encode(&v);
+                let stored = enc.encode_packed(&v);
+                assert_eq!(unpack_nibbles(&stored, m), code);
+                let adc = lut.distance(&stored);
+                let decoded = cb.decode(&code);
+                let exact = l2sq_f32(&q, &decoded);
+                let bound = 0.5 * lut.q4_scale() * m as f32 + 2e-2 * exact.max(1.0);
+                assert!(
+                    (adc - exact).abs() <= bound,
+                    "vector {i}: adc4 {adc} vs decoded-exact {exact} (bound {bound})"
                 );
             }
         },

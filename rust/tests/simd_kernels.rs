@@ -4,10 +4,11 @@
 //! scalar scanner for the SIMD scanner must not change search results.
 
 use pageann::dataset::{DatasetKind, Dtype, SynthSpec, VectorSet, Workload};
+use pageann::distance::simd::scalar_adc4_batch;
 use pageann::distance::{kernels, scalar_kernels, BatchScanner, NativeBatch, ScalarBatch};
 use pageann::engine::{run_workload, OpenOptions, PageAnnIndex};
 use pageann::layout::{BuildConfig, IndexBuilder};
-use pageann::pq::{AdcLut, PqCodebook};
+use pageann::pq::{pack_nibbles, unpack_nibbles, AdcLut, PqCodebook};
 use pageann::proptest::forall;
 use pageann::util::XorShift;
 use pageann::vamana::VamanaParams;
@@ -172,6 +173,116 @@ fn adc_batch_matches_per_code_distance() {
     );
 }
 
+/// The PQ4 fast-scan kernel's contract is *bit*-exactness against its
+/// scalar oracle (integer nibble sums, shared unfused dequant), stronger
+/// than the 1e-4 tolerance of the f32 kernels — so assert `to_bits`
+/// equality across subspace counts (odd/even, above and below one
+/// register), batch sizes (remainder tails) and arbitrary nibble values.
+#[test]
+fn adc4_kernel_matches_scalar_oracle_bit_for_bit() {
+    let ks = kernels();
+    forall(
+        "adc4-bit-exact",
+        64,
+        |rng| {
+            let m = [1usize, 2, 3, 4, 7, 8, 15, 16, 32, 64][rng.next_below(10)];
+            let n = [0usize, 1, 5, 15, 16, 17, 33, 100][rng.next_below(8)];
+            let cw = (m + 1) / 2;
+            // Lead with a random pad so the code block starts at an
+            // arbitrary (SIMD-unaligned) byte offset, as gathered scratch
+            // slices do.
+            let offset = rng.next_below(4);
+            let qtable: Vec<u8> = (0..m * 16).map(|_| rng.next_below(256) as u8).collect();
+            let codes: Vec<u8> =
+                (0..offset + n * cw).map(|_| rng.next_below(256) as u8).collect();
+            let scale = rng.next_f32() * 0.5 + 1e-3;
+            let bias = rng.next_f32() * 100.0;
+            (m, n, offset, qtable, codes, scale, bias)
+        },
+        |(m, n, offset, qtable, codes, scale, bias)| {
+            let codes = &codes[offset..];
+            let mut got = vec![f32::NAN; n];
+            let mut want = vec![f32::NAN; n];
+            (ks.adc4_batch)(&qtable, m, codes, n, scale, bias, &mut got);
+            scalar_adc4_batch(&qtable, m, codes, n, scale, bias, &mut want);
+            for i in 0..n {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "row {i}/{n} m={m}: dispatched {} vs scalar {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn nibble_pack_unpack_roundtrip() {
+    forall(
+        "nibble-roundtrip",
+        64,
+        |rng| {
+            let m = 1 + rng.next_below(64);
+            let code: Vec<u8> = (0..m).map(|_| rng.next_below(16) as u8).collect();
+            code
+        },
+        |code| {
+            let m = code.len();
+            let packed = pack_nibbles(&code);
+            assert_eq!(packed.len(), (m + 1) / 2);
+            assert_eq!(unpack_nibbles(&packed, m), code);
+            // Odd m: the trailing high nibble is zero (deterministic
+            // storage bytes, so page serialization is reproducible).
+            if m % 2 == 1 {
+                assert_eq!(packed[m / 2] >> 4, 0);
+            }
+        },
+    );
+}
+
+/// PQ4 batched ADC equals per-code PQ4 ADC (the packed analogue of
+/// `adc_batch_matches_per_code_distance`) — and both run the quantized
+/// fast-scan table, so equality is exact.
+#[test]
+fn adc4_batch_matches_per_code_distance() {
+    forall(
+        "adc4-batch-vs-single",
+        24,
+        |rng| {
+            let m = [2usize, 4, 8, 16][rng.next_below(4)];
+            let n = [0usize, 1, 7, 16, 33, 100][rng.next_below(6)];
+            let dim = m * 4;
+            let spec = SynthSpec::new(DatasetKind::DeepLike, 300).with_dim(dim).with_clusters(4);
+            let base = spec.generate(rng.next_u64());
+            let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let codes: Vec<u8> =
+                (0..n * ((m + 1) / 2)).map(|_| rng.next_below(256) as u8).collect();
+            (base, m, q, codes, n)
+        },
+        |(base, m, q, codes, n)| {
+            let cb = PqCodebook::train_with_k(&base, m, 16, 4, 7);
+            assert!(cb.packed());
+            let cw = cb.code_bytes();
+            let mut lut = AdcLut::empty();
+            cb.build_lut_into(&q, &mut lut);
+            assert!(lut.is_packed());
+            let mut batch = vec![f32::NAN; n];
+            lut.distance_batch(&codes, n, &mut batch);
+            for i in 0..n {
+                let single = lut.distance(&codes[i * cw..(i + 1) * cw]);
+                assert_eq!(
+                    batch[i].to_bits(),
+                    single.to_bits(),
+                    "adc4 row {i}/{n} m={m}: batch {} vs single {single}",
+                    batch[i]
+                );
+            }
+        },
+    );
+}
+
 #[test]
 fn lut_reuse_is_equivalent_to_fresh_build() {
     // build_lut_into must fully overwrite previous contents (different m/k).
@@ -235,4 +346,44 @@ fn scalar_and_simd_scanners_give_identical_recall() {
     assert_eq!(rep_simd.summary.totals.ios, rep_scalar.summary.totals.ios);
     assert!(rep_simd.summary.recall > 0.5, "sanity: search must actually work");
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// End-to-end PQ4 acceptance gate: a nibble-packed index (k=16 codebooks,
+/// half the inline-code bytes per page, fast-scan ADC) must hold recall@10
+/// within 2 points of the PQ8 build on the synthetic benchmark. The exact
+/// rescoring of scanned page vectors bounds how much ADC coarseness can
+/// cost — PQ4 only steers traversal.
+#[test]
+fn pq4_recall_within_two_points_of_pq8() {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 3000).with_dim(32).with_clusters(16);
+    let w = Workload::synthesize(&spec, 40, 10, 0x9D4);
+    let base_dir = std::env::temp_dir().join(format!("pageann-pq4-parity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base_dir);
+    let build = |pq_k: usize, sub: &str| {
+        let dir = base_dir.join(sub);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = BuildConfig {
+            pq_m: 8,
+            pq_k,
+            vamana: VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 },
+            ..Default::default()
+        };
+        IndexBuilder::new(&w.base, cfg).build(&dir).unwrap();
+        PageAnnIndex::open(&dir, OpenOptions::default()).unwrap()
+    };
+    let idx8 = build(256, "pq8");
+    let idx4 = build(16, "pq4");
+    assert_eq!(idx8.meta.code_bytes(), 8);
+    assert_eq!(idx4.meta.code_bytes(), 4, "PQ4 index must store nibble-packed codes");
+    let rep8 = run_workload(&idx8, &w.queries, Some(&w.gt), 10, 64, 4);
+    let rep4 = run_workload(&idx4, &w.queries, Some(&w.gt), 10, 64, 4);
+    assert!(rep8.summary.recall > 0.5, "sanity: PQ8 search must work ({})", rep8.summary.recall);
+    assert!(rep4.summary.recall > 0.5, "sanity: PQ4 search must work ({})", rep4.summary.recall);
+    assert!(
+        rep4.summary.recall >= rep8.summary.recall - 0.02,
+        "PQ4 recall {} more than 2 points below PQ8 {}",
+        rep4.summary.recall,
+        rep8.summary.recall
+    );
+    std::fs::remove_dir_all(&base_dir).unwrap();
 }

@@ -1,0 +1,76 @@
+//! Vendored, dependency-free stand-in for the `libc` crate.
+//!
+//! The build is fully offline (no crates.io access), so the workspace
+//! carries exactly the C types, constants and function bindings the
+//! codebase uses (`grep -r "libc::" rust/` is the authoritative list).
+//! Everything binds to the system libc that rustc already links for std,
+//! so there is no runtime difference from the real crate — only a much
+//! smaller surface.
+//!
+//! Targets: 64-bit Linux (x86_64, aarch64) — the LP64 type mapping and the
+//! syscall numbers below are wrong elsewhere, which is fine: the AIO page
+//! store is Linux-only by nature and the rest of the workspace only needs
+//! POSIX `pread64`/`sysconf`.
+
+#![no_std]
+#![allow(non_camel_case_types, non_upper_case_globals)]
+
+pub use core::ffi::c_void;
+
+pub type c_int = i32;
+pub type c_uint = u32;
+pub type c_long = i64;
+pub type c_ulong = u64;
+pub type size_t = usize;
+pub type ssize_t = isize;
+pub type off64_t = i64;
+pub type time_t = i64;
+
+/// `struct timespec` (LP64 layout).
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct timespec {
+    pub tv_sec: time_t,
+    pub tv_nsec: c_long,
+}
+
+// sysconf(3) names.
+pub const _SC_CLK_TCK: c_int = 2;
+
+// errno values (identical on x86_64 and aarch64 Linux).
+pub const EINTR: c_int = 4;
+pub const EAGAIN: c_int = 11;
+pub const EINVAL: c_int = 22;
+
+// Linux AIO syscall numbers.
+#[cfg(target_arch = "x86_64")]
+mod sysnr {
+    use super::c_long;
+    pub const SYS_io_setup: c_long = 206;
+    pub const SYS_io_destroy: c_long = 207;
+    pub const SYS_io_getevents: c_long = 208;
+    pub const SYS_io_submit: c_long = 209;
+    pub const SYS_io_cancel: c_long = 210;
+}
+#[cfg(target_arch = "aarch64")]
+mod sysnr {
+    use super::c_long;
+    pub const SYS_io_setup: c_long = 0;
+    pub const SYS_io_destroy: c_long = 1;
+    pub const SYS_io_submit: c_long = 2;
+    pub const SYS_io_cancel: c_long = 3;
+    pub const SYS_io_getevents: c_long = 4;
+}
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub use sysnr::*;
+
+extern "C" {
+    /// Raw variadic syscall(2) — the AIO page store issues `io_setup`/
+    /// `io_submit`/`io_getevents`/`io_destroy` through this.
+    pub fn syscall(num: c_long, ...) -> c_long;
+    pub fn sysconf(name: c_int) -> c_long;
+    pub fn pread64(fd: c_int, buf: *mut c_void, count: size_t, offset: off64_t) -> ssize_t;
+    /// Address of the thread-local errno (used by fault-injection tests to
+    /// set a deterministic error code).
+    pub fn __errno_location() -> *mut c_int;
+}
