@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 check (ROADMAP "Tier-1 verify") plus the PAGEANN_IO backend
+# matrix from ISSUE 3: the io-store conformance suite runs once per
+# backend preference. Unavailable backends skip inside the suite (the
+# open_with ladder falls back), so every leg passes on every kernel —
+# including the 4.4 CI kernel, which predates io_uring.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: test =="
+cargo test -q
+
+echo "== tier-1: PAGEANN_IO matrix =="
+for io in auto uring aio pread; do
+    echo "-- io backend leg: $io --"
+    if [ "$io" = auto ]; then
+        env -u PAGEANN_IO cargo test -q --test io_stores
+    else
+        PAGEANN_IO=$io cargo test -q --test io_stores
+    fi
+done
+
+echo "== tier-1: bench rows (BENCH_adc.json, BENCH_io.json) =="
+cargo bench --bench hot_paths
+
+echo "tier-1 OK"

@@ -15,7 +15,7 @@ pub use server::{QueryClient, QueryServer, ServerHandle};
 use crate::cache::{MemCodes, PageCache};
 use crate::dataset::VectorSet;
 use crate::distance::{BatchScanner, NativeBatch};
-use crate::io::{open_auto, PageStore, SimSsdStore, SsdModel};
+use crate::io::{open_with, PageStore, SimSsdStore, SsdModel};
 use crate::layout::{IndexFiles, IndexMeta};
 use crate::metrics::QueryStats;
 use crate::pq::PqCodebook;
@@ -45,6 +45,10 @@ pub struct OpenOptions {
     pub scanner: Option<Box<dyn BatchScanner>>,
     /// Base search params (io_batch, routing probe) used by `search_one`.
     pub params: SearchParams,
+    /// I/O backend preference (`uring`/`aio`/`pread`). `None` = honor the
+    /// `PAGEANN_IO` env override, then probe uring → aio → pread. A
+    /// preference redirects the probe but can never fail the open.
+    pub io_backend: Option<String>,
 }
 
 impl Default for OpenOptions {
@@ -54,6 +58,7 @@ impl Default for OpenOptions {
             cache_budget_bytes: 0,
             scanner: None,
             params: SearchParams::default(),
+            io_backend: None,
         }
     }
 }
@@ -61,6 +66,9 @@ impl Default for OpenOptions {
 pub struct PageAnnIndex {
     pub meta: IndexMeta,
     store: Box<dyn PageStore>,
+    /// Raw backend selected by the open probe (`io-uring`/`linux-aio`/
+    /// `pread`) — the store itself may be wrapped in the sim-SSD model.
+    io_backend: &'static str,
     cache: PageCache,
     memcodes: MemCodes,
     routing: Option<RoutingIndex>,
@@ -78,8 +86,9 @@ impl PageAnnIndex {
     pub fn open(dir: &Path, opts: OpenOptions) -> Result<Self> {
         let meta = IndexMeta::load(dir)?;
         let files = IndexFiles::new(dir);
-        let raw = open_auto(&files.pages(), meta.page_size)?;
+        let raw = open_with(&files.pages(), meta.page_size, opts.io_backend.as_deref())?;
         anyhow::ensure!(raw.n_pages() == meta.n_pages, "pages.bin size mismatch");
+        let io_backend = raw.name();
         let store: Box<dyn PageStore> = match opts.sim_ssd {
             Some(model) => Box::new(SimSsdStore::new(raw, model)),
             None => raw,
@@ -113,10 +122,16 @@ impl PageAnnIndex {
             params: opts.params,
             meta,
             store,
+            io_backend,
             memcodes,
             routing,
             pq,
         })
+    }
+
+    /// Raw I/O backend the open probe selected (before any sim-SSD wrap).
+    pub fn io_backend(&self) -> &'static str {
+        self.io_backend
     }
 
     /// Entry points for a query: routing probe, medoid fallback.

@@ -74,6 +74,8 @@ unsafe fn io_getevents(
 struct CtxPool {
     free: Mutex<Vec<libc::c_ulong>>,
     depth: usize,
+    /// Contexts created at open — the cap on concurrently-async batches.
+    total: usize,
 }
 
 impl CtxPool {
@@ -90,7 +92,7 @@ impl CtxPool {
             }
             free.push(ctx);
         }
-        Ok(Self { free: Mutex::new(free), depth })
+        Ok(Self { free: Mutex::new(free), depth, total: n_ctx })
     }
 
     fn lease(&self) -> Option<libc::c_ulong> {
@@ -293,7 +295,9 @@ fn submit_all(
 
 impl AioPageStore {
     fn validate(&self, page_ids: &[u32], out: &[Vec<u8>]) -> Result<()> {
-        assert_eq!(page_ids.len(), out.len());
+        // An error, not an assert: the trait's multi-batch contract says
+        // invalid input surfaces from wait() with the buffers intact.
+        anyhow::ensure!(page_ids.len() == out.len(), "ids/buffers length mismatch");
         for (&p, buf) in page_ids.iter().zip(out.iter()) {
             anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
             anyhow::ensure!(buf.len() == self.page_size, "bad buffer size");
@@ -302,20 +306,19 @@ impl AioPageStore {
     }
 
     /// Submit now; completion happens in the returned waiter (io_getevents)
-    /// — the paper's §5 submit/compute/getevents pipeline primitive.
-    fn submit_only<'a>(
-        &'a self,
-        page_ids: &[u32],
-        out: &'a mut [Vec<u8>],
-    ) -> Result<super::PendingRead<'a>> {
+    /// — the paper's §5 submit/compute/getevents pipeline primitive. Takes
+    /// ownership of the buffers and hands them back from `wait` (even on
+    /// error), per the trait's multi-batch contract; each batch leases its
+    /// own AIO context, so up to `ctxs.total` batches can be in flight.
+    fn submit_only(&self, page_ids: &[u32], mut bufs: Vec<Vec<u8>>) -> super::PendingRead<'_> {
         let n = page_ids.len();
         if n == 0 {
-            return Ok(super::PendingRead::ready());
+            return super::PendingRead::done(bufs, Ok(()));
         }
         // Deep overflow or no free context: fall back to synchronous.
         let Some(ctx) = (n <= self.ctxs.depth).then(|| self.ctxs.lease()).flatten() else {
-            self.read_batch_aio(page_ids, out)?;
-            return Ok(super::PendingRead::ready());
+            let result = self.read_batch_aio(page_ids, &mut bufs);
+            return super::PendingRead::done(bufs, result);
         };
         let fd = self.file.as_raw_fd() as u32;
         let mut iocbs: Vec<Iocb> = (0..n)
@@ -326,7 +329,7 @@ impl AioPageStore {
                 aio_lio_opcode: IOCB_CMD_PREAD,
                 aio_reqprio: 0,
                 aio_fildes: fd,
-                aio_buf: out[k].as_mut_ptr() as u64,
+                aio_buf: bufs[k].as_mut_ptr() as u64,
                 aio_nbytes: self.page_size as u64,
                 aio_offset: (page_ids[k] as u64 * self.page_size as u64) as i64,
                 aio_reserved2: 0,
@@ -338,21 +341,26 @@ impl AioPageStore {
         // Partial-submit failure: submit_all reaps what went out (and folds
         // a reap error into the returned one instead of discarding it)
         // before bailing; disposal then pools or destroys the ctx depending
-        // on whether the kernel still owns iocbs.
+        // on whether the kernel still owns iocbs. Either way nothing stays
+        // in flight, so the buffers go straight back to the caller.
         if let Err(e) = submit_all(ctx, &mut ptrs, self.page_size, io_submit) {
-            return Err(dispose_ctx_on_error(&self.ctxs, ctx, e));
+            let err = dispose_ctx_on_error(&self.ctxs, ctx, e);
+            return super::PendingRead::done(bufs, Err(err));
         }
         let page_size = self.page_size;
         let ctxs = &self.ctxs;
-        Ok(super::PendingRead::deferred(move || {
-            match reap(ctx, n, page_size) {
+        // `bufs` moves into the closure: moving the outer Vec does not move
+        // the heap blocks the submitted iocbs point into.
+        super::PendingRead::deferred(move || {
+            let result = match reap(ctx, n, page_size) {
                 Ok(()) => {
                     ctxs.put_back(ctx);
                     Ok(())
                 }
                 Err(e) => Err(dispose_ctx_on_error(ctxs, ctx, e)),
-            }
-        }))
+            };
+            (bufs, result)
+        })
     }
 }
 
@@ -425,9 +433,15 @@ impl PageStore for AioPageStore {
         self.read_batch_aio(page_ids, out)
     }
 
-    fn begin_read<'a>(&'a self, page_ids: &[u32], out: &'a mut [Vec<u8>]) -> Result<super::PendingRead<'a>> {
-        self.validate(page_ids, out)?;
-        self.submit_only(page_ids, out)
+    fn begin_read(&self, page_ids: &[u32], bufs: Vec<Vec<u8>>) -> super::PendingRead<'_> {
+        if let Err(e) = self.validate(page_ids, &bufs) {
+            return super::PendingRead::done(bufs, Err(e));
+        }
+        self.submit_only(page_ids, bufs)
+    }
+
+    fn max_inflight_batches(&self) -> usize {
+        self.ctxs.total
     }
 
     fn name(&self) -> &'static str {

@@ -1,64 +1,125 @@
 //! Page I/O engine.
 //!
-//! Three page stores behind one trait:
+//! Four page stores behind one trait:
 //!
-//! * [`AioPageStore`] — real Linux AIO (`io_submit`/`io_getevents` through
-//!   `libc`), submitting each batch as one syscall and overlapping
-//!   completion waits with deferred computation, as in the paper's §5
-//!   pipeline. Falls back automatically when the kernel lacks AIO.
-//! * [`PreadPageStore`] — positional reads (`pread64`), batched loop.
+//! * [`UringPageStore`] — io_uring (`io_uring_setup`/`io_uring_enter`
+//!   through raw syscalls + mmap'd SQ/CQ rings), one shared deep-queue
+//!   ring per store with tagged submissions, so any number of batches can
+//!   be in flight and complete out of order.
+//! * [`AioPageStore`] — Linux AIO (`io_submit`/`io_getevents`), one AIO
+//!   context leased per in-flight batch from a pool.
+//! * [`PreadPageStore`] — positional reads (`pread64`), batched loop; the
+//!   portable synchronous fallback.
 //! * [`SimSsdStore`] — wraps another store and enforces a deterministic
 //!   NVMe timing model (base latency + bandwidth + bounded queue depth), so
 //!   experiments measure the paper's I/O-bound regime even when the host
 //!   page cache would hide it (DESIGN.md §3 substitution table).
+//!
+//! # Backend selection matrix
+//!
+//! [`open_auto`] probes backends in order **uring → aio → pread** and
+//! returns the first that passes an *actual read* at open time — a backend
+//! whose setup syscall succeeds but whose first submission fails (seccomp
+//! filters, weird filesystems) must fall back cleanly, not at query time.
+//! The CI kernel (4.4) predates io_uring entirely, so the fallback path is
+//! first-class, like the `xla` feature stub.
+//!
+//! | `PAGEANN_IO` | behaviour                                            |
+//! |--------------|------------------------------------------------------|
+//! | unset        | probe uring → aio → pread, first healthy one wins    |
+//! | `uring`      | try uring; on failure fall through to aio → pread    |
+//! | `aio`        | try aio; on failure fall through to pread            |
+//! | `pread`      | pread unconditionally                                |
+//! | other        | warn, then behave as unset                           |
+//!
+//! The override mirrors `PAGEANN_SIMD`: a forced value can never fail the
+//! open — it only changes where probing starts.
+//!
+//! # Multi-batch contract
+//!
+//! [`PageStore::begin_read`] takes *owned* buffers and hands them back
+//! from [`PendingRead::wait`] — even on error — so a caller can hold any
+//! number of outstanding `PendingRead`s against one store (the uring store
+//! tags each submission and completes them out of order from a single
+//! ring) and its buffer pool can never leak through an error path.
 
 mod aio;
 mod pread;
 mod simssd;
+mod uring;
 
 pub use aio::AioPageStore;
 pub use pread::PreadPageStore;
 pub use simssd::{SimSsdStore, SsdModel};
+pub use uring::UringPageStore;
 
 use crate::Result;
 use std::path::Path;
 
-/// A not-yet-completed batch read: call [`PendingRead::wait`] before
-/// touching the output buffers. Stores without true async I/O return an
-/// already-completed handle (the default `begin_read` reads synchronously).
+/// A not-yet-completed batch read that **owns its output buffers**: call
+/// [`PendingRead::wait`] to get them back, filled. Stores without true
+/// async I/O return an already-completed handle (the default `begin_read`
+/// reads synchronously before returning).
+///
+/// Any number of `PendingRead`s may be outstanding against one store at a
+/// time; they may be waited in any order. Dropping a handle without
+/// waiting still drives the read to completion (the kernel owns the
+/// buffers until then) but discards the buffers — wait if you pool them.
 pub struct PendingRead<'a> {
-    complete: Option<Box<dyn FnOnce() -> Result<()> + 'a>>,
+    inner: Option<PendingInner<'a>>,
+}
+
+enum PendingInner<'a> {
+    /// Completed (or failed) at submit time.
+    Done { bufs: Vec<Vec<u8>>, result: Result<()> },
+    /// Completion is driven by the closure, which owns the buffers (and
+    /// whatever kernel-visible state — iovecs, ring tags — must outlive
+    /// the submission).
+    Deferred(Box<dyn FnOnce() -> (Vec<Vec<u8>>, Result<()>) + 'a>),
 }
 
 impl<'a> PendingRead<'a> {
-    /// An already-completed read.
-    pub fn ready() -> Self {
-        Self { complete: None }
+    /// An already-completed read (also used to surface submit-time errors
+    /// without losing the caller's buffers).
+    pub fn done(bufs: Vec<Vec<u8>>, result: Result<()>) -> Self {
+        Self { inner: Some(PendingInner::Done { bufs, result }) }
     }
 
-    /// A read whose completion is driven by `f`.
-    pub fn deferred(f: impl FnOnce() -> Result<()> + 'a) -> Self {
-        Self { complete: Some(Box::new(f)) }
+    /// A read whose completion is driven by `f`. `f` must return the
+    /// output buffers in their original order, filled on `Ok`.
+    pub fn deferred(f: impl FnOnce() -> (Vec<Vec<u8>>, Result<()>) + 'a) -> Self {
+        Self { inner: Some(PendingInner::Deferred(Box::new(f))) }
     }
 
-    /// Block until the buffers are filled.
-    pub fn wait(mut self) -> Result<()> {
-        match self.complete.take() {
-            Some(f) => f(),
-            None => Ok(()),
+    /// Block until the read completes, returning the buffers. The buffers
+    /// come back on the error path too, so pooled buffers survive every
+    /// exit.
+    pub fn wait(mut self) -> (Vec<Vec<u8>>, Result<()>) {
+        match self.inner.take() {
+            Some(PendingInner::Done { bufs, result }) => (bufs, result),
+            Some(PendingInner::Deferred(f)) => f(),
+            None => (Vec::new(), Ok(())),
         }
     }
 
     pub fn is_async(&self) -> bool {
-        self.complete.is_some()
+        matches!(self.inner, Some(PendingInner::Deferred(_)))
+    }
+
+    /// True when the read has already completed **with an error** —
+    /// submit-time failures surface this way under the owned-buffer
+    /// contract, letting wrappers (e.g. the sim-SSD model) short-circuit
+    /// before charging modeled device time for a command that never ran.
+    pub fn completed_err(&self) -> bool {
+        matches!(&self.inner, Some(PendingInner::Done { result: Err(_), .. }))
     }
 }
 
 impl<'a> Drop for PendingRead<'a> {
     fn drop(&mut self) {
         // A dropped-without-wait pending read must still complete: the
-        // kernel owns the buffers until io_getevents returns.
-        if let Some(f) = self.complete.take() {
+        // kernel owns the buffers until the completion is reaped.
+        if let Some(PendingInner::Deferred(f)) = self.inner.take() {
             let _ = f();
         }
     }
@@ -72,27 +133,75 @@ pub trait PageStore: Send + Sync {
     fn read_pages(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()>;
     fn name(&self) -> &'static str;
 
-    /// Start a batch read, returning a completion handle (paper §5:
-    /// io_submit now, io_getevents inside [`PendingRead::wait`], with the
-    /// caller free to compute in between). Default: synchronous.
+    /// Start a batch read, taking ownership of `bufs` (one buffer per page
+    /// id, each exactly `page_size` long) and returning a completion
+    /// handle that yields them back (paper §5: submit now, complete inside
+    /// [`PendingRead::wait`], with the caller free to compute — or submit
+    /// more batches — in between). Invalid input surfaces as an error from
+    /// `wait`, never by swallowing the buffers. Default: synchronous.
     ///
-    /// The output buffers must not be read until `wait` returns.
-    fn begin_read<'a>(&'a self, page_ids: &[u32], out: &'a mut [Vec<u8>]) -> Result<PendingRead<'a>> {
-        self.read_pages(page_ids, out)?;
-        Ok(PendingRead::ready())
+    /// Callers may hold several outstanding handles per store (see the
+    /// module-level multi-batch contract) and wait them in any order.
+    fn begin_read(&self, page_ids: &[u32], mut bufs: Vec<Vec<u8>>) -> PendingRead<'_> {
+        let result = self.read_pages(page_ids, &mut bufs);
+        PendingRead::done(bufs, result)
+    }
+
+    /// Upper bound on how many `begin_read` batches can *usefully* be in
+    /// flight at once. 1 means `begin_read` completes synchronously, so
+    /// speculative submission buys nothing (and costs wasted reads).
+    fn max_inflight_batches(&self) -> usize {
+        1
     }
 }
 
-/// Open the best available store for `path`: AIO if the kernel supports it,
-/// otherwise pread.
+/// Open the best available store for `path`: io_uring if the kernel
+/// supports it, else Linux AIO, else pread — each verified with a real
+/// probe read at open time. `PAGEANN_IO=uring|aio|pread` overrides where
+/// probing starts (see the module docs); an override can redirect the
+/// probe but never make the open fail.
 pub fn open_auto(path: &Path, page_size: usize) -> Result<Box<dyn PageStore>> {
-    match AioPageStore::open(path, page_size) {
-        Ok(s) => Ok(Box::new(s)),
-        Err(e) => {
-            eprintln!("io: AIO unavailable ({e}); falling back to pread");
-            Ok(Box::new(PreadPageStore::open(path, page_size)?))
+    open_with(path, page_size, None)
+}
+
+/// [`open_auto`] with an explicit backend preference taking precedence
+/// over the `PAGEANN_IO` environment override.
+pub fn open_with(
+    path: &Path,
+    page_size: usize,
+    prefer: Option<&str>,
+) -> Result<Box<dyn PageStore>> {
+    let env = std::env::var("PAGEANN_IO").ok();
+    let pref = prefer.or(env.as_deref());
+    // Which rung of the uring → aio → pread ladder to start on.
+    let start = match pref {
+        Some("uring") | None => 0,
+        Some("aio") => 1,
+        Some("pread") => 2,
+        Some(other) => {
+            eprintln!("io: unknown PAGEANN_IO={other:?} (uring|aio|pread); probing all backends");
+            0
+        }
+    };
+    if start <= 0 {
+        match UringPageStore::open(path, page_size) {
+            Ok(s) => return Ok(Box::new(s)),
+            Err(e) => {
+                // Expected on kernels < 5.1 (ENOSYS) — stay quiet unless
+                // the user explicitly asked for uring.
+                if pref == Some("uring") {
+                    eprintln!("io: io_uring unavailable ({e}); falling back");
+                }
+            }
         }
     }
+    if start <= 1 {
+        match AioPageStore::open(path, page_size) {
+            Ok(s) => return Ok(Box::new(s)),
+            Err(e) => eprintln!("io: AIO unavailable ({e}); falling back to pread"),
+        }
+    }
+    Ok(Box::new(PreadPageStore::open(path, page_size)?))
 }
 
 #[cfg(test)]
@@ -129,6 +238,28 @@ mod tests {
         assert!(store.read_pages(&[99], &mut one).is_err());
         // Empty batch is a no-op.
         store.read_pages(&[], &mut []).unwrap();
+        // begin_read hands the buffers back, filled, even across two
+        // simultaneously outstanding batches waited in reverse order.
+        let ids_a = vec![2u32, 5];
+        let ids_b = vec![8u32, 4];
+        let mk = |n: usize| -> Vec<Vec<u8>> { (0..n).map(|_| vec![0u8; page_size]).collect() };
+        let pa = store.begin_read(&ids_a, mk(2));
+        let pb = store.begin_read(&ids_b, mk(2));
+        let (bufs_b, rb) = pb.wait();
+        let (bufs_a, ra) = pa.wait();
+        ra.unwrap();
+        rb.unwrap();
+        for (ids, bufs) in [(&ids_a, &bufs_a), (&ids_b, &bufs_b)] {
+            for (k, &p) in ids.iter().enumerate() {
+                for (i, &b) in bufs[k].iter().enumerate() {
+                    assert_eq!(b, ((p as usize * 131 + i) % 251) as u8, "page {p} byte {i}");
+                }
+            }
+        }
+        // Errors surface from wait() WITH the buffers (pool-leak contract).
+        let (back, r) = store.begin_read(&[99], mk(1)).wait();
+        assert!(r.is_err(), "out-of-range begin_read must fail");
+        assert_eq!(back.len(), 1, "buffers must come back on the error path");
     }
 
     #[test]
@@ -156,11 +287,41 @@ mod tests {
     }
 
     #[test]
+    fn uring_store_reads_correct_pages_or_is_unavailable() {
+        let path = tmpfile("uring");
+        write_test_pages(&path, 4096, 10);
+        match UringPageStore::open(&path, 4096) {
+            Ok(s) => {
+                assert_eq!(s.n_pages(), 10);
+                check_store(&s, 4096);
+            }
+            Err(e) => eprintln!("io_uring unavailable in this environment: {e}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn open_auto_always_works() {
         let path = tmpfile("auto");
         write_test_pages(&path, 2048, 10);
         let s = open_auto(&path, 2048).unwrap();
         check_store(s.as_ref(), 2048);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_with_any_preference_always_works() {
+        // A preference changes where probing starts; it can never fail the
+        // open — the acceptance contract for kernels without io_uring.
+        let path = tmpfile("pref");
+        write_test_pages(&path, 2048, 10);
+        for pref in ["uring", "aio", "pread", "bogus"] {
+            let s = open_with(&path, 2048, Some(pref)).unwrap();
+            check_store(s.as_ref(), 2048);
+        }
+        // An explicit pread preference must actually select pread.
+        let s = open_with(&path, 2048, Some("pread")).unwrap();
+        assert_eq!(s.name(), "pread");
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -1,5 +1,12 @@
 //! Positional-read page store (`pread64` through libc) — the portable
 //! fallback and the backend the simulated-SSD wrapper defaults to.
+//!
+//! The read loop distinguishes the three `pread` outcomes precisely:
+//! a negative return with `EINTR` is retried (a signal mid-read is not a
+//! failure), any other negative return surfaces the real errno, and a
+//! zero return is reported as a distinct unexpected-EOF error — folding it
+//! into the generic failure path used to print the misleading
+//! "pread failed: Success" (errno is not set on EOF).
 
 use super::PageStore;
 use crate::Result;
@@ -31,7 +38,10 @@ impl PageStore for PreadPageStore {
     }
 
     fn read_pages(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()> {
-        assert_eq!(page_ids.len(), out.len());
+        // An error, not an assert: the default begin_read routes here, and
+        // the trait contract promises invalid input surfaces from wait()
+        // with the buffers intact rather than panicking the query thread.
+        anyhow::ensure!(page_ids.len() == out.len(), "ids/buffers length mismatch");
         let fd = self.file.as_raw_fd();
         for (k, &p) in page_ids.iter().enumerate() {
             anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
@@ -47,7 +57,17 @@ impl PageStore for PreadPageStore {
                         (p as i64 * self.page_size as i64 + done as i64) as libc::off64_t,
                     )
                 };
-                anyhow::ensure!(rc > 0, "pread failed: {}", std::io::Error::last_os_error());
+                if rc < 0 {
+                    let err = std::io::Error::last_os_error();
+                    if err.raw_os_error() == Some(libc::EINTR) {
+                        continue; // interrupted by a signal: retry, not an error
+                    }
+                    anyhow::bail!("pread failed: {err}");
+                }
+                anyhow::ensure!(
+                    rc != 0,
+                    "pread hit unexpected EOF at page {p} byte {done} (file truncated?)"
+                );
                 done += rc as usize;
             }
         }

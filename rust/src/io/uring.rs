@@ -1,0 +1,945 @@
+//! io_uring page store: one shared deep-queue ring per store, tagged
+//! submissions, out-of-order completion — the deepest submission path in
+//! the backend matrix (module docs in `io/mod.rs`).
+//!
+//! Implemented over the raw `io_uring_setup`/`io_uring_enter` syscalls and
+//! mmap'd SQ/CQ rings through the vendored `libc` shim (the offline build
+//! has no io-uring crate). Design notes:
+//!
+//! * **One ring, many batches.** Every `begin_read` stamps its SQEs with
+//!   `user_data = batch_id << 32 | index` and registers the batch in a
+//!   table; whoever reaps a completion credits it to the owning batch, so
+//!   any number of `PendingRead`s can be outstanding and waited in any
+//!   order. The ring (and table) sit behind one mutex, but the mutex
+//!   covers only short critical sections: the blocking
+//!   `io_uring_enter(GETEVENTS)` park happens *outside* the lock, done by
+//!   one designated reaper at a time while other waiters sleep on a
+//!   condvar ([`await_ring`]) — so a thread waiting on the device never
+//!   serializes other threads' submissions.
+//! * **READV, not READ.** `IORING_OP_READV` works on every io_uring kernel
+//!   (5.1+); `IORING_OP_READ` needs 5.6. The per-batch iovec array is
+//!   owned by the `PendingRead` closure, so it outlives the submission.
+//! * **SQ/CQ mapped separately.** Both the pre- and post-5.4
+//!   (`IORING_FEAT_SINGLE_MMAP`) kernels serve the legacy two-mmap layout,
+//!   so the store uses it unconditionally.
+//! * **No CQ overflow.** Submission never lets more than `cq_entries`
+//!   reads be in flight (pre-5.5 kernels drop overflowing completions);
+//!   when the CQ budget is exhausted it reaps other batches' completions
+//!   first. Batches wider than the budget fall back to chunked synchronous
+//!   reads.
+//! * **Error-path contract** (same spirit as the AIO store): once the
+//!   kernel has accepted an SQE it may write into the target buffer until
+//!   the CQE is reaped. A failed submit first *rewinds* the SQ tail over
+//!   the entries the kernel has not consumed (we are the only submitter,
+//!   under the lock), then reaps everything it did consume, so no error
+//!   return ever leaves the kernel writing into freed memory. If that
+//!   drain itself fails hard — not observed in practice — the ring is
+//!   poisoned and its fd closed; because ring teardown is *asynchronous*
+//!   on modern kernels (no blocking `io_destroy` equivalent), the
+//!   still-outstanding buffers are then **leaked** rather than reused
+//!   ([`UringError::buffers_released`]).
+
+use super::{PageStore, PendingRead};
+use crate::Result;
+use std::collections::HashMap;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// SQ depth hint passed to `io_uring_setup` (the kernel rounds to a power
+/// of two and sizes the CQ at 2×).
+const SQ_DEPTH: u32 = 256;
+
+/// `user_data` tag for self-posted NOP wakeups (see [`Ring::post_nop`]);
+/// never collides with read tags, whose batch ids are sequential.
+const NOP_TAG: u64 = u64::MAX;
+
+unsafe fn io_uring_setup(entries: u32, p: *mut libc::io_uring_params) -> libc::c_long {
+    libc::syscall(libc::SYS_io_uring_setup, entries as libc::c_ulong, p)
+}
+
+unsafe fn io_uring_enter(
+    fd: libc::c_int,
+    to_submit: u32,
+    min_complete: u32,
+    flags: u32,
+) -> libc::c_long {
+    libc::syscall(
+        libc::SYS_io_uring_enter,
+        fd as libc::c_long,
+        to_submit as libc::c_ulong,
+        min_complete as libc::c_ulong,
+        flags as libc::c_ulong,
+        core::ptr::null::<libc::c_void>(),
+        0usize,
+    )
+}
+
+/// Close-on-drop fd.
+struct Fd(libc::c_int);
+
+impl Drop for Fd {
+    fn drop(&mut self) {
+        if self.0 >= 0 {
+            unsafe { libc::close(self.0) };
+        }
+    }
+}
+
+/// Unmapped-on-drop mmap region over the ring fd.
+struct MmapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl MmapRegion {
+    fn map(fd: libc::c_int, len: usize, offset: u64) -> Result<Self> {
+        let ptr = unsafe {
+            libc::mmap(
+                core::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED | libc::MAP_POPULATE,
+                fd,
+                offset as libc::off64_t,
+            )
+        };
+        anyhow::ensure!(
+            ptr != libc::MAP_FAILED,
+            "io_uring mmap (offset {offset:#x}) failed: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(Self { ptr: ptr as *mut u8, len })
+    }
+
+    /// Pointer `off` bytes into the region. The caller promises `T` fits.
+    fn at<T>(&self, off: u32) -> *mut T {
+        unsafe { self.ptr.add(off as usize) as *mut T }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        unsafe { libc::munmap(self.ptr as *mut libc::c_void, self.len) };
+    }
+}
+
+/// One in-flight batch: how many of its reads the kernel still owns, and
+/// the first error observed among its completions.
+struct BatchState {
+    remaining: usize,
+    error: Option<String>,
+}
+
+/// Error from the submit/wait paths, recording whether the kernel has
+/// *verifiably* released every buffer of the failed batch.
+struct UringError {
+    /// False when the ring had to be poisoned with reads still
+    /// outstanding: closing the fd starts teardown, but on modern kernels
+    /// (5.10+) that teardown runs asynchronously in a workqueue
+    /// (`io_ring_exit_work`), so the buffers must be treated as still
+    /// kernel-owned — leaked, never returned to a pool.
+    buffers_released: bool,
+    err: anyhow::Error,
+}
+
+impl UringError {
+    /// An error on a path where nothing of this batch is in flight.
+    fn clean(err: anyhow::Error) -> Self {
+        Self { buffers_released: true, err }
+    }
+}
+
+/// The mmap'd ring plus all mutable submission/completion state, guarded
+/// by one mutex in [`UringPageStore`].
+struct Ring {
+    fd: Fd,
+    // Regions kept alive for the pointers below; never read directly.
+    _sq: MmapRegion,
+    _cq: MmapRegion,
+    _sqes: MmapRegion,
+    sq_head: *const AtomicU32,
+    sq_tail: *const AtomicU32,
+    sq_mask: u32,
+    sq_entries: u32,
+    sq_array: *mut u32,
+    cq_head: *const AtomicU32,
+    cq_tail: *const AtomicU32,
+    cq_mask: u32,
+    cq_entries: u32,
+    cqes: *const libc::io_uring_cqe,
+    sqes_ptr: *mut libc::io_uring_sqe,
+    page_size: usize,
+    /// Reads the kernel currently owns (≤ cq_entries, the no-overflow
+    /// invariant).
+    in_flight: usize,
+    next_batch: u32,
+    batches: HashMap<u32, BatchState>,
+    /// True while one thread is parked in an *unlocked*
+    /// `io_uring_enter(GETEVENTS)` (the designated reaper of
+    /// [`await_ring`]); CQEs are normally only consumed when this is
+    /// false, so the kernel's wait re-check cannot strand the sleeper.
+    reaper_active: bool,
+    /// A locked cold-path drain consumed CQEs while a reaper was parked,
+    /// but the NOP wakeup could not be posted yet (SQEs of an in-progress
+    /// submission were published, and an enter would consume *those*
+    /// head-first). Retried by [`Ring::try_post_nop`] whenever the SQ is
+    /// observed empty again.
+    reaper_wake_pending: bool,
+    /// A wake NOP has been submitted and its CQE not yet consumed. At most
+    /// one is ever outstanding, which is exactly what the `+ 1` CQ-budget
+    /// reservation in `submit_batch` accounts for.
+    nop_in_flight: bool,
+    /// The ring was poisoned while a reaper was parked in GETEVENTS, so
+    /// the fd close was deferred (closing it would let the fd number be
+    /// reused and strand the reaper on an unrelated file). The reaper
+    /// performs the close when it unparks.
+    close_deferred: bool,
+    /// Set when an unrecoverable ring error forced the fd closed; all
+    /// later operations fail fast.
+    poisoned: bool,
+}
+
+// The raw pointers all target the mmap regions owned by this struct;
+// access is serialized by the surrounding Mutex.
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn create(page_size: usize) -> Result<Self> {
+        let mut p = libc::io_uring_params::default();
+        let rc = unsafe { io_uring_setup(SQ_DEPTH, &mut p) };
+        anyhow::ensure!(
+            rc >= 0,
+            "io_uring_setup failed: {}",
+            std::io::Error::last_os_error()
+        );
+        let fd = Fd(rc as libc::c_int);
+        let sq_len = p.sq_off.array as usize + p.sq_entries as usize * 4;
+        let cq_len = p.cq_off.cqes as usize
+            + p.cq_entries as usize * core::mem::size_of::<libc::io_uring_cqe>();
+        let sqes_len = p.sq_entries as usize * core::mem::size_of::<libc::io_uring_sqe>();
+        let sq = MmapRegion::map(fd.0, sq_len, libc::IORING_OFF_SQ_RING)?;
+        let cq = MmapRegion::map(fd.0, cq_len, libc::IORING_OFF_CQ_RING)?;
+        let sqes = MmapRegion::map(fd.0, sqes_len, libc::IORING_OFF_SQES)?;
+        let ring = Ring {
+            sq_head: sq.at::<AtomicU32>(p.sq_off.head),
+            sq_tail: sq.at::<AtomicU32>(p.sq_off.tail),
+            sq_mask: unsafe { *sq.at::<u32>(p.sq_off.ring_mask) },
+            sq_entries: p.sq_entries,
+            sq_array: sq.at::<u32>(p.sq_off.array),
+            cq_head: cq.at::<AtomicU32>(p.cq_off.head),
+            cq_tail: cq.at::<AtomicU32>(p.cq_off.tail),
+            cq_mask: unsafe { *cq.at::<u32>(p.cq_off.ring_mask) },
+            cq_entries: p.cq_entries,
+            cqes: cq.at::<libc::io_uring_cqe>(p.cq_off.cqes),
+            sqes_ptr: sqes.at::<libc::io_uring_sqe>(0),
+            page_size,
+            in_flight: 0,
+            next_batch: 0,
+            batches: HashMap::new(),
+            reaper_active: false,
+            reaper_wake_pending: false,
+            nop_in_flight: false,
+            close_deferred: false,
+            poisoned: false,
+            fd,
+            _sq: sq,
+            _cq: cq,
+            _sqes: sqes,
+        };
+        anyhow::ensure!(
+            ring.sq_entries > 0 && ring.cq_entries > 0,
+            "io_uring_setup returned empty rings"
+        );
+        Ok(ring)
+    }
+
+    /// Close the ring fd, which starts kernel-side cancellation of all
+    /// outstanding requests. Unlike the AIO store's `io_destroy` (which
+    /// blocks), ring teardown is asynchronous on modern kernels, so
+    /// callers must treat any still-outstanding buffers as kernel-owned
+    /// forever (`UringError::buffers_released == false` → leak them). The
+    /// store is unusable afterwards.
+    ///
+    /// If a reaper is currently parked in `io_uring_enter(GETEVENTS)` on
+    /// this fd, the close is deferred to its unpark ([`await_ring`]):
+    /// closing now would free the fd *number* for reuse, and the parked
+    /// enter could then block against an unrelated file.
+    fn poison(&mut self) {
+        self.poisoned = true;
+        if self.reaper_active {
+            self.close_deferred = true;
+            return;
+        }
+        self.close_fd();
+    }
+
+    fn close_fd(&mut self) {
+        self.close_deferred = false;
+        if self.fd.0 >= 0 {
+            unsafe { libc::close(self.fd.0) };
+            self.fd.0 = -1;
+        }
+    }
+
+    /// Sweep every CQE currently visible (never blocks), crediting each to
+    /// its batch. Returns how many *read* completions were processed (NOP
+    /// wakeups are consumed but not counted). If a reaper thread is parked
+    /// in GETEVENTS while this locked sweep consumes CQEs, a NOP is posted
+    /// so the kernel's availability re-check cannot strand it.
+    fn drain_cq(&mut self) -> usize {
+        let tail = unsafe { (*self.cq_tail).load(Ordering::Acquire) };
+        let mut head = unsafe { (*self.cq_head).load(Ordering::Relaxed) };
+        let mut real = 0usize;
+        let mut consumed = 0usize;
+        while head != tail {
+            let cqe = unsafe { *self.cqes.add((head & self.cq_mask) as usize) };
+            head = head.wrapping_add(1);
+            consumed += 1;
+            if cqe.user_data == NOP_TAG {
+                self.nop_in_flight = false;
+                continue;
+            }
+            let batch = (cqe.user_data >> 32) as u32;
+            if let Some(st) = self.batches.get_mut(&batch) {
+                st.remaining -= 1;
+                if st.error.is_none() {
+                    if cqe.res < 0 {
+                        st.error = Some(format!(
+                            "io_uring read failed: {}",
+                            std::io::Error::from_raw_os_error(-cqe.res)
+                        ));
+                    } else if cqe.res as usize != self.page_size {
+                        st.error = Some(format!(
+                            "io_uring short read: {} of {} bytes",
+                            cqe.res, self.page_size
+                        ));
+                    }
+                }
+            }
+            self.in_flight = self.in_flight.saturating_sub(1);
+            real += 1;
+        }
+        unsafe { (*self.cq_head).store(head, Ordering::Release) };
+        if consumed > 0 && self.reaper_active {
+            // The parked reaper's kernel-side availability re-check will
+            // now see an empty CQ and go back to sleep: wake it with a
+            // NOP — possibly deferred, see `try_post_nop`.
+            self.reaper_wake_pending = true;
+            self.try_post_nop();
+        }
+        real
+    }
+
+    /// Post the pending reaper-wake NOP if it is currently safe to do so.
+    /// It is **not** safe while another submission's SQEs sit published
+    /// but unconsumed in the SQ: `io_uring_enter(to_submit=1)` consumes
+    /// head-first, so it would submit *that* batch's read and wreck its
+    /// accounting (and a later tail rewind). In that case the wake stays
+    /// pending; `submit_batch` retries it at its exits, by which point the
+    /// SQ is empty again (entries consumed) or rewound.
+    fn try_post_nop(&mut self) {
+        if !self.reaper_wake_pending {
+            return;
+        }
+        if self.poisoned {
+            // A poisoned ring's fd is closed; any parked reaper's enter
+            // has already failed back to userspace.
+            self.reaper_wake_pending = false;
+            return;
+        }
+        if self.nop_in_flight {
+            // A wake is already on its way; a second NOP would exceed the
+            // single reserved CQ slot.
+            self.reaper_wake_pending = false;
+            return;
+        }
+        let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+        let tail = unsafe { (*self.sq_tail).load(Ordering::Relaxed) };
+        if tail != head {
+            return; // foreign SQEs published: defer (their completions or
+                    // a later retry will wake the reaper)
+        }
+        let slot = tail & self.sq_mask;
+        let sqe = libc::io_uring_sqe {
+            opcode: libc::IORING_OP_NOP,
+            flags: 0,
+            ioprio: 0,
+            fd: -1,
+            off: 0,
+            addr: 0,
+            len: 0,
+            rw_flags: 0,
+            user_data: NOP_TAG,
+            buf_index: 0,
+            personality: 0,
+            splice_fd_in: 0,
+            __pad2: [0; 2],
+        };
+        unsafe {
+            *self.sqes_ptr.add(slot as usize) = sqe;
+            *self.sq_array.add(slot as usize) = slot;
+            (*self.sq_tail).store(tail.wrapping_add(1), Ordering::Release);
+            // Bounded retry: an EAGAIN here is transient kernel memory
+            // pressure; yielding a few times almost always clears it. If
+            // it persists the wake stays pending for the next retry site —
+            // a stranded reaper then needs EAGAIN to persist across every
+            // later ring operation too, which compounds into vanishing
+            // probability.
+            for _ in 0..64 {
+                let rc = io_uring_enter(self.fd.0, 1, 0, 0);
+                if rc > 0 {
+                    self.nop_in_flight = true;
+                    self.reaper_wake_pending = false;
+                    return;
+                }
+                let err = std::io::Error::last_os_error();
+                if rc < 0
+                    && (err.raw_os_error() == Some(libc::EINTR)
+                        || err.raw_os_error() == Some(libc::EAGAIN))
+                {
+                    std::thread::yield_now();
+                    continue;
+                }
+                break;
+            }
+            // Not consumed: un-publish so a later batch submission's
+            // accounting never counts this stale entry as its own.
+            (*self.sq_tail).store(tail, Ordering::Release);
+        }
+    }
+
+    /// Locked, blocking completion wait for the *cold* submit/abort paths:
+    /// process completions until at least `min` read CQEs were credited.
+    /// Holding the ring lock across the blocking enter is acceptable here
+    /// (rare paths, bounded work); the hot wait path goes through
+    /// [`await_ring`], which parks outside the lock. A concurrently-parked
+    /// reaper is re-woken by `drain_cq`'s NOP.
+    fn reap(&mut self, min: usize) -> Result<()> {
+        anyhow::ensure!(!self.poisoned, "io_uring ring poisoned by an earlier failure");
+        let mut reaped = 0usize;
+        loop {
+            reaped += self.drain_cq();
+            if reaped >= min {
+                return Ok(());
+            }
+            let rc = unsafe { io_uring_enter(self.fd.0, 0, 1, libc::IORING_ENTER_GETEVENTS) };
+            if rc < 0 {
+                let err = std::io::Error::last_os_error();
+                if err.raw_os_error() == Some(libc::EINTR) {
+                    continue;
+                }
+                anyhow::bail!("io_uring_enter(GETEVENTS) failed: {err}");
+            }
+        }
+    }
+
+    /// Submit one batch of page reads; `iovs[i]` must point at the caller's
+    /// buffer for `page_ids[i]` and stay alive until the batch completes.
+    /// Returns the batch id to wait on. On error no reads remain in flight
+    /// for this batch **unless** the returned error says
+    /// `buffers_released == false` (poisoned ring — leak the buffers).
+    fn submit_batch(
+        &mut self,
+        file_fd: libc::c_int,
+        page_ids: &[u32],
+        iovs: &[libc::iovec],
+    ) -> std::result::Result<u32, UringError> {
+        if self.poisoned {
+            return Err(UringError::clean(anyhow::anyhow!(
+                "io_uring ring poisoned by an earlier failure"
+            )));
+        }
+        let n = page_ids.len();
+        debug_assert_eq!(n, iovs.len());
+        // No-overflow invariant: completions must never outnumber CQ slots
+        // (one slot is reserved for a reaper-wake NOP, which can land on a
+        // full ring). A reap failure here is clean for *this* batch
+        // (nothing submitted yet); the batches it strands are handled by
+        // their own waiters.
+        while self.in_flight + n + 1 > self.cq_entries as usize {
+            self.reap(1).map_err(UringError::clean)?;
+        }
+        let id = self.next_batch;
+        self.next_batch = self.next_batch.wrapping_add(1);
+        self.batches.insert(id, BatchState { remaining: 0, error: None });
+        let mut accepted = 0usize; // consumed by the kernel, now in flight
+        while accepted < n {
+            // SQ space: the kernel advances head as it consumes entries
+            // (always fully, in non-SQPOLL mode, by the time enter returns).
+            let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+            let tail = unsafe { (*self.sq_tail).load(Ordering::Relaxed) };
+            let free = self.sq_entries.wrapping_sub(tail.wrapping_sub(head)) as usize;
+            let take = free.min(n - accepted);
+            if take == 0 {
+                // Cannot happen (enter below always consumes), but bail
+                // rather than spin forever if a kernel ever behaves oddly.
+                return Err(self.abort_batch(
+                    id,
+                    accepted,
+                    0,
+                    tail,
+                    anyhow::anyhow!("io_uring SQ full with nothing to consume"),
+                ));
+            }
+            for k in 0..take {
+                let i = accepted + k;
+                let slot = tail.wrapping_add(k as u32) & self.sq_mask;
+                let sqe = libc::io_uring_sqe {
+                    opcode: libc::IORING_OP_READV,
+                    flags: 0,
+                    ioprio: 0,
+                    fd: file_fd,
+                    off: page_ids[i] as u64 * self.page_size as u64,
+                    addr: &iovs[i] as *const libc::iovec as u64,
+                    len: 1,
+                    rw_flags: 0,
+                    user_data: ((id as u64) << 32) | i as u64,
+                    buf_index: 0,
+                    personality: 0,
+                    splice_fd_in: 0,
+                    __pad2: [0; 2],
+                };
+                unsafe {
+                    *self.sqes_ptr.add(slot as usize) = sqe;
+                    *self.sq_array.add(slot as usize) = slot;
+                }
+            }
+            let published = tail.wrapping_add(take as u32);
+            unsafe { (*self.sq_tail).store(published, Ordering::Release) };
+            let mut to_submit = take as u32;
+            while to_submit > 0 {
+                let rc = unsafe { io_uring_enter(self.fd.0, to_submit, 0, 0) };
+                if rc < 0 {
+                    let err = std::io::Error::last_os_error();
+                    if err.raw_os_error() == Some(libc::EINTR) {
+                        continue;
+                    }
+                    if err.raw_os_error() == Some(libc::EAGAIN) && self.in_flight > 0 {
+                        // Kernel out of request slots: free some by reaping
+                        // completions, then retry. A reap failure here must
+                        // unwind like any other submit failure — rewind the
+                        // published-but-unconsumed SQEs and drain (or
+                        // poison) — or the caller would free buffers the
+                        // kernel still owns.
+                        if let Err(re) = self.reap(1) {
+                            return Err(self.abort_batch(
+                                id,
+                                accepted,
+                                to_submit,
+                                published,
+                                anyhow::anyhow!(
+                                    "io_uring_enter(submit) EAGAIN after {accepted}/{n}, \
+                                     and reaping to free slots failed: {re}"
+                                ),
+                            ));
+                        }
+                        continue;
+                    }
+                    return Err(self.abort_batch(
+                        id,
+                        accepted,
+                        to_submit,
+                        published,
+                        anyhow::anyhow!(
+                            "io_uring_enter(submit) failed after {accepted}/{n}: {err}"
+                        ),
+                    ));
+                }
+                let got = rc as u32;
+                to_submit -= got;
+                accepted += got as usize;
+                self.in_flight += got as usize;
+                if let Some(st) = self.batches.get_mut(&id) {
+                    st.remaining += got as usize;
+                }
+            }
+        }
+        // The SQ is empty again: deliver any reaper wake that a mid-submit
+        // drain had to defer.
+        self.try_post_nop();
+        Ok(id)
+    }
+
+    /// Unwind a partially-submitted batch: rewind the SQ tail over the
+    /// `unconsumed` entries the kernel never took (we are the only
+    /// submitter), then reap every read it *did* take so the caller's
+    /// buffers are safe to free. Consumes the batch's table entry.
+    fn abort_batch(
+        &mut self,
+        id: u32,
+        _accepted: usize,
+        unconsumed: u32,
+        published_tail: u32,
+        err: anyhow::Error,
+    ) -> UringError {
+        unsafe {
+            (*self.sq_tail)
+                .store(published_tail.wrapping_sub(unconsumed), Ordering::Release)
+        };
+        loop {
+            let outstanding = self.batches.get(&id).map(|st| st.remaining).unwrap_or(0);
+            if outstanding == 0 {
+                break;
+            }
+            if let Err(re) = self.reap(1) {
+                // Cannot drain: poison the ring. Teardown via fd close is
+                // asynchronous on modern kernels, so the caller must LEAK
+                // this batch's buffers (buffers_released = false).
+                self.poison();
+                self.batches.remove(&id);
+                return UringError {
+                    buffers_released: false,
+                    err: anyhow::anyhow!(
+                        "{err}; draining in-flight reads also failed ({re}); ring poisoned \
+                         and the batch buffers remain kernel-owned"
+                    ),
+                };
+            }
+        }
+        self.batches.remove(&id);
+        // The rewind emptied the SQ: deliver any deferred reaper wake so a
+        // reaper whose completions this drain consumed cannot stay parked.
+        self.try_post_nop();
+        UringError::clean(err)
+    }
+}
+
+pub struct UringPageStore {
+    file: std::fs::File,
+    page_size: usize,
+    n_pages: usize,
+    ring: Mutex<Ring>,
+    /// Wakes waiters sleeping in [`await_ring`] while another thread is
+    /// the designated reaper.
+    ring_cv: Condvar,
+    /// Largest batch submitted asynchronously; wider ones chunk through
+    /// the synchronous path (keeps the no-overflow invariant satisfiable).
+    max_batch: usize,
+}
+
+impl UringPageStore {
+    pub fn open(path: &Path, page_size: usize) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len() as usize;
+        anyhow::ensure!(page_size > 0 && len % page_size == 0, "file not page-aligned");
+        let ring = Ring::create(page_size)?;
+        let max_batch = (ring.cq_entries as usize / 2).max(1);
+        let store = Self {
+            file,
+            page_size,
+            n_pages: len / page_size,
+            ring: Mutex::new(ring),
+            ring_cv: Condvar::new(),
+            max_batch,
+        };
+        // Probe with a real read: a ring that opens but cannot submit
+        // (seccomp, exotic filesystems) must fail over at open() time.
+        if store.n_pages > 0 {
+            let mut probe = vec![vec![0u8; page_size]];
+            store
+                .read_pages(&[0], &mut probe)
+                .map_err(|e| anyhow::anyhow!("io_uring probe read failed: {e}"))?;
+        }
+        Ok(store)
+    }
+
+    fn validate(&self, page_ids: &[u32], bufs: &[Vec<u8>]) -> Result<()> {
+        anyhow::ensure!(page_ids.len() == bufs.len(), "ids/buffers length mismatch");
+        for (&p, buf) in page_ids.iter().zip(bufs.iter()) {
+            anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
+            anyhow::ensure!(buf.len() == self.page_size, "bad buffer size");
+        }
+        Ok(())
+    }
+
+    /// Submit + wait one batch (bounded by `max_batch`).
+    fn read_chunk(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()> {
+        let iovs: Vec<libc::iovec> = out
+            .iter_mut()
+            .map(|b| libc::iovec {
+                iov_base: b.as_mut_ptr() as *mut libc::c_void,
+                iov_len: self.page_size,
+            })
+            .collect();
+        // Two statements so the lock guard (a temporary of the first) is
+        // dropped before wait_batch re-locks the ring.
+        let submitted = self.ring.lock().unwrap().submit_batch(self.file.as_raw_fd(), page_ids, &iovs);
+        let result = submitted.and_then(|id| wait_batch(&self.ring, &self.ring_cv, id));
+        match result {
+            Ok(()) => Ok(()),
+            Err(ue) => {
+                if !ue.buffers_released {
+                    // The poisoned ring may still DMA into these buffers:
+                    // swap each one out, leak the kernel-targeted memory,
+                    // and leave the caller a correctly-sized replacement
+                    // so buffer-pool invariants hold.
+                    for b in out.iter_mut() {
+                        let kernel_owned = std::mem::replace(b, vec![0u8; self.page_size]);
+                        std::mem::forget(kernel_owned);
+                    }
+                    std::mem::forget(iovs);
+                }
+                Err(ue.err)
+            }
+        }
+    }
+}
+
+/// Run `f` under the ring lock, blocking until it yields a value. At most
+/// one thread at a time — the designated reaper — parks in
+/// `io_uring_enter(GETEVENTS)` *without* the lock, so a blocked waiter
+/// never serializes other threads' submissions; the rest sleep on the
+/// condvar. CQEs are consumed only while no reaper is parked (plus the
+/// NOP re-wake for locked cold-path drains), so the kernel's availability
+/// re-check can never strand a sleeper.
+fn await_ring<T>(
+    ring: &Mutex<Ring>,
+    cv: &Condvar,
+    mut f: impl FnMut(&mut Ring) -> std::result::Result<Option<T>, UringError>,
+) -> std::result::Result<T, UringError> {
+    let mut r = ring.lock().unwrap();
+    loop {
+        if !r.reaper_active && r.drain_cq() > 0 {
+            cv.notify_all();
+        }
+        if let Some(v) = f(&mut r)? {
+            cv.notify_all();
+            return Ok(v);
+        }
+        if r.reaper_active {
+            r = cv.wait(r).unwrap();
+            continue;
+        }
+        // Become the reaper: park in GETEVENTS without the lock.
+        r.reaper_active = true;
+        let fd = r.fd.0;
+        drop(r);
+        let rc = unsafe { io_uring_enter(fd, 0, 1, libc::IORING_ENTER_GETEVENTS) };
+        let enter_err = if rc < 0 { Some(std::io::Error::last_os_error()) } else { None };
+        r = ring.lock().unwrap();
+        r.reaper_active = false;
+        // Awake again: any wake that was queued for this park is obsolete,
+        // and a poison that deferred its fd close to us can complete now.
+        r.reaper_wake_pending = false;
+        if r.close_deferred {
+            r.close_fd();
+        }
+        cv.notify_all();
+        if let Some(e) = enter_err {
+            if e.raw_os_error() != Some(libc::EINTR) {
+                // Unrecoverable wait failure with reads outstanding:
+                // poison the ring; the caller must treat its buffers as
+                // kernel-owned (ring teardown is asynchronous).
+                r.poison();
+                return Err(UringError {
+                    buffers_released: false,
+                    err: anyhow::anyhow!("io_uring_enter(GETEVENTS) failed: {e}"),
+                });
+            }
+        }
+    }
+}
+
+/// Block until batch `id` fully completes. Completions reaped along the
+/// way may belong to other threads' batches; they are credited to those
+/// batches' table entries. `buffers_released == false` in the error means
+/// the batch's buffers are still kernel-owned (leak them).
+fn wait_batch(ring: &Mutex<Ring>, cv: &Condvar, id: u32) -> std::result::Result<(), UringError> {
+    await_ring(ring, cv, |r| {
+        let remaining = match r.batches.get(&id) {
+            None => {
+                return Err(UringError::clean(anyhow::anyhow!("unknown io_uring batch {id}")))
+            }
+            Some(st) => st.remaining,
+        };
+        if remaining > 0 {
+            return Ok(None);
+        }
+        let st = r.batches.remove(&id).expect("checked above");
+        match st.error {
+            None => Ok(Some(())),
+            // Every completion was reaped; the buffers are ours again.
+            Some(msg) => Err(UringError::clean(anyhow::anyhow!(msg))),
+        }
+    })
+}
+
+impl PageStore for UringPageStore {
+    fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    fn read_pages(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()> {
+        if page_ids.is_empty() {
+            return Ok(());
+        }
+        self.validate(page_ids, out)?;
+        let mut start = 0usize;
+        while start < page_ids.len() {
+            let end = (start + self.max_batch).min(page_ids.len());
+            self.read_chunk(&page_ids[start..end], &mut out[start..end])?;
+            start = end;
+        }
+        Ok(())
+    }
+
+    fn begin_read(&self, page_ids: &[u32], mut bufs: Vec<Vec<u8>>) -> PendingRead<'_> {
+        if page_ids.is_empty() {
+            return PendingRead::done(bufs, Ok(()));
+        }
+        if let Err(e) = self.validate(page_ids, &bufs) {
+            return PendingRead::done(bufs, Err(e));
+        }
+        // Batches wider than the CQ budget run synchronously in chunks.
+        if page_ids.len() > self.max_batch {
+            let result = self.read_pages(page_ids, &mut bufs);
+            return PendingRead::done(bufs, result);
+        }
+        // The iovec array and the buffers move into the completion closure
+        // together: the kernel reads the iovecs and writes the buffers
+        // until the batch is reaped, and the inner Vec<u8> allocations do
+        // not move when the outer Vec is moved.
+        let iovs: Vec<libc::iovec> = bufs
+            .iter_mut()
+            .map(|b| libc::iovec {
+                iov_base: b.as_mut_ptr() as *mut libc::c_void,
+                iov_len: self.page_size,
+            })
+            .collect();
+        let id = match self
+            .ring
+            .lock()
+            .unwrap()
+            .submit_batch(self.file.as_raw_fd(), page_ids, &iovs)
+        {
+            Ok(id) => id,
+            Err(ue) => {
+                if ue.buffers_released {
+                    // Nothing remains in flight: hand the buffers back.
+                    return PendingRead::done(bufs, Err(ue.err));
+                }
+                // Poisoned ring with reads outstanding: the kernel may
+                // still write into these buffers — leak them.
+                std::mem::forget(bufs);
+                std::mem::forget(iovs);
+                return PendingRead::done(Vec::new(), Err(ue.err));
+            }
+        };
+        let ring = &self.ring;
+        let cv = &self.ring_cv;
+        PendingRead::deferred(move || match wait_batch(ring, cv, id) {
+            Ok(()) => {
+                drop(iovs); // kernel is done with the batch; release the iovecs
+                (bufs, Ok(()))
+            }
+            Err(ue) if ue.buffers_released => (bufs, Err(ue.err)),
+            Err(ue) => {
+                // Poisoned mid-wait: buffers stay kernel-owned — leak them
+                // rather than returning them to a pool the kernel can
+                // still scribble over.
+                std::mem::forget(bufs);
+                std::mem::forget(iovs);
+                (Vec::new(), Err(ue.err))
+            }
+        })
+    }
+
+    fn max_inflight_batches(&self) -> usize {
+        // Bounded in practice by the CQ budget at submit time; report a
+        // conservative deep-queue figure for pipeline planning.
+        32
+    }
+
+    fn name(&self) -> &'static str {
+        "io-uring"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pageann-uring-{}-{name}", std::process::id()))
+    }
+
+    /// Skip (not fail) on kernels without io_uring — the CI kernel is 4.4.
+    macro_rules! open_or_skip {
+        ($path:expr, $page:expr) => {
+            match UringPageStore::open($path, $page) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("io_uring unavailable in this environment: {e}");
+                    let _ = std::fs::remove_file($path);
+                    return;
+                }
+            }
+        };
+    }
+
+    #[test]
+    fn many_tagged_batches_complete_out_of_order() {
+        let path = tmpfile("ooo");
+        crate::io::write_test_pages(&path, 4096, 32);
+        let store = open_or_skip!(&path, 4096);
+        // Six overlapping batches, waited in reverse submission order.
+        let batches: Vec<Vec<u32>> =
+            (0..6u32).map(|b| vec![b * 5, b * 5 + 1, (b * 7 + 3) % 32]).collect();
+        let mut pending = Vec::new();
+        for ids in &batches {
+            let bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; 4096]).collect();
+            pending.push(store.begin_read(ids, bufs));
+        }
+        for (ids, p) in batches.iter().zip(pending.drain(..)).rev() {
+            let (bufs, r) = p.wait();
+            r.unwrap();
+            for (k, &pg) in ids.iter().enumerate() {
+                for (i, &b) in bufs[k].iter().enumerate() {
+                    assert_eq!(b, ((pg as usize * 131 + i) % 251) as u8, "page {pg} byte {i}");
+                }
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn oversized_batch_falls_back_to_chunked_sync() {
+        let path = tmpfile("big");
+        crate::io::write_test_pages(&path, 512, 64);
+        let store = open_or_skip!(&path, 512);
+        // Wider than max_batch by construction of a tiny repeated id list.
+        let n = store.max_batch + 17;
+        let ids: Vec<u32> = (0..n).map(|i| (i % 64) as u32).collect();
+        let bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; 512]).collect();
+        let (bufs, r) = store.begin_read(&ids, bufs).wait();
+        r.unwrap();
+        for (k, &pg) in ids.iter().enumerate() {
+            assert_eq!(bufs[k][1], ((pg as usize * 131 + 1) % 251) as u8);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn drop_without_wait_completes_and_ring_stays_usable() {
+        let path = tmpfile("drop");
+        crate::io::write_test_pages(&path, 4096, 8);
+        let store = open_or_skip!(&path, 4096);
+        for _ in 0..4 {
+            let bufs: Vec<Vec<u8>> = (0..3).map(|_| vec![0u8; 4096]).collect();
+            let p = store.begin_read(&[1, 2, 3], bufs);
+            drop(p); // never waited: Drop must reap the batch
+        }
+        assert_eq!(store.ring.lock().unwrap().in_flight, 0, "reads leaked in flight");
+        assert!(store.ring.lock().unwrap().batches.is_empty(), "batch table leaked");
+        let mut bufs = vec![vec![0u8; 4096]];
+        store.read_pages(&[5], &mut bufs).unwrap();
+        assert_eq!(bufs[0][0], ((5 * 131) % 251) as u8);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

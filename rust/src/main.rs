@@ -5,7 +5,7 @@
 //! pageann build  --out <dir> [--kind sift|spacev|deep] [--n 60000]
 //!                [--placement onpage|hybrid:<frac>|inmem] [--page-size 4096]
 //! pageann search --index <dir> [--kind sift] [--n 60000] [--k 10] [--l 64]
-//!                [--queries 100] [--sim-ssd]
+//!                [--queries 100] [--sim-ssd] [--io uring|aio|pread]
 //! pageann experiment <id>|all [--scale xs|s|m] [--workdir target/experiments]
 //! pageann info
 //! ```
@@ -145,9 +145,13 @@ fn cmd_search(args: &Args) -> Result<()> {
     let w = Workload::synthesize(&spec, nq, k, 0xDA7A);
     let opts = OpenOptions {
         sim_ssd: args.has("sim-ssd").then(Default::default),
+        // I/O backend preference: --io beats PAGEANN_IO beats the
+        // uring → aio → pread probe; never fails the open.
+        io_backend: args.flags.get("io").cloned(),
         ..Default::default()
     };
     let idx = PageAnnIndex::open(&dir, opts)?;
+    eprintln!("io backend: {}", idx.io_backend());
     let rep = run_workload(&idx, &w.queries, Some(&w.gt), k, l, threads);
     println!(
         "recall@{k}={:.4}  qps={:.1}  mean={:.2}ms p50={:.2}ms p99={:.2}ms  meanIOs={:.1}  readamp={:.2}",

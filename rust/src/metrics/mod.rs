@@ -29,6 +29,16 @@ pub struct QueryStats {
     pub exact_dists: u64,
     /// Number of ADC (compressed) distance computations.
     pub approx_dists: u64,
+    /// Speculatively-read pages the next hop actually consumed (the §5
+    /// two-deep pipeline's hit counter). Consumed pages are also counted
+    /// in `ios`/`bytes_read` — exactly once, like a non-speculative read.
+    pub spec_hits: u64,
+    /// Speculatively-read pages discarded because the candidate frontier
+    /// changed. Not counted in `ios`: the paper's I/O metric measures
+    /// algorithmic reads, and keeping it speculation-invariant also keeps
+    /// results comparable across backends. The wasted bandwidth is
+    /// `spec_wasted * page_size`.
+    pub spec_wasted: u64,
     /// Wall time inside I/O waits.
     pub io_time: Duration,
     /// Wall time in distance computation / heap maintenance.
@@ -46,6 +56,8 @@ impl QueryStats {
         self.hops += other.hops;
         self.exact_dists += other.exact_dists;
         self.approx_dists += other.approx_dists;
+        self.spec_hits += other.spec_hits;
+        self.spec_wasted += other.spec_wasted;
         self.io_time += other.io_time;
         self.compute_time += other.compute_time;
         self.total_time += other.total_time;

@@ -82,6 +82,18 @@ impl CandidateSet {
             .iter()
             .any(|e| !e.visited)
     }
+
+    /// Visit the unexpanded candidates in distance order **without**
+    /// marking them expanded — the speculative page predictor's view of
+    /// what `pop_closest_unvisited` would return next. `f` returns whether
+    /// to keep iterating.
+    pub fn peek_unvisited(&self, mut f: impl FnMut(u32) -> bool) {
+        for e in self.entries[self.cursor.min(self.entries.len())..].iter() {
+            if !e.visited && !f(e.id) {
+                break;
+            }
+        }
+    }
 }
 
 /// Bounded top-L result reservoir: keeps the `cap` smallest `(dist, id)`

@@ -16,6 +16,26 @@
 //!   [`AdcLut::distance_batch`] call instead of per-neighbor table walks;
 //! * the per-query LUT is built into a scratch-owned buffer and the result
 //!   set is a bounded top-L reservoir — zero steady-state allocations.
+//!
+//! # Two-deep I/O pipeline (speculative prefetch)
+//!
+//! On stores that keep more than one batch in flight
+//! ([`PageStore::max_inflight_batches`] > 1 — io_uring, AIO, sim-SSD), the
+//! searcher runs a *two-deep* pipeline: right after this hop's read is
+//! waited, it predicts the next hop's page batch from the **pre-topology**
+//! candidate pool ([`CandidateSet::peek_unvisited`], which mirrors what
+//! `pop_closest_unvisited` would return) and submits that batch
+//! speculatively, so the device reads it while the topology phase runs on
+//! the CPU. The next hop's real selection then consumes matching
+//! speculative pages and discards the rest — the speculation is thrown
+//! away whenever the candidate frontier changed. Selection, scoring and
+//! result ranking are completely untouched by speculation (it only changes
+//! *where bytes come from*), so results are bit-identical across backends
+//! and with `speculate` off; `ios` counts only consumed reads (see
+//! [`QueryStats::spec_hits`]/[`spec_wasted`]).
+//!
+//! [`spec_wasted`]: crate::metrics::QueryStats::spec_wasted
+//! [`QueryStats::spec_hits`]: crate::metrics::QueryStats::spec_hits
 
 mod candidates;
 
@@ -24,7 +44,7 @@ pub use candidates::{CandidateSet, TopReservoir};
 use crate::cache::{MemCodes, PageCache};
 use crate::dataset::Dtype;
 use crate::distance::BatchScanner;
-use crate::io::PageStore;
+use crate::io::{PageStore, PendingRead};
 use crate::layout::{IndexMeta, PageRef};
 use crate::metrics::QueryStats;
 use crate::pq::{AdcLut, PqCodebook};
@@ -46,11 +66,24 @@ pub struct SearchParams {
     /// Overlap exact-distance computation with the next async read
     /// (paper §5 I/O-computation pipeline).
     pub pipeline: bool,
+    /// Two-deep pipeline: speculatively submit the predicted next-hop page
+    /// batch while the topology phase runs (needs `pipeline` and a store
+    /// with `max_inflight_batches() > 1`; results are bit-identical either
+    /// way).
+    pub speculate: bool,
 }
 
 impl Default for SearchParams {
     fn default() -> Self {
-        Self { k: 10, l: 64, io_batch: 5, routing_radius: 2, max_entries: 16, pipeline: true }
+        Self {
+            k: 10,
+            l: 64,
+            io_batch: 5,
+            routing_radius: 2,
+            max_entries: 16,
+            pipeline: true,
+            speculate: true,
+        }
     }
 }
 
@@ -106,6 +139,11 @@ impl SearchScratch {
         &self.pages_touched
     }
 
+    /// Buffers currently parked in the page pool (leak diagnostics).
+    pub fn pooled_buffers(&self) -> usize {
+        self.page_bufs.len()
+    }
+
     fn reset(&mut self, n_slots: usize, n_pages: usize, l: usize, k: usize) {
         if self.visited_vec.len() < n_slots {
             self.visited_vec.resize(n_slots, 0);
@@ -142,6 +180,37 @@ pub struct SearchContext<'a> {
     pub pq: &'a PqCodebook,
 }
 
+/// Exact scans deferred until the next I/O wait (paper §5 pipeline);
+/// owned buffers cycle back into the scratch pool after scanning.
+enum Deferred<'c> {
+    Owned(Vec<u8>),
+    Cached(&'c [u8]),
+}
+
+/// Every owned page buffer that is mid-flight through one search hop. It
+/// lives *outside* the fallible hop loop so that `search_pages` can sweep
+/// everything back into `scratch.page_bufs` on **any** exit path — a `?`
+/// after buffers left the pool must not shrink it (ISSUE 3 satellite: a
+/// recovered error used to permanently reintroduce per-query allocation).
+struct HopState<'c> {
+    deferred: Vec<Deferred<'c>>,
+    disk_bufs: Vec<Vec<u8>>,
+    /// Speculative pages consumed by the current hop: `(page_id, bytes)`.
+    prefetched: Vec<(u32, Vec<u8>)>,
+    /// The in-flight speculative batch and its page ids.
+    spec: Option<(PendingRead<'c>, Vec<u32>)>,
+}
+
+/// Pop `n` page buffers from the pool, allocating only on cold start —
+/// the one place that knows how search buffers are made.
+fn take_bufs(pool: &mut Vec<Vec<u8>>, n: usize, page_size: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(pool.pop().unwrap_or_else(|| vec![0u8; page_size]));
+    }
+    out
+}
+
 /// Run Algorithm 2. `entries` are entry-point vector ids (new-id space)
 /// from the router (or the medoid fallback). The per-query ADC table is
 /// built into `scratch` from `ctx.pq`. Returns the top-k
@@ -155,11 +224,6 @@ pub fn search_pages(
     stats: &mut QueryStats,
 ) -> Result<Vec<(f32, u32)>> {
     let meta = ctx.meta;
-    let capacity = meta.capacity as u32;
-    let dtype: Dtype = meta.dtype;
-    let stride = meta.vec_stride();
-    // Storage bytes per PQ code (nibble-packed for PQ4 indexes) — the
-    // stride for page parsing, memcodes and the gathered-code scratch.
     let code_w = meta.code_bytes();
     scratch.reset(meta.n_slots(), meta.n_pages, params.l, params.k);
     let epoch = scratch.epoch;
@@ -172,9 +236,9 @@ pub fn search_pages(
 
     // Seed candidates (Alg. 2 lines 4-7): estimated distance from resident
     // codes where available; entries without codes get pushed with d=0 so
-    // they are expanded first. Like the topology phase below, a seed is
-    // marked visited only when the pool accepts it — a rejected seed can
-    // still re-enter later via a closer page.
+    // they are expanded first. Like the topology phase, a seed is marked
+    // visited only when the pool accepts it — a rejected seed can still
+    // re-enter later via a closer page.
     for &e in entries.iter().take(params.max_entries.max(1)) {
         if scratch.visited_vec[e as usize] == epoch {
             continue;
@@ -186,24 +250,97 @@ pub fn search_pages(
         stats.approx_dists += 1;
     }
 
-    // Exact scans deferred until the next I/O wait (paper §5 pipeline);
-    // owned buffers cycle back into the scratch pool after scanning.
-    enum Deferred<'c> {
-        Owned(Vec<u8>),
-        Cached(&'c [u8]),
-    }
-    let mut deferred: Vec<Deferred<'_>> = Vec::new();
+    let mut hop = HopState {
+        deferred: Vec::new(),
+        disk_bufs: Vec::new(),
+        prefetched: Vec::new(),
+        spec: None,
+    };
+    let result = run_hops(ctx, query, params, scratch, stats, &mut hop);
 
-    // Drains `deferred`: exact distances into the result reservoir.
+    // Pool-leak sweep: every owned buffer still mid-flight — a pending
+    // speculation, unscanned deferred pages, this hop's read buffers —
+    // returns to the pool whether `result` is Ok or Err.
+    if let Some((sp, _ids)) = hop.spec.take() {
+        let (sbufs, _sres) = sp.wait();
+        stats.spec_wasted += sbufs.len() as u64;
+        scratch.page_bufs.extend(sbufs);
+    }
+    for item in hop.deferred.drain(..) {
+        if let Deferred::Owned(b) = item {
+            scratch.page_bufs.push(b);
+        }
+    }
+    scratch.page_bufs.append(&mut hop.disk_bufs);
+    for (_, b) in hop.prefetched.drain(..) {
+        scratch.page_bufs.push(b);
+    }
+    result?;
+
+    // Final ranking (lines 29-30): the reservoir already holds the top-L
+    // by (dist, id); sort it and cut to k.
+    let t_cpu = Instant::now();
+    let mut out = scratch.results.sorted();
+    out.truncate(params.k);
+    stats.compute_time += t_cpu.elapsed();
+    Ok(out)
+}
+
+/// The hop loop (Alg. 2 lines 8-28) plus the §5 pipeline. All owned page
+/// buffers flow through `hop` so the caller can recover them on error.
+fn run_hops<'c>(
+    ctx: &SearchContext<'c>,
+    query: &[f32],
+    params: &SearchParams,
+    scratch: &mut SearchScratch,
+    stats: &mut QueryStats,
+    hop: &mut HopState<'c>,
+) -> Result<()> {
+    let meta = ctx.meta;
+    let capacity = meta.capacity as u32;
+    let dtype: Dtype = meta.dtype;
+    let stride = meta.vec_stride();
+    // Storage bytes per PQ code (nibble-packed for PQ4 indexes) — the
+    // stride for page parsing, memcodes and the gathered-code scratch.
+    let code_w = meta.code_bytes();
+    let epoch = scratch.epoch;
+    // The two-deep pipeline only pays off on stores that genuinely keep
+    // more than one batch in flight; on synchronous stores a speculative
+    // read would serialize in front of real work. The static gate is
+    // refined at runtime: if a speculative submission ever completes
+    // synchronously (e.g. the AIO ctx pool is exhausted under
+    // oversubscription and begin_read degraded to a blocking read),
+    // speculation is switched off for the rest of this query.
+    let mut speculate =
+        params.pipeline && params.speculate && ctx.store.max_inflight_batches() > 1;
+
+    let HopState { deferred, disk_bufs, prefetched, spec } = hop;
+
+    // Drains `deferred`: exact distances into the result reservoir;
+    // evaluates to a `Result` so call sites with a read still in flight
+    // can reclaim its buffers before propagating. The reservoir's
+    // retained set is order-independent, so draining LIFO is
+    // result-identical to FIFO — and lets a parse failure hand its buffer
+    // (and, via the caller's sweep, all remaining ones) back to the pool.
     macro_rules! scan_deferred {
         () => {{
             let t_cpu = Instant::now();
-            for item in deferred.drain(..) {
+            let mut scan_result: Result<()> = Ok(());
+            while let Some(item) = deferred.pop() {
                 let bytes: &[u8] = match &item {
                     Deferred::Owned(b) => b,
                     Deferred::Cached(b) => b,
                 };
-                let page = PageRef::parse(&bytes[..meta.page_size], stride, code_w)?;
+                let page = match PageRef::parse(&bytes[..meta.page_size], stride, code_w) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        if let Deferred::Owned(buf) = item {
+                            scratch.page_bufs.push(buf); // back to the pool
+                        }
+                        scan_result = Err(e);
+                        break;
+                    }
+                };
                 let nv = page.n_vecs();
                 if scratch.dist_buf.len() < nv {
                     scratch.dist_buf.resize(nv, 0.0);
@@ -219,10 +356,10 @@ pub fn search_pages(
                 }
             }
             stats.compute_time += t_cpu.elapsed();
+            scan_result
         }};
     }
 
-    // Main loop (lines 8-28).
     while scratch.candidates.has_unvisited() {
         // Collect up to `io_batch` unvisited pages (lines 10-18).
         scratch.page_ids.clear();
@@ -244,11 +381,17 @@ pub fn search_pages(
         }
         stats.hops += 1;
 
-        // Partition into cached / disk (cache hits served from memory).
+        // Partition into speculation-covered / cached / disk. Pages the
+        // in-flight speculative batch already covers need no new read.
+        let spec_pages: &[u32] =
+            spec.as_ref().map(|(_, ids)| ids.as_slice()).unwrap_or(&[]);
         let mut disk_ids: Vec<u32> = Vec::with_capacity(scratch.page_ids.len());
-        let mut cached_bytes: Vec<&[u8]> = Vec::new();
+        let mut cached_bytes: Vec<&'c [u8]> = Vec::new();
+        let mut want_spec: Vec<u32> = Vec::new();
         for &p in scratch.page_ids.iter() {
-            if let Some(bytes) = ctx.cache.get(p) {
+            if spec_pages.contains(&p) {
+                want_spec.push(p);
+            } else if let Some(bytes) = ctx.cache.get(p) {
                 cached_bytes.push(bytes);
                 stats.cache_hits += 1;
             } else {
@@ -256,31 +399,129 @@ pub fn search_pages(
             }
         }
 
-        // Take buffers from the pool for the disk reads.
-        let mut disk_bufs: Vec<Vec<u8>> = Vec::with_capacity(disk_ids.len());
-        for _ in 0..disk_ids.len() {
-            disk_bufs.push(
-                scratch
-                    .page_bufs
-                    .pop()
-                    .unwrap_or_else(|| vec![0u8; meta.page_size]),
-            );
-        }
-
-        // Submit the batch read (line 19). In pipelined mode the exact
-        // scans deferred from the previous hop execute while the device
-        // works — the §5 I/O-computation overlap.
+        // Submit the non-speculated reads (line 19), buffers from the
+        // pool. This batch and the speculation are now in flight together.
+        debug_assert!(disk_bufs.is_empty());
+        let rbufs = take_bufs(&mut scratch.page_bufs, disk_ids.len(), meta.page_size);
         let t_submit = Instant::now();
-        let pending = ctx.store.begin_read(&disk_ids, &mut disk_bufs)?;
+        let pending = ctx.store.begin_read(&disk_ids, rbufs);
         let submit_time = t_submit.elapsed();
-        if params.pipeline {
-            scan_deferred!();
-        }
-        let t_wait = Instant::now();
-        pending.wait()?;
-        stats.io_time += submit_time + t_wait.elapsed();
         stats.ios += disk_ids.len() as u64;
         stats.bytes_read += (disk_ids.len() * meta.page_size) as u64;
+
+        // In pipelined mode the exact scans deferred from the previous hop
+        // execute while the device works — the §5 I/O-computation overlap.
+        // A scan failure here must reclaim the in-flight read's buffers
+        // (they live inside `pending`, out of the caller's sweep) before
+        // surfacing; the speculation, if any, is still parked in
+        // `hop.spec` and is recovered by the caller.
+        if params.pipeline {
+            if let Err(e) = scan_deferred!() {
+                let (b, _) = pending.wait();
+                scratch.page_bufs.extend(b);
+                return Err(e);
+            }
+        }
+
+        // Resolve last hop's speculation (it has had a full topology phase
+        // plus this hop's selection to complete — the wait is usually
+        // free). Matching pages become this hop's prefetched bytes and are
+        // counted as ordinary reads; the rest were mispredictions.
+        debug_assert!(prefetched.is_empty());
+        if let Some((sp, sids)) = spec.take() {
+            let t_spec = Instant::now();
+            let (mut sbufs, sres) = sp.wait();
+            stats.io_time += t_spec.elapsed();
+            let spec_ok = sres.is_ok();
+            for (&pid, buf) in sids.iter().zip(sbufs.drain(..)) {
+                let wanted = want_spec.contains(&pid);
+                if spec_ok && wanted {
+                    stats.spec_hits += 1;
+                    stats.ios += 1;
+                    stats.bytes_read += meta.page_size as u64;
+                    prefetched.push((pid, buf));
+                } else {
+                    // `spec_wasted` measures *prediction* quality: a page
+                    // the frontier never asked for. A correctly-predicted
+                    // page lost to a device error is not the predictor's
+                    // fault (it is re-read below and counted there).
+                    if !wanted {
+                        stats.spec_wasted += 1;
+                    }
+                    scratch.page_bufs.push(buf);
+                }
+            }
+            if !spec_ok && !want_spec.is_empty() {
+                // Rare: the speculative read failed after selection chose
+                // to rely on it. Speculation is best-effort, so recover
+                // with a synchronous make-up read instead of failing.
+                let mut mk = take_bufs(&mut scratch.page_bufs, want_spec.len(), meta.page_size);
+                let mk_result = ctx.store.read_pages(&want_spec, &mut mk);
+                stats.ios += want_spec.len() as u64;
+                stats.bytes_read += (want_spec.len() * meta.page_size) as u64;
+                match mk_result {
+                    Ok(()) => {
+                        for (&pid, buf) in want_spec.iter().zip(mk.drain(..)) {
+                            prefetched.push((pid, buf));
+                        }
+                    }
+                    Err(e) => {
+                        // The device is genuinely failing: drain the main
+                        // read too so its buffers survive, then surface.
+                        scratch.page_bufs.append(&mut mk);
+                        let (b, _) = pending.wait();
+                        scratch.page_bufs.extend(b);
+                        return Err(e);
+                    }
+                }
+            }
+        }
+
+        // Wait for this hop's read (line 20). The buffers come back even
+        // on error, parked in `hop.disk_bufs` for the caller's sweep.
+        let t_wait = Instant::now();
+        let (rbufs_back, read_result) = pending.wait();
+        *disk_bufs = rbufs_back;
+        stats.io_time += submit_time + t_wait.elapsed();
+        read_result?;
+
+        // Two-deep pipeline: predict the next hop's batch from the
+        // pre-topology pool and put it on the device now, so it reads
+        // while the topology phase below runs on the CPU. If the topology
+        // phase changes the frontier, the next hop discards the guess.
+        if speculate {
+            debug_assert!(spec.is_none());
+            let mut sids: Vec<u32> = Vec::with_capacity(params.io_batch);
+            {
+                let visited_page = &scratch.visited_page;
+                let cache = ctx.cache;
+                let io_batch = params.io_batch;
+                scratch.candidates.peek_unvisited(|v| {
+                    let p = v / capacity;
+                    if visited_page[p as usize] != epoch
+                        && !sids.contains(&p)
+                        && cache.get(p).is_none()
+                    {
+                        sids.push(p);
+                    }
+                    sids.len() < io_batch
+                });
+            }
+            if !sids.is_empty() {
+                let sbufs = take_bufs(&mut scratch.page_bufs, sids.len(), meta.page_size);
+                let t_spec = Instant::now();
+                let sp = ctx.store.begin_read(&sids, sbufs);
+                stats.io_time += t_spec.elapsed();
+                if !sp.is_async() {
+                    // The store degraded to a synchronous submission (e.g.
+                    // AIO ctx pool exhausted): this speculation already
+                    // cost blocking I/O, so use its data but stop
+                    // speculating for the rest of the query.
+                    speculate = false;
+                }
+                *spec = Some((sp, sids));
+            }
+        }
 
         // Topology phase (lines 24-26): neighbor entries → candidate set
         // with ADC estimates. Never deferred — the next hop's page
@@ -290,30 +531,59 @@ pub fn search_pages(
         let t_cpu = Instant::now();
         scratch.nbr_ids.clear();
         scratch.nbr_codes.clear();
-        for (is_disk, bytes) in disk_bufs
-            .iter()
-            .map(|b| (true, b.as_slice()))
-            .chain(cached_bytes.iter().map(|b| (false, *b)))
         {
-            let page = PageRef::parse(&bytes[..meta.page_size], stride, code_w)?;
-            if is_disk {
-                stats.bytes_used += page.used_bytes() as u64;
-            }
-            for j in 0..page.n_nbrs() {
-                let nb = page.nbr_id(j);
-                if scratch.visited_vec[nb as usize] == epoch {
-                    continue;
+            // Split the scratch borrows explicitly so the closure and the
+            // page-id iteration below borrow disjoint fields.
+            let visited_vec = &scratch.visited_vec;
+            let nbr_ids = &mut scratch.nbr_ids;
+            let nbr_codes = &mut scratch.nbr_codes;
+            let mut gather = |bytes: &[u8], is_disk: bool| -> Result<()> {
+                let page = PageRef::parse(&bytes[..meta.page_size], stride, code_w)?;
+                if is_disk {
+                    stats.bytes_used += page.used_bytes() as u64;
                 }
-                let code = page.nbr_code(j).or_else(|| ctx.memcodes.get(nb));
-                let Some(code) = code else {
-                    // Build guarantees one copy exists; treat miss as a
-                    // corrupt index rather than silently skipping.
-                    anyhow::bail!("no compressed vector for neighbor {nb}");
+                for j in 0..page.n_nbrs() {
+                    let nb = page.nbr_id(j);
+                    if visited_vec[nb as usize] == epoch {
+                        continue;
+                    }
+                    let code = page.nbr_code(j).or_else(|| ctx.memcodes.get(nb));
+                    let Some(code) = code else {
+                        // Build guarantees one copy exists; treat miss as a
+                        // corrupt index rather than silently skipping.
+                        anyhow::bail!("no compressed vector for neighbor {nb}");
+                    };
+                    debug_assert_eq!(code.len(), code_w);
+                    nbr_ids.push(nb);
+                    nbr_codes.extend_from_slice(code);
+                }
+                Ok(())
+            };
+            // Disk-sourced pages in selection order (fresh reads + spec
+            // hits), then cache hits — the exact order the one-deep path
+            // used, so results stay bit-identical with speculation on.
+            let mut processed = 0usize;
+            let mut di = 0usize;
+            for &p in scratch.page_ids.iter() {
+                let bytes: &[u8] = if di < disk_ids.len() && disk_ids[di] == p {
+                    di += 1;
+                    disk_bufs[di - 1].as_slice()
+                } else if let Some((_, b)) = prefetched.iter().find(|(id, _)| *id == p) {
+                    b.as_slice()
+                } else {
+                    continue; // cache hit: handled in the second pass
                 };
-                debug_assert_eq!(code.len(), code_w);
-                scratch.nbr_ids.push(nb);
-                scratch.nbr_codes.extend_from_slice(code);
+                gather(bytes, true)?;
+                processed += 1;
             }
+            for &bytes in cached_bytes.iter() {
+                gather(bytes, false)?;
+                processed += 1;
+            }
+            anyhow::ensure!(
+                processed == scratch.page_ids.len(),
+                "internal: a selected page lost its byte source"
+            );
         }
         let n_gathered = scratch.nbr_ids.len();
         scratch
@@ -338,26 +608,24 @@ pub fn search_pages(
 
         // Queue the exact scans (lines 21-23): deferred in pipelined mode,
         // immediate otherwise.
-        for buf in disk_bufs {
+        for buf in disk_bufs.drain(..) {
+            deferred.push(Deferred::Owned(buf));
+        }
+        for (_, buf) in prefetched.drain(..) {
             deferred.push(Deferred::Owned(buf));
         }
         for bytes in cached_bytes {
             deferred.push(Deferred::Cached(bytes));
         }
         if !params.pipeline {
-            scan_deferred!();
+            // Nothing is in flight here except a speculation parked in
+            // `hop.spec` (caller-recovered), so the error can propagate.
+            scan_deferred!()?;
         }
     }
     // Drain the tail of the pipeline.
-    scan_deferred!();
-
-    // Final ranking (lines 29-30): the reservoir already holds the top-L
-    // by (dist, id); sort it and cut to k.
-    let t_cpu = Instant::now();
-    let mut out = scratch.results.sorted();
-    out.truncate(params.k);
-    stats.compute_time += t_cpu.elapsed();
-    Ok(out)
+    scan_deferred!()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -369,5 +637,6 @@ mod tests {
         let p = SearchParams::default();
         assert_eq!(p.io_batch, 5); // paper §6.1: batch size fixed at 5
         assert_eq!(p.k, 10); // recall@10
+        assert!(p.speculate); // two-deep pipeline on by default
     }
 }

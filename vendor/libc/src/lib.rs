@@ -41,6 +41,22 @@ pub const _SC_CLK_TCK: c_int = 2;
 pub const EINTR: c_int = 4;
 pub const EAGAIN: c_int = 11;
 pub const EINVAL: c_int = 22;
+pub const ENOSYS: c_int = 38;
+
+// mmap(2) protection / flag bits (identical on x86_64 and aarch64).
+pub const PROT_READ: c_int = 1;
+pub const PROT_WRITE: c_int = 2;
+pub const MAP_SHARED: c_int = 1;
+pub const MAP_POPULATE: c_int = 0x8000;
+pub const MAP_FAILED: *mut c_void = !0usize as *mut c_void;
+
+/// `struct iovec` (readv/writev and io_uring READV payloads).
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct iovec {
+    pub iov_base: *mut c_void,
+    pub iov_len: size_t,
+}
 
 // Linux AIO syscall numbers.
 #[cfg(target_arch = "x86_64")]
@@ -64,12 +80,126 @@ mod sysnr {
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 pub use sysnr::*;
 
+// io_uring syscall numbers — post-4.20 syscalls are allocated from the
+// asm-generic table, so these are the same on every 64-bit architecture.
+pub const SYS_io_uring_setup: c_long = 425;
+pub const SYS_io_uring_enter: c_long = 426;
+pub const SYS_io_uring_register: c_long = 427;
+
+// ---- io_uring ABI (Linux 5.1+, include/uapi/linux/io_uring.h) ----------
+//
+// Only the pieces the uring page store uses: setup params with the SQ/CQ
+// mmap offset tables, the 64-byte SQE, the 16-byte CQE, the three mmap
+// region offsets, the GETEVENTS enter flag and the READV opcode (chosen
+// over IORING_OP_READ because READV works on every io_uring kernel, 5.1+,
+// while READ needs 5.6).
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_sqring_offsets {
+    pub head: u32,
+    pub tail: u32,
+    pub ring_mask: u32,
+    pub ring_entries: u32,
+    pub flags: u32,
+    pub dropped: u32,
+    pub array: u32,
+    pub resv1: u32,
+    pub resv2: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_cqring_offsets {
+    pub head: u32,
+    pub tail: u32,
+    pub ring_mask: u32,
+    pub ring_entries: u32,
+    pub overflow: u32,
+    pub cqes: u32,
+    pub flags: u32,
+    pub resv1: u32,
+    pub resv2: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_uring_params {
+    pub sq_entries: u32,
+    pub cq_entries: u32,
+    pub flags: u32,
+    pub sq_thread_cpu: u32,
+    pub sq_thread_idle: u32,
+    pub features: u32,
+    pub wq_fd: u32,
+    pub resv: [u32; 3],
+    pub sq_off: io_sqring_offsets,
+    pub cq_off: io_cqring_offsets,
+}
+
+/// Submission queue entry (64 bytes). Field names follow the kernel's
+/// flattened unions: `off`/`addr` are the `off_t`/pointer members, and
+/// `rw_flags` stands in for the per-opcode flags union.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct io_uring_sqe {
+    pub opcode: u8,
+    pub flags: u8,
+    pub ioprio: u16,
+    pub fd: i32,
+    pub off: u64,
+    pub addr: u64,
+    pub len: u32,
+    pub rw_flags: u32,
+    pub user_data: u64,
+    pub buf_index: u16,
+    pub personality: u16,
+    pub splice_fd_in: i32,
+    pub __pad2: [u64; 2],
+}
+
+/// Completion queue entry (16 bytes).
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_uring_cqe {
+    pub user_data: u64,
+    pub res: i32,
+    pub flags: u32,
+}
+
+// mmap(2) offsets selecting which ring region an io_uring fd maps.
+pub const IORING_OFF_SQ_RING: u64 = 0;
+pub const IORING_OFF_CQ_RING: u64 = 0x8000000;
+pub const IORING_OFF_SQES: u64 = 0x10000000;
+
+// io_uring_enter(2) flags.
+pub const IORING_ENTER_GETEVENTS: u32 = 1;
+
+// SQE opcodes.
+pub const IORING_OP_NOP: u8 = 0;
+pub const IORING_OP_READV: u8 = 1;
+
+// io_uring_params.features bits (informational; the store maps SQ and CQ
+// separately, which every kernel supports with or without SINGLE_MMAP).
+pub const IORING_FEAT_SINGLE_MMAP: u32 = 1;
+
 extern "C" {
-    /// Raw variadic syscall(2) — the AIO page store issues `io_setup`/
-    /// `io_submit`/`io_getevents`/`io_destroy` through this.
+    /// Raw variadic syscall(2) — the AIO and io_uring page stores issue
+    /// `io_setup`/`io_submit`/`io_getevents`/`io_destroy` and
+    /// `io_uring_setup`/`io_uring_enter` through this.
     pub fn syscall(num: c_long, ...) -> c_long;
     pub fn sysconf(name: c_int) -> c_long;
     pub fn pread64(fd: c_int, buf: *mut c_void, count: size_t, offset: off64_t) -> ssize_t;
+    pub fn mmap(
+        addr: *mut c_void,
+        len: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off64_t,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+    pub fn close(fd: c_int) -> c_int;
     /// Address of the thread-local errno (used by fault-injection tests to
     /// set a deterministic error code).
     pub fn __errno_location() -> *mut c_int;
