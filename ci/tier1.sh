@@ -23,6 +23,17 @@ for io in auto uring aio pread; do
     fi
 done
 
+echo "== tier-1: PAGEANN_FAULTS leg =="
+# Deterministically recoverable transient faults (ISSUE 6): every page's
+# first read fails once (fail_first) and every 97th read gets a single bit
+# flip that only the CRC32C page tail can catch. FaultSpec::Env wires this
+# into every engine open, so the end-to-end suite re-proves its
+# recall/IO/speculation assertions under injected faults; fault_matrix
+# pins its own configs and checks clean-run parity and degraded-traversal
+# semantics explicitly.
+PAGEANN_FAULTS="seed=7,fail_first=1,flip_every=97" \
+    cargo test -q --test fault_matrix --test index_end_to_end
+
 echo "== tier-1: bench rows (BENCH_adc.json, BENCH_io.json) =="
 cargo bench --bench hot_paths
 

@@ -199,6 +199,7 @@ fn bench_page_serde() {
         page_size: 4096,
         vec_stride: stride,
         code_bytes: m,
+        checksum: true,
         vectors: vec_data.iter().enumerate().map(|(i, v)| (i as u32, v.as_slice())).collect(),
         neighbors: (0..24).map(|j| (j, Some(code.as_slice()))).collect(),
     };

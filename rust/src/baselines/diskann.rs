@@ -110,7 +110,7 @@ struct BeamScratch {
 }
 
 impl BeamSearcher {
-    fn search(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+    fn search(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Result<Vec<u32>> {
         SCRATCH.with(|s| {
             let mut scratch = s.borrow_mut();
             self.search_inner(query, k, l, stats, &mut scratch)
@@ -124,7 +124,7 @@ impl BeamSearcher {
         l: usize,
         stats: &mut QueryStats,
         scratch: &mut BeamScratch,
-    ) -> Vec<u32> {
+    ) -> Result<Vec<u32>> {
         let idx = &self.index;
         let lut = idx.pq.build_lut(query);
         // Storage stride of one code (nibble-packed when the codebook is
@@ -163,9 +163,14 @@ impl BeamSearcher {
                     .bufs
                     .resize_with(pages.len(), || vec![0u8; idx.layout.page_size]);
             }
-            self.store
-                .read_pages(&pages, &mut scratch.bufs[..pages.len()])
-                .expect("read failed");
+            // One retry for transient faults, then propagate — a dead read
+            // must fail the query, not the process.
+            if let Err(first) = self.store.read_pages(&pages, &mut scratch.bufs[..pages.len()]) {
+                stats.retries += 1;
+                self.store
+                    .read_pages(&pages, &mut scratch.bufs[..pages.len()])
+                    .map_err(|_| first)?;
+            }
             stats.ios += pages.len() as u64;
             stats.bytes_read += (pages.len() * idx.layout.page_size) as u64;
             stats.io_time += t_io.elapsed();
@@ -204,7 +209,7 @@ impl BeamSearcher {
             stats.compute_time += t_cpu.elapsed();
         }
 
-        scratch.results.sorted().into_iter().take(k).map(|(_, id)| id).collect()
+        Ok(scratch.results.sorted().into_iter().take(k).map(|(_, id)| id).collect())
     }
 
     fn memory_bytes(&self) -> usize {
@@ -255,7 +260,13 @@ impl AnnSystem for DiskAnnLike {
     fn name(&self) -> String {
         self.core.name.to_string()
     }
-    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> Result<Vec<u32>> {
         self.core.search(query, k, l, stats)
     }
     fn memory_bytes(&self) -> usize {
@@ -267,7 +278,13 @@ impl AnnSystem for PipeAnnLike {
     fn name(&self) -> String {
         self.core.name.to_string()
     }
-    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> Result<Vec<u32>> {
         self.core.search(query, k, l, stats)
     }
     fn memory_bytes(&self) -> usize {

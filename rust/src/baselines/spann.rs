@@ -158,7 +158,13 @@ impl AnnSystem for SpannLike {
 
     /// `l` plays the role of `nprobe` (number of posting lists visited) —
     /// the same recall knob semantics as the graph schemes' search list.
-    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> crate::Result<Vec<u32>> {
         SCRATCH.with(|s| self.search_inner(query, k, l, stats, &mut s.borrow_mut()))
     }
 
@@ -175,7 +181,7 @@ impl SpannLike {
         nprobe: usize,
         stats: &mut QueryStats,
         scratch: &mut Scratch,
-    ) -> Vec<u32> {
+    ) -> crate::Result<Vec<u32>> {
         // In-memory head ranking (all I/O happens after, like SPANN).
         let t_cpu = Instant::now();
         let mut heads: Vec<(f32, u32)> = (0..self.n_heads)
@@ -205,7 +211,14 @@ impl SpannLike {
         if scratch.bufs.len() < pages.len() {
             scratch.bufs.resize_with(pages.len(), || vec![0u8; self.page_size]);
         }
-        self.store.read_pages(&pages, &mut scratch.bufs[..pages.len()]).expect("read failed");
+        // One retry for transient faults, then propagate — a dead read
+        // must fail the query, not the process.
+        if let Err(first) = self.store.read_pages(&pages, &mut scratch.bufs[..pages.len()]) {
+            stats.retries += 1;
+            self.store
+                .read_pages(&pages, &mut scratch.bufs[..pages.len()])
+                .map_err(|_| first)?;
+        }
         stats.ios += pages.len() as u64;
         stats.bytes_read += (pages.len() * self.page_size) as u64;
         stats.io_time += t_io.elapsed();
@@ -229,6 +242,6 @@ impl SpannLike {
         scratch.results.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         scratch.results.dedup_by_key(|r| r.1);
         stats.compute_time += t_cpu.elapsed();
-        scratch.results.iter().take(k).map(|&(_, id)| id).collect()
+        Ok(scratch.results.iter().take(k).map(|&(_, id)| id).collect())
     }
 }

@@ -152,7 +152,13 @@ impl AnnSystem for StarlingLike {
         "Starling".to_string()
     }
 
-    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> crate::Result<Vec<u32>> {
         SCRATCH.with(|s| self.search_inner(query, k, l, stats, &mut s.borrow_mut()))
     }
 
@@ -169,7 +175,7 @@ impl StarlingLike {
         l: usize,
         stats: &mut QueryStats,
         scratch: &mut Scratch,
-    ) -> Vec<u32> {
+    ) -> crate::Result<Vec<u32>> {
         let lut = self.pq.build_lut(query);
         // Storage stride of one code (width-agnostic, like DiskANN's).
         let cw = self.pq.code_bytes();
@@ -210,7 +216,14 @@ impl StarlingLike {
                     .bufs
                     .resize_with(pages.len(), || vec![0u8; self.layout.page_size]);
             }
-            self.store.read_pages(&pages, &mut scratch.bufs[..pages.len()]).expect("read failed");
+            // One retry for transient faults, then propagate — a dead read
+            // must fail the query, not the process.
+            if let Err(first) = self.store.read_pages(&pages, &mut scratch.bufs[..pages.len()]) {
+                stats.retries += 1;
+                self.store
+                    .read_pages(&pages, &mut scratch.bufs[..pages.len()])
+                    .map_err(|_| first)?;
+            }
             stats.ios += pages.len() as u64;
             stats.bytes_read += (pages.len() * self.layout.page_size) as u64;
             stats.io_time += t_io.elapsed();
@@ -255,12 +268,12 @@ impl StarlingLike {
             stats.compute_time += t_cpu.elapsed();
         }
 
-        scratch
+        Ok(scratch
             .results
             .sorted()
             .into_iter()
             .take(k)
             .map(|(_, new_id)| self.new_to_orig[new_id as usize])
-            .collect()
+            .collect())
     }
 }

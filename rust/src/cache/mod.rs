@@ -20,7 +20,7 @@ mod tests {
             for (k, &p) in ids.iter().enumerate() {
                 out[k] = vec![p as u8; page_size];
             }
-            Ok(())
+            Ok(vec![true; ids.len()])
         };
         // Budget for exactly two pages.
         let cache = PageCache::build(&freqs, page_size, 2 * page_size + 1, fetch).unwrap();
@@ -30,5 +30,28 @@ mod tests {
         assert_eq!(cache.get(3).unwrap()[0], 3);
         assert_eq!(cache.n_pages(), 2);
         assert!(cache.memory_bytes() >= 2 * page_size);
+    }
+
+    #[test]
+    fn page_cache_skips_unkept_pages() {
+        // A page the fetcher can't read/verify must not be pinned — and
+        // must not take down the rest of the build.
+        let freqs = vec![(3u32, 100u64), (1, 50), (0, 5)];
+        let page_size = 64;
+        let fetch = |ids: &[u32], out: &mut [Vec<u8>]| {
+            let mut keep = vec![true; ids.len()];
+            for (k, &p) in ids.iter().enumerate() {
+                out[k] = vec![p as u8; page_size];
+                if p == 1 {
+                    keep[k] = false; // "unreadable"
+                }
+            }
+            Ok(keep)
+        };
+        let cache = PageCache::build(&freqs, page_size, 3 * page_size + 1, fetch).unwrap();
+        assert!(cache.get(3).is_some());
+        assert!(cache.get(1).is_none(), "failed page must not be cached");
+        assert!(cache.get(0).is_some());
+        assert_eq!(cache.n_pages(), 2);
     }
 }

@@ -21,7 +21,9 @@ impl PageCache {
 
     /// Build from `(page_id, frequency)` warm-up counts: hottest pages
     /// first until `budget_bytes` is exhausted. `fetch` reads page
-    /// contents (usually `PageStore::read_pages`).
+    /// contents (usually `PageStore::read_pages` plus verification) and
+    /// returns a keep mask — pages it marks false (unreadable, checksum
+    /// failure) are left out of the cache rather than pinned corrupt.
     pub fn build<F>(
         freqs: &[(u32, u64)],
         page_size: usize,
@@ -29,7 +31,7 @@ impl PageCache {
         fetch: F,
     ) -> Result<Self>
     where
-        F: FnOnce(&[u32], &mut [Vec<u8>]) -> Result<()>,
+        F: FnOnce(&[u32], &mut [Vec<u8>]) -> Result<Vec<bool>>,
     {
         let n_fit = budget_bytes / page_size.max(1);
         let mut ranked: Vec<(u32, u64)> = freqs.to_vec();
@@ -37,12 +39,13 @@ impl PageCache {
         ranked.truncate(n_fit);
         let ids: Vec<u32> = ranked.iter().map(|&(p, _)| p).collect();
         let mut bufs: Vec<Vec<u8>> = ids.iter().map(|_| vec![0u8; page_size]).collect();
-        if !ids.is_empty() {
-            fetch(&ids, &mut bufs)?;
-        }
+        let keep = if ids.is_empty() { Vec::new() } else { fetch(&ids, &mut bufs)? };
+        anyhow::ensure!(keep.len() == ids.len(), "cache fetch returned a bad keep mask");
         let mut pages = HashMap::with_capacity(ids.len());
-        for (id, buf) in ids.into_iter().zip(bufs) {
-            pages.insert(id, buf.into_boxed_slice());
+        for ((id, buf), keep) in ids.into_iter().zip(bufs).zip(keep) {
+            if keep {
+                pages.insert(id, buf.into_boxed_slice());
+            }
         }
         Ok(Self { pages, page_size })
     }

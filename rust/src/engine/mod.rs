@@ -15,8 +15,8 @@ pub use server::{QueryClient, QueryServer, ServerHandle};
 use crate::cache::{MemCodes, PageCache};
 use crate::dataset::VectorSet;
 use crate::distance::{BatchScanner, NativeBatch};
-use crate::io::{open_with, PageStore, SimSsdStore, SsdModel};
-use crate::layout::{IndexFiles, IndexMeta};
+use crate::io::{open_with, FaultConfig, FaultStore, PageStore, SimSsdStore, SsdModel};
+use crate::layout::{IndexFiles, IndexMeta, PageRef};
 use crate::metrics::QueryStats;
 use crate::pq::PqCodebook;
 use crate::routing::RoutingIndex;
@@ -29,10 +29,43 @@ use std::path::Path;
 pub trait AnnSystem: Send + Sync {
     fn name(&self) -> String;
     /// Top-k original ids for one query. `l` is the search-list size (the
-    /// recall knob every scheme shares).
-    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32>;
+    /// recall knob every scheme shares). Errors (I/O that stays failed
+    /// after retries with nothing found, corrupt index data) propagate —
+    /// callers decide whether to drop the query (runner) or answer with an
+    /// error frame (server); no implementation may panic on them.
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> Result<Vec<u32>>;
     /// Resident memory this scheme needs at query time.
     fn memory_bytes(&self) -> usize;
+}
+
+/// Fault-injection policy for [`OpenOptions`].
+#[derive(Debug, Clone, Default)]
+pub enum FaultSpec {
+    /// Honor the `PAGEANN_FAULTS` environment variable (no wrap when it is
+    /// unset or a no-op).
+    #[default]
+    Env,
+    /// Never inject, even when `PAGEANN_FAULTS` is set — lets tests build
+    /// a clean-run baseline inside a faulted CI leg.
+    Off,
+    /// Explicit config, ignoring the environment.
+    Config(FaultConfig),
+}
+
+impl FaultSpec {
+    fn resolve(&self) -> Result<Option<FaultConfig>> {
+        match self {
+            FaultSpec::Env => FaultConfig::from_env(),
+            FaultSpec::Off => Ok(None),
+            FaultSpec::Config(c) => Ok(if c.is_noop() { None } else { Some(c.clone()) }),
+        }
+    }
 }
 
 /// Options for opening an index.
@@ -49,6 +82,10 @@ pub struct OpenOptions {
     /// `PAGEANN_IO` env override, then probe uring → aio → pread. A
     /// preference redirects the probe but can never fail the open.
     pub io_backend: Option<String>,
+    /// Fault injection (ISSUE 6). The fault wrapper goes outermost — over
+    /// the sim-SSD model when both are on — so injected faults hit the
+    /// same surface real device errors would.
+    pub faults: FaultSpec,
 }
 
 impl Default for OpenOptions {
@@ -59,6 +96,7 @@ impl Default for OpenOptions {
             scanner: None,
             params: SearchParams::default(),
             io_backend: None,
+            faults: FaultSpec::default(),
         }
     }
 }
@@ -92,6 +130,13 @@ impl PageAnnIndex {
         let store: Box<dyn PageStore> = match opts.sim_ssd {
             Some(model) => Box::new(SimSsdStore::new(raw, model)),
             None => raw,
+        };
+        let store: Box<dyn PageStore> = match opts.faults.resolve()? {
+            Some(cfg) => {
+                eprintln!("engine: fault injection active: {cfg:?}");
+                Box::new(FaultStore::new(store, cfg))
+            }
+            None => store,
         };
         let memcodes = MemCodes::load(dir, meta.n_slots())?;
         let pq = {
@@ -187,8 +232,30 @@ impl PageAnnIndex {
         }
         let freqs: Vec<(u32, u64)> = freq.into_iter().collect();
         let store = &*self.store;
-        self.cache = PageCache::build(&freqs, self.meta.page_size, budget_bytes, |ids, out| {
-            store.read_pages(ids, out)
+        let meta = &self.meta;
+        self.cache = PageCache::build(&freqs, meta.page_size, budget_bytes, |ids, out| {
+            // Warm-up is best-effort: a page that won't read cleanly (or
+            // fails checksum verification) after a few attempts is simply
+            // not pinned — the query path re-reads it with its own retry
+            // policy. Caching a corrupt page would poison every query.
+            let batch_ok = store.read_pages(ids, out).is_ok();
+            let mut keep = vec![true; ids.len()];
+            for (k, &p) in ids.iter().enumerate() {
+                let verify =
+                    |buf: &Vec<u8>| !meta.page_crc || PageRef::verify_checksum(buf);
+                let mut ok = batch_ok && verify(&out[k]);
+                for _ in 0..3 {
+                    if ok {
+                        break;
+                    }
+                    ok = store
+                        .read_pages(&[p], std::slice::from_mut(&mut out[k]))
+                        .is_ok()
+                        && verify(&out[k]);
+                }
+                keep[k] = ok;
+            }
+            Ok(keep)
         })?;
         Ok(())
     }
@@ -207,15 +274,18 @@ impl AnnSystem for PageAnnIndex {
         "PageANN".to_string()
     }
 
-    fn search_one(&self, query: &[f32], k: usize, l: usize, stats: &mut QueryStats) -> Vec<u32> {
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> Result<Vec<u32>> {
         let params = SearchParams { k, l, ..self.params.clone() };
         SCRATCH.with(|s| {
             let mut scratch = s.borrow_mut();
-            self.search(query, &params, &mut scratch, stats)
-                .expect("search failed")
-                .into_iter()
-                .map(|(_, id)| id)
-                .collect()
+            let out = self.search(query, &params, &mut scratch, stats)?;
+            Ok(out.into_iter().map(|(_, id)| id).collect())
         })
     }
 

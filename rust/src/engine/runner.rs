@@ -29,6 +29,7 @@ pub fn run_workload(
     let n = queries.len();
     let nthreads = nthreads.max(1);
     let next = AtomicUsize::new(0);
+    let errors = AtomicUsize::new(0);
     let agg: Mutex<(QueryStats, LatencyHistogram)> =
         Mutex::new((QueryStats::default(), LatencyHistogram::new()));
     // Per-thread result buffers, merged once at the end — no per-query
@@ -51,7 +52,17 @@ pub fn run_workload(
                     let q = queries.get_f32(qi);
                     let mut stats = QueryStats::default();
                     let t = Instant::now();
-                    let ids = sys.search_one(&q, k, l, &mut stats);
+                    // A failed query contributes an empty result (recall
+                    // charges the miss) and an error count — one bad page
+                    // must not abort the whole workload.
+                    let ids = match sys.search_one(&q, k, l, &mut stats) {
+                        Ok(ids) => ids,
+                        Err(e) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            eprintln!("runner: query {qi} failed: {e}");
+                            Vec::new()
+                        }
+                    };
                     let dt = t.elapsed();
                     stats.total_time = dt;
                     hist.record(dt);
@@ -81,7 +92,14 @@ pub fn run_workload(
         None => f64::NAN,
     };
     WorkloadReport {
-        summary: RunSummary { queries: n as u64, wall, totals, latency, recall },
+        summary: RunSummary {
+            queries: n as u64,
+            errors: errors.load(Ordering::Relaxed) as u64,
+            wall,
+            totals,
+            latency,
+            recall,
+        },
         results,
         cpu_pct,
     }
@@ -142,13 +160,19 @@ mod tests {
         fn name(&self) -> String {
             "brute".into()
         }
-        fn search_one(&self, q: &[f32], k: usize, _l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        fn search_one(
+            &self,
+            q: &[f32],
+            k: usize,
+            _l: usize,
+            stats: &mut QueryStats,
+        ) -> crate::Result<Vec<u32>> {
             stats.exact_dists += self.base.len() as u64;
             let mut all: Vec<(f32, u32)> = (0..self.base.len())
                 .map(|i| (crate::distance::l2sq_query(q, self.base.view(i)), i as u32))
                 .collect();
             all.sort_by(|a, b| a.0.total_cmp(&b.0));
-            all.into_iter().take(k).map(|(_, i)| i).collect()
+            Ok(all.into_iter().take(k).map(|(_, i)| i).collect())
         }
         fn memory_bytes(&self) -> usize {
             self.base.payload_bytes()
@@ -174,6 +198,50 @@ mod tests {
         assert_eq!(rep.summary.totals.exact_dists, 8 * 50);
         assert_eq!(rep.results.len(), 8);
         assert!(rep.results.iter().all(|r| r.len() == 5));
+        assert_eq!(rep.summary.errors, 0);
+    }
+
+    /// System that errors on some queries — the runner must keep going.
+    struct Flaky {
+        inner: BruteForce,
+    }
+
+    impl AnnSystem for Flaky {
+        fn name(&self) -> String {
+            "flaky".into()
+        }
+        fn search_one(
+            &self,
+            q: &[f32],
+            k: usize,
+            l: usize,
+            stats: &mut QueryStats,
+        ) -> crate::Result<Vec<u32>> {
+            anyhow::ensure!(q[0] < 20.0, "injected search failure");
+            self.inner.search_one(q, k, l, stats)
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn runner_survives_failing_queries() {
+        let mut base = VectorSet::new(Dtype::F32, 4, 50);
+        for i in 0..50 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let mut queries = VectorSet::new(Dtype::F32, 4, 8);
+        for i in 0..8 {
+            queries.set_from_f32(i, &[i as f32 * 5.0 + 0.1, 0.0, 0.0, 0.0]);
+        }
+        let sys = Flaky { inner: BruteForce { base } };
+        // Queries 4..8 have q[0] ≥ 20 → fail; 0..4 succeed.
+        let rep = run_workload(&sys, &queries, None, 5, 10, 4);
+        assert_eq!(rep.summary.queries, 8);
+        assert_eq!(rep.summary.errors, 4);
+        let nonempty = rep.results.iter().filter(|r| !r.is_empty()).count();
+        assert_eq!(nonempty, 4, "failed queries yield empty results, others survive");
     }
 
     #[test]

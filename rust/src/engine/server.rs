@@ -13,6 +13,14 @@
 //! sequential; concurrency comes from multiple connections, matching the
 //! paper's 1–16 query-thread setup). A shared [`AnnSystem`] serves all
 //! connections; per-thread scratch lives in the system's thread-locals.
+//!
+//! Failure semantics (ISSUE 6): a failed search answers with a `PANE`
+//! error frame and the connection survives; a malformed request is
+//! answered and the payload fully drained (when bounded) so the stream
+//! stays in sync, or the connection is closed (when it can't be); each
+//! connection carries a read timeout so a stalled client can't pin its
+//! thread forever; and persistent `accept` errors (e.g. EMFILE) back off
+//! exponentially instead of busy-spinning.
 
 use super::AnnSystem;
 use crate::metrics::QueryStats;
@@ -21,10 +29,19 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 pub const REQ_MAGIC: u32 = 0x50414E51;
 pub const RESP_MAGIC: u32 = 0x50414E52;
 pub const ERR_MAGIC: u32 = 0x50414E45;
+
+/// Hard cap on the query dimension a request may declare. Below it, a bad
+/// request's payload is drained so the connection stays usable; above it,
+/// draining is unbounded work for garbage, so the connection closes.
+pub const MAX_QDIM: usize = 1 << 16;
+
+/// Default per-connection read timeout (covers idle keep-alive too).
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Server statistics (scraped by monitoring / tests).
 #[derive(Debug, Default)]
@@ -32,6 +49,13 @@ pub struct ServerStats {
     pub queries: AtomicU64,
     pub errors: AtomicU64,
     pub total_ios: AtomicU64,
+    /// Read attempts retried inside the search path (sum of
+    /// `QueryStats::retries`).
+    pub retries: AtomicU64,
+    /// Pages permanently skipped inside the search path.
+    pub failed_ios: AtomicU64,
+    /// Queries answered from a degraded traversal (some page skipped).
+    pub degraded: AtomicU64,
 }
 
 pub struct QueryServer {
@@ -40,6 +64,7 @@ pub struct QueryServer {
     dim: usize,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
+    read_timeout: Option<Duration>,
 }
 
 /// Handle returned by [`QueryServer::spawn`]: stop + join the serve loop.
@@ -81,7 +106,14 @@ impl QueryServer {
             dim,
             stats: Arc::new(ServerStats::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
+            read_timeout: Some(DEFAULT_READ_TIMEOUT),
         })
+    }
+
+    /// Override the per-connection read timeout (`None` = never time out).
+    pub fn with_read_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.read_timeout = timeout;
+        self
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -98,14 +130,31 @@ impl QueryServer {
     }
 
     fn serve_loop(self) {
+        // Exponential backoff for persistent accept() failures (EMFILE,
+        // ENFILE): busy-spinning on a failing accept would peg a core and
+        // starve the very connections holding the descriptors we need.
+        let mut backoff = Duration::from_millis(10);
+        const MAX_BACKOFF: Duration = Duration::from_secs(1);
         loop {
             let (stream, _) = match self.listener.accept() {
-                Ok(s) => s,
-                Err(_) => continue,
+                Ok(s) => {
+                    backoff = Duration::from_millis(10);
+                    s
+                }
+                Err(e) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    eprintln!("server: accept failed ({e}); backing off {backoff:?}");
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(MAX_BACKOFF);
+                    continue;
+                }
             };
             if self.shutdown.load(Ordering::SeqCst) {
                 return;
             }
+            let _ = stream.set_read_timeout(self.read_timeout);
             let system = self.system.clone();
             let stats = self.stats.clone();
             let dim = self.dim;
@@ -121,6 +170,18 @@ fn read_u32(s: &mut TcpStream) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     s.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+/// Read and discard exactly `n` bytes — keeps the stream frame-aligned
+/// after a rejected request without allocating the full payload.
+fn drain_exact(s: &mut TcpStream, mut n: usize) -> std::io::Result<()> {
+    let mut sink = [0u8; 4096];
+    while n > 0 {
+        let take = n.min(sink.len());
+        s.read_exact(&mut sink[..take])?;
+        n -= take;
+    }
+    Ok(())
 }
 
 fn handle_connection(
@@ -147,10 +208,19 @@ fn handle_connection(
         let k = read_u32(&mut stream)? as usize;
         let l = read_u32(&mut stream)? as usize;
         let qdim = read_u32(&mut stream)? as usize;
+        if qdim > MAX_QDIM {
+            // Declared payload too large to drain in good faith — answer
+            // and close; there is no way to re-align the stream.
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = send_error(&mut stream, &format!("query dim {qdim} exceeds {MAX_QDIM}"));
+            return Ok(());
+        }
         if qdim != dim || k == 0 || k > 1000 || l > 100_000 {
-            // Drain the (bounded) payload then report.
-            let mut sink = vec![0u8; qdim.min(1 << 16) * 4];
-            let _ = stream.read_exact(&mut sink);
+            // Drain the FULL payload — exactly qdim f32s — so the next
+            // frame's magic lands where the parser looks for it. A partial
+            // drain would desync the connection and misparse payload bytes
+            // as magic words.
+            drain_exact(&mut stream, qdim * 4)?;
             stats.errors.fetch_add(1, Ordering::Relaxed);
             send_error(&mut stream, &format!("bad request: dim {qdim} (want {dim}), k {k}"))?;
             continue;
@@ -164,10 +234,26 @@ fn handle_connection(
 
         let mut qstats = QueryStats::default();
         let t = std::time::Instant::now();
-        let ids = system.search_one(&query, k, l.max(k), &mut qstats);
+        let ids = match system.search_one(&query, k, l.max(k), &mut qstats) {
+            Ok(ids) => ids,
+            Err(e) => {
+                // A failed search answers with an error frame; the
+                // connection (and its serving thread) survives.
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                stats.retries.fetch_add(qstats.retries, Ordering::Relaxed);
+                stats.failed_ios.fetch_add(qstats.failed_ios, Ordering::Relaxed);
+                send_error(&mut stream, &format!("search failed: {e}"))?;
+                continue;
+            }
+        };
         let ms = t.elapsed().as_secs_f64() * 1e3;
         stats.queries.fetch_add(1, Ordering::Relaxed);
         stats.total_ios.fetch_add(qstats.ios, Ordering::Relaxed);
+        stats.retries.fetch_add(qstats.retries, Ordering::Relaxed);
+        stats.failed_ios.fetch_add(qstats.failed_ios, Ordering::Relaxed);
+        if qstats.degraded {
+            stats.degraded.fetch_add(1, Ordering::Relaxed);
+        }
 
         let mut out = Vec::with_capacity(16 + ids.len() * 4);
         out.extend_from_slice(&RESP_MAGIC.to_le_bytes());
@@ -256,13 +342,22 @@ mod tests {
         fn name(&self) -> String {
             "brute".into()
         }
-        fn search_one(&self, q: &[f32], k: usize, _l: usize, stats: &mut QueryStats) -> Vec<u32> {
+        fn search_one(
+            &self,
+            q: &[f32],
+            k: usize,
+            _l: usize,
+            stats: &mut QueryStats,
+        ) -> Result<Vec<u32>> {
+            // Sentinel query → injected failure (exercises the PANE path).
+            anyhow::ensure!(q[0].is_finite(), "injected search failure");
             stats.ios = 3;
+            stats.retries = 1;
             let mut all: Vec<(f32, u32)> = (0..self.base.len())
                 .map(|i| (crate::distance::l2sq_query(q, self.base.view(i)), i as u32))
                 .collect();
             all.sort_by(|a, b| a.0.total_cmp(&b.0));
-            all.into_iter().take(k).map(|(_, i)| i).collect()
+            Ok(all.into_iter().take(k).map(|(_, i)| i).collect())
         }
         fn memory_bytes(&self) -> usize {
             0
@@ -333,6 +428,117 @@ mod tests {
         let mut buf = [0u8; 4];
         s.read_exact(&mut buf).unwrap();
         assert_eq!(u32::from_le_bytes(buf), ERR_MAGIC);
+        handle.stop();
+    }
+
+    #[test]
+    fn search_error_answers_pane_and_connection_survives() {
+        let (handle, _) = spawn_server();
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        // NaN query hits Brute's injected failure → PANE frame.
+        let err = client.query(&[f32::NAN, 0.0, 0.0, 0.0], 3, 10).unwrap_err();
+        assert!(err.to_string().contains("search failed"), "{err}");
+        assert_eq!(handle.stats.errors.load(Ordering::Relaxed), 1);
+        // Same connection keeps answering.
+        let resp = client.query(&[5.2, 0.0, 0.0, 0.0], 3, 10).unwrap();
+        assert_eq!(resp.ids, vec![5, 6, 4]);
+        assert_eq!(handle.stats.queries.load(Ordering::Relaxed), 1);
+        assert_eq!(handle.stats.retries.load(Ordering::Relaxed), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn oversized_dim_drains_and_resyncs() {
+        // A request with the wrong (but bounded) dim must leave the stream
+        // frame-aligned: the full payload is drained, an error frame comes
+        // back, and a subsequent valid query on the SAME connection works.
+        let (handle, dim) = spawn_server();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        let qdim = 1000usize; // != dim, ≤ MAX_QDIM
+        let mut req = Vec::new();
+        req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        req.extend_from_slice(&3u32.to_le_bytes()); // k
+        req.extend_from_slice(&10u32.to_le_bytes()); // l
+        req.extend_from_slice(&(qdim as u32).to_le_bytes());
+        req.extend_from_slice(&vec![0u8; qdim * 4]); // payload
+        s.write_all(&req).unwrap();
+        let mut b = [0u8; 4];
+        s.read_exact(&mut b).unwrap();
+        assert_eq!(u32::from_le_bytes(b), ERR_MAGIC);
+        s.read_exact(&mut b).unwrap();
+        let len = u32::from_le_bytes(b) as usize;
+        let mut msg = vec![0u8; len];
+        s.read_exact(&mut msg).unwrap();
+        // Now a valid query over the raw stream.
+        let mut req = Vec::new();
+        req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        req.extend_from_slice(&1u32.to_le_bytes());
+        req.extend_from_slice(&5u32.to_le_bytes());
+        req.extend_from_slice(&(dim as u32).to_le_bytes());
+        for x in [7.1f32, 0.0, 0.0, 0.0] {
+            req.extend_from_slice(&x.to_le_bytes());
+        }
+        s.write_all(&req).unwrap();
+        s.read_exact(&mut b).unwrap();
+        assert_eq!(u32::from_le_bytes(b), RESP_MAGIC, "stream desynced after drained request");
+        s.read_exact(&mut b).unwrap();
+        assert_eq!(u32::from_le_bytes(b), 1); // n results
+        s.read_exact(&mut b).unwrap();
+        assert_eq!(u32::from_le_bytes(b), 7); // nearest id
+        handle.stop();
+    }
+
+    #[test]
+    fn absurd_dim_errors_and_closes() {
+        // Beyond MAX_QDIM the server cannot drain in good faith: it must
+        // answer with an error frame and close the connection instead of
+        // reading gigabytes of garbage.
+        let (handle, _) = spawn_server();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        let mut req = Vec::new();
+        req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        req.extend_from_slice(&3u32.to_le_bytes());
+        req.extend_from_slice(&10u32.to_le_bytes());
+        req.extend_from_slice(&((MAX_QDIM as u32) + 1).to_le_bytes());
+        s.write_all(&req).unwrap();
+        let mut b = [0u8; 4];
+        s.read_exact(&mut b).unwrap();
+        assert_eq!(u32::from_le_bytes(b), ERR_MAGIC);
+        s.read_exact(&mut b).unwrap();
+        let len = u32::from_le_bytes(b) as usize;
+        let mut msg = vec![0u8; len];
+        s.read_exact(&mut msg).unwrap();
+        // Connection is closed: the next read hits EOF.
+        let n = s.read(&mut b).unwrap();
+        assert_eq!(n, 0, "connection must be closed after an undrainable request");
+        handle.stop();
+    }
+
+    #[test]
+    fn truncated_frame_times_out_instead_of_pinning_thread() {
+        // A client that sends half a header and stalls must not hold its
+        // serving thread forever — the read timeout reclaims it.
+        let dim = 4;
+        let mut base = VectorSet::new(Dtype::F32, dim, 4);
+        for i in 0..4 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let sys: Arc<dyn AnnSystem> = Arc::new(Brute { base });
+        let server = QueryServer::bind("127.0.0.1:0", sys, dim)
+            .unwrap()
+            .with_read_timeout(Some(Duration::from_millis(100)));
+        let handle = server.spawn().unwrap();
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        s.write_all(&REQ_MAGIC.to_le_bytes()).unwrap(); // ...and stall
+        // After the timeout the server abandons the connection: our next
+        // read returns EOF (or a reset) rather than hanging.
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut b = [0u8; 4];
+        match s.read(&mut b) {
+            Ok(0) => {}        // clean close
+            Ok(_) => panic!("server answered a truncated frame"),
+            Err(_) => {}       // reset — also fine
+        }
         handle.stop();
     }
 }

@@ -1,0 +1,510 @@
+//! Deterministic fault injection (ISSUE 6).
+//!
+//! [`FaultStore`] wraps any [`PageStore`] — uring, AIO, pread, or the
+//! sim-SSD model — and injects seeded, reproducible failures so every
+//! recovery path in the search/engine layers can be exercised in tests and
+//! CI without flaky hardware:
+//!
+//! * **transient EIO** — a page read fails with an I/O error but the next
+//!   attempt may succeed (`eio_rate`, plus `fail_first` for a guaranteed
+//!   fail-N-then-succeed schedule per page);
+//! * **bit flips** — the read "succeeds" but one bit in the returned
+//!   buffer is wrong (`flip_every`), which only the CRC32C page tail can
+//!   catch;
+//! * **torn reads** — the tail half of the buffer is stale zeros, as a
+//!   partial write/read leaves it (`torn_every`);
+//! * **latency spikes** — every Nth batch sleeps `spike_us` before
+//!   completing (`spike_every`), for deadline/timeout tests;
+//! * **dead pages** — pages in `dead` fail every attempt (permanent loss),
+//!   forcing the degraded-traversal path.
+//!
+//! All decisions derive from an explicit `seed` plus atomic read/batch
+//! counters, so a given config replays the same fault schedule regardless
+//! of wall-clock timing. Configure programmatically via
+//! [`crate::engine::OpenOptions`] or externally via the `PAGEANN_FAULTS`
+//! environment variable (see [`FaultConfig::parse`] for the grammar).
+//!
+//! Error semantics follow the batch API: any injected EIO inside a batch
+//! fails the whole `read_pages`/`wait` call (mirroring how the real
+//! backends report batch failures), while corruption faults leave the call
+//! "successful" — detection is the checksum layer's job.
+
+use super::{PageStore, PendingRead};
+use crate::util::XorShift;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What to do to one page read. Decided up front (advancing the seeded
+/// schedule) and applied after the inner read completes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Fault {
+    None,
+    /// Fail the batch with a transient I/O error.
+    Eio,
+    /// Flip one bit at this offset (bits, within the page).
+    Flip(usize),
+    /// Zero the buffer from this byte offset on.
+    Torn(usize),
+}
+
+/// Injection knobs. `Default` injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the fault schedule (EIO draws, flip positions).
+    pub seed: u64,
+    /// Probability in `[0, 1]` that a page read draws a transient EIO.
+    pub eio_rate: f64,
+    /// Every Nth page read gets one bit flipped (0 = off).
+    pub flip_every: u64,
+    /// Every Nth page read comes back torn — tail half zeroed (0 = off).
+    pub torn_every: u64,
+    /// Every Nth batch sleeps [`FaultConfig::spike`] before completing
+    /// (0 = off).
+    pub spike_every: u64,
+    /// Latency-spike duration.
+    pub spike: Duration,
+    /// The first N reads of *every* page fail with EIO, then succeed —
+    /// a deterministic retry-depth probe.
+    pub fail_first: u32,
+    /// Pages that fail every read (permanent loss).
+    pub dead: Vec<u32>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x5EED,
+            eio_rate: 0.0,
+            flip_every: 0,
+            torn_every: 0,
+            spike_every: 0,
+            spike: Duration::from_micros(500),
+            fail_first: 0,
+            dead: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when no knob is set — wrapping would be pure overhead.
+    pub fn is_noop(&self) -> bool {
+        self.eio_rate <= 0.0
+            && self.flip_every == 0
+            && self.torn_every == 0
+            && self.spike_every == 0
+            && self.fail_first == 0
+            && self.dead.is_empty()
+    }
+
+    /// Parse the `PAGEANN_FAULTS` grammar: comma-separated `key=value`
+    /// pairs, unknown keys rejected.
+    ///
+    /// ```text
+    /// seed=7,eio=0.05,flip_every=97,torn_every=0,spike_every=64,spike_us=500,fail_first=2,dead=3:17
+    /// ```
+    ///
+    /// `dead` takes `:`-separated page ids. An empty string parses to the
+    /// no-op config.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        for pair in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("PAGEANN_FAULTS: expected key=value, got {pair:?}"))?;
+            let bad = |e: &dyn std::fmt::Display| {
+                anyhow::anyhow!("PAGEANN_FAULTS: bad value for {key}: {e}")
+            };
+            match key {
+                "seed" => cfg.seed = val.parse().map_err(|e| bad(&e))?,
+                "eio" => {
+                    cfg.eio_rate = val.parse().map_err(|e| bad(&e))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&cfg.eio_rate),
+                        "PAGEANN_FAULTS: eio must be in [0,1], got {}",
+                        cfg.eio_rate
+                    );
+                }
+                "flip_every" => cfg.flip_every = val.parse().map_err(|e| bad(&e))?,
+                "torn_every" => cfg.torn_every = val.parse().map_err(|e| bad(&e))?,
+                "spike_every" => cfg.spike_every = val.parse().map_err(|e| bad(&e))?,
+                "spike_us" => {
+                    cfg.spike = Duration::from_micros(val.parse().map_err(|e| bad(&e))?)
+                }
+                "fail_first" => cfg.fail_first = val.parse().map_err(|e| bad(&e))?,
+                "dead" => {
+                    for id in val.split(':').filter(|v| !v.is_empty()) {
+                        cfg.dead.push(id.parse().map_err(|e| bad(&e))?);
+                    }
+                }
+                other => anyhow::bail!("PAGEANN_FAULTS: unknown key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Read `PAGEANN_FAULTS` from the environment. `None` when unset or
+    /// set to a no-op config; a malformed value is a hard error (silently
+    /// ignoring a typo'd fault spec would fake passing fault tests).
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var("PAGEANN_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => {
+                let cfg = Self::parse(&s)?;
+                Ok(if cfg.is_noop() { None } else { Some(cfg) })
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Injection totals — what actually fired, for test assertions and CI
+/// logs. All monotonic.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub eio: AtomicU64,
+    pub flips: AtomicU64,
+    pub torn: AtomicU64,
+    pub spikes: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn total_injected(&self) -> u64 {
+        self.eio.load(Ordering::Relaxed)
+            + self.flips.load(Ordering::Relaxed)
+            + self.torn.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`PageStore`] wrapper that injects the configured faults. Composable:
+/// wrap the raw backend, or wrap the sim-SSD wrapper to model a flaky
+/// device with realistic latencies.
+pub struct FaultStore {
+    inner: Box<dyn PageStore>,
+    cfg: FaultConfig,
+    rng: Mutex<XorShift>,
+    /// Per-page-read sequence number driving the every-Nth knobs.
+    reads: AtomicU64,
+    /// Batch sequence number driving latency spikes.
+    batches: AtomicU64,
+    /// Remaining `fail_first` countdown per page (absent = exhausted).
+    remaining_fails: Mutex<HashMap<u32, u32>>,
+    counters: FaultCounters,
+}
+
+impl FaultStore {
+    pub fn new(inner: Box<dyn PageStore>, cfg: FaultConfig) -> Self {
+        let rng = Mutex::new(XorShift::new(cfg.seed));
+        Self {
+            inner,
+            cfg,
+            rng,
+            reads: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            remaining_fails: Mutex::new(HashMap::new()),
+            counters: FaultCounters::default(),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn counters(&self) -> &FaultCounters {
+        &self.counters
+    }
+
+    /// Decide the fault for one page read, advancing the deterministic
+    /// schedule. Priority: dead page > fail-first countdown > random EIO >
+    /// periodic corruption.
+    fn decide(&self, page: u32) -> Fault {
+        if self.cfg.dead.contains(&page) {
+            return Fault::Eio;
+        }
+        let seq = self.reads.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cfg.fail_first > 0 {
+            let mut map = self.remaining_fails.lock().unwrap();
+            let left = map.entry(page).or_insert(self.cfg.fail_first);
+            if *left > 0 {
+                *left -= 1;
+                return Fault::Eio;
+            }
+        }
+        if self.cfg.eio_rate > 0.0 {
+            let draw = self.rng.lock().unwrap().next_f64();
+            if draw < self.cfg.eio_rate {
+                return Fault::Eio;
+            }
+        }
+        if self.cfg.flip_every > 0 && seq % self.cfg.flip_every == 0 {
+            let bit = self.rng.lock().unwrap().next_below(self.page_size() * 8);
+            return Fault::Flip(bit);
+        }
+        if self.cfg.torn_every > 0 && seq % self.cfg.torn_every == 0 {
+            return Fault::Torn(self.page_size() / 2);
+        }
+        Fault::None
+    }
+
+    fn maybe_spike(&self) {
+        if self.cfg.spike_every == 0 {
+            return;
+        }
+        let b = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if b % self.cfg.spike_every == 0 {
+            self.counters.spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.cfg.spike);
+        }
+    }
+
+    /// Apply pre-decided faults to a completed batch. Corruption mutates
+    /// the buffers in place; any EIO fails the whole batch (batch-level
+    /// error semantics, like the real backends).
+    fn apply(&self, page_ids: &[u32], plans: &[Fault], bufs: &mut [Vec<u8>]) -> Result<()> {
+        let mut eio_page = None;
+        for (k, plan) in plans.iter().enumerate() {
+            match *plan {
+                Fault::None => {}
+                Fault::Eio => {
+                    self.counters.eio.fetch_add(1, Ordering::Relaxed);
+                    eio_page = Some(page_ids[k]);
+                }
+                Fault::Flip(bit) => {
+                    self.counters.flips.fetch_add(1, Ordering::Relaxed);
+                    if let Some(b) = bufs[k].get_mut(bit / 8) {
+                        *b ^= 1 << (bit % 8);
+                    }
+                }
+                Fault::Torn(from) => {
+                    self.counters.torn.fetch_add(1, Ordering::Relaxed);
+                    for b in bufs[k].iter_mut().skip(from) {
+                        *b = 0;
+                    }
+                }
+            }
+        }
+        match eio_page {
+            Some(p) => anyhow::bail!("injected I/O error reading page {p}"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl PageStore for FaultStore {
+    fn page_size(&self) -> usize {
+        self.inner.page_size()
+    }
+
+    fn n_pages(&self) -> usize {
+        self.inner.n_pages()
+    }
+
+    fn read_pages(&self, page_ids: &[u32], out: &mut [Vec<u8>]) -> Result<()> {
+        if page_ids.is_empty() {
+            return Ok(());
+        }
+        self.maybe_spike();
+        // Decide first so the schedule advances even if the inner read
+        // fails — replaying a config replays the same fault sequence.
+        let plans: Vec<Fault> = page_ids.iter().map(|&p| self.decide(p)).collect();
+        self.inner.read_pages(page_ids, out)?;
+        self.apply(page_ids, &plans, out)
+    }
+
+    fn begin_read(&self, page_ids: &[u32], bufs: Vec<Vec<u8>>) -> PendingRead<'_> {
+        if page_ids.is_empty() {
+            return PendingRead::done(bufs, Ok(()));
+        }
+        let plans: Vec<Fault> = page_ids.iter().map(|&p| self.decide(p)).collect();
+        let ids: Vec<u32> = page_ids.to_vec();
+        let inner = self.inner.begin_read(page_ids, bufs);
+        if inner.completed_err() {
+            let (bufs, result) = inner.wait();
+            return PendingRead::done(bufs, result);
+        }
+        PendingRead::deferred(move || {
+            let (mut bufs, result) = inner.wait();
+            if result.is_err() {
+                return (bufs, result);
+            }
+            self.maybe_spike();
+            let r = self.apply(&ids, &plans, &mut bufs);
+            (bufs, r)
+        })
+    }
+
+    fn max_inflight_batches(&self) -> usize {
+        self.inner.max_inflight_batches()
+    }
+
+    fn name(&self) -> &'static str {
+        "faults"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::PreadPageStore;
+
+    fn store_with(cfg: FaultConfig, name: &str) -> (FaultStore, std::path::PathBuf) {
+        let path = std::env::temp_dir().join(format!("pageann-faults-{}-{name}", std::process::id()));
+        crate::io::write_test_pages(&path, 4096, 16);
+        let inner = Box::new(PreadPageStore::open(&path, 4096).unwrap());
+        (FaultStore::new(inner, cfg), path)
+    }
+
+    fn mk_bufs(n: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|_| vec![0u8; 4096]).collect()
+    }
+
+    #[test]
+    fn parse_grammar_and_noop() {
+        let c = FaultConfig::parse(
+            "seed=7, eio=0.05, flip_every=97, spike_every=64, spike_us=500, fail_first=2, dead=3:17",
+        )
+        .unwrap();
+        assert_eq!(c.seed, 7);
+        assert!((c.eio_rate - 0.05).abs() < 1e-12);
+        assert_eq!(c.flip_every, 97);
+        assert_eq!(c.spike_every, 64);
+        assert_eq!(c.spike, Duration::from_micros(500));
+        assert_eq!(c.fail_first, 2);
+        assert_eq!(c.dead, vec![3, 17]);
+        assert!(!c.is_noop());
+        assert!(FaultConfig::parse("").unwrap().is_noop());
+        assert!(FaultConfig::parse("seed=9").unwrap().is_noop());
+        assert!(FaultConfig::parse("bogus=1").is_err());
+        assert!(FaultConfig::parse("eio=1.5").is_err());
+        assert!(FaultConfig::parse("eio").is_err());
+    }
+
+    #[test]
+    fn no_faults_is_transparent() {
+        let (s, path) = store_with(FaultConfig::default(), "noop");
+        let ids = vec![3u32, 0, 7];
+        let mut bufs = mk_bufs(3);
+        s.read_pages(&ids, &mut bufs).unwrap();
+        for (k, &p) in ids.iter().enumerate() {
+            assert_eq!(bufs[k][5], ((p as usize * 131 + 5) % 251) as u8);
+        }
+        assert_eq!(s.counters().total_injected(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn eio_schedule_is_deterministic() {
+        let cfg = FaultConfig { eio_rate: 0.3, seed: 11, ..Default::default() };
+        let run = || {
+            let (s, path) = store_with(cfg.clone(), "det");
+            let mut outcomes = Vec::new();
+            for round in 0..50u32 {
+                let ids = vec![round % 16];
+                let mut bufs = mk_bufs(1);
+                outcomes.push(s.read_pages(&ids, &mut bufs).is_ok());
+            }
+            std::fs::remove_file(&path).unwrap();
+            (outcomes, s.counters().eio.load(Ordering::Relaxed))
+        };
+        let (a, ea) = run();
+        let (b, eb) = run();
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert_eq!(ea, eb);
+        assert!(ea > 0, "0.3 EIO rate fired never in 50 reads");
+        assert!(a.iter().any(|ok| *ok), "0.3 EIO rate fired always");
+    }
+
+    #[test]
+    fn fail_first_then_succeeds() {
+        let cfg = FaultConfig { fail_first: 2, ..Default::default() };
+        let (s, path) = store_with(cfg, "failfirst");
+        for attempt in 0..4 {
+            let mut bufs = mk_bufs(1);
+            let r = s.read_pages(&[5], &mut bufs);
+            if attempt < 2 {
+                assert!(r.is_err(), "attempt {attempt} should fail");
+            } else {
+                assert!(r.is_ok(), "attempt {attempt} should succeed");
+                assert_eq!(bufs[0][0], ((5 * 131) % 251) as u8);
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn dead_pages_always_fail() {
+        let cfg = FaultConfig { dead: vec![9], ..Default::default() };
+        let (s, path) = store_with(cfg, "dead");
+        for _ in 0..5 {
+            let mut bufs = mk_bufs(1);
+            assert!(s.read_pages(&[9], &mut bufs).is_err());
+            let mut bufs = mk_bufs(1);
+            assert!(s.read_pages(&[8], &mut bufs).is_ok());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bit_flips_and_torn_reads_corrupt_quietly() {
+        let cfg = FaultConfig { flip_every: 3, torn_every: 0, ..Default::default() };
+        let (s, path) = store_with(cfg, "flip");
+        let mut corrupted = 0;
+        for round in 0..12u32 {
+            let mut bufs = mk_bufs(1);
+            s.read_pages(&[round % 16], &mut bufs).unwrap(); // flips never error
+            let p = (round % 16) as usize;
+            let clean: Vec<u8> = (0..4096).map(|i| ((p * 131 + i) % 251) as u8).collect();
+            if bufs[0] != clean {
+                corrupted += 1;
+                // Exactly one bit differs.
+                let bits: u32 =
+                    bufs[0].iter().zip(&clean).map(|(a, b)| (a ^ b).count_ones()).sum();
+                assert_eq!(bits, 1);
+            }
+        }
+        assert_eq!(corrupted, 4, "flip_every=3 over 12 reads");
+        assert_eq!(s.counters().flips.load(Ordering::Relaxed), 4);
+        std::fs::remove_file(&path).unwrap();
+
+        let cfg = FaultConfig { torn_every: 2, ..Default::default() };
+        let (s, path) = store_with(cfg, "torn");
+        let mut bufs = mk_bufs(2);
+        s.read_pages(&[1, 2], &mut bufs).unwrap();
+        let torn: Vec<&Vec<u8>> =
+            bufs.iter().filter(|b| b[2048..].iter().all(|&x| x == 0)).collect();
+        assert_eq!(torn.len(), 1, "torn_every=2 over 2 reads tears exactly one");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn begin_read_returns_buffers_on_injected_error() {
+        // The owned-buffer contract must hold for injected faults too.
+        let cfg = FaultConfig { dead: vec![0], ..Default::default() };
+        let (s, path) = store_with(cfg, "ownership");
+        let (back, r) = s.begin_read(&[0, 1], mk_bufs(2)).wait();
+        assert!(r.is_err());
+        assert_eq!(back.len(), 2, "buffers lost on the injected-error path");
+        // Non-dead page content still intact in its buffer.
+        assert_eq!(back[1][0], (131 % 251) as u8);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn latency_spikes_fire_on_schedule() {
+        let cfg = FaultConfig {
+            spike_every: 2,
+            spike: Duration::from_millis(30),
+            ..Default::default()
+        };
+        let (s, path) = store_with(cfg, "spike");
+        let t = std::time::Instant::now();
+        for _ in 0..2 {
+            let mut bufs = mk_bufs(1);
+            s.read_pages(&[0], &mut bufs).unwrap();
+        }
+        assert!(t.elapsed() >= Duration::from_millis(30), "spike never fired");
+        assert_eq!(s.counters().spikes.load(Ordering::Relaxed), 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -35,6 +35,48 @@
 //! The override mirrors `PAGEANN_SIMD`: a forced value can never fail the
 //! open — it only changes where probing starts.
 //!
+//! # Fault injection
+//!
+//! Any backend can be wrapped in a [`FaultStore`] (see `faults`), which
+//! injects deterministic, seeded faults for robustness testing. The
+//! engine honors the `PAGEANN_FAULTS` environment variable (comma-
+//! separated `key=value`):
+//!
+//! | knob          | effect                                               |
+//! |---------------|------------------------------------------------------|
+//! | `seed=N`      | seed for the fault schedule (default 0x5EED)         |
+//! | `eio=P`       | each page read fails with probability P (transient)  |
+//! | `flip_every=N`| every Nth page read gets one bit flipped             |
+//! | `torn_every=N`| every Nth page read returns a zeroed tail half       |
+//! | `spike_every=N` + `spike_us=U` | every Nth batch sleeps U µs        |
+//! | `fail_first=N`| first N reads of every page fail, then succeed       |
+//! | `dead=A:B:…`  | listed pages fail every read (permanent loss)        |
+//!
+//! # Failure semantics
+//!
+//! The read path layers three defenses, from the bottom up:
+//!
+//! 1. **Detection.** v5 pages carry a CRC32C in their last 4 bytes
+//!    ([`crate::layout::PageRef::verify_checksum`]); the searcher verifies
+//!    every page as it comes off the device, so bit flips and torn reads
+//!    are *detected*, never silently scored.
+//! 2. **Bounded retry.** A failed batch (EIO) or a checksum-failed page is
+//!    re-read individually up to `SearchParams::max_io_retries` times with
+//!    exponential backoff; a speculative (pipelined) batch that fails
+//!    falls back to a plain synchronous re-read. Retries are counted in
+//!    `QueryStats::retries`.
+//! 3. **Degraded traversal.** A page that stays unreadable after retries
+//!    is *skipped*: the search marks the query degraded
+//!    (`QueryStats::degraded`, `failed_ios`) and continues the traversal
+//!    with the neighbors it has, instead of aborting. Results stay
+//!    identical to the fault-free run whenever every page was eventually
+//!    readable, and lose only the lost pages' candidates otherwise.
+//!
+//! Batch errors are *batch-level*: one injected or real EIO fails the
+//! whole `read_pages`/`wait` call, and the caller re-reads pages
+//! individually to isolate the failing ones. The owned-buffer contract
+//! (below) guarantees no buffer-pool leaks on any of these paths.
+//!
 //! # Multi-batch contract
 //!
 //! [`PageStore::begin_read`] takes *owned* buffers and hands them back
@@ -44,11 +86,13 @@
 //! ring) and its buffer pool can never leak through an error path.
 
 mod aio;
+mod faults;
 mod pread;
 mod simssd;
 mod uring;
 
 pub use aio::AioPageStore;
+pub use faults::{FaultConfig, FaultCounters, FaultStore};
 pub use pread::PreadPageStore;
 pub use simssd::{SimSsdStore, SsdModel};
 pub use uring::UringPageStore;

@@ -195,6 +195,7 @@ impl<'a> IndexBuilder<'a> {
             cv_placement: cfg.cv_placement,
             medoid_new_id: pg.remap.to_new(graph.medoid),
             routing_bits: routing.as_ref().map(|r| r.bits).unwrap_or(0),
+            page_crc: true,
         };
         meta.save(dir)?;
         sw.stop();
@@ -274,6 +275,7 @@ impl<'a> IndexBuilder<'a> {
                 page_size: cfg.page_size,
                 vec_stride: base.dim() * base.dtype().size_bytes(),
                 code_bytes: code_w,
+                checksum: true,
                 vectors,
                 neighbors,
             };

@@ -12,8 +12,14 @@ pub const MAGIC: u32 = 0x50414E4E; // "PANN"
 /// `⌈pq_m/2⌉`-byte codes instead of `pq_m` bytes; readers derive the stride
 /// from [`IndexMeta::code_bytes`]. v3 indexes with `pq_k > 16` are
 /// byte-identical, but the version gate forces a rebuild rather than risk a
-/// silent stride mismatch on small-k indexes.
-pub const VERSION: u32 = 4;
+/// silent stride mismatch on small-k indexes. v5: per-page CRC32C in the
+/// last 4 bytes of every page ([`IndexMeta::page_crc`]); v4 indexes load
+/// unchanged with `page_crc = false`, since the payload offsets are
+/// identical — only the tail reservation differs.
+pub const VERSION: u32 = 5;
+
+/// Last version whose pages carry no checksum tail.
+pub const LEGACY_UNCHECKSUMMED_VERSION: u32 = 4;
 
 /// Where compressed neighbor vectors live (paper §4.3 memory-disk
 /// coordination).
@@ -65,6 +71,9 @@ pub struct IndexMeta {
     pub medoid_new_id: u32,
     /// LSH routing bits (0 = no routing index on disk).
     pub routing_bits: usize,
+    /// Pages carry a CRC32C in their last 4 bytes (v5+ builds). Legacy v4
+    /// indexes load with this false and skip verification.
+    pub page_crc: bool,
 }
 
 impl IndexMeta {
@@ -88,7 +97,7 @@ impl IndexMeta {
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_u32(MAGIC)?;
-        w.write_u32(VERSION)?;
+        w.write_u32(if self.page_crc { VERSION } else { LEGACY_UNCHECKSUMMED_VERSION })?;
         w.write_u8(self.dtype.tag())?;
         w.write_u32(self.dim as u32)?;
         w.write_u64(self.n_vectors as u64)?;
@@ -108,7 +117,11 @@ impl IndexMeta {
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
         anyhow::ensure!(r.read_u32v()? == MAGIC, "bad magic (not a PageANN index)");
         let v = r.read_u32v()?;
-        anyhow::ensure!(v == VERSION, "index version {v} != supported {VERSION}");
+        anyhow::ensure!(
+            v == LEGACY_UNCHECKSUMMED_VERSION || v == VERSION,
+            "index version {v} not in supported range {LEGACY_UNCHECKSUMMED_VERSION}..={VERSION}"
+        );
+        let page_crc = v >= VERSION;
         let dtype = Dtype::from_tag(r.read_u8v()?)?;
         let dim = r.read_u32v()? as usize;
         let n_vectors = r.read_u64v()? as usize;
@@ -142,6 +155,7 @@ impl IndexMeta {
             cv_placement,
             medoid_new_id,
             routing_bits,
+            page_crc,
         })
     }
 
@@ -174,6 +188,7 @@ mod tests {
             cv_placement: CvPlacement::Hybrid { mem_frac: 0.5 },
             medoid_new_id: 17,
             routing_bits: 32,
+            page_crc: true,
         }
     }
 
@@ -189,6 +204,24 @@ mod tests {
         assert!(matches!(back.cv_placement, CvPlacement::Hybrid { mem_frac } if (mem_frac - 0.5).abs() < 1e-6));
         assert_eq!(back.medoid_new_id, 17);
         assert_eq!(back.n_slots(), 100_000);
+        assert!(back.page_crc);
+    }
+
+    #[test]
+    fn legacy_v4_loads_without_crc() {
+        // An un-checksummed index writes the legacy version word and reads
+        // back with `page_crc = false` — old indexes keep loading.
+        let mut m = meta();
+        m.page_crc = false;
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        assert_eq!(
+            u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]),
+            LEGACY_UNCHECKSUMMED_VERSION
+        );
+        let back = IndexMeta::read_from(&mut buf.as_slice()).unwrap();
+        assert!(!back.page_crc);
+        assert_eq!(back.dim, 128);
     }
 
     #[test]

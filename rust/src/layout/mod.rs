@@ -22,8 +22,8 @@ mod page;
 mod remap;
 
 pub use builder::{BuildConfig, BuildReport, IndexBuilder, IndexFiles};
-pub use meta::{CvPlacement, IndexMeta, MAGIC, VERSION};
-pub use page::{PageRef, PageWriter, OVERHEAD_PER_NBR_ID, PAGE_HEADER_BYTES};
+pub use meta::{CvPlacement, IndexMeta, LEGACY_UNCHECKSUMMED_VERSION, MAGIC, VERSION};
+pub use page::{PageRef, PageWriter, OVERHEAD_PER_NBR_ID, PAGE_CRC_BYTES, PAGE_HEADER_BYTES};
 pub use remap::IdRemap;
 
 /// Default SSD page size (bytes). 4 KiB mirrors the paper's main setup;
@@ -53,7 +53,9 @@ pub fn page_capacity(
     };
     let on_page_codes = ((1.0 - mem_code_frac) * max_nbrs as f64).ceil() as usize;
     let nbr_bytes = max_nbrs * 4 + flag_bytes + on_page_codes * code_bytes;
-    let avail = page_size.saturating_sub(PAGE_HEADER_BYTES + nbr_bytes);
+    // New builds always reserve the CRC32C tail (v5 format); only legacy
+    // v4 indexes go without, and those are never built anymore.
+    let avail = page_size.saturating_sub(PAGE_HEADER_BYTES + nbr_bytes + PAGE_CRC_BYTES);
     (avail / (vec_stride + 4)).max(1)
 }
 

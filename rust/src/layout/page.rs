@@ -18,11 +18,26 @@
 //!
 //! `PageRef` is a zero-copy view over a page buffer; the searcher never
 //! materializes an owned page.
+//!
+//! # Page integrity (ISSUE 6)
+//!
+//! Checksummed pages (meta v5, `IndexMeta::page_crc`) reserve their **last
+//! 4 bytes** for a CRC32C over the rest of the page, written by
+//! [`PageWriter::serialize_into`] when `checksum` is set. The tail position
+//! keeps every payload offset identical to the legacy layout, so v4 indexes
+//! parse with the same code and readers opt into verification via
+//! [`PageRef::verify_checksum`] / [`PageRef::parse_verified`]. Corruption
+//! anywhere in the page — a flipped bit, a torn write zeroing the tail, a
+//! misdirected read returning the wrong page image — fails verification
+//! instead of being silently scored.
 
+use crate::util::crc32c;
 use crate::Result;
 
 pub const PAGE_HEADER_BYTES: usize = 5;
 pub const OVERHEAD_PER_NBR_ID: usize = 4;
+/// Tail bytes reserved for the page CRC32C (checksummed layouts only).
+pub const PAGE_CRC_BYTES: usize = 4;
 
 const FLAG_BITMAP: u8 = 1;
 
@@ -31,6 +46,9 @@ pub struct PageWriter<'a> {
     pub page_size: usize,
     pub vec_stride: usize,
     pub code_bytes: usize,
+    /// Write a CRC32C into the page's last 4 bytes (meta v5 layout); those
+    /// bytes are then off-limits to payload.
+    pub checksum: bool,
     /// (orig_id, raw vector bytes) of the page node's members.
     pub vectors: Vec<(u32, &'a [u8])>,
     /// (new_id, Option<code>) neighbor entries; `None` = code lives in
@@ -57,6 +75,7 @@ impl<'a> PageWriter<'a> {
             + self.neighbors.len() * 4
             + bitmap
             + inline * self.code_bytes
+            + if self.checksum { PAGE_CRC_BYTES } else { 0 }
     }
 
     /// True if the contents fit the page.
@@ -120,6 +139,10 @@ impl<'a> PageWriter<'a> {
                 off += self.code_bytes;
             }
         }
+        if self.checksum {
+            let crc = crc32c(&out[..self.page_size - PAGE_CRC_BYTES]);
+            out[self.page_size - PAGE_CRC_BYTES..].copy_from_slice(&crc.to_le_bytes());
+        }
         Ok(())
     }
 }
@@ -136,6 +159,26 @@ pub struct PageRef<'a> {
 }
 
 impl<'a> PageRef<'a> {
+    /// True when `buf`'s trailing CRC32C matches its contents. Only
+    /// meaningful for checksummed layouts (`IndexMeta::page_crc`); a legacy
+    /// page's tail bytes are payload or zero padding, not a checksum.
+    pub fn verify_checksum(buf: &[u8]) -> bool {
+        if buf.len() < PAGE_HEADER_BYTES + PAGE_CRC_BYTES {
+            return false;
+        }
+        let body = &buf[..buf.len() - PAGE_CRC_BYTES];
+        let tail = &buf[buf.len() - PAGE_CRC_BYTES..];
+        crc32c(body) == u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]])
+    }
+
+    /// [`PageRef::parse`] preceded by checksum verification — the entry
+    /// point for bytes fresh off the device on a checksummed index. A
+    /// mismatch is reported before any structural field is trusted.
+    pub fn parse_verified(buf: &'a [u8], vec_stride: usize, code_bytes: usize) -> Result<Self> {
+        anyhow::ensure!(Self::verify_checksum(buf), "page checksum mismatch");
+        Self::parse(buf, vec_stride, code_bytes)
+    }
+
     pub fn parse(buf: &'a [u8], vec_stride: usize, code_bytes: usize) -> Result<Self> {
         anyhow::ensure!(buf.len() >= PAGE_HEADER_BYTES, "page too small");
         let n_vecs = u16::from_le_bytes([buf[0], buf[1]]) as usize;
@@ -292,6 +335,7 @@ mod tests {
             page_size: 512,
             vec_stride: stride,
             code_bytes: m,
+            checksum: false,
             vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
             neighbors: (0..5).map(|j| (j as u32 * 7, Some(codes[j].as_slice()))).collect(),
         };
@@ -313,6 +357,7 @@ mod tests {
             page_size: 256,
             vec_stride: 8,
             code_bytes: 4,
+            checksum: false,
             vectors: vec![(7, &[1u8; 8])],
             neighbors: vec![(11, None), (12, None)],
         };
@@ -333,7 +378,7 @@ mod tests {
         let mut neighbors: Vec<(u32, Option<&[u8]>)> = (0..12).map(|j| (j, None)).collect();
         neighbors[1].1 = Some(c1.as_slice());
         neighbors[9].1 = Some(c2.as_slice());
-        let w = PageWriter { page_size: 256, vec_stride: 4, code_bytes: m, vectors: vec![(0, &[0u8; 4])], neighbors };
+        let w = PageWriter { page_size: 256, vec_stride: 4, code_bytes: m, checksum: false, vectors: vec![(0, &[0u8; 4])], neighbors };
         let mut buf = vec![0u8; 256];
         w.serialize_into(&mut buf).unwrap();
         let p = PageRef::parse(&buf, 4, m).unwrap();
@@ -354,6 +399,7 @@ mod tests {
             page_size: 256,
             vec_stride: stride,
             code_bytes: 8,
+            checksum: false,
             vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
             neighbors: (0..20).map(|j| (j, Some(code.as_slice()))).collect(),
         };
@@ -373,5 +419,65 @@ mod tests {
         buf[0..2].copy_from_slice(&100u16.to_le_bytes()); // 100 vecs can't fit
         buf[2..4].copy_from_slice(&0u16.to_le_bytes());
         assert!(PageRef::parse(&buf, 32, 4).is_err());
+    }
+
+    #[test]
+    fn checksummed_roundtrip_and_detection() {
+        let stride = 16;
+        let m = 4;
+        let vecs = mk_vectors(3, stride);
+        let codes: Vec<Vec<u8>> = (0..5).map(|j| vec![j as u8; m]).collect();
+        let w = PageWriter {
+            page_size: 512,
+            vec_stride: stride,
+            code_bytes: m,
+            checksum: true,
+            vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
+            neighbors: (0..5).map(|j| (j as u32 * 7, Some(codes[j].as_slice()))).collect(),
+        };
+        let mut buf = vec![0u8; 512];
+        w.serialize_into(&mut buf).unwrap();
+        assert!(PageRef::verify_checksum(&buf));
+        let p = PageRef::parse_verified(&buf, stride, m).unwrap();
+        assert_eq!(p.n_vecs(), 3);
+        assert_eq!(p.nbr_code(4).unwrap(), &vec![4u8; m][..]);
+        // Any single flipped bit — payload, zero padding, or the stored CRC
+        // itself — must fail verification.
+        for bit in [0usize, 6 * 8 + 1, 300 * 8, 511 * 8 + 7] {
+            buf[bit / 8] ^= 1 << (bit % 8);
+            assert!(!PageRef::verify_checksum(&buf), "bit {bit} undetected");
+            assert!(PageRef::parse_verified(&buf, stride, m).is_err());
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+        // A torn page (tail half zeroed, as a partial write leaves it) is
+        // detected too.
+        let mut torn = buf.clone();
+        for b in torn[256..].iter_mut() {
+            *b = 0;
+        }
+        assert!(!PageRef::verify_checksum(&torn));
+    }
+
+    #[test]
+    fn checksum_reserves_tail_bytes() {
+        // With checksum on, contents that would exactly fill the page must
+        // be rejected / truncated — the CRC tail is not payload space.
+        let stride = 8;
+        let vecs = mk_vectors(2, stride);
+        let mut w = PageWriter {
+            page_size: PAGE_HEADER_BYTES + 2 * (4 + stride) + 3 * 4 + 2, // 2 short of CRC space
+            vec_stride: stride,
+            code_bytes: 4,
+            checksum: true,
+            vectors: vecs.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
+            neighbors: (0..3).map(|j| (j, None)).collect(),
+        };
+        assert!(!w.fits());
+        w.truncate_to_fit();
+        assert!(w.fits());
+        assert!(w.neighbors.len() < 3);
+        let mut buf = vec![0u8; w.page_size];
+        w.serialize_into(&mut buf).unwrap();
+        assert!(PageRef::verify_checksum(&buf));
     }
 }

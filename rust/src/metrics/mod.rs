@@ -39,6 +39,18 @@ pub struct QueryStats {
     /// results comparable across backends. The wasted bandwidth is
     /// `spec_wasted * page_size`.
     pub spec_wasted: u64,
+    /// Read attempts that failed (transient EIO or checksum mismatch) and
+    /// were retried successfully. Retried-then-OK reads still count once
+    /// in `ios`.
+    pub retries: u64,
+    /// Pages that stayed unreadable after all retries and were skipped.
+    pub failed_ios: u64,
+    /// Pages whose CRC32C tail failed verification (subset of the retry /
+    /// failed accounting; 0 on legacy un-checksummed indexes).
+    pub crc_failures: u64,
+    /// True when at least one page was permanently skipped — results may
+    /// be missing that page's candidates.
+    pub degraded: bool,
     /// Wall time inside I/O waits.
     pub io_time: Duration,
     /// Wall time in distance computation / heap maintenance.
@@ -58,6 +70,10 @@ impl QueryStats {
         self.approx_dists += other.approx_dists;
         self.spec_hits += other.spec_hits;
         self.spec_wasted += other.spec_wasted;
+        self.retries += other.retries;
+        self.failed_ios += other.failed_ios;
+        self.crc_failures += other.crc_failures;
+        self.degraded |= other.degraded;
         self.io_time += other.io_time;
         self.compute_time += other.compute_time;
         self.total_time += other.total_time;
@@ -76,6 +92,8 @@ impl QueryStats {
 #[derive(Debug, Clone, Default)]
 pub struct RunSummary {
     pub queries: u64,
+    /// Queries that returned an error (no results) instead of completing.
+    pub errors: u64,
     pub wall: Duration,
     pub totals: QueryStats,
     pub latency: LatencyHistogram,
@@ -135,6 +153,26 @@ mod tests {
         assert_eq!(a.ios, 5);
         assert_eq!(a.bytes_read, 150);
         assert_eq!(a.hops, 1);
+    }
+
+    #[test]
+    fn merge_fault_accounting() {
+        let mut a = QueryStats { retries: 1, ..Default::default() };
+        let b = QueryStats {
+            retries: 2,
+            failed_ios: 1,
+            crc_failures: 3,
+            degraded: true,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.failed_ios, 1);
+        assert_eq!(a.crc_failures, 3);
+        assert!(a.degraded);
+        // degraded is sticky: merging a clean query doesn't clear it.
+        a.merge(&QueryStats::default());
+        assert!(a.degraded);
     }
 
     #[test]

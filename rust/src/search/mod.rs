@@ -34,6 +34,18 @@
 //! and with `speculate` off; `ios` counts only consumed reads (see
 //! [`QueryStats::spec_hits`]/[`spec_wasted`]).
 //!
+//! # Fault tolerance (degraded reads)
+//!
+//! Disk-sourced pages are integrity-checked against the page CRC tail when
+//! the index carries one (`IndexMeta::page_crc`). A batch read error or a
+//! checksum mismatch does **not** fail the query: the affected pages are
+//! demoted to bounded per-page re-reads with exponential backoff
+//! ([`SearchParams::max_io_retries`]), and pages that stay unreadable are
+//! dropped from the hop while the traversal continues on the surviving
+//! frontier. The damage is reported, never hidden:
+//! [`QueryStats::retries`], [`QueryStats::crc_failures`],
+//! [`QueryStats::failed_ios`] and [`QueryStats::degraded`].
+//!
 //! [`spec_wasted`]: crate::metrics::QueryStats::spec_wasted
 //! [`QueryStats::spec_hits`]: crate::metrics::QueryStats::spec_hits
 
@@ -49,7 +61,7 @@ use crate::layout::{IndexMeta, PageRef};
 use crate::metrics::QueryStats;
 use crate::pq::{AdcLut, PqCodebook};
 use crate::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Tunables of one search (paper notation: L = pool, b = I/O batch).
 #[derive(Debug, Clone)]
@@ -71,6 +83,9 @@ pub struct SearchParams {
     /// with `max_inflight_batches() > 1`; results are bit-identical either
     /// way).
     pub speculate: bool,
+    /// Bounded per-page re-reads after a transient I/O error or checksum
+    /// mismatch before the page is skipped and the traversal degrades.
+    pub max_io_retries: usize,
 }
 
 impl Default for SearchParams {
@@ -83,6 +98,7 @@ impl Default for SearchParams {
             max_entries: 16,
             pipeline: true,
             speculate: true,
+            max_io_retries: 3,
         }
     }
 }
@@ -211,6 +227,40 @@ fn take_bufs(pool: &mut Vec<Vec<u8>>, n: usize, page_size: usize) -> Vec<Vec<u8>
     out
 }
 
+/// True when `buf` can be trusted as a faithful copy of its page: the CRC
+/// tail on checksummed (v5+) indexes, vacuously true on legacy indexes
+/// that carry no checksum.
+fn page_bytes_ok(meta: &IndexMeta, buf: &[u8]) -> bool {
+    !meta.page_crc || PageRef::verify_checksum(&buf[..meta.page_size])
+}
+
+/// Bounded synchronous re-read of one page with exponential backoff
+/// (50µs·2ⁿ, capped) — the retry policy for transient device errors and
+/// checksum mismatches. Every attempt counts in `stats.retries`; returns
+/// whether `buf` ended up holding a verified copy.
+fn reread_with_retries(
+    ctx: &SearchContext<'_>,
+    pid: u32,
+    buf: &mut Vec<u8>,
+    max_retries: usize,
+    stats: &mut QueryStats,
+) -> bool {
+    for attempt in 0..max_retries {
+        stats.retries += 1;
+        std::thread::sleep(Duration::from_micros(50u64 << attempt.min(6)));
+        match ctx.store.read_pages(std::slice::from_ref(&pid), std::slice::from_mut(buf)) {
+            Ok(()) => {
+                if page_bytes_ok(ctx.meta, buf) {
+                    return true;
+                }
+                stats.crc_failures += 1;
+            }
+            Err(_) => {}
+        }
+    }
+    false
+}
+
 /// Run Algorithm 2. `entries` are entry-point vector ids (new-id space)
 /// from the router (or the medoid fallback). The per-query ADC table is
 /// built into `scratch` from `ctx.pq`. Returns the top-k
@@ -316,6 +366,10 @@ fn run_hops<'c>(
 
     let HopState { deferred, disk_bufs, prefetched, spec } = hop;
 
+    // Pages dropped this hop after exhausting retries (degraded traversal)
+    // — cleared per hop, capacity retained.
+    let mut failed_pages: Vec<u32> = Vec::new();
+
     // Drains `deferred`: exact distances into the result reservoir;
     // evaluates to a `Result` so call sites with a read still in flight
     // can reclaim its buffers before propagating. The reservoir's
@@ -380,6 +434,7 @@ fn run_hops<'c>(
             continue;
         }
         stats.hops += 1;
+        failed_pages.clear();
 
         // Partition into speculation-covered / cached / disk. Pages the
         // in-flight speculative batch already covers need no new read.
@@ -433,46 +488,44 @@ fn run_hops<'c>(
             let (mut sbufs, sres) = sp.wait();
             stats.io_time += t_spec.elapsed();
             let spec_ok = sres.is_ok();
-            for (&pid, buf) in sids.iter().zip(sbufs.drain(..)) {
+            for (&pid, mut buf) in sids.iter().zip(sbufs.drain(..)) {
                 let wanted = want_spec.contains(&pid);
-                if spec_ok && wanted {
-                    stats.spec_hits += 1;
-                    stats.ios += 1;
-                    stats.bytes_read += meta.page_size as u64;
-                    prefetched.push((pid, buf));
-                } else {
+                if !wanted {
                     // `spec_wasted` measures *prediction* quality: a page
                     // the frontier never asked for. A correctly-predicted
                     // page lost to a device error is not the predictor's
-                    // fault (it is re-read below and counted there).
-                    if !wanted {
-                        stats.spec_wasted += 1;
-                    }
+                    // fault.
+                    stats.spec_wasted += 1;
                     scratch.page_bufs.push(buf);
+                    continue;
                 }
-            }
-            if !spec_ok && !want_spec.is_empty() {
-                // Rare: the speculative read failed after selection chose
-                // to rely on it. Speculation is best-effort, so recover
-                // with a synchronous make-up read instead of failing.
-                let mut mk = take_bufs(&mut scratch.page_bufs, want_spec.len(), meta.page_size);
-                let mk_result = ctx.store.read_pages(&want_spec, &mut mk);
-                stats.ios += want_spec.len() as u64;
-                stats.bytes_read += (want_spec.len() * meta.page_size) as u64;
-                match mk_result {
-                    Ok(()) => {
-                        for (&pid, buf) in want_spec.iter().zip(mk.drain(..)) {
-                            prefetched.push((pid, buf));
-                        }
+                // A wanted page is consumed as an ordinary read — but only
+                // once its bytes check out. A batch error taints every
+                // buffer: a failed read can leave a stale-but-valid page
+                // from the pool behind, which a checksum cannot tell from
+                // the real thing (the CRC doesn't bind page identity), so
+                // nothing from a failed batch is ever consumed directly.
+                let mut good = spec_ok && {
+                    let ok = page_bytes_ok(meta, &buf);
+                    if !ok {
+                        stats.crc_failures += 1;
                     }
-                    Err(e) => {
-                        // The device is genuinely failing: drain the main
-                        // read too so its buffers survive, then surface.
-                        scratch.page_bufs.append(&mut mk);
-                        let (b, _) = pending.wait();
-                        scratch.page_bufs.extend(b);
-                        return Err(e);
-                    }
+                    ok
+                };
+                if good {
+                    stats.spec_hits += 1;
+                } else {
+                    good =
+                        reread_with_retries(ctx, pid, &mut buf, params.max_io_retries, stats);
+                }
+                stats.ios += 1;
+                stats.bytes_read += meta.page_size as u64;
+                if good {
+                    prefetched.push((pid, buf));
+                } else {
+                    // Truly unreadable: drop the page, keep traversing.
+                    failed_pages.push(pid);
+                    scratch.page_bufs.push(buf);
                 }
             }
         }
@@ -483,7 +536,56 @@ fn run_hops<'c>(
         let (rbufs_back, read_result) = pending.wait();
         *disk_bufs = rbufs_back;
         stats.io_time += submit_time + t_wait.elapsed();
-        read_result?;
+
+        // Recovery: a batch error or a checksum mismatch demotes the
+        // affected pages to bounded per-page re-reads; pages that stay
+        // unreadable are dropped from the hop and the traversal continues
+        // degraded rather than failing the query.
+        let batch_ok = read_result.is_ok();
+        if !batch_ok || meta.page_crc {
+            let mut keep = 0usize;
+            for i in 0..disk_ids.len() {
+                let pid = disk_ids[i];
+                // Batch errors don't say which page failed, and a failed
+                // read can leave a stale-but-valid pool page behind that a
+                // checksum cannot tell from the real thing — so every page
+                // of a failed batch is re-read rather than salvaged.
+                let mut good = batch_ok && {
+                    let ok = page_bytes_ok(meta, &disk_bufs[i]);
+                    if !ok {
+                        stats.crc_failures += 1;
+                    }
+                    ok
+                };
+                if !good {
+                    good = reread_with_retries(
+                        ctx,
+                        pid,
+                        &mut disk_bufs[i],
+                        params.max_io_retries,
+                        stats,
+                    );
+                }
+                if good {
+                    // Stable compaction: kept pages preserve selection
+                    // order, so the topology phase's in-order matching
+                    // below still works.
+                    disk_ids.swap(keep, i);
+                    disk_bufs.swap(keep, i);
+                    keep += 1;
+                } else {
+                    failed_pages.push(pid);
+                }
+            }
+            for buf in disk_bufs.drain(keep..) {
+                scratch.page_bufs.push(buf);
+            }
+            disk_ids.truncate(keep);
+        }
+        if !failed_pages.is_empty() {
+            stats.failed_ios += failed_pages.len() as u64;
+            stats.degraded = true;
+        }
 
         // Two-deep pipeline: predict the next hop's batch from the
         // pre-topology pool and put it on the device now, so it reads
@@ -571,7 +673,9 @@ fn run_hops<'c>(
                 } else if let Some((_, b)) = prefetched.iter().find(|(id, _)| *id == p) {
                     b.as_slice()
                 } else {
-                    continue; // cache hit: handled in the second pass
+                    // Cache hit (second pass) or a page dropped as
+                    // unreadable this hop.
+                    continue;
                 };
                 gather(bytes, true)?;
                 processed += 1;
@@ -581,7 +685,7 @@ fn run_hops<'c>(
                 processed += 1;
             }
             anyhow::ensure!(
-                processed == scratch.page_ids.len(),
+                processed + failed_pages.len() == scratch.page_ids.len(),
                 "internal: a selected page lost its byte source"
             );
         }
@@ -638,5 +742,6 @@ mod tests {
         assert_eq!(p.io_batch, 5); // paper §6.1: batch size fixed at 5
         assert_eq!(p.k, 10); // recall@10
         assert!(p.speculate); // two-deep pipeline on by default
+        assert_eq!(p.max_io_retries, 3); // bounded degraded-read retries
     }
 }

@@ -1,0 +1,103 @@
+//! CRC32C (Castagnoli) — the page-integrity checksum (ISSUE 6).
+//!
+//! Software slicing-by-8 over compile-time tables: no external crates, no
+//! ISA requirements, ~1 GB/s — far above what the 4 KiB-page verification
+//! path needs. The polynomial is the same one SSE4.2's `crc32` instruction
+//! and every storage system (iSCSI, ext4, Btrfs) uses, so stored checksums
+//! stay meaningful if a hardware tier is added to the dispatch table later.
+
+/// Reflected Castagnoli polynomial.
+const POLY: u32 = 0x82F6_3B78;
+
+const fn make_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            j += 1;
+        }
+        t[0][i] = crc;
+        i += 1;
+    }
+    let mut k = 1;
+    while k < 8 {
+        let mut i = 0;
+        while i < 256 {
+            let prev = t[k - 1][i];
+            t[k][i] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
+            i += 1;
+        }
+        k += 1;
+    }
+    t
+}
+
+static TABLES: [[u32; 256]; 8] = make_tables();
+
+/// CRC32C of `data` (standard finalization: init `!0`, output inverted).
+pub fn crc32c(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        crc = TABLES[7][(lo & 0xFF) as usize]
+            ^ TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ TABLES[4][(lo >> 24) as usize]
+            ^ TABLES[3][(hi & 0xFF) as usize]
+            ^ TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ TABLES[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc3720_vectors() {
+        // The iSCSI test vectors every CRC32C implementation must match.
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(&[0u8; 32]), 0x8A91_36AA);
+        assert_eq!(crc32c(&[0xFFu8; 32]), 0x62A8_AB43);
+        let ascending: Vec<u8> = (0u8..32).collect();
+        assert_eq!(crc32c(&ascending), 0x46DD_794E);
+    }
+
+    #[test]
+    fn empty_and_incremental_shapes() {
+        assert_eq!(crc32c(&[]), 0);
+        // Slicing path (≥ 8 bytes) and byte-at-a-time tail must agree with
+        // a pure byte-at-a-time reference.
+        let data: Vec<u8> = (0..1027u32).map(|i| (i * 131 % 251) as u8).collect();
+        let mut reference = !0u32;
+        for &b in &data {
+            reference = (reference >> 8) ^ TABLES[0][((reference ^ b as u32) & 0xFF) as usize];
+        }
+        assert_eq!(crc32c(&data), !reference);
+    }
+
+    #[test]
+    fn single_bit_flip_always_detected() {
+        let mut page = vec![0u8; 4096];
+        for (i, b) in page.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let clean = crc32c(&page);
+        for bit in [0usize, 7, 1000 * 8 + 3, 4095 * 8 + 7] {
+            page[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(crc32c(&page), clean, "bit {bit} undetected");
+            page[bit / 8] ^= 1 << (bit % 8);
+        }
+        assert_eq!(crc32c(&page), clean);
+    }
+}

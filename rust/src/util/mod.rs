@@ -3,11 +3,13 @@
 //! fully offline — no rayon/tokio — so the crate carries its own).
 
 pub mod binio;
+mod crc32c;
 mod parallel;
 mod rng;
 mod timer;
 
 pub use binio::{ReadExt, WriteExt};
+pub use crc32c::crc32c;
 pub use parallel::{num_threads, parallel_chunks, parallel_for};
 pub use rng::XorShift;
 pub use timer::{format_duration, Stopwatch};

@@ -103,6 +103,7 @@ fn prop_page_serde_roundtrip() {
                 page_size,
                 vec_stride: stride,
                 code_bytes: m,
+                checksum: true,
                 vectors: vectors.iter().map(|(id, v)| (*id, v.as_slice())).collect(),
                 neighbors: neighbors.iter().map(|(id, c)| (*id, c.as_deref())).collect(),
             };
@@ -113,7 +114,8 @@ fn prop_page_serde_roundtrip() {
             let kept = w.neighbors.len();
             let mut buf = vec![0u8; page_size];
             w.serialize_into(&mut buf).unwrap();
-            let p = PageRef::parse(&buf, stride, m).unwrap();
+            assert!(PageRef::verify_checksum(&buf));
+            let p = PageRef::parse_verified(&buf, stride, m).unwrap();
             assert_eq!(p.n_vecs(), vectors.len());
             assert_eq!(p.n_nbrs(), kept);
             for (i, (oid, v)) in vectors.iter().enumerate() {
