@@ -1,0 +1,318 @@
+//! A minimal Rust lexer: just enough to split source into identifiers,
+//! punctuation, literals and comments with accurate line numbers, while
+//! never mistaking the *contents* of a string, char literal or comment for
+//! code. That is all the rule engine needs — no parse tree, no spans finer
+//! than a line.
+//!
+//! Handled forms: line comments (`//`, `///`, `//!`), nested block comments
+//! (`/* /* */ */`), string literals with escapes, raw strings
+//! (`r"…"`, `r#"…"#`, any number of `#`s), byte strings (`b"…"`, `br#"…"#`),
+//! char and byte-char literals (including escapes), lifetimes vs char
+//! literals, identifiers and numeric literals. Everything else is a
+//! single-character punctuation token.
+
+/// What a non-comment token is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `unwrap`, `as`, `u32`, …).
+    Ident,
+    /// Single punctuation character (`.`, `(`, `{`, `#`, `!`, …).
+    Punct,
+    /// String/char/numeric literal (content is opaque to the rules).
+    Literal,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment fragment. Multi-line block comments are split so every
+/// source line they touch gets its own entry — the SAFETY/allow scans are
+/// strictly line-based.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// The full lex of one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident_cont = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[start..j].iter().collect();
+            out.comments.push(Comment { line, text });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut frag = String::new();
+            let mut frag_line = line;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    out.comments.push(Comment { line: frag_line, text: frag.clone() });
+                    frag.clear();
+                    line += 1;
+                    frag_line = line;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    frag.push_str("/*");
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    frag.push(chars[j]);
+                    j += 1;
+                }
+            }
+            out.comments.push(Comment { line: frag_line, text: frag });
+            i = j;
+            continue;
+        }
+        // Raw / byte string starts: r"…", r#"…"#, b"…", br"…", br#"…"#.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && chars[j] == 'r' {
+                j += 1;
+            }
+            if (c == 'r' || (c == 'b' && j > i + 1)) && j < n && (chars[j] == '#' || chars[j] == '"')
+            {
+                // Raw string: count the #s, then find `"` + that many #s.
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    let tok_line = line;
+                    j += 1;
+                    'scan: while j < n {
+                        if chars[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if chars[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line: tok_line });
+                    i = j;
+                    continue;
+                }
+                // `r#ident` raw identifier or stray `#`: fall through and
+                // lex `r`/`b` as the start of a plain identifier below.
+            } else if c == 'b' && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '\'') {
+                // Byte string / byte char: same escape rules as the plain
+                // forms; handled by falling into them one char later.
+                i += 1;
+                continue;
+            }
+        }
+        // String literal with escapes.
+        if c == '"' {
+            let tok_line = line;
+            let mut j = i + 1;
+            while j < n {
+                match chars[j] {
+                    '\\' => j += 2,
+                    '\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line: tok_line });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: scan to the closing quote.
+                let mut j = i + 2;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                // Plain one-char literal 'x'.
+                out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            // Lifetime: emit just the quote; the identifier lexes on the
+            // next pass like any other.
+            out.toks.push(Tok { kind: TokKind::Punct, text: "'".to_string(), line });
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Ident, text, line });
+            i = j;
+            continue;
+        }
+        // Numeric literal (suffix glued on: `100u64`, `0x0f`). `.` is not
+        // consumed, so `1.7` lexes as three tokens — fine for the rules.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Literal, text, line });
+            i = j;
+            continue;
+        }
+        // Everything else: one punctuation char.
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn comments_do_not_leak_tokens() {
+        let l = lex("// unsafe unwrap\nlet x = 1; /* as u32 */\n");
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert!(!idents(&l).contains(&"as"));
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[0].text.contains("unsafe unwrap"));
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let l = lex("let s = \"unsafe as u32 // not a comment\"; call();");
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert!(idents(&l).contains(&"call"));
+        assert!(l.comments.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex("let s = r#\"quote \" inside, unsafe\"#; next();");
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert!(idents(&l).contains(&"next"));
+    }
+
+    #[test]
+    fn byte_strings_and_chars() {
+        let l = lex("let b = b\"bytes unsafe\"; let c = b'x'; let q = '\\''; done();");
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert!(idents(&l).contains(&"done"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        // The `a` of `'a` lexes as an identifier after a `'` punct —
+        // crucially the following code is still tokenized.
+        assert!(idents(&l).contains(&"str"));
+        let quotes = l.toks.iter().filter(|t| t.text == "'").count();
+        assert_eq!(quotes, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("/* outer /* inner */ still comment */ real();");
+        assert_eq!(idents(&l), vec!["real"]);
+    }
+
+    #[test]
+    fn multiline_block_comment_emits_per_line() {
+        let l = lex("/* SAFETY: line one\n   line two */\ncode();");
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("SAFETY"));
+        assert_eq!(l.comments[1].line, 2);
+        assert_eq!(l.toks[0].line, 3);
+    }
+
+    #[test]
+    fn line_numbers_track_strings_with_newlines() {
+        let l = lex("let s = \"a\nb\";\nmarker();");
+        let m = l.toks.iter().find(|t| t.text == "marker").unwrap();
+        assert_eq!(m.line, 3);
+    }
+
+    #[test]
+    fn method_chain_tokens() {
+        let l = lex("x.unwrap();");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["x", ".", "unwrap", "(", ")", ";"]);
+    }
+}

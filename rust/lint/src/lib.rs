@@ -1,0 +1,66 @@
+//! pallas-lint: repo-native static analysis for the PageANN tree.
+//!
+//! A deliberately small, dependency-free lexer + rule engine that enforces
+//! the repo's unsafe/invariant conventions as hard CI failures. See
+//! LINTS.md at the repo root for the rules and the `lint:allow` grammar,
+//! and UNSAFETY.md for the generated unsafe inventory.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{render_unsafety, FileReport};
+pub use rules::{check_file, Finding, UnsafeSite};
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Result of scanning a source tree.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    /// All findings across all files, in (path, line, rule) order.
+    pub findings: Vec<Finding>,
+    /// Per-file unsafe inventory (every scanned file, including clean ones),
+    /// in path order.
+    pub files: Vec<FileReport>,
+}
+
+/// Scan every `*.rs` file under `root` (recursively, deterministic order).
+pub fn scan_tree(root: &Path) -> io::Result<ScanResult> {
+    let mut paths = Vec::new();
+    collect_rs_files(root, root, &mut paths)?;
+    paths.sort();
+    let mut out = ScanResult::default();
+    for rel in paths {
+        let src = fs::read_to_string(root.join(&rel))?;
+        let checked = check_file(&rel, &src);
+        out.findings.extend(checked.findings);
+        out.files.push(FileReport { path: rel, unsafe_sites: checked.unsafe_sites });
+    }
+    out.findings
+        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(out)
+}
+
+/// Collect `*.rs` paths relative to `root`, `/`-separated.
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let ft = entry.file_type()?;
+        if ft.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if ft.is_file() && path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
+            let rel: Vec<String> = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect();
+            out.push(rel.join("/"));
+        }
+    }
+    Ok(())
+}

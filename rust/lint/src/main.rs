@@ -1,0 +1,86 @@
+//! CLI: `pallas-lint [ROOT] [--report[=PATH] | --report PATH]`
+//!
+//! Scans every `*.rs` under ROOT (default `rust/src`), prints findings as
+//! `path:line: [rule] message`, and exits 1 when there are any. With
+//! `--report`, also writes the UNSAFETY.md inventory (default path
+//! `UNSAFETY.md` next to the current directory). The scan runtime is
+//! printed so CI can show the leg stays sub-second.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::time::Instant;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut report: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--report" {
+            // Optional value: `--report PATH` or bare `--report`.
+            match args.next() {
+                Some(v) if !v.starts_with("--") => report = Some(PathBuf::from(v)),
+                Some(v) => {
+                    eprintln!("pallas-lint: unexpected flag after --report: {v}");
+                    return ExitCode::from(2);
+                }
+                None => report = Some(PathBuf::from("UNSAFETY.md")),
+            }
+        } else if let Some(p) = a.strip_prefix("--report=") {
+            report = Some(PathBuf::from(p));
+        } else if a == "--help" || a == "-h" {
+            println!("usage: pallas-lint [ROOT] [--report[=PATH]]");
+            println!("  ROOT      source tree to scan (default: rust/src)");
+            println!("  --report  also write the UNSAFETY.md inventory");
+            return ExitCode::SUCCESS;
+        } else if a.starts_with("--") {
+            eprintln!("pallas-lint: unknown flag {a} (see --help)");
+            return ExitCode::from(2);
+        } else if root.is_none() {
+            root = Some(PathBuf::from(a));
+        } else {
+            eprintln!("pallas-lint: unexpected extra argument {a}");
+            return ExitCode::from(2);
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from("rust/src"));
+
+    let started = Instant::now();
+    let scan = match pallas_lint::scan_tree(&root) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("pallas-lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let elapsed = started.elapsed();
+
+    for f in &scan.findings {
+        println!("{}", f.render());
+    }
+    let unsafe_total: usize = scan.files.iter().map(|f| f.unsafe_sites.len()).sum();
+    println!(
+        "pallas-lint: {} finding{} in {} file{} ({} unsafe site{}) in {:.1} ms",
+        scan.findings.len(),
+        if scan.findings.len() == 1 { "" } else { "s" },
+        scan.files.len(),
+        if scan.files.len() == 1 { "" } else { "s" },
+        unsafe_total,
+        if unsafe_total == 1 { "" } else { "s" },
+        elapsed.as_secs_f64() * 1e3,
+    );
+
+    if let Some(path) = report {
+        let md = pallas_lint::render_unsafety(&root.display().to_string(), &scan.files);
+        if let Err(e) = std::fs::write(&path, md) {
+            eprintln!("pallas-lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("pallas-lint: wrote {}", path.display());
+    }
+
+    if scan.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

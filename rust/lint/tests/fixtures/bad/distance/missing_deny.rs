@@ -1,0 +1,7 @@
+// Fixture: the SAFETY comment is present, but the file still lacks
+// #![deny(unsafe_op_in_unsafe_fn)] — only the deny finding fires.
+
+pub fn read_one(p: *const u8) -> u8 {
+    // SAFETY: fixture pointer is valid by construction.
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+// Fixture: unsafe block with no SAFETY comment, in a file without
+// #![deny(unsafe_op_in_unsafe_fn)] — both safety-comment findings fire.
+
+pub fn read_one(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,10 @@
+// Fixture: malformed allow waivers are findings in their own right.
+
+// lint:allow(no-such-rule): unknown rule name
+pub fn a() {}
+
+// lint:allow(hot-path-unwrap) missing the colon-reason
+pub fn b() {}
+
+// lint:allow(truncating-cast):
+pub fn c() {}

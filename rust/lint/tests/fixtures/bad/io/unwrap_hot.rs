@@ -1,0 +1,10 @@
+// Fixture: hot-path panics — io/ is a rule-2 scope.
+
+pub fn read(map: &std::collections::HashMap<u32, u32>) -> u32 {
+    let a = map.get(&1).unwrap();
+    let b = map.get(&2).expect("present");
+    if *a == *b {
+        panic!("equal");
+    }
+    *a + *b
+}

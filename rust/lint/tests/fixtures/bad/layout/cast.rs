@@ -1,0 +1,7 @@
+// Fixture: truncating casts in page-offset math — layout/ is a rule-3 scope.
+
+pub fn page_offset(byte_off: u64, page: u64) -> (u32, usize) {
+    let slot = byte_off as u32;
+    let idx = page as usize;
+    (slot, idx)
+}

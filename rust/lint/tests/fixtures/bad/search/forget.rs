@@ -1,0 +1,13 @@
+// Fixture: unsanctioned pool-bypass — forget/leak/ManuallyDrop all fire.
+
+pub fn lose(buf: Vec<u8>) {
+    std::mem::forget(buf);
+}
+
+pub fn lose_static(buf: Vec<u8>) -> &'static mut [u8] {
+    Box::leak(buf.into_boxed_slice())
+}
+
+pub fn wrap(buf: Vec<u8>) -> std::mem::ManuallyDrop<Vec<u8>> {
+    std::mem::ManuallyDrop::new(buf)
+}

@@ -1,0 +1,37 @@
+//! Fixture: a fully compliant hot-path file — zero findings expected.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+/// # Safety
+/// `p` must be valid for a single byte read.
+pub unsafe fn read_raw(p: *const u8) -> u8 {
+    // SAFETY: caller contract (see # Safety above).
+    unsafe { *p }
+}
+
+pub fn read_checked(buf: &[u8]) -> u8 {
+    assert!(!buf.is_empty());
+    // SAFETY: bounds asserted directly above before the raw read.
+    unsafe { *buf.as_ptr() }
+}
+
+pub fn offset(byte_off: u64) -> u32 {
+    // lint:allow(truncating-cast): fixture — byte_off < 2^32 by construction.
+    byte_off as u32
+}
+
+pub fn sanctioned(buf: Vec<u8>) {
+    // lint:allow(forbidden-forget): fixture — mimics the uring poison path.
+    std::mem::forget(buf);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        let v = vec![1u8];
+        let x = v.first().unwrap();
+        assert_eq!(*x, 1);
+        let off = 7u64 as u32;
+        assert_eq!(off, 7);
+    }
+}

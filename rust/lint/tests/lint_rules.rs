@@ -1,0 +1,80 @@
+//! Integration tests: every bad fixture fires its rule at the expected
+//! file:line, the good fixture is clean, and — the tree gate — `rust/src`
+//! itself has zero findings.
+
+use std::path::{Path, PathBuf};
+
+fn fixtures(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(sub)
+}
+
+/// (path, line, rule) triples, sorted — the shape the assertions use.
+fn triples(root: &Path) -> Vec<(String, usize, &'static str)> {
+    let scan = pallas_lint::scan_tree(root).expect("scan fixtures");
+    scan.findings.into_iter().map(|f| (f.path, f.line, f.rule)).collect()
+}
+
+#[test]
+fn bad_fixtures_fire_with_exact_locations() {
+    let got = triples(&fixtures("bad"));
+    let want: Vec<(String, usize, &'static str)> = vec![
+        // missing_deny.rs: SAFETY present, deny attribute absent.
+        ("distance/missing_deny.rs".into(), 6, "safety-comment"),
+        // no_safety.rs: both the missing comment and the missing deny attr.
+        ("distance/no_safety.rs".into(), 5, "safety-comment"),
+        ("distance/no_safety.rs".into(), 5, "safety-comment"),
+        // bad_allow.rs: three malformed lint:allow comments.
+        ("io/bad_allow.rs".into(), 3, "bad-allow"),
+        ("io/bad_allow.rs".into(), 6, "bad-allow"),
+        ("io/bad_allow.rs".into(), 9, "bad-allow"),
+        // unwrap_hot.rs: unwrap, expect, panic! on a hot path.
+        ("io/unwrap_hot.rs".into(), 4, "hot-path-unwrap"),
+        ("io/unwrap_hot.rs".into(), 5, "hot-path-unwrap"),
+        ("io/unwrap_hot.rs".into(), 7, "hot-path-unwrap"),
+        // cast.rs: two truncating casts in layout scope.
+        ("layout/cast.rs".into(), 4, "truncating-cast"),
+        ("layout/cast.rs".into(), 5, "truncating-cast"),
+        // forget.rs: forget, Box::leak, ManuallyDrop (type + ctor).
+        ("search/forget.rs".into(), 4, "forbidden-forget"),
+        ("search/forget.rs".into(), 8, "forbidden-forget"),
+        ("search/forget.rs".into(), 11, "forbidden-forget"),
+        ("search/forget.rs".into(), 12, "forbidden-forget"),
+    ];
+    assert_eq!(got, want);
+}
+
+#[test]
+fn good_fixture_is_clean() {
+    let got = triples(&fixtures("good"));
+    assert_eq!(got, vec![]);
+}
+
+#[test]
+fn good_fixture_unsafe_sites_are_inventoried() {
+    let scan = pallas_lint::scan_tree(&fixtures("good")).expect("scan");
+    let clean = scan.files.iter().find(|f| f.path == "io/clean.rs").expect("file");
+    assert_eq!(clean.unsafe_sites.len(), 3);
+    assert_eq!(clean.unsafe_sites[0].kind, "unsafe fn");
+    assert!(clean.unsafe_sites[0].summary.contains("# Safety"));
+    assert_eq!(clean.unsafe_sites[1].kind, "unsafe block");
+    assert!(clean.unsafe_sites[1].summary.contains("caller contract"));
+    assert_eq!(clean.unsafe_sites[2].kind, "unsafe block");
+    assert!(clean.unsafe_sites[2].summary.contains("bounds asserted"));
+}
+
+/// The tree gate: the production sources must be lint-clean. This is the
+/// same check `ci/tier1.sh` runs via the binary.
+#[test]
+fn rust_src_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let scan = pallas_lint::scan_tree(&root).expect("scan rust/src");
+    let rendered: Vec<String> = scan.findings.iter().map(|f| f.render()).collect();
+    assert!(
+        scan.findings.is_empty(),
+        "rust/src has lint findings:\n{}",
+        rendered.join("\n")
+    );
+    // The tree genuinely contains unsafe code; the inventory must see it.
+    let total: usize = scan.files.iter().map(|f| f.unsafe_sites.len()).sum();
+    assert!(total > 0, "expected unsafe sites in rust/src, found none");
+}

@@ -774,6 +774,8 @@ fn abl_c(ctx: &mut ExperimentCtx) -> Result<Vec<Table>> {
         Ok((arts, rt)) => {
             // The runtime must outlive the executables; one per process is
             // fine for an experiment binary.
+            // lint:allow(forbidden-forget): intentional 'static leak — the PJRT
+            // runtime lives for the rest of the experiment process.
             let rt: &'static crate::runtime::XlaRuntime = Box::leak(Box::new(rt));
             let scanner = crate::distance::XlaBatch::load(rt, &arts, 128, ctx.threads)?;
             let xla_idx = PageAnnIndex::open(

@@ -10,6 +10,7 @@
 //! * **dense** — flat `n_slots × code_bytes` array, O(1); used for
 //!   InMemory placement where every valid slot has a code.
 
+use crate::util::checked::{to_usize, Ix};
 use crate::util::ReadExt;
 use crate::Result;
 use std::io::Read;
@@ -37,8 +38,8 @@ impl MemCodes {
     /// covers most of the slot space (the InMemory regime).
     pub fn load(dir: &Path, n_slots: usize) -> Result<Self> {
         let mut f = std::io::BufReader::new(std::fs::File::open(dir.join("memcodes.bin"))?);
-        let m = f.read_u32v()? as usize; // storage stride, not subspaces
-        let n = f.read_u64v()? as usize;
+        let m = f.read_u32v()?.ix(); // storage stride, not subspaces
+        let n = to_usize(f.read_u64v()?)?;
         anyhow::ensure!(m > 0 && m <= 64, "corrupt memcodes header");
         let mut ids = Vec::with_capacity(n);
         let mut codes = vec![0u8; n * m];
@@ -52,7 +53,7 @@ impl MemCodes {
         if n * 2 >= n_slots && n_slots > 0 {
             let mut dense = vec![0u8; n_slots * m];
             for (i, &id) in ids.iter().enumerate() {
-                let id = id as usize;
+                let id = id.ix();
                 anyhow::ensure!(id < n_slots, "memcode id {id} out of slot range");
                 dense[id * m..(id + 1) * m].copy_from_slice(&codes[i * m..(i + 1) * m]);
             }
@@ -77,7 +78,7 @@ impl MemCodes {
                 Some(&codes[i * self.code_bytes..(i + 1) * self.code_bytes])
             }
             Repr::Dense { codes } => {
-                let o = new_id as usize * self.code_bytes;
+                let o = new_id.ix() * self.code_bytes;
                 codes.get(o..o + self.code_bytes)
             }
         }

@@ -13,6 +13,7 @@
 //!
 //! All distances are **squared Euclidean** (monotone in L2, so rankings are
 //! identical and we skip the sqrt everywhere, like the reference systems).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 mod native;
 pub mod simd;
@@ -63,6 +64,8 @@ pub fn l2sq_query(query: &[f32], v: VectorView<'_>) -> f32 {
         // f32 arm reads little-endian bytes rather than casting the slice.
         Dtype::F32 => (ks.l2sq_f32_bytes)(query, v.bytes),
         Dtype::U8 => (ks.l2sq_f32_u8)(query, v.bytes),
+        // SAFETY: u8 and i8 share size/alignment, so reinterpreting the
+        // borrowed byte slice in place (same pointer, same length) is sound.
         Dtype::I8 => (ks.l2sq_f32_i8)(query, unsafe {
             std::slice::from_raw_parts(v.bytes.as_ptr() as *const i8, v.bytes.len())
         }),

@@ -5,6 +5,7 @@
 //! explicit-SIMD kernels in [`super::simd`] and for the XLA backend. The
 //! hot path goes through [`NativeBatch`], which calls the runtime-dispatched
 //! kernel table; [`ScalarBatch`] pins the oracle for A/B runs.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 /// Squared L2 between two f32 slices of equal length.
 #[inline]
@@ -139,6 +140,8 @@ fn scan_with(
             let f = ks.l2sq_f32_i8;
             for i in 0..n {
                 let bytes = &block[i * stride..(i + 1) * stride];
+                // SAFETY: u8 and i8 share size/alignment, so reinterpreting
+                // the borrowed byte slice in place is sound.
                 let v = unsafe {
                     std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len())
                 };

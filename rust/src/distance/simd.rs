@@ -46,6 +46,7 @@
 //! in byte `s/2`, even `s` in the low nibble; any corrupt nibble still
 //! lands inside the 16-byte row, so the shuffle is memory-safe by
 //! construction.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use super::native;
 use std::sync::OnceLock;
@@ -235,196 +236,243 @@ mod avx2 {
     use std::arch::x86_64::*;
 
     /// Sum the 8 lanes of an AVX register.
+    ///
+    /// # Safety
+    /// The caller must have verified avx2+fma support (dispatch contract).
     #[inline]
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn hsum(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps::<1>(v);
-        let s = _mm_add_ps(lo, hi);
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
-        _mm_cvtss_f32(s)
+        // SAFETY: register-only intrinsics; the target features are enabled
+        // on this fn and verified by the dispatcher.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let s = _mm_add_ps(lo, hi);
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+            _mm_cvtss_f32(s)
+        }
     }
 
     pub fn l2sq_f32(a: &[f32], b: &[f32]) -> f32 {
         // Hard assert: the unsafe body does unchecked loads, so a length
         // mismatch must panic (not UB) even in release builds.
         assert_eq!(a.len(), b.len());
+        // SAFETY: lengths are equal (asserted above) and this table is only
+        // reachable after the dispatcher verified avx2+fma.
         unsafe { l2sq_f32_imp(a, b) }
     }
 
+    /// # Safety
+    /// Requires `a.len() == b.len()` and verified avx2+fma support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn l2sq_f32_imp(a: &[f32], b: &[f32]) -> f32 {
-        let n = a.len();
-        let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 16 <= n {
-            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
-            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
-            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
-            i += 16;
+        // SAFETY: every load/get_unchecked stays below n = a.len() = b.len()
+        // (caller contract); unaligned loads are used throughout.
+        unsafe {
+            let n = a.len();
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+                let d1 =
+                    _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+                acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+                acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+                i += 16;
+            }
+            if i + 8 <= n {
+                let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+                acc0 = _mm256_fmadd_ps(d, d, acc0);
+                i += 8;
+            }
+            let mut s = hsum(_mm256_add_ps(acc0, acc1));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+                s += d * d;
+                i += 1;
+            }
+            s
         }
-        if i + 8 <= n {
-            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-            acc0 = _mm256_fmadd_ps(d, d, acc0);
-            i += 8;
-        }
-        let mut s = hsum(_mm256_add_ps(acc0, acc1));
-        while i < n {
-            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-            s += d * d;
-            i += 1;
-        }
-        s
     }
 
     pub fn l2sq_f32_bytes(a: &[f32], b: &[u8]) -> f32 {
         assert_eq!(a.len() * 4, b.len());
+        // SAFETY: b holds exactly 4·a.len() bytes (asserted above); avx2+fma
+        // were verified by the dispatcher.
         unsafe { l2sq_f32_bytes_imp(a, b) }
     }
 
+    /// # Safety
+    /// Requires `b.len() == 4 * a.len()` and verified avx2+fma support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn l2sq_f32_bytes_imp(a: &[f32], b: &[u8]) -> f32 {
         // x86 is little-endian, so the raw bytes ARE the f32 payload;
         // `loadu` has no alignment requirement.
-        let n = a.len();
-        let pa = a.as_ptr();
-        let pb = b.as_ptr();
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 16 <= n {
-            let d0 = _mm256_sub_ps(
-                _mm256_loadu_ps(pa.add(i)),
-                _mm256_loadu_ps(pb.add(i * 4) as *const f32),
-            );
-            let d1 = _mm256_sub_ps(
-                _mm256_loadu_ps(pa.add(i + 8)),
-                _mm256_loadu_ps(pb.add((i + 8) * 4) as *const f32),
-            );
-            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
-            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
-            i += 16;
+        // SAFETY: byte offsets stay below 4n = b.len() (caller contract);
+        // only unaligned loads/reads are used on the byte side.
+        unsafe {
+            let n = a.len();
+            let pa = a.as_ptr();
+            let pb = b.as_ptr();
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let d0 = _mm256_sub_ps(
+                    _mm256_loadu_ps(pa.add(i)),
+                    _mm256_loadu_ps(pb.add(i * 4) as *const f32),
+                );
+                let d1 = _mm256_sub_ps(
+                    _mm256_loadu_ps(pa.add(i + 8)),
+                    _mm256_loadu_ps(pb.add((i + 8) * 4) as *const f32),
+                );
+                acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+                acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+                i += 16;
+            }
+            if i + 8 <= n {
+                let d = _mm256_sub_ps(
+                    _mm256_loadu_ps(pa.add(i)),
+                    _mm256_loadu_ps(pb.add(i * 4) as *const f32),
+                );
+                acc0 = _mm256_fmadd_ps(d, d, acc0);
+                i += 8;
+            }
+            let mut s = hsum(_mm256_add_ps(acc0, acc1));
+            while i < n {
+                let y = (pb.add(i * 4) as *const f32).read_unaligned();
+                let d = *a.get_unchecked(i) - y;
+                s += d * d;
+                i += 1;
+            }
+            s
         }
-        if i + 8 <= n {
-            let d = _mm256_sub_ps(
-                _mm256_loadu_ps(pa.add(i)),
-                _mm256_loadu_ps(pb.add(i * 4) as *const f32),
-            );
-            acc0 = _mm256_fmadd_ps(d, d, acc0);
-            i += 8;
-        }
-        let mut s = hsum(_mm256_add_ps(acc0, acc1));
-        while i < n {
-            let y = (pb.add(i * 4) as *const f32).read_unaligned();
-            let d = *a.get_unchecked(i) - y;
-            s += d * d;
-            i += 1;
-        }
-        s
     }
 
     pub fn l2sq_f32_u8(a: &[f32], b: &[u8]) -> f32 {
         assert_eq!(a.len(), b.len());
+        // SAFETY: lengths are equal (asserted above); avx2+fma verified by
+        // the dispatcher.
         unsafe { l2sq_f32_u8_imp(a, b) }
     }
 
+    /// # Safety
+    /// Requires `a.len() == b.len()` and verified avx2+fma support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn l2sq_f32_u8_imp(a: &[f32], b: &[u8]) -> f32 {
-        let n = a.len();
-        let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 16 <= n {
-            let bytes = _mm_loadu_si128(pb.add(i) as *const __m128i);
-            let lo = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
-            let hi = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(bytes)));
-            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), lo);
-            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), hi);
-            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
-            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
-            i += 16;
+        // SAFETY: every load/get_unchecked stays below n = a.len() = b.len()
+        // (caller contract); byte loads have no alignment requirement.
+        unsafe {
+            let n = a.len();
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let bytes = _mm_loadu_si128(pb.add(i) as *const __m128i);
+                let lo = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+                let hi = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(bytes)));
+                let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), lo);
+                let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), hi);
+                acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+                acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+                i += 16;
+            }
+            if i + 8 <= n {
+                let bytes = _mm_loadl_epi64(pb.add(i) as *const __m128i);
+                let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+                let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), v);
+                acc0 = _mm256_fmadd_ps(d, d, acc0);
+                i += 8;
+            }
+            let mut s = hsum(_mm256_add_ps(acc0, acc1));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
+                s += d * d;
+                i += 1;
+            }
+            s
         }
-        if i + 8 <= n {
-            let bytes = _mm_loadl_epi64(pb.add(i) as *const __m128i);
-            let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
-            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), v);
-            acc0 = _mm256_fmadd_ps(d, d, acc0);
-            i += 8;
-        }
-        let mut s = hsum(_mm256_add_ps(acc0, acc1));
-        while i < n {
-            let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
-            s += d * d;
-            i += 1;
-        }
-        s
     }
 
     pub fn l2sq_f32_i8(a: &[f32], b: &[i8]) -> f32 {
         assert_eq!(a.len(), b.len());
+        // SAFETY: lengths are equal (asserted above); avx2+fma verified by
+        // the dispatcher.
         unsafe { l2sq_f32_i8_imp(a, b) }
     }
 
+    /// # Safety
+    /// Requires `a.len() == b.len()` and verified avx2+fma support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn l2sq_f32_i8_imp(a: &[f32], b: &[i8]) -> f32 {
-        let n = a.len();
-        let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 16 <= n {
-            let bytes = _mm_loadu_si128(pb.add(i) as *const __m128i);
-            let lo = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
-            let hi = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(bytes)));
-            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), lo);
-            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), hi);
-            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
-            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
-            i += 16;
+        // SAFETY: every load/get_unchecked stays below n = a.len() = b.len()
+        // (caller contract); byte loads have no alignment requirement.
+        unsafe {
+            let n = a.len();
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let bytes = _mm_loadu_si128(pb.add(i) as *const __m128i);
+                let lo = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+                let hi = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(bytes)));
+                let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), lo);
+                let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), hi);
+                acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+                acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+                i += 16;
+            }
+            if i + 8 <= n {
+                let bytes = _mm_loadl_epi64(pb.add(i) as *const __m128i);
+                let v = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+                let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), v);
+                acc0 = _mm256_fmadd_ps(d, d, acc0);
+                i += 8;
+            }
+            let mut s = hsum(_mm256_add_ps(acc0, acc1));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
+                s += d * d;
+                i += 1;
+            }
+            s
         }
-        if i + 8 <= n {
-            let bytes = _mm_loadl_epi64(pb.add(i) as *const __m128i);
-            let v = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
-            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), v);
-            acc0 = _mm256_fmadd_ps(d, d, acc0);
-            i += 8;
-        }
-        let mut s = hsum(_mm256_add_ps(acc0, acc1));
-        while i < n {
-            let d = *a.get_unchecked(i) - *b.get_unchecked(i) as f32;
-            s += d * d;
-            i += 1;
-        }
-        s
     }
 
     pub fn norm_sq_f32(a: &[f32]) -> f32 {
+        // SAFETY: the impl only reads within a.len(); avx2+fma verified by
+        // the dispatcher.
         unsafe { norm_sq_f32_imp(a) }
     }
 
+    /// # Safety
+    /// Requires verified avx2+fma support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn norm_sq_f32_imp(a: &[f32]) -> f32 {
-        let n = a.len();
-        let pa = a.as_ptr();
-        let mut acc = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let v = _mm256_loadu_ps(pa.add(i));
-            acc = _mm256_fmadd_ps(v, v, acc);
-            i += 8;
+        // SAFETY: every load/get_unchecked stays below n = a.len().
+        unsafe {
+            let n = a.len();
+            let pa = a.as_ptr();
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let v = _mm256_loadu_ps(pa.add(i));
+                acc = _mm256_fmadd_ps(v, v, acc);
+                i += 8;
+            }
+            let mut s = hsum(acc);
+            while i < n {
+                let x = *a.get_unchecked(i);
+                s += x * x;
+                i += 1;
+            }
+            s
         }
-        let mut s = hsum(acc);
-        while i < n {
-            let x = *a.get_unchecked(i);
-            s += x * x;
-            i += 1;
-        }
-        s
     }
 
     pub fn adc_batch(table: &[f32], m: usize, k: usize, codes: &[u8], n: usize, out: &mut [f32]) {
@@ -435,9 +483,14 @@ mod avx2 {
         if m == 0 || m > ADC_MAX_M || k == 0 {
             return super::scalar_adc_batch(table, m, k, codes, n, out);
         }
+        // SAFETY: sizes were asserted above and m/k bounds checked; avx2+fma
+        // verified by the dispatcher.
         unsafe { adc_batch_imp(table, m, k, codes, n, out) }
     }
 
+    /// # Safety
+    /// Requires `codes.len() ≥ n·m`, `out.len() ≥ n`, `table.len() == m·k`,
+    /// `0 < m ≤ ADC_MAX_M`, `k > 0`, and verified avx2+fma support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn adc_batch_imp(
         table: &[f32],
@@ -447,36 +500,42 @@ mod avx2 {
         n: usize,
         out: &mut [f32],
     ) {
-        // 8 codes per iteration: transpose their bytes to subspace-major so
-        // each subspace contributes one 8-wide gather into its table row.
-        let mut tmp = [0u8; 8 * ADC_MAX_M];
-        // Valid code values are < k (PQ encoding), but codes come from
-        // on-disk pages/memcodes — clamp so a corrupt byte yields a wrong
-        // distance instead of an out-of-bounds gather (the scalar path
-        // bounds-checks; this is the SIMD equivalent of that guarantee).
-        let max_idx = _mm256_set1_epi32((k - 1) as i32);
-        let mut i = 0usize;
-        while i + 8 <= n {
-            for r in 0..8 {
-                let row = codes.as_ptr().add((i + r) * m);
-                for s in 0..m {
-                    *tmp.get_unchecked_mut(s * 8 + r) = *row.add(s);
+        // SAFETY: code-row reads stay below n·m, `tmp` writes below 8·m ≤
+        // 8·ADC_MAX_M, stores below n (caller contract), and gather indices
+        // are clamped to k-1 so every lane lands inside its table row.
+        unsafe {
+            // 8 codes per iteration: transpose their bytes to subspace-major
+            // so each subspace contributes one 8-wide gather into its row.
+            let mut tmp = [0u8; 8 * ADC_MAX_M];
+            // Valid code values are < k (PQ encoding), but codes come from
+            // on-disk pages/memcodes — clamp so a corrupt byte yields a
+            // wrong distance instead of an out-of-bounds gather (the scalar
+            // path bounds-checks; this is the SIMD equivalent).
+            let max_idx = _mm256_set1_epi32((k - 1) as i32);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                for r in 0..8 {
+                    let row = codes.as_ptr().add((i + r) * m);
+                    for s in 0..m {
+                        *tmp.get_unchecked_mut(s * 8 + r) = *row.add(s);
+                    }
                 }
+                let mut acc = _mm256_setzero_ps();
+                let mut base = table.as_ptr();
+                for s in 0..m {
+                    let idx = _mm256_cvtepu8_epi32(_mm_loadl_epi64(
+                        tmp.as_ptr().add(s * 8) as *const __m128i
+                    ));
+                    let idx = _mm256_min_epi32(idx, max_idx);
+                    acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(base, idx));
+                    base = base.add(k);
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), acc);
+                i += 8;
             }
-            let mut acc = _mm256_setzero_ps();
-            let mut base = table.as_ptr();
-            for s in 0..m {
-                let idx =
-                    _mm256_cvtepu8_epi32(_mm_loadl_epi64(tmp.as_ptr().add(s * 8) as *const __m128i));
-                let idx = _mm256_min_epi32(idx, max_idx);
-                acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(base, idx));
-                base = base.add(k);
+            if i < n {
+                super::scalar_adc_batch(table, m, k, &codes[i * m..], n - i, &mut out[i..]);
             }
-            _mm256_storeu_ps(out.as_mut_ptr().add(i), acc);
-            i += 8;
-        }
-        if i < n {
-            super::scalar_adc_batch(table, m, k, &codes[i * m..], n - i, &mut out[i..]);
         }
     }
 
@@ -497,9 +556,15 @@ mod avx2 {
         if m == 0 || m > ADC_MAX_M {
             return super::scalar_adc4_batch(qtable, m, codes, n, scale, bias, out);
         }
+        // SAFETY: sizes were asserted above and m bounds checked; avx2+fma
+        // verified by the dispatcher.
         unsafe { adc4_batch_imp(qtable, m, codes, n, scale, bias, out) }
     }
 
+    /// # Safety
+    /// Requires `codes.len() ≥ n·⌈m/2⌉`, `out.len() ≥ n`,
+    /// `qtable.len() == 16·m`, `0 < m ≤ ADC_MAX_M`, and verified avx2+fma
+    /// support.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn adc4_batch_imp(
         qtable: &[u8],
@@ -510,58 +575,73 @@ mod avx2 {
         bias: f32,
         out: &mut [f32],
     ) {
-        // 16 codes per iteration: transpose their packed bytes to
-        // byte-column-major, then each column feeds two in-register row
-        // lookups (`pshufb` with the low / high nibbles as indices) — no
-        // gather. u16 accumulators cannot overflow: m ≤ 64 rows of ≤ 255.
-        let cw = (m + 1) / 2;
-        let mut tmp = [0u8; 16 * ((ADC_MAX_M + 1) / 2)];
-        let lo_mask = _mm_set1_epi8(0x0f);
-        let zero = _mm_setzero_si128();
-        let scale_v = _mm256_set1_ps(scale);
-        let bias_v = _mm256_set1_ps(bias);
-        let mut i = 0usize;
-        while i + 16 <= n {
-            for r in 0..16 {
-                let row = codes.as_ptr().add((i + r) * cw);
+        // SAFETY: code-row reads stay below n·cw, `tmp` writes below 16·cw,
+        // qtable row loads below 16·m, stores below n (caller contract);
+        // shuffle indices are 4-bit so they always land inside a 16-byte
+        // row.
+        unsafe {
+            // 16 codes per iteration: transpose their packed bytes to
+            // byte-column-major, then each column feeds two in-register row
+            // lookups (`pshufb` with the low / high nibbles as indices) — no
+            // gather. u16 accumulators cannot overflow: m ≤ 64 rows of ≤
+            // 255.
+            let cw = (m + 1) / 2;
+            let mut tmp = [0u8; 16 * ((ADC_MAX_M + 1) / 2)];
+            let lo_mask = _mm_set1_epi8(0x0f);
+            let zero = _mm_setzero_si128();
+            let scale_v = _mm256_set1_ps(scale);
+            let bias_v = _mm256_set1_ps(bias);
+            let mut i = 0usize;
+            while i + 16 <= n {
+                for r in 0..16 {
+                    let row = codes.as_ptr().add((i + r) * cw);
+                    for t in 0..cw {
+                        *tmp.get_unchecked_mut(t * 16 + r) = *row.add(t);
+                    }
+                }
+                let mut acc_lo = _mm_setzero_si128(); // u16 sums, codes i..i+8
+                let mut acc_hi = _mm_setzero_si128(); // u16 sums, codes i+8..i+16
                 for t in 0..cw {
-                    *tmp.get_unchecked_mut(t * 16 + r) = *row.add(t);
+                    let bytes = _mm_loadu_si128(tmp.as_ptr().add(t * 16) as *const __m128i);
+                    let idx_lo = _mm_and_si128(bytes, lo_mask);
+                    let row0 = _mm_loadu_si128(qtable.as_ptr().add(2 * t * 16) as *const __m128i);
+                    let v0 = _mm_shuffle_epi8(row0, idx_lo);
+                    acc_lo = _mm_add_epi16(acc_lo, _mm_unpacklo_epi8(v0, zero));
+                    acc_hi = _mm_add_epi16(acc_hi, _mm_unpackhi_epi8(v0, zero));
+                    if 2 * t + 1 < m {
+                        let idx_hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), lo_mask);
+                        let row1 =
+                            _mm_loadu_si128(qtable.as_ptr().add((2 * t + 1) * 16) as *const __m128i);
+                        let v1 = _mm_shuffle_epi8(row1, idx_hi);
+                        acc_lo = _mm_add_epi16(acc_lo, _mm_unpacklo_epi8(v1, zero));
+                        acc_hi = _mm_add_epi16(acc_hi, _mm_unpackhi_epi8(v1, zero));
+                    }
                 }
+                // Dequantize with mul+add (NOT fma): must match the scalar
+                // oracle bit-for-bit.
+                let s_lo = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(acc_lo));
+                let s_hi = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(acc_hi));
+                _mm256_storeu_ps(
+                    out.as_mut_ptr().add(i),
+                    _mm256_add_ps(_mm256_mul_ps(s_lo, scale_v), bias_v),
+                );
+                _mm256_storeu_ps(
+                    out.as_mut_ptr().add(i + 8),
+                    _mm256_add_ps(_mm256_mul_ps(s_hi, scale_v), bias_v),
+                );
+                i += 16;
             }
-            let mut acc_lo = _mm_setzero_si128(); // u16 sums, codes i..i+8
-            let mut acc_hi = _mm_setzero_si128(); // u16 sums, codes i+8..i+16
-            for t in 0..cw {
-                let bytes = _mm_loadu_si128(tmp.as_ptr().add(t * 16) as *const __m128i);
-                let idx_lo = _mm_and_si128(bytes, lo_mask);
-                let row0 = _mm_loadu_si128(qtable.as_ptr().add(2 * t * 16) as *const __m128i);
-                let v0 = _mm_shuffle_epi8(row0, idx_lo);
-                acc_lo = _mm_add_epi16(acc_lo, _mm_unpacklo_epi8(v0, zero));
-                acc_hi = _mm_add_epi16(acc_hi, _mm_unpackhi_epi8(v0, zero));
-                if 2 * t + 1 < m {
-                    let idx_hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), lo_mask);
-                    let row1 =
-                        _mm_loadu_si128(qtable.as_ptr().add((2 * t + 1) * 16) as *const __m128i);
-                    let v1 = _mm_shuffle_epi8(row1, idx_hi);
-                    acc_lo = _mm_add_epi16(acc_lo, _mm_unpacklo_epi8(v1, zero));
-                    acc_hi = _mm_add_epi16(acc_hi, _mm_unpackhi_epi8(v1, zero));
-                }
+            if i < n {
+                super::scalar_adc4_batch(
+                    qtable,
+                    m,
+                    &codes[i * cw..],
+                    n - i,
+                    scale,
+                    bias,
+                    &mut out[i..],
+                );
             }
-            // Dequantize with mul+add (NOT fma): must match the scalar
-            // oracle bit-for-bit.
-            let s_lo = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(acc_lo));
-            let s_hi = _mm256_cvtepi32_ps(_mm256_cvtepu16_epi32(acc_hi));
-            _mm256_storeu_ps(
-                out.as_mut_ptr().add(i),
-                _mm256_add_ps(_mm256_mul_ps(s_lo, scale_v), bias_v),
-            );
-            _mm256_storeu_ps(
-                out.as_mut_ptr().add(i + 8),
-                _mm256_add_ps(_mm256_mul_ps(s_hi, scale_v), bias_v),
-            );
-            i += 16;
-        }
-        if i < n {
-            super::scalar_adc4_batch(qtable, m, &codes[i * cw..], n - i, scale, bias, &mut out[i..]);
         }
     }
 }
@@ -594,6 +674,8 @@ mod neon {
         // Hard assert: the unsafe body does unchecked loads, so a length
         // mismatch must panic (not UB) even in release builds.
         assert_eq!(a.len(), b.len());
+        // SAFETY: every load/get_unchecked stays below n = a.len() = b.len()
+        // (asserted above); NEON is baseline on aarch64.
         unsafe {
             let n = a.len();
             let (pa, pb) = (a.as_ptr(), b.as_ptr());
@@ -624,6 +706,8 @@ mod neon {
 
     pub fn l2sq_f32_bytes(a: &[f32], b: &[u8]) -> f32 {
         assert_eq!(a.len() * 4, b.len());
+        // SAFETY: byte offsets stay below 4n = b.len() (asserted above);
+        // only alignment-1 byte loads and unaligned reads touch `b`.
         unsafe {
             // Byte loads have alignment 1; reinterpret to f32 lanes (LE).
             let n = a.len();
@@ -650,6 +734,8 @@ mod neon {
 
     pub fn l2sq_f32_u8(a: &[f32], b: &[u8]) -> f32 {
         assert_eq!(a.len(), b.len());
+        // SAFETY: every load/get_unchecked stays below n = a.len() = b.len()
+        // (asserted above).
         unsafe {
             let n = a.len();
             let (pa, pb) = (a.as_ptr(), b.as_ptr());
@@ -678,6 +764,8 @@ mod neon {
 
     pub fn l2sq_f32_i8(a: &[f32], b: &[i8]) -> f32 {
         assert_eq!(a.len(), b.len());
+        // SAFETY: every load/get_unchecked stays below n = a.len() = b.len()
+        // (asserted above).
         unsafe {
             let n = a.len();
             let (pa, pb) = (a.as_ptr(), b.as_ptr());
@@ -705,6 +793,7 @@ mod neon {
     }
 
     pub fn norm_sq_f32(a: &[f32]) -> f32 {
+        // SAFETY: every load/get_unchecked stays below n = a.len().
         unsafe {
             let n = a.len();
             let pa = a.as_ptr();
@@ -742,6 +831,9 @@ mod neon {
         if m == 0 || m > super::ADC_MAX_M {
             return super::scalar_adc4_batch(qtable, m, codes, n, scale, bias, out);
         }
+        // SAFETY: code-row reads stay below n·cw, `tmp` writes below 16·cw,
+        // qtable row loads below 16·m, stores below n (all asserted above);
+        // `tbl` indexes are 4-bit so they land inside a 16-byte row.
         unsafe {
             // Mirror of the AVX2 fast-scan: 16 codes per iteration,
             // transposed to byte-column-major; `tbl` looks 16 nibbles up in

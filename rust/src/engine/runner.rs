@@ -5,6 +5,7 @@
 use super::AnnSystem;
 use crate::dataset::{recall_at_k, VectorSet};
 use crate::metrics::{CpuMeter, LatencyHistogram, QueryStats, RunSummary};
+use crate::util::sync::{into_inner, lock};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -69,20 +70,20 @@ pub fn run_workload(
                     local.merge(&stats);
                     mine.push((qi, ids));
                 }
-                let mut g = agg.lock().unwrap();
+                let mut g = lock(&agg);
                 g.0.merge(&local);
                 g.1.merge(&hist);
                 drop(g);
-                done.lock().unwrap().push(mine);
+                lock(&done).push(mine);
             });
         }
     });
     let wall = wall_start.elapsed();
     let cpu_pct = cpu.utilization_pct();
 
-    let (totals, latency) = agg.into_inner().unwrap();
+    let (totals, latency) = into_inner(agg);
     let mut results: Vec<Vec<u32>> = vec![Vec::new(); n];
-    for batch in done.into_inner().unwrap() {
+    for batch in into_inner(done) {
         for (qi, ids) in batch {
             results[qi] = ids;
         }
@@ -118,32 +119,26 @@ pub fn tune_to_recall(
     nthreads: usize,
 ) -> (usize, WorkloadReport) {
     let mut l = k.max(10);
-    let mut best: Option<(usize, WorkloadReport)> = None;
-    for _ in 0..10 {
+    // The first run seeds `best` unconditionally, so the rest of the sweep
+    // never deals in `Option` (and the loop only runs while `best` is a
+    // miss — any hit both replaces it and ends the sweep).
+    let mut best = (l, run_workload(sys, queries, Some(gt), k, l, nthreads));
+    let mut hit = best.1.summary.recall >= target_recall;
+    let mut tries = 1;
+    while !hit && tries < 10 {
+        let grown = (l as f64 * 1.7).ceil() as usize;
+        if grown > 4096 {
+            break;
+        }
+        l = grown;
         let rep = run_workload(sys, queries, Some(gt), k, l, nthreads);
-        let hit = rep.summary.recall >= target_recall;
-        let replace = match &best {
-            None => true,
-            Some((_, b)) => {
-                if hit {
-                    b.summary.recall < target_recall || l < best.as_ref().unwrap().0
-                } else {
-                    rep.summary.recall > b.summary.recall
-                }
-            }
-        };
-        if replace {
-            best = Some((l, rep));
+        hit = rep.summary.recall >= target_recall;
+        if hit || rep.summary.recall > best.1.summary.recall {
+            best = (l, rep);
         }
-        if hit {
-            break;
-        }
-        l = (l as f64 * 1.7).ceil() as usize;
-        if l > 4096 {
-            break;
-        }
+        tries += 1;
     }
-    best.unwrap()
+    best
 }
 
 #[cfg(test)]

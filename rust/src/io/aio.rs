@@ -12,8 +12,11 @@
 //! in-flight iocbs before surfacing a submit failure (and propagates a reap
 //! failure instead of discarding it), so no error return ever leaves the
 //! kernel writing into freed memory.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use super::PageStore;
+use crate::util::checked::{to_usize, Ix};
+use crate::util::sync::lock;
 use crate::Result;
 use std::os::unix::io::AsRawFd;
 use std::path::Path;
@@ -48,18 +51,30 @@ struct IoEvent {
 
 const IOCB_CMD_PREAD: u16 = 0;
 
+/// # Safety
+/// `ctx` must point to a zeroed `aio_context_t` that outlives the context.
 unsafe fn io_setup(nr: libc::c_long, ctx: *mut libc::c_ulong) -> libc::c_long {
-    libc::syscall(libc::SYS_io_setup, nr, ctx)
+    // SAFETY: raw syscall; the caller guarantees `ctx` is a valid out-pointer.
+    unsafe { libc::syscall(libc::SYS_io_setup, nr, ctx) }
 }
 
+/// # Safety
+/// `ctx` must be a live context from `io_setup`, not used again afterwards.
 unsafe fn io_destroy(ctx: libc::c_ulong) -> libc::c_long {
-    libc::syscall(libc::SYS_io_destroy, ctx)
+    // SAFETY: raw syscall on a caller-guaranteed live context id.
+    unsafe { libc::syscall(libc::SYS_io_destroy, ctx) }
 }
 
+/// # Safety
+/// Every pointer in `iocbs[..n]` must reference a valid `Iocb` whose buffer
+/// stays live (and unmoved) until the iocb is reaped by `io_getevents`.
 unsafe fn io_submit(ctx: libc::c_ulong, n: libc::c_long, iocbs: *mut *mut Iocb) -> libc::c_long {
-    libc::syscall(libc::SYS_io_submit, ctx, n, iocbs)
+    // SAFETY: raw syscall; iocb/buffer lifetimes are the caller's contract.
+    unsafe { libc::syscall(libc::SYS_io_submit, ctx, n, iocbs) }
 }
 
+/// # Safety
+/// `events` must be valid for `max` writes; `timeout` null or valid.
 unsafe fn io_getevents(
     ctx: libc::c_ulong,
     min: libc::c_long,
@@ -67,7 +82,8 @@ unsafe fn io_getevents(
     events: *mut IoEvent,
     timeout: *mut libc::timespec,
 ) -> libc::c_long {
-    libc::syscall(libc::SYS_io_getevents, ctx, min, max, events, timeout)
+    // SAFETY: raw syscall; the caller sizes `events` for `max` entries.
+    unsafe { libc::syscall(libc::SYS_io_getevents, ctx, min, max, events, timeout) }
 }
 
 /// A pool of AIO contexts, one leased per in-flight batch.
@@ -83,9 +99,12 @@ impl CtxPool {
         let mut free = Vec::with_capacity(n_ctx);
         for _ in 0..n_ctx {
             let mut ctx: libc::c_ulong = 0;
+            // SAFETY: `ctx` is a zeroed local that io_setup may write to.
             let rc = unsafe { io_setup(depth as libc::c_long, &mut ctx) };
             if rc != 0 {
                 for c in &free {
+                    // SAFETY: each id in `free` came from a successful
+                    // io_setup and is destroyed exactly once here.
                     unsafe { io_destroy(*c) };
                 }
                 anyhow::bail!("io_setup failed: {}", std::io::Error::last_os_error());
@@ -96,17 +115,19 @@ impl CtxPool {
     }
 
     fn lease(&self) -> Option<libc::c_ulong> {
-        self.free.lock().unwrap().pop()
+        lock(&self.free).pop()
     }
 
     fn put_back(&self, ctx: libc::c_ulong) {
-        self.free.lock().unwrap().push(ctx);
+        lock(&self.free).push(ctx);
     }
 }
 
 impl Drop for CtxPool {
     fn drop(&mut self) {
-        for c in self.free.lock().unwrap().iter() {
+        for c in lock(&self.free).iter() {
+            // SAFETY: pooled ids are live contexts (leased ones were removed
+            // from `free`), each destroyed exactly once as the pool drops.
             unsafe { io_destroy(*c) };
         }
     }
@@ -124,7 +145,7 @@ pub struct AioPageStore {
 impl AioPageStore {
     pub fn open(path: &Path, page_size: usize) -> Result<Self> {
         let file = std::fs::File::open(path)?;
-        let len = file.metadata()?.len() as usize;
+        let len = to_usize(file.metadata()?.len())?;
         anyhow::ensure!(page_size > 0 && len % page_size == 0, "file not page-aligned");
         // 2× host threads contexts, each up to 128 in-flight pages.
         let n_ctx = (crate::util::num_threads() * 2).max(4);
@@ -169,6 +190,8 @@ impl AioPageStore {
         page_ids: &[u32],
         out: &mut [Vec<u8>],
     ) -> std::result::Result<(), AioBatchError> {
+        // lint:allow(truncating-cast): a live File's fd is non-negative, so
+        // the i32 → u32 reinterpretation for the iocb field is lossless.
         let fd = self.file.as_raw_fd() as u32;
         let depth = self.ctxs.depth;
         let mut start = 0usize;
@@ -211,6 +234,11 @@ impl AioPageStore {
 
 /// The `io_submit`-shaped entry point [`submit_all`] drives. Tests inject a
 /// fault here; production passes [`io_submit`] itself.
+///
+/// # Safety
+/// Implementations inherit [`io_submit`]'s contract: every iocb (and the
+/// buffer it points into) referenced by the pointer array must stay live
+/// until reaped.
 type SubmitFn = unsafe fn(libc::c_ulong, libc::c_long, *mut *mut Iocb) -> libc::c_long;
 
 /// Error from the submit/reap path. `outstanding > 0` means the kernel
@@ -236,6 +264,8 @@ fn dispose_ctx_on_error(ctxs: &CtxPool, ctx: libc::c_ulong, e: AioBatchError) ->
         ctxs.put_back(ctx);
         anyhow::anyhow!("{}", e.msg)
     } else {
+        // SAFETY: `ctx` was leased (removed from the pool), so this is its
+        // sole owner; it is destroyed once and never used again.
         let rc = unsafe { io_destroy(ctx) };
         if rc == 0 {
             anyhow::anyhow!(
@@ -275,8 +305,11 @@ fn submit_all(
     let n = ptrs.len();
     let mut submitted = 0usize;
     while submitted < n {
-        let rc =
-            unsafe { submit(ctx, (n - submitted) as libc::c_long, ptrs[submitted..].as_mut_ptr()) };
+        let remaining = (n - submitted) as libc::c_long;
+        // SAFETY: every pointer in `ptrs` references an iocb in the caller's
+        // live `iocbs` vec, whose buffers stay allocated until `reap`
+        // collects them (or this function reaps on the error path below).
+        let rc = unsafe { submit(ctx, remaining, ptrs[submitted..].as_mut_ptr()) };
         if rc <= 0 {
             let err = std::io::Error::last_os_error();
             let msg = format!("io_submit failed after {submitted}/{n}: {err}");
@@ -288,6 +321,8 @@ fn submit_all(
                 }),
             };
         }
+        // lint:allow(truncating-cast): rc ≥ 1 here (the ≤ 0 branch returned
+        // above), and a positive c_long submit count always fits usize.
         submitted += rc as usize;
     }
     Ok(())
@@ -299,7 +334,7 @@ impl AioPageStore {
         // invalid input surfaces from wait() with the buffers intact.
         anyhow::ensure!(page_ids.len() == out.len(), "ids/buffers length mismatch");
         for (&p, buf) in page_ids.iter().zip(out.iter()) {
-            anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
+            anyhow::ensure!(p.ix() < self.n_pages, "page {p} out of range");
             anyhow::ensure!(buf.len() == self.page_size, "bad buffer size");
         }
         Ok(())
@@ -320,6 +355,8 @@ impl AioPageStore {
             let result = self.read_batch_aio(page_ids, &mut bufs);
             return super::PendingRead::done(bufs, result);
         };
+        // lint:allow(truncating-cast): a live File's fd is non-negative, so
+        // the i32 → u32 reinterpretation for the iocb field is lossless.
         let fd = self.file.as_raw_fd() as u32;
         let mut iocbs: Vec<Iocb> = (0..n)
             .map(|k| Iocb {
@@ -378,6 +415,8 @@ fn reap(ctx: libc::c_ulong, n: usize, page_size: usize) -> std::result::Result<(
     let mut events = vec![IoEvent::default(); n];
     let mut got = 0usize;
     while got < n {
+        // SAFETY: `events[got..]` holds exactly `n - got` writable entries,
+        // matching the `max` argument; the timeout pointer is null.
         let rc = unsafe {
             io_getevents(
                 ctx,
@@ -403,6 +442,8 @@ fn reap(ctx: libc::c_ulong, n: usize, page_size: usize) -> std::result::Result<(
                 msg: format!("io_getevents returned 0 with {got}/{n} reaped"),
             });
         }
+        // lint:allow(truncating-cast): rc ≥ 1 here (negative and zero
+        // returns were handled above), so the c_long count fits usize.
         got += rc as usize;
     }
     for ev in &events {
@@ -460,29 +501,40 @@ mod tests {
     /// Fault injection for [`submit_all`]: submits exactly one iocb for
     /// real on the first call, then fails with `EINVAL` — a deterministic
     /// partial-submit failure with work genuinely in flight.
+    ///
+    /// # Safety
+    /// Same contract as [`io_submit`]: every iocb/buffer referenced by
+    /// `iocbs[..n]` must stay live until reaped.
     unsafe fn faulty_submit(
         ctx: libc::c_ulong,
         n: libc::c_long,
         iocbs: *mut *mut Iocb,
     ) -> libc::c_long {
         if FAULTY_CALLS.fetch_add(1, Ordering::SeqCst) == 0 && n >= 1 {
-            io_submit(ctx, 1, iocbs)
+            // SAFETY: forwards the caller's io_submit contract unchanged.
+            unsafe { io_submit(ctx, 1, iocbs) }
         } else {
-            *libc::__errno_location() = libc::EINVAL;
+            // SAFETY: errno_location is a valid thread-local pointer.
+            unsafe { *libc::__errno_location() = libc::EINVAL };
             -1
         }
     }
 
     /// Same shape with its own counter (tests run concurrently).
+    ///
+    /// # Safety
+    /// Same contract as [`io_submit`].
     unsafe fn faulty_submit2(
         ctx: libc::c_ulong,
         n: libc::c_long,
         iocbs: *mut *mut Iocb,
     ) -> libc::c_long {
         if FAULTY2_CALLS.fetch_add(1, Ordering::SeqCst) == 0 && n >= 1 {
-            io_submit(ctx, 1, iocbs)
+            // SAFETY: forwards the caller's io_submit contract unchanged.
+            unsafe { io_submit(ctx, 1, iocbs) }
         } else {
-            *libc::__errno_location() = libc::EINVAL;
+            // SAFETY: errno_location is a valid thread-local pointer.
+            unsafe { *libc::__errno_location() = libc::EINVAL };
             -1
         }
     }
@@ -533,6 +585,8 @@ mod tests {
         // surfaced: a zero-timeout getevents must find the ctx empty…
         let mut events = [IoEvent::default(); 8];
         let mut zero = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+        // SAFETY: `events` holds 8 writable entries matching `max`, and the
+        // timeout points at a live timespec.
         let rc = unsafe { io_getevents(ctx, 0, 8, events.as_mut_ptr(), &mut zero) };
         assert_eq!(rc, 0, "in-flight iocbs left unreaped on the error path");
         // …and its read has fully landed in the (still-live) buffer.

@@ -30,6 +30,7 @@
 //! "successful" — detection is the checksum layer's job.
 
 use super::{PageStore, PendingRead};
+use crate::util::sync::lock;
 use crate::util::XorShift;
 use crate::Result;
 use std::collections::HashMap;
@@ -224,7 +225,7 @@ impl FaultStore {
         }
         let seq = self.reads.fetch_add(1, Ordering::Relaxed) + 1;
         if self.cfg.fail_first > 0 {
-            let mut map = self.remaining_fails.lock().unwrap();
+            let mut map = lock(&self.remaining_fails);
             let left = map.entry(page).or_insert(self.cfg.fail_first);
             if *left > 0 {
                 *left -= 1;
@@ -232,13 +233,13 @@ impl FaultStore {
             }
         }
         if self.cfg.eio_rate > 0.0 {
-            let draw = self.rng.lock().unwrap().next_f64();
+            let draw = lock(&self.rng).next_f64();
             if draw < self.cfg.eio_rate {
                 return Fault::Eio;
             }
         }
         if self.cfg.flip_every > 0 && seq % self.cfg.flip_every == 0 {
-            let bit = self.rng.lock().unwrap().next_below(self.page_size() * 8);
+            let bit = lock(&self.rng).next_below(self.page_size() * 8);
             return Fault::Flip(bit);
         }
         if self.cfg.torn_every > 0 && seq % self.cfg.torn_every == 0 {

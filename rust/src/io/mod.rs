@@ -77,6 +77,14 @@
 //! individually to isolate the failing ones. The owned-buffer contract
 //! (below) guarantees no buffer-pool leaks on any of these paths.
 //!
+//! These failure-path conventions are machine-checked: `pallas-lint`
+//! (see `LINTS.md` at the repo root) bans panics and unchecked `unwrap`
+//! in this module tree (`hot-path-unwrap`), truncating offset casts
+//! (`truncating-cast`), and any pool-bypassing `mem::forget` outside the
+//! individually waived uring poison sites (`forbidden-forget`); every
+//! `unsafe` syscall site here carries a SAFETY argument inventoried in
+//! `UNSAFETY.md`.
+//!
 //! # Multi-batch contract
 //!
 //! [`PageStore::begin_read`] takes *owned* buffers and hands them back

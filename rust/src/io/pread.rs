@@ -7,8 +7,10 @@
 //! zero return is reported as a distinct unexpected-EOF error — folding it
 //! into the generic failure path used to print the misleading
 //! "pread failed: Success" (errno is not set on EOF).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use super::PageStore;
+use crate::util::checked::{to_usize, Ix};
 use crate::Result;
 use std::os::unix::io::AsRawFd;
 use std::path::Path;
@@ -22,7 +24,7 @@ pub struct PreadPageStore {
 impl PreadPageStore {
     pub fn open(path: &Path, page_size: usize) -> Result<Self> {
         let file = std::fs::File::open(path)?;
-        let len = file.metadata()?.len() as usize;
+        let len = to_usize(file.metadata()?.len())?;
         anyhow::ensure!(page_size > 0 && len % page_size == 0, "file not page-aligned");
         Ok(Self { file, page_size, n_pages: len / page_size })
     }
@@ -44,11 +46,14 @@ impl PageStore for PreadPageStore {
         anyhow::ensure!(page_ids.len() == out.len(), "ids/buffers length mismatch");
         let fd = self.file.as_raw_fd();
         for (k, &p) in page_ids.iter().enumerate() {
-            anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
+            anyhow::ensure!(p.ix() < self.n_pages, "page {p} out of range");
             let buf = &mut out[k];
             anyhow::ensure!(buf.len() == self.page_size, "bad buffer size");
             let mut done = 0usize;
             while done < self.page_size {
+                // SAFETY: fd is a live File owned by self; the pointer and
+                // length describe the tail of `buf`, whose size was checked
+                // against page_size above, so the kernel writes in bounds.
                 let rc = unsafe {
                     libc::pread64(
                         fd,
@@ -68,7 +73,7 @@ impl PageStore for PreadPageStore {
                     rc != 0,
                     "pread hit unexpected EOF at page {p} byte {done} (file truncated?)"
                 );
-                done += rc as usize;
+                done += usize::try_from(rc)?;
             }
         }
         Ok(())

@@ -99,7 +99,7 @@ impl SimSsdStore {
         let k = n_pages.min(self.model.queue_depth).max(1);
         let target = self.model.batch_time(n_pages, self.page_size());
         let now = Instant::now();
-        let mut ch = self.channels.lock().unwrap();
+        let mut ch = crate::util::sync::lock(&self.channels);
         // Claim the k earliest-free channels (depth is small; a sort keeps
         // this deterministic and obvious).
         ch.sort_unstable();

@@ -38,8 +38,11 @@
 //!   on modern kernels (no blocking `io_destroy` equivalent), the
 //!   still-outstanding buffers are then **leaked** rather than reused
 //!   ([`UringError::buffers_released`]).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use super::{PageStore, PendingRead};
+use crate::util::checked::{hi32, to_usize, Ix};
+use crate::util::sync::{cond_wait, lock};
 use crate::Result;
 use std::collections::HashMap;
 use std::os::unix::io::AsRawFd;
@@ -55,25 +58,34 @@ const SQ_DEPTH: u32 = 256;
 /// never collides with read tags, whose batch ids are sequential.
 const NOP_TAG: u64 = u64::MAX;
 
+/// # Safety
+/// `p` must point to a zeroed `io_uring_params` the kernel may write to.
 unsafe fn io_uring_setup(entries: u32, p: *mut libc::io_uring_params) -> libc::c_long {
-    libc::syscall(libc::SYS_io_uring_setup, entries as libc::c_ulong, p)
+    // SAFETY: raw syscall; the caller guarantees `p` is a valid out-pointer.
+    unsafe { libc::syscall(libc::SYS_io_uring_setup, entries as libc::c_ulong, p) }
 }
 
+/// # Safety
+/// `fd` must be a live io_uring fd whose published SQEs (and the buffers
+/// they target) stay alive until their CQEs are reaped.
 unsafe fn io_uring_enter(
     fd: libc::c_int,
     to_submit: u32,
     min_complete: u32,
     flags: u32,
 ) -> libc::c_long {
-    libc::syscall(
-        libc::SYS_io_uring_enter,
-        fd as libc::c_long,
-        to_submit as libc::c_ulong,
-        min_complete as libc::c_ulong,
-        flags as libc::c_ulong,
-        core::ptr::null::<libc::c_void>(),
-        0usize,
-    )
+    // SAFETY: raw syscall; SQE/buffer lifetimes are the caller's contract.
+    unsafe {
+        libc::syscall(
+            libc::SYS_io_uring_enter,
+            fd as libc::c_long,
+            to_submit as libc::c_ulong,
+            min_complete as libc::c_ulong,
+            flags as libc::c_ulong,
+            core::ptr::null::<libc::c_void>(),
+            0usize,
+        )
+    }
 }
 
 /// Close-on-drop fd.
@@ -82,6 +94,8 @@ struct Fd(libc::c_int);
 impl Drop for Fd {
     fn drop(&mut self) {
         if self.0 >= 0 {
+            // SAFETY: self.0 is a live fd this wrapper owns; it is closed
+            // exactly once (poison paths set it to -1 after closing).
             unsafe { libc::close(self.0) };
         }
     }
@@ -95,6 +109,8 @@ struct MmapRegion {
 
 impl MmapRegion {
     fn map(fd: libc::c_int, len: usize, offset: u64) -> Result<Self> {
+        // SAFETY: a null-hint anonymous-address mmap over a caller-provided
+        // live fd; the result is checked against MAP_FAILED below.
         let ptr = unsafe {
             libc::mmap(
                 core::ptr::null_mut(),
@@ -115,12 +131,15 @@ impl MmapRegion {
 
     /// Pointer `off` bytes into the region. The caller promises `T` fits.
     fn at<T>(&self, off: u32) -> *mut T {
-        unsafe { self.ptr.add(off as usize) as *mut T }
+        // SAFETY: kernel-reported ring offsets are in bounds of the mapped
+        // length by the io_uring ABI; the add stays inside the region.
+        unsafe { self.ptr.add(off.ix()) as *mut T }
     }
 }
 
 impl Drop for MmapRegion {
     fn drop(&mut self) {
+        // SAFETY: unmaps exactly the region mmap returned, exactly once.
         unsafe { libc::munmap(self.ptr as *mut libc::c_void, self.len) };
     }
 }
@@ -201,13 +220,14 @@ struct Ring {
     poisoned: bool,
 }
 
-// The raw pointers all target the mmap regions owned by this struct;
-// access is serialized by the surrounding Mutex.
+// SAFETY: the raw pointers all target the mmap regions owned by this
+// struct; access is serialized by the surrounding Mutex.
 unsafe impl Send for Ring {}
 
 impl Ring {
     fn create(page_size: usize) -> Result<Self> {
         let mut p = libc::io_uring_params::default();
+        // SAFETY: `p` is a zeroed local the kernel fills in.
         let rc = unsafe { io_uring_setup(SQ_DEPTH, &mut p) };
         anyhow::ensure!(
             rc >= 0,
@@ -215,21 +235,25 @@ impl Ring {
             std::io::Error::last_os_error()
         );
         let fd = Fd(rc as libc::c_int);
-        let sq_len = p.sq_off.array as usize + p.sq_entries as usize * 4;
-        let cq_len = p.cq_off.cqes as usize
-            + p.cq_entries as usize * core::mem::size_of::<libc::io_uring_cqe>();
-        let sqes_len = p.sq_entries as usize * core::mem::size_of::<libc::io_uring_sqe>();
+        let sq_len = p.sq_off.array.ix() + p.sq_entries.ix() * 4;
+        let cq_len =
+            p.cq_off.cqes.ix() + p.cq_entries.ix() * core::mem::size_of::<libc::io_uring_cqe>();
+        let sqes_len = p.sq_entries.ix() * core::mem::size_of::<libc::io_uring_sqe>();
         let sq = MmapRegion::map(fd.0, sq_len, libc::IORING_OFF_SQ_RING)?;
         let cq = MmapRegion::map(fd.0, cq_len, libc::IORING_OFF_CQ_RING)?;
         let sqes = MmapRegion::map(fd.0, sqes_len, libc::IORING_OFF_SQES)?;
         let ring = Ring {
             sq_head: sq.at::<AtomicU32>(p.sq_off.head),
             sq_tail: sq.at::<AtomicU32>(p.sq_off.tail),
+            // SAFETY: ring_mask is a kernel-initialized u32 inside the
+            // freshly mapped SQ region.
             sq_mask: unsafe { *sq.at::<u32>(p.sq_off.ring_mask) },
             sq_entries: p.sq_entries,
             sq_array: sq.at::<u32>(p.sq_off.array),
             cq_head: cq.at::<AtomicU32>(p.cq_off.head),
             cq_tail: cq.at::<AtomicU32>(p.cq_off.tail),
+            // SAFETY: ring_mask is a kernel-initialized u32 inside the
+            // freshly mapped CQ region.
             cq_mask: unsafe { *cq.at::<u32>(p.cq_off.ring_mask) },
             cq_entries: p.cq_entries,
             cqes: cq.at::<libc::io_uring_cqe>(p.cq_off.cqes),
@@ -278,6 +302,8 @@ impl Ring {
     fn close_fd(&mut self) {
         self.close_deferred = false;
         if self.fd.0 >= 0 {
+            // SAFETY: the fd is live (≥ 0) and owned by this ring; setting
+            // it to -1 below keeps the Fd drop from double-closing.
             unsafe { libc::close(self.fd.0) };
             self.fd.0 = -1;
         }
@@ -289,19 +315,24 @@ impl Ring {
     /// in GETEVENTS while this locked sweep consumes CQEs, a NOP is posted
     /// so the kernel's availability re-check cannot strand it.
     fn drain_cq(&mut self) -> usize {
+        // SAFETY: cq_tail/cq_head point at kernel-shared atomics inside the
+        // live CQ mapping (owned by self, serialized by the ring mutex).
         let tail = unsafe { (*self.cq_tail).load(Ordering::Acquire) };
+        // SAFETY: as above — head is only advanced by us, under the lock.
         let mut head = unsafe { (*self.cq_head).load(Ordering::Relaxed) };
         let mut real = 0usize;
         let mut consumed = 0usize;
         while head != tail {
-            let cqe = unsafe { *self.cqes.add((head & self.cq_mask) as usize) };
+            // SAFETY: `head & cq_mask` indexes within the kernel-sized CQE
+            // array, and head != tail means the kernel published this entry.
+            let cqe = unsafe { *self.cqes.add((head & self.cq_mask).ix()) };
             head = head.wrapping_add(1);
             consumed += 1;
             if cqe.user_data == NOP_TAG {
                 self.nop_in_flight = false;
                 continue;
             }
-            let batch = (cqe.user_data >> 32) as u32;
+            let batch = hi32(cqe.user_data);
             if let Some(st) = self.batches.get_mut(&batch) {
                 st.remaining -= 1;
                 if st.error.is_none() {
@@ -310,6 +341,8 @@ impl Ring {
                             "io_uring read failed: {}",
                             std::io::Error::from_raw_os_error(-cqe.res)
                         ));
+                    // lint:allow(truncating-cast): res ≥ 0 in this branch
+                    // (the negative case was handled just above).
                     } else if cqe.res as usize != self.page_size {
                         st.error = Some(format!(
                             "io_uring short read: {} of {} bytes",
@@ -321,6 +354,8 @@ impl Ring {
             self.in_flight = self.in_flight.saturating_sub(1);
             real += 1;
         }
+        // SAFETY: publishing the new head through the shared CQ atomic —
+        // the pointer targets the live mapping owned by self.
         unsafe { (*self.cq_head).store(head, Ordering::Release) };
         if consumed > 0 && self.reaper_active {
             // The parked reaper's kernel-side availability re-check will
@@ -355,7 +390,10 @@ impl Ring {
             self.reaper_wake_pending = false;
             return;
         }
+        // SAFETY: sq_head/sq_tail point at kernel-shared atomics inside the
+        // live SQ mapping; tail is only advanced by us, under the lock.
         let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+        // SAFETY: as above.
         let tail = unsafe { (*self.sq_tail).load(Ordering::Relaxed) };
         if tail != head {
             return; // foreign SQEs published: defer (their completions or
@@ -377,9 +415,13 @@ impl Ring {
             splice_fd_in: 0,
             __pad2: [0; 2],
         };
+        // SAFETY: `slot` is masked into the SQE/array bounds; the tail
+        // store publishes the entry; enter is called on our live ring fd
+        // with a NOP that references no external buffers. All SQ state is
+        // owned by self and serialized by the ring mutex.
         unsafe {
-            *self.sqes_ptr.add(slot as usize) = sqe;
-            *self.sq_array.add(slot as usize) = slot;
+            *self.sqes_ptr.add(slot.ix()) = sqe;
+            *self.sq_array.add(slot.ix()) = slot;
             (*self.sq_tail).store(tail.wrapping_add(1), Ordering::Release);
             // Bounded retry: an EAGAIN here is transient kernel memory
             // pressure; yielding a few times almost always clears it. If
@@ -424,6 +466,8 @@ impl Ring {
             if reaped >= min {
                 return Ok(());
             }
+            // SAFETY: fd is the live ring fd (poison checked on entry);
+            // GETEVENTS submits nothing, so no buffer contract is involved.
             let rc = unsafe { io_uring_enter(self.fd.0, 0, 1, libc::IORING_ENTER_GETEVENTS) };
             if rc < 0 {
                 let err = std::io::Error::last_os_error();
@@ -458,7 +502,7 @@ impl Ring {
         // full ring). A reap failure here is clean for *this* batch
         // (nothing submitted yet); the batches it strands are handled by
         // their own waiters.
-        while self.in_flight + n + 1 > self.cq_entries as usize {
+        while self.in_flight + n + 1 > self.cq_entries.ix() {
             self.reap(1).map_err(UringError::clean)?;
         }
         let id = self.next_batch;
@@ -468,9 +512,13 @@ impl Ring {
         while accepted < n {
             // SQ space: the kernel advances head as it consumes entries
             // (always fully, in non-SQPOLL mode, by the time enter returns).
+            // SAFETY: sq_head/sq_tail point at kernel-shared atomics inside
+            // the live SQ mapping; tail is only advanced by us, under the
+            // ring mutex.
             let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+            // SAFETY: as above.
             let tail = unsafe { (*self.sq_tail).load(Ordering::Relaxed) };
-            let free = self.sq_entries.wrapping_sub(tail.wrapping_sub(head)) as usize;
+            let free = self.sq_entries.wrapping_sub(tail.wrapping_sub(head)).ix();
             let take = free.min(n - accepted);
             if take == 0 {
                 // Cannot happen (enter below always consumes), but bail
@@ -485,6 +533,8 @@ impl Ring {
             }
             for k in 0..take {
                 let i = accepted + k;
+                // lint:allow(truncating-cast): k < take ≤ sq_entries, which
+                // is a u32.
                 let slot = tail.wrapping_add(k as u32) & self.sq_mask;
                 let sqe = libc::io_uring_sqe {
                     opcode: libc::IORING_OP_READV,
@@ -501,15 +551,25 @@ impl Ring {
                     splice_fd_in: 0,
                     __pad2: [0; 2],
                 };
+                // SAFETY: `slot` is masked into the SQE/array bounds of the
+                // live mappings owned by self, serialized by the ring mutex.
                 unsafe {
-                    *self.sqes_ptr.add(slot as usize) = sqe;
-                    *self.sq_array.add(slot as usize) = slot;
+                    *self.sqes_ptr.add(slot.ix()) = sqe;
+                    *self.sq_array.add(slot.ix()) = slot;
                 }
             }
+            // lint:allow(truncating-cast): take ≤ sq_entries, which is a
+            // u32.
             let published = tail.wrapping_add(take as u32);
+            // SAFETY: publishes the prepared SQEs through the shared tail
+            // atomic in the live SQ mapping.
             unsafe { (*self.sq_tail).store(published, Ordering::Release) };
+            // lint:allow(truncating-cast): take ≤ sq_entries (see above).
             let mut to_submit = take as u32;
             while to_submit > 0 {
+                // SAFETY: fd is the live ring fd; every published SQE
+                // references an iovec/buffer the caller keeps alive until
+                // the batch is reaped (submit_batch's contract).
                 let rc = unsafe { io_uring_enter(self.fd.0, to_submit, 0, 0) };
                 if rc < 0 {
                     let err = std::io::Error::last_os_error();
@@ -547,12 +607,14 @@ impl Ring {
                         ),
                     ));
                 }
+                // lint:allow(truncating-cast): rc ≥ 0 here (the negative
+                // branch returned above) and is bounded by to_submit, a u32.
                 let got = rc as u32;
                 to_submit -= got;
-                accepted += got as usize;
-                self.in_flight += got as usize;
+                accepted += got.ix();
+                self.in_flight += got.ix();
                 if let Some(st) = self.batches.get_mut(&id) {
-                    st.remaining += got as usize;
+                    st.remaining += got.ix();
                 }
             }
         }
@@ -574,6 +636,8 @@ impl Ring {
         published_tail: u32,
         err: anyhow::Error,
     ) -> UringError {
+        // SAFETY: rewinds the shared tail atomic over entries the kernel
+        // never consumed — we are the only submitter, under the ring mutex.
         unsafe {
             (*self.sq_tail)
                 .store(published_tail.wrapping_sub(unconsumed), Ordering::Release)
@@ -622,10 +686,10 @@ pub struct UringPageStore {
 impl UringPageStore {
     pub fn open(path: &Path, page_size: usize) -> Result<Self> {
         let file = std::fs::File::open(path)?;
-        let len = file.metadata()?.len() as usize;
+        let len = to_usize(file.metadata()?.len())?;
         anyhow::ensure!(page_size > 0 && len % page_size == 0, "file not page-aligned");
         let ring = Ring::create(page_size)?;
-        let max_batch = (ring.cq_entries as usize / 2).max(1);
+        let max_batch = (ring.cq_entries.ix() / 2).max(1);
         let store = Self {
             file,
             page_size,
@@ -648,7 +712,7 @@ impl UringPageStore {
     fn validate(&self, page_ids: &[u32], bufs: &[Vec<u8>]) -> Result<()> {
         anyhow::ensure!(page_ids.len() == bufs.len(), "ids/buffers length mismatch");
         for (&p, buf) in page_ids.iter().zip(bufs.iter()) {
-            anyhow::ensure!((p as usize) < self.n_pages, "page {p} out of range");
+            anyhow::ensure!(p.ix() < self.n_pages, "page {p} out of range");
             anyhow::ensure!(buf.len() == self.page_size, "bad buffer size");
         }
         Ok(())
@@ -665,7 +729,7 @@ impl UringPageStore {
             .collect();
         // Two statements so the lock guard (a temporary of the first) is
         // dropped before wait_batch re-locks the ring.
-        let submitted = self.ring.lock().unwrap().submit_batch(self.file.as_raw_fd(), page_ids, &iovs);
+        let submitted = lock(&self.ring).submit_batch(self.file.as_raw_fd(), page_ids, &iovs);
         let result = submitted.and_then(|id| wait_batch(&self.ring, &self.ring_cv, id));
         match result {
             Ok(()) => Ok(()),
@@ -677,8 +741,13 @@ impl UringPageStore {
                     // so buffer-pool invariants hold.
                     for b in out.iter_mut() {
                         let kernel_owned = std::mem::replace(b, vec![0u8; self.page_size]);
+                        // lint:allow(forbidden-forget): sanctioned leak —
+                        // the poisoned ring's teardown is asynchronous, so
+                        // the kernel may still DMA into this buffer.
                         std::mem::forget(kernel_owned);
                     }
+                    // lint:allow(forbidden-forget): the submitted SQEs point
+                    // at these iovecs; they stay kernel-owned with the ring.
                     std::mem::forget(iovs);
                 }
                 Err(ue.err)
@@ -699,7 +768,7 @@ fn await_ring<T>(
     cv: &Condvar,
     mut f: impl FnMut(&mut Ring) -> std::result::Result<Option<T>, UringError>,
 ) -> std::result::Result<T, UringError> {
-    let mut r = ring.lock().unwrap();
+    let mut r = lock(ring);
     loop {
         if !r.reaper_active && r.drain_cq() > 0 {
             cv.notify_all();
@@ -709,16 +778,20 @@ fn await_ring<T>(
             return Ok(v);
         }
         if r.reaper_active {
-            r = cv.wait(r).unwrap();
+            r = cond_wait(cv, r);
             continue;
         }
         // Become the reaper: park in GETEVENTS without the lock.
         r.reaper_active = true;
         let fd = r.fd.0;
         drop(r);
+        // SAFETY: the fd stays open while we are parked — a concurrent
+        // poison defers its close until this reaper unparks
+        // (`close_deferred`); GETEVENTS submits nothing, so no buffer
+        // contract is involved.
         let rc = unsafe { io_uring_enter(fd, 0, 1, libc::IORING_ENTER_GETEVENTS) };
         let enter_err = if rc < 0 { Some(std::io::Error::last_os_error()) } else { None };
-        r = ring.lock().unwrap();
+        r = lock(ring);
         r.reaper_active = false;
         // Awake again: any wake that was queued for this park is obsolete,
         // and a poison that deferred its fd close to us can complete now.
@@ -757,7 +830,9 @@ fn wait_batch(ring: &Mutex<Ring>, cv: &Condvar, id: u32) -> std::result::Result<
         if remaining > 0 {
             return Ok(None);
         }
-        let st = r.batches.remove(&id).expect("checked above");
+        let Some(st) = r.batches.remove(&id) else {
+            return Err(UringError::clean(anyhow::anyhow!("io_uring batch {id} vanished")));
+        };
         match st.error {
             None => Ok(Some(())),
             // Every completion was reaped; the buffers are ours again.
@@ -812,12 +887,7 @@ impl PageStore for UringPageStore {
                 iov_len: self.page_size,
             })
             .collect();
-        let id = match self
-            .ring
-            .lock()
-            .unwrap()
-            .submit_batch(self.file.as_raw_fd(), page_ids, &iovs)
-        {
+        let id = match lock(&self.ring).submit_batch(self.file.as_raw_fd(), page_ids, &iovs) {
             Ok(id) => id,
             Err(ue) => {
                 if ue.buffers_released {
@@ -826,7 +896,10 @@ impl PageStore for UringPageStore {
                 }
                 // Poisoned ring with reads outstanding: the kernel may
                 // still write into these buffers — leak them.
+                // lint:allow(forbidden-forget): sanctioned leak — ring
+                // teardown is asynchronous, buffers stay kernel-owned.
                 std::mem::forget(bufs);
+                // lint:allow(forbidden-forget): as above, for the iovecs.
                 std::mem::forget(iovs);
                 return PendingRead::done(Vec::new(), Err(ue.err));
             }
@@ -843,7 +916,10 @@ impl PageStore for UringPageStore {
                 // Poisoned mid-wait: buffers stay kernel-owned — leak them
                 // rather than returning them to a pool the kernel can
                 // still scribble over.
+                // lint:allow(forbidden-forget): sanctioned leak — ring
+                // teardown is asynchronous, buffers stay kernel-owned.
                 std::mem::forget(bufs);
+                // lint:allow(forbidden-forget): as above, for the iovecs.
                 std::mem::forget(iovs);
                 (Vec::new(), Err(ue.err))
             }

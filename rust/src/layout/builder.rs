@@ -10,6 +10,7 @@ use crate::layout::{page_capacity, CvPlacement, IdRemap, IndexMeta, PageWriter};
 use crate::pagegraph::{build_page_graph, GroupingParams, PageGraph};
 use crate::pq::{PqCodebook, PqEncoder};
 use crate::routing::RoutingIndex;
+use crate::util::checked::{to_u32, Ix};
 use crate::util::{Stopwatch, WriteExt};
 use crate::vamana::{VamanaGraph, VamanaParams};
 use crate::Result;
@@ -215,6 +216,8 @@ impl<'a> IndexBuilder<'a> {
         }
         if frac >= 1.0 {
             for s in 0..n_slots {
+                // lint:allow(truncating-cast): slot ids fit u32 by
+                // construction — the remap stores them as u32.
                 if pg.remap.to_orig(s as u32) != super::remap::INVALID {
                     in_mem[s] = true;
                 }
@@ -224,20 +227,24 @@ impl<'a> IndexBuilder<'a> {
         let mut refcount = vec![0u32; n_slots];
         for nbrs in &pg.nbrs {
             for &nb in nbrs {
-                refcount[nb as usize] += 1;
+                refcount[nb.ix()] += 1;
             }
         }
+        // lint:allow(truncating-cast): frac < 1 here, so the f64 product is
+        // strictly below base.len() (a usize) — the cast cannot truncate.
         let budget = ((self.base.len() as f64) * frac) as usize;
+        // lint:allow(truncating-cast): slot ids fit u32 by construction —
+        // the remap stores them as u32.
         let mut ranked: Vec<u32> = (0..n_slots as u32)
-            .filter(|&s| refcount[s as usize] > 0)
+            .filter(|&s| refcount[s.ix()] > 0)
             .collect();
         ranked.sort_by(|&a, &b| {
-            refcount[b as usize]
-                .cmp(&refcount[a as usize])
+            refcount[b.ix()]
+                .cmp(&refcount[a.ix()])
                 .then(a.cmp(&b))
         });
         for &s in ranked.iter().take(budget) {
-            in_mem[s as usize] = true;
+            in_mem[s.ix()] = true;
         }
         in_mem
     }
@@ -258,12 +265,12 @@ impl<'a> IndexBuilder<'a> {
         let mut truncated = 0usize;
         for (p, members) in pg.pages.iter().enumerate() {
             let vectors: Vec<(u32, &[u8])> =
-                members.iter().map(|&orig| (orig, base.raw(orig as usize))).collect();
+                members.iter().map(|&orig| (orig, base.raw(orig.ix()))).collect();
             let neighbors: Vec<(u32, Option<&[u8]>)> = pg.nbrs[p]
                 .iter()
                 .map(|&nb| {
-                    let orig = pg.remap.to_orig(nb) as usize;
-                    let code = if mem_code_ids[nb as usize] {
+                    let orig = pg.remap.to_orig(nb).ix();
+                    let code = if mem_code_ids[nb.ix()] {
                         None
                     } else {
                         Some(&codes[orig * code_w..(orig + 1) * code_w])
@@ -304,6 +311,8 @@ impl<'a> IndexBuilder<'a> {
             .iter()
             .enumerate()
             .filter(|&(_, &b)| b)
+            // lint:allow(truncating-cast): slot ids fit u32 by construction —
+            // the remap stores them as u32.
             .map(|(s, _)| s as u32)
             .collect();
         ids.extend(routing_ids);
@@ -313,10 +322,10 @@ impl<'a> IndexBuilder<'a> {
         let files = IndexFiles::new(dir);
         let mut f = std::io::BufWriter::new(std::fs::File::create(files.memcodes())?);
         // Header stores the *storage* stride (nibble-packed for PQ4).
-        f.write_u32(code_w as u32)?;
+        f.write_u32(to_u32(code_w)?)?;
         f.write_u64(ids.len() as u64)?;
         for &new_id in &ids {
-            let orig = remap.to_orig(new_id) as usize;
+            let orig = remap.to_orig(new_id).ix();
             f.write_u32(new_id)?;
             f.write_all(&codes[orig * code_w..(orig + 1) * code_w])?;
         }

@@ -1,6 +1,7 @@
 //! Index metadata header (meta.bin).
 
 use crate::dataset::Dtype;
+use crate::util::checked::{to_u32, to_usize, Ix};
 use crate::util::{ReadExt, WriteExt};
 use crate::Result;
 use std::io::{Read, Write};
@@ -99,18 +100,18 @@ impl IndexMeta {
         w.write_u32(MAGIC)?;
         w.write_u32(if self.page_crc { VERSION } else { LEGACY_UNCHECKSUMMED_VERSION })?;
         w.write_u8(self.dtype.tag())?;
-        w.write_u32(self.dim as u32)?;
+        w.write_u32(to_u32(self.dim)?)?;
         w.write_u64(self.n_vectors as u64)?;
         w.write_u64(self.n_pages as u64)?;
-        w.write_u32(self.page_size as u32)?;
-        w.write_u32(self.capacity as u32)?;
-        w.write_u32(self.max_nbrs as u32)?;
-        w.write_u32(self.pq_m as u32)?;
-        w.write_u32(self.pq_k as u32)?;
+        w.write_u32(to_u32(self.page_size)?)?;
+        w.write_u32(to_u32(self.capacity)?)?;
+        w.write_u32(to_u32(self.max_nbrs)?)?;
+        w.write_u32(to_u32(self.pq_m)?)?;
+        w.write_u32(to_u32(self.pq_k)?)?;
         w.write_u8(self.cv_placement.tag())?;
         w.write_f32(self.cv_placement.mem_frac() as f32)?;
         w.write_u32(self.medoid_new_id)?;
-        w.write_u32(self.routing_bits as u32)?;
+        w.write_u32(to_u32(self.routing_bits)?)?;
         Ok(())
     }
 
@@ -123,14 +124,14 @@ impl IndexMeta {
         );
         let page_crc = v >= VERSION;
         let dtype = Dtype::from_tag(r.read_u8v()?)?;
-        let dim = r.read_u32v()? as usize;
-        let n_vectors = r.read_u64v()? as usize;
-        let n_pages = r.read_u64v()? as usize;
-        let page_size = r.read_u32v()? as usize;
-        let capacity = r.read_u32v()? as usize;
-        let max_nbrs = r.read_u32v()? as usize;
-        let pq_m = r.read_u32v()? as usize;
-        let pq_k = r.read_u32v()? as usize;
+        let dim = r.read_u32v()?.ix();
+        let n_vectors = to_usize(r.read_u64v()?)?;
+        let n_pages = to_usize(r.read_u64v()?)?;
+        let page_size = r.read_u32v()?.ix();
+        let capacity = r.read_u32v()?.ix();
+        let max_nbrs = r.read_u32v()?.ix();
+        let pq_m = r.read_u32v()?.ix();
+        let pq_k = r.read_u32v()?.ix();
         let tag = r.read_u8v()?;
         let frac = r.read_f32v()? as f64;
         let cv_placement = match tag {
@@ -140,7 +141,7 @@ impl IndexMeta {
             _ => anyhow::bail!("unknown cv placement tag {tag}"),
         };
         let medoid_new_id = r.read_u32v()?;
-        let routing_bits = r.read_u32v()? as usize;
+        let routing_bits = r.read_u32v()?.ix();
         anyhow::ensure!(dim > 0 && capacity > 0 && page_size >= 512, "corrupt meta");
         Ok(Self {
             dtype,

@@ -51,6 +51,8 @@ pub fn page_capacity(
     } else {
         0
     };
+    // lint:allow(truncating-cast): frac ∈ [0,1], so the product is ≤ max_nbrs
+    // (already a usize) and non-negative — the f64→usize cast cannot truncate.
     let on_page_codes = ((1.0 - mem_code_frac) * max_nbrs as f64).ceil() as usize;
     let nbr_bytes = max_nbrs * 4 + flag_bytes + on_page_codes * code_bytes;
     // New builds always reserve the CRC32C tail (v5 format); only legacy

@@ -31,6 +31,7 @@
 //! misdirected read returning the wrong page image — fails verification
 //! instead of being silently scored.
 
+use crate::util::checked::{to_u16, Ix};
 use crate::util::crc32c;
 use crate::Result;
 
@@ -95,8 +96,8 @@ impl<'a> PageWriter<'a> {
     pub fn serialize_into(&self, out: &mut [u8]) -> Result<()> {
         anyhow::ensure!(out.len() == self.page_size, "bad page buffer size");
         anyhow::ensure!(self.fits(), "page overflow: {} > {}", self.serialized_size(), self.page_size);
-        anyhow::ensure!(self.vectors.len() < u16::MAX as usize, "too many vectors");
-        anyhow::ensure!(self.neighbors.len() < u16::MAX as usize, "too many neighbors");
+        anyhow::ensure!(self.vectors.len() < u16::MAX.ix(), "too many vectors");
+        anyhow::ensure!(self.neighbors.len() < u16::MAX.ix(), "too many neighbors");
         out.fill(0);
 
         let inline = self.neighbors.iter().filter(|(_, c)| c.is_some()).count();
@@ -104,8 +105,8 @@ impl<'a> PageWriter<'a> {
         let all_inline = inline == self.neighbors.len() && !self.neighbors.is_empty();
         let flags = if mixed { FLAG_BITMAP } else { 0 };
 
-        out[0..2].copy_from_slice(&(self.vectors.len() as u16).to_le_bytes());
-        out[2..4].copy_from_slice(&(self.neighbors.len() as u16).to_le_bytes());
+        out[0..2].copy_from_slice(&to_u16(self.vectors.len())?.to_le_bytes());
+        out[2..4].copy_from_slice(&to_u16(self.neighbors.len())?.to_le_bytes());
         out[4] = flags
             | if all_inline { 2 } else { 0 };
 
@@ -181,8 +182,8 @@ impl<'a> PageRef<'a> {
 
     pub fn parse(buf: &'a [u8], vec_stride: usize, code_bytes: usize) -> Result<Self> {
         anyhow::ensure!(buf.len() >= PAGE_HEADER_BYTES, "page too small");
-        let n_vecs = u16::from_le_bytes([buf[0], buf[1]]) as usize;
-        let n_nbrs = u16::from_le_bytes([buf[2], buf[3]]) as usize;
+        let n_vecs = u16::from_le_bytes([buf[0], buf[1]]).ix();
+        let n_nbrs = u16::from_le_bytes([buf[2], buf[3]]).ix();
         let flags = buf[4];
         let p = Self { buf, vec_stride, code_bytes, n_vecs, n_nbrs, flags };
         anyhow::ensure!(p.codes_end() <= buf.len(), "corrupt page: overruns buffer");
@@ -248,7 +249,7 @@ impl<'a> PageRef<'a> {
             self.n_nbrs
         } else if self.has_bitmap() {
             let bm = &self.buf[self.bitmap_off()..self.bitmap_off() + self.bitmap_len()];
-            bm.iter().map(|b| b.count_ones() as usize).sum()
+            bm.iter().map(|b| b.count_ones().ix()).sum()
         } else {
             0
         }
@@ -303,10 +304,10 @@ impl<'a> PageRef<'a> {
         // Rank: number of set bits before j.
         let mut rank = 0usize;
         for b in 0..j / 8 {
-            rank += self.buf[bm_off + b].count_ones() as usize;
+            rank += self.buf[bm_off + b].count_ones().ix();
         }
-        let partial = self.buf[bm_off + j / 8] & ((1u16 << (j % 8)) as u8).wrapping_sub(1);
-        rank += partial.count_ones() as usize;
+        let partial = self.buf[bm_off + j / 8] & (1u8 << (j % 8)).wrapping_sub(1);
+        rank += partial.count_ones().ix();
         let o = self.codes_off() + rank * self.code_bytes;
         Some(&self.buf[o..o + self.code_bytes])
     }

@@ -4,6 +4,7 @@
 //! so the searcher recovers the page of any id with one division. Pages may
 //! be partially filled, so the new-id space has holes (`INVALID`).
 
+use crate::util::checked::{to_u32, to_usize, Ix};
 use crate::util::{ReadExt, WriteExt};
 use crate::Result;
 use std::io::{Read, Write};
@@ -28,10 +29,10 @@ impl IdRemap {
         for (p, members) in pages.iter().enumerate() {
             assert!(members.len() <= capacity, "page {p} overfull");
             for (off, &orig) in members.iter().enumerate() {
-                let new_id = (p * capacity + off) as u32;
-                new_to_orig[new_id as usize] = orig;
-                debug_assert_eq!(orig_to_new[orig as usize], INVALID, "vector {orig} grouped twice");
-                orig_to_new[orig as usize] = new_id;
+                let new_id = u32::try_from(p * capacity + off).expect("slot id fits u32");
+                new_to_orig[new_id.ix()] = orig;
+                debug_assert_eq!(orig_to_new[orig.ix()], INVALID, "vector {orig} grouped twice");
+                orig_to_new[orig.ix()] = new_id;
             }
         }
         Self { new_to_orig, orig_to_new, capacity }
@@ -39,17 +40,20 @@ impl IdRemap {
 
     #[inline]
     pub fn page_of(&self, new_id: u32) -> u32 {
+        // lint:allow(truncating-cast): capacity is vectors-per-page (tens),
+        // checked > 0 at load; it always fits u32, and this division is on
+        // the per-hop hot path.
         new_id / self.capacity as u32
     }
 
     #[inline]
     pub fn to_orig(&self, new_id: u32) -> u32 {
-        self.new_to_orig[new_id as usize]
+        self.new_to_orig[new_id.ix()]
     }
 
     #[inline]
     pub fn to_new(&self, orig_id: u32) -> u32 {
-        self.orig_to_new[orig_id as usize]
+        self.orig_to_new[orig_id.ix()]
     }
 
     pub fn n_slots(&self) -> usize {
@@ -57,7 +61,7 @@ impl IdRemap {
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
-        w.write_u32(self.capacity as u32)?;
+        w.write_u32(to_u32(self.capacity)?)?;
         w.write_u64(self.new_to_orig.len() as u64)?;
         w.write_u64(self.orig_to_new.len() as u64)?;
         w.write_u32_slice(&self.new_to_orig)?;
@@ -66,10 +70,10 @@ impl IdRemap {
     }
 
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
-        let capacity = r.read_u32v()? as usize;
+        let capacity = r.read_u32v()?.ix();
         anyhow::ensure!(capacity > 0, "corrupt remap");
-        let n_new = r.read_u64v()? as usize;
-        let n_orig = r.read_u64v()? as usize;
+        let n_new = to_usize(r.read_u64v()?)?;
+        let n_orig = to_usize(r.read_u64v()?)?;
         let new_to_orig = r.read_u32_vec(n_new)?;
         let orig_to_new = r.read_u32_vec(n_orig)?;
         Ok(Self { new_to_orig, orig_to_new, capacity })

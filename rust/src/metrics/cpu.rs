@@ -1,4 +1,5 @@
 //! Process CPU utilization sampling from /proc (Table 5's CPU column).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use std::time::Instant;
 
@@ -32,6 +33,7 @@ fn process_cpu_seconds() -> f64 {
 
 fn ticks_per_second() -> f64 {
     // SC_CLK_TCK is 100 on every Linux we target.
+    // SAFETY: sysconf reads a process-wide constant; no pointers involved.
     let v = unsafe { libc::sysconf(libc::_SC_CLK_TCK) };
     if v > 0 {
         v as f64

@@ -1,5 +1,6 @@
 //! Lloyd's k-means with k-means++ seeding — the codebook trainer for PQ and
 //! the cluster-head selector for the SPANN-like baseline.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use crate::distance::l2sq_f32;
 use crate::util::{parallel_chunks, XorShift};
@@ -101,6 +102,9 @@ pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Km
                             best = c as u32;
                         }
                     }
+                    // SAFETY: i < n = assignment.len(), and parallel_chunks
+                    // hands each worker a disjoint [s, e) range, so no two
+                    // threads write the same slot.
                     unsafe { *p.0.add(i) = best };
                 }
             });
@@ -151,6 +155,9 @@ pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Km
                         best = c as u32;
                     }
                 }
+                // SAFETY: i < n = assignment.len(), and parallel_chunks
+                // hands each worker a disjoint [s, e) range, so no two
+                // threads write the same slot.
                 unsafe { *p.0.add(i) = best };
             }
         });
@@ -161,7 +168,12 @@ pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Km
 
 #[derive(Clone, Copy)]
 struct AssignPtr(*mut u32);
+// SAFETY: shipped across parallel_chunks workers that write disjoint index
+// ranges of the underlying `assignment` vec, which outlives every worker
+// (parallel_chunks joins before returning).
 unsafe impl Send for AssignPtr {}
+// SAFETY: as above — the pointer is only used for disjoint-range writes,
+// so shared references between workers cannot race.
 unsafe impl Sync for AssignPtr {}
 
 #[cfg(test)]

@@ -10,6 +10,7 @@
 //! Without the `xla` feature, `SendExec` is an empty stub and
 //! [`ExecPool::new`] always errors, so no pool (and hence no executable)
 //! can ever exist in a stub build.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use crate::Result;
 #[cfg(feature = "xla")]
@@ -21,6 +22,9 @@ use std::sync::{Mutex, MutexGuard};
 /// the pool's external locking discipline (see module docs).
 #[cfg(feature = "xla")]
 pub struct SendExec(xla::PjRtLoadedExecutable);
+// SAFETY: the PJRT CPU executable is immutable after compilation and
+// thread-compatible per its documentation; every Execute call is further
+// serialized behind the pool's per-slot Mutex (module docs).
 #[cfg(feature = "xla")]
 unsafe impl Send for SendExec {}
 

@@ -1,0 +1,101 @@
+//! Checked integer conversions for page/offset arithmetic.
+//!
+//! The `layout/`, `io/` and `cache/` modules are banned (by `pallas-lint`
+//! rule `truncating-cast`, see LINTS.md) from using bare `as` casts to
+//! narrowing or platform-width integer types: one silently truncated page
+//! offset corrupts the on-disk layout. They route through these helpers
+//! instead. This module itself lives outside the banned scope, so the
+//! widening conversions below may use `as` internally where provably
+//! lossless.
+
+// The whole page-offset design assumes at least a 32-bit address space;
+// `Ix` widenings below rely on it.
+const _: () = assert!(usize::BITS >= 32, "pallas requires a >= 32-bit target");
+
+/// Infallible widening to `usize` for types that always fit (given the
+/// 32-bit-floor assertion above). Spelled `x.ix()` at call sites to keep
+/// index arithmetic readable.
+pub trait Ix {
+    fn ix(self) -> usize;
+}
+
+impl Ix for u8 {
+    #[inline(always)]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+impl Ix for u16 {
+    #[inline(always)]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+impl Ix for u32 {
+    #[inline(always)]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+/// `u64` → `usize`, failing on 32-bit targets when the value is too large
+/// (file offsets and element counts come from headers and can be hostile).
+#[inline]
+pub fn to_usize(v: u64) -> anyhow::Result<usize> {
+    usize::try_from(v).map_err(|_| anyhow::anyhow!("value {v} does not fit usize"))
+}
+
+/// `usize` → `u32`, for counts serialized as fixed 32-bit fields.
+#[inline]
+pub fn to_u32(v: usize) -> anyhow::Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow::anyhow!("value {v} does not fit u32"))
+}
+
+/// `usize` → `u16`, for per-page slot counts.
+#[inline]
+pub fn to_u16(v: usize) -> anyhow::Result<u16> {
+    u16::try_from(v).map_err(|_| anyhow::anyhow!("value {v} does not fit u16"))
+}
+
+/// Low 32 bits of a packed 64-bit tag (io_uring `user_data` packing).
+#[inline(always)]
+pub fn lo32(v: u64) -> u32 {
+    (v & 0xffff_ffff) as u32
+}
+
+/// High 32 bits of a packed 64-bit tag.
+#[inline(always)]
+pub fn hi32(v: u64) -> u32 {
+    (v >> 32) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widenings_are_identity() {
+        assert_eq!(0xffu8.ix(), 255usize);
+        assert_eq!(0xffffu16.ix(), 65535usize);
+        assert_eq!(0xffff_ffffu32.ix(), 4_294_967_295usize);
+    }
+
+    #[test]
+    fn fallible_conversions() {
+        assert_eq!(to_usize(12).unwrap(), 12);
+        assert_eq!(to_u32(12).unwrap(), 12);
+        assert_eq!(to_u16(65535).unwrap(), 65535);
+        assert!(to_u16(65536).is_err());
+        assert!(to_u32(usize::MAX).is_err() || usize::BITS == 32);
+    }
+
+    #[test]
+    fn tag_packing_roundtrip() {
+        let v = (0xdead_beefu64 << 32) | 0x0123_4567;
+        assert_eq!(hi32(v), 0xdead_beef);
+        assert_eq!(lo32(v), 0x0123_4567);
+        assert_eq!(((hi32(v) as u64) << 32) | lo32(v) as u64, v);
+    }
+}

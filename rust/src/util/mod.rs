@@ -3,12 +3,15 @@
 //! fully offline — no rayon/tokio — so the crate carries its own).
 
 pub mod binio;
+pub mod checked;
 mod crc32c;
 mod parallel;
 mod rng;
+pub mod sync;
 mod timer;
 
 pub use binio::{ReadExt, WriteExt};
+pub use checked::{hi32, lo32, to_u16, to_u32, to_usize, Ix};
 pub use crc32c::crc32c;
 pub use parallel::{num_threads, parallel_chunks, parallel_for};
 pub use rng::XorShift;

@@ -2,6 +2,7 @@
 //! has no rayon, and the workloads here (ground-truth brute force, Vamana
 //! construction, query fan-out) are embarrassingly parallel over index
 //! ranges.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 /// Number of worker threads to use by default (host parallelism, capped).
 pub fn num_threads() -> usize {
@@ -48,10 +49,12 @@ where
     {
         let out_ptr = SendPtr(out.as_mut_ptr());
         parallel_chunks(n, nthreads, |start, end| {
-            // SAFETY: chunks are disjoint index ranges, so each slot is
-            // written by exactly one thread; T: Send.
             let p = out_ptr;
             for i in start..end {
+                // SAFETY: i < n = out.len(); chunks are disjoint index
+                // ranges, so each slot is written by exactly one thread, and
+                // `out` outlives every worker (the scope joins before
+                // parallel_chunks returns).
                 unsafe { *p.0.add(i) = f(i) };
             }
         });
@@ -68,7 +71,12 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: the pointer is only ever used for disjoint-range writes from
+// scoped threads that the owning call joins before returning, and the
+// pointee type must itself be Send to cross threads.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: as above — shared references only enable the same disjoint
+// writes, which cannot race.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]

@@ -1,0 +1,71 @@
+//! Poison-tolerant mutex helpers for the hot paths.
+//!
+//! The I/O stores and runner aggregate state behind `std::sync::Mutex`;
+//! `lock().unwrap()` there is banned by `pallas-lint` rule
+//! `hot-path-unwrap` (see LINTS.md). A poisoned mutex only means some
+//! thread panicked while holding it — every protected structure in this
+//! crate is either repaired by its owner (the uring `Ring` keeps its own
+//! `poisoned` flag and re-checks invariants on entry) or is plain data
+//! whose partially-updated state the caller re-validates. Recovering the
+//! guard is therefore sound, and it keeps panic-propagation off the
+//! latency-critical path.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wait on `cv`, recovering the guard if the mutex was poisoned while we
+/// were parked.
+#[inline]
+pub fn cond_wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Consume a mutex, recovering the inner value even if poisoned.
+#[inline]
+pub fn into_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        assert_eq!(into_inner(Arc::try_unwrap(m).unwrap()), 7);
+    }
+
+    #[test]
+    fn cond_wait_passes_through() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut done = lock(m);
+            while !*done {
+                done = cond_wait(cv, done);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock(m) = true;
+            cv.notify_all();
+        }
+        h.join().unwrap();
+    }
+}
