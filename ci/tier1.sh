@@ -40,7 +40,14 @@ echo "== tier-1: PAGEANN_FAULTS leg =="
 PAGEANN_FAULTS="seed=7,fail_first=1,flip_every=97" \
     cargo test -q --test fault_matrix --test index_end_to_end
 
-echo "== tier-1: bench rows (BENCH_adc.json, BENCH_io.json) =="
+echo "== tier-1: batch-parity leg (PAGEANN_BATCH=8) =="
+# ISSUE 8: batched execution must be bit-identical to sequential. The
+# batch_search suite chunks the same query stream at sizes {1,3,8} and
+# asserts bitwise result parity plus ios/hops/distance-counter equality;
+# PAGEANN_BATCH=8 also exercises the server admission-queue default.
+PAGEANN_BATCH=8 cargo test -q --test batch_search
+
+echo "== tier-1: bench rows (BENCH_adc.json, BENCH_io.json, BENCH_batch.json) =="
 cargo bench --bench hot_paths
 
 echo "== tier-1: sanitizers (best-effort) =="

@@ -8,16 +8,19 @@
 //! ```
 
 use pageann::bench::{ns_per_op, time_loop};
-use pageann::dataset::{DatasetKind, Dtype, SynthSpec};
+use pageann::dataset::{DatasetKind, Dtype, SynthSpec, Workload};
 use pageann::distance::{kernels, scalar_kernels, BatchScanner, NativeBatch, ScalarBatch, XlaBatch};
+use pageann::engine::{FaultSpec, OpenOptions, PageAnnIndex};
 use pageann::io::{
     open_auto, AioPageStore, PageStore, PendingRead, PreadPageStore, SimSsdStore, SsdModel,
     UringPageStore,
 };
-use pageann::layout::{PageRef, PageWriter};
-use pageann::pq::{PqCodebook, PqEncoder};
-use pageann::search::CandidateSet;
+use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder, PageRef, PageWriter};
+use pageann::metrics::QueryStats;
+use pageann::pq::{LutArena, PqCodebook, PqEncoder};
+use pageann::search::{BatchScratch, CandidateSet, SearchParams};
 use pageann::util::XorShift;
+use pageann::vamana::VamanaParams;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -29,6 +32,7 @@ fn main() {
     bench_candidates();
     bench_store();
     bench_io_pipeline();
+    bench_batch_pipeline();
     bench_xla();
 }
 
@@ -367,6 +371,115 @@ fn bench_io_pipeline() {
         Err(e) => println!("# BENCH_io.json not written: {e}"),
     }
     std::fs::remove_file(&path).unwrap();
+}
+
+/// Batched query pipeline (ISSUE 8): shared LUT builds + cross-query I/O
+/// coalescing on a duplicate-heavy workload over a real on-disk index with
+/// the sim-SSD model (the paper's I/O-bound regime). Emits
+/// `BENCH_batch.json`, sibling of `BENCH_adc.json`/`BENCH_io.json`.
+fn bench_batch_pipeline() {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 3000).with_dim(32).with_clusters(16);
+    let w = Workload::synthesize(&spec, 8, 10, 41);
+    let dir = std::env::temp_dir().join(format!("pageann-bench-batch-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = BuildConfig {
+        pq_m: 8,
+        cv_placement: CvPlacement::OnPage,
+        routing_sample_frac: 0.03,
+        vamana: VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 },
+        ..Default::default()
+    };
+    IndexBuilder::new(&w.base, cfg).build(&dir).unwrap();
+    let idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions {
+            sim_ssd: Some(SsdModel::default()),
+            faults: FaultSpec::Off,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // LUT-build microbench: the same 8-query set (4x duplicated) built
+    // one-at-a-time, batched subspace-major, and batched with aliasing.
+    let cb = PqCodebook::train(&w.base, 8, 8, 3);
+    let distinct: Vec<Vec<f32>> = (0..8).map(|i| w.queries.get_f32(i)).collect();
+    let lut_qs: Vec<&[f32]> = (0..8).map(|i| distinct[i % 2].as_slice()).collect();
+    let mut single = pageann::pq::AdcLut::empty();
+    let (mean, _) = time_loop(5, 100, || {
+        for q in &lut_qs {
+            cb.build_lut_into(q, &mut single);
+        }
+        std::hint::black_box(&single);
+    });
+    let lut_seq_ns = ns_per_op(mean, lut_qs.len());
+    let mut arena = LutArena::new();
+    arena.set_share(false, 1.0);
+    let (mean, _) = time_loop(5, 100, || {
+        cb.build_luts_into(&lut_qs, &mut arena);
+        std::hint::black_box(&arena);
+    });
+    let lut_batch_ns = ns_per_op(mean, lut_qs.len());
+    let mut arena_s = LutArena::new(); // share on (default): duplicates alias
+    let (mean, _) = time_loop(5, 100, || {
+        cb.build_luts_into(&lut_qs, &mut arena_s);
+        std::hint::black_box(&arena_s);
+    });
+    let lut_shared_ns = ns_per_op(mean, lut_qs.len());
+    println!("batch_lut_build_seq        {lut_seq_ns:>10.1} ns/query (8 queries, one at a time)");
+    println!(
+        "batch_lut_build_batched    {lut_batch_ns:>10.1} ns/query (subspace-major, share off)"
+    );
+    println!(
+        "batch_lut_build_shared     {lut_shared_ns:>10.1} ns/query (4x duplicates aliased, {:.2}x vs seq)",
+        lut_seq_ns / lut_shared_ns.max(1e-9)
+    );
+
+    // End-to-end sweep: 32 queries cycling over 8 distinct vectors, so
+    // every batch of 8+ holds duplicates and neighbors overlap heavily.
+    let stream: Vec<&[f32]> = (0..32).map(|i| distinct[i % 8].as_slice()).collect();
+    let params_base = SearchParams { k: 10, l: 60, ..Default::default() };
+    let mut batch = BatchScratch::new();
+    let mut rows = Vec::new();
+    for &bs in &[1usize, 4, 8, 16] {
+        for share in [true, false] {
+            let params = SearchParams { lut_share: share, ..params_base.clone() };
+            let mut tot = QueryStats::default();
+            let t = Instant::now();
+            let mut qi = 0;
+            while qi < stream.len() {
+                let hi = (qi + bs).min(stream.len());
+                let mut stats = vec![QueryStats::default(); hi - qi];
+                for out in idx.search_batch(&stream[qi..hi], &params, &mut batch, &mut stats) {
+                    out.unwrap();
+                }
+                for st in &stats {
+                    tot.merge(st);
+                }
+                qi = hi;
+            }
+            let usq = t.elapsed().as_secs_f64() * 1e6 / stream.len() as f64;
+            let physical = tot.ios - tot.batch_shared_ios;
+            println!(
+                "batch_pipeline_b{bs:<2}_share={share:<5} {usq:>8.1} µs/query  ios {:>4}  shared {:>4}  physical {physical:>4}  lut_reused {:>2}",
+                tot.ios, tot.batch_shared_ios, tot.lut_reused
+            );
+            rows.push(format!(
+                "    {{\"batch\": {bs}, \"lut_share\": {share}, \"us_per_query\": {usq:.1}, \"ios\": {}, \"batch_shared_ios\": {}, \"physical_reads\": {physical}, \"lut_reused\": {}}}",
+                tot.ios, tot.batch_shared_ios, tot.lut_reused
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"batch_pipeline\",\n  \"n_queries\": 32,\n  \"distinct\": 8,\n  \"k\": 10,\n  \"l\": 60,\n  \"lut_build\": {{\"m\": 8, \"dup_factor\": 4, \"sequential_ns\": {lut_seq_ns:.1}, \"batched_ns\": {lut_batch_ns:.1}, \"batched_shared_ns\": {lut_shared_ns:.1}}},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_batch.json", &json) {
+        Ok(()) => println!("# wrote BENCH_batch.json"),
+        Err(e) => println!("# BENCH_batch.json not written: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 fn bench_xla() {

@@ -9,8 +9,11 @@
 mod runner;
 pub mod server;
 
-pub use runner::{run_workload, tune_to_recall, WorkloadReport};
-pub use server::{QueryClient, QueryServer, ServerHandle};
+pub use runner::{run_workload, run_workload_batched, tune_to_recall, WorkloadReport};
+pub use server::{
+    BatchConfig, PageFaultTotals, QueryClient, QueryServer, ServerHandle, ServerStats,
+    StatsSnapshot,
+};
 
 use crate::cache::{MemCodes, PageCache};
 use crate::dataset::VectorSet;
@@ -20,7 +23,9 @@ use crate::layout::{IndexFiles, IndexMeta, PageRef};
 use crate::metrics::QueryStats;
 use crate::pq::PqCodebook;
 use crate::routing::RoutingIndex;
-use crate::search::{search_pages, SearchContext, SearchParams, SearchScratch};
+use crate::search::{
+    search_batch, search_pages, BatchScratch, SearchContext, SearchParams, SearchScratch,
+};
 use crate::Result;
 use std::cell::RefCell;
 use std::path::Path;
@@ -40,6 +45,25 @@ pub trait AnnSystem: Send + Sync {
         l: usize,
         stats: &mut QueryStats,
     ) -> Result<Vec<u32>>;
+    /// Top-k for a batch of queries, one `Result` (and one `stats` slot)
+    /// per query in order. The default implementation loops
+    /// [`Self::search_one`]; batch-native schemes (PageANN) override it to
+    /// share LUT builds and coalesce page reads across the batch. Results
+    /// must be identical to the sequential loop for every batch size.
+    fn search_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        l: usize,
+        stats: &mut [QueryStats],
+    ) -> Vec<Result<Vec<u32>>> {
+        debug_assert_eq!(queries.len(), stats.len());
+        queries
+            .iter()
+            .zip(stats.iter_mut())
+            .map(|(q, st)| self.search_one(q, k, l, st))
+            .collect()
+    }
     /// Resident memory this scheme needs at query time.
     fn memory_bytes(&self) -> usize;
 }
@@ -117,6 +141,7 @@ pub struct PageAnnIndex {
 
 thread_local! {
     static SCRATCH: RefCell<SearchScratch> = RefCell::new(SearchScratch::new());
+    static BATCH: RefCell<BatchScratch> = RefCell::new(BatchScratch::new());
 }
 
 impl PageAnnIndex {
@@ -213,6 +238,37 @@ impl PageAnnIndex {
         Ok(out)
     }
 
+    /// Full-control batched search: one [`Result`] per query, bit-identical
+    /// to calling [`Self::search`] per query (see
+    /// [`crate::search::search_batch`] for the identity argument). Each
+    /// query's `total_time` is the batch's wall time — the latency a
+    /// batched server tick actually imposes on every member.
+    pub fn search_batch(
+        &self,
+        queries: &[&[f32]],
+        params: &SearchParams,
+        batch: &mut BatchScratch,
+        stats: &mut [QueryStats],
+    ) -> Vec<Result<Vec<(f32, u32)>>> {
+        let t0 = std::time::Instant::now();
+        let entries: Vec<Vec<u32>> = queries.iter().map(|q| self.entries(q)).collect();
+        let entry_refs: Vec<&[u32]> = entries.iter().map(|e| e.as_slice()).collect();
+        let ctx = SearchContext {
+            meta: &self.meta,
+            store: self.store.as_ref(),
+            cache: &self.cache,
+            memcodes: &self.memcodes,
+            scanner: self.scanner.as_ref(),
+            pq: &self.pq,
+        };
+        let out = search_batch(&ctx, queries, &entry_refs, params, batch, stats);
+        let dt = t0.elapsed();
+        for st in stats.iter_mut() {
+            st.total_time += dt;
+        }
+        out
+    }
+
     /// Warm-up (paper §4.3): run `queries` once, count page-visit
     /// frequencies, pin the hottest pages within `budget_bytes`.
     pub fn warmup(&mut self, queries: &VectorSet, budget_bytes: usize) -> Result<()> {
@@ -286,6 +342,29 @@ impl AnnSystem for PageAnnIndex {
             let mut scratch = s.borrow_mut();
             let out = self.search(query, &params, &mut scratch, stats)?;
             Ok(out.into_iter().map(|(_, id)| id).collect())
+        })
+    }
+
+    fn search_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        l: usize,
+        stats: &mut [QueryStats],
+    ) -> Vec<Result<Vec<u32>>> {
+        // Batch size 1 gains nothing from lockstep (and the sequential
+        // path additionally speculates), so route it through `search_one`
+        // — this is literally today's single-query code path.
+        if queries.len() == 1 {
+            return vec![self.search_one(queries[0], k, l, &mut stats[0])];
+        }
+        let params = SearchParams { k, l, ..self.params.clone() };
+        BATCH.with(|b| {
+            let mut batch = b.borrow_mut();
+            PageAnnIndex::search_batch(self, queries, &params, &mut batch, stats)
+                .into_iter()
+                .map(|r| r.map(|v| v.into_iter().map(|(_, id)| id).collect()))
+                .collect()
         })
     }
 

@@ -18,7 +18,9 @@ pub struct WorkloadReport {
 }
 
 /// Run every query in `queries` through `sys` on `nthreads` concurrent
-/// threads; compute recall against `gt` if provided.
+/// threads; compute recall against `gt` if provided. Batch size comes
+/// from the `PAGEANN_BATCH` env var (default 1 — the classic per-query
+/// loop); see [`run_workload_batched`].
 pub fn run_workload(
     sys: &dyn AnnSystem,
     queries: &VectorSet,
@@ -27,8 +29,32 @@ pub fn run_workload(
     l: usize,
     nthreads: usize,
 ) -> WorkloadReport {
+    let batch = std::env::var("PAGEANN_BATCH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&b| b >= 1)
+        .unwrap_or(1);
+    run_workload_batched(sys, queries, gt, k, l, nthreads, batch)
+}
+
+/// [`run_workload`] with an explicit batch size: worker threads claim
+/// `batch`-sized chunks of the query stream and feed them to
+/// [`AnnSystem::search_batch`] (shared LUT builds + coalesced page reads
+/// on batch-native schemes). Each query in a chunk reports the chunk's
+/// wall time as its latency — the latency a batched tick imposes on every
+/// member. `batch = 1` is exactly the old per-query loop.
+pub fn run_workload_batched(
+    sys: &dyn AnnSystem,
+    queries: &VectorSet,
+    gt: Option<&[Vec<u32>]>,
+    k: usize,
+    l: usize,
+    nthreads: usize,
+    batch: usize,
+) -> WorkloadReport {
     let n = queries.len();
     let nthreads = nthreads.max(1);
+    let batch = batch.max(1);
     let next = AtomicUsize::new(0);
     let errors = AtomicUsize::new(0);
     let agg: Mutex<(QueryStats, LatencyHistogram)> =
@@ -45,30 +71,40 @@ pub fn run_workload(
                 let mut local = QueryStats::default();
                 let mut hist = LatencyHistogram::new();
                 let mut mine: Vec<(usize, Vec<u32>)> = Vec::with_capacity(n / nthreads + 1);
+                let mut stats: Vec<QueryStats> = Vec::with_capacity(batch);
                 loop {
-                    let qi = next.fetch_add(1, Ordering::Relaxed);
-                    if qi >= n {
+                    // Claim the next chunk of the query stream.
+                    let lo = next.fetch_add(batch, Ordering::Relaxed);
+                    if lo >= n {
                         break;
                     }
-                    let q = queries.get_f32(qi);
-                    let mut stats = QueryStats::default();
+                    let hi = (lo + batch).min(n);
+                    let qvecs: Vec<Vec<f32>> = (lo..hi).map(|qi| queries.get_f32(qi)).collect();
+                    let qrefs: Vec<&[f32]> = qvecs.iter().map(|v| v.as_slice()).collect();
+                    stats.clear();
+                    stats.resize(hi - lo, QueryStats::default());
                     let t = Instant::now();
-                    // A failed query contributes an empty result (recall
-                    // charges the miss) and an error count — one bad page
-                    // must not abort the whole workload.
-                    let ids = match sys.search_one(&q, k, l, &mut stats) {
-                        Ok(ids) => ids,
-                        Err(e) => {
-                            errors.fetch_add(1, Ordering::Relaxed);
-                            eprintln!("runner: query {qi} failed: {e}");
-                            Vec::new()
-                        }
-                    };
+                    let outs = sys.search_batch(&qrefs, k, l, &mut stats);
                     let dt = t.elapsed();
-                    stats.total_time = dt;
-                    hist.record(dt);
-                    local.merge(&stats);
-                    mine.push((qi, ids));
+                    for (j, res) in outs.into_iter().enumerate() {
+                        // A failed query contributes an empty result
+                        // (recall charges the miss) and an error count —
+                        // one bad page must not abort the whole workload,
+                        // nor its batchmates.
+                        let ids = match res {
+                            Ok(ids) => ids,
+                            Err(e) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                                eprintln!("runner: query {} failed: {e}", lo + j);
+                                Vec::new()
+                            }
+                        };
+                        let mut st = std::mem::take(&mut stats[j]);
+                        st.total_time = dt;
+                        hist.record(dt);
+                        local.merge(&st);
+                        mine.push((lo + j, ids));
+                    }
                 }
                 let mut g = lock(&agg);
                 g.0.merge(&local);
@@ -237,6 +273,49 @@ mod tests {
         assert_eq!(rep.summary.errors, 4);
         let nonempty = rep.results.iter().filter(|r| !r.is_empty()).count();
         assert_eq!(nonempty, 4, "failed queries yield empty results, others survive");
+    }
+
+    #[test]
+    fn batched_chunks_cover_every_query_identically() {
+        let mut base = VectorSet::new(Dtype::F32, 4, 50);
+        for i in 0..50 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let mut queries = VectorSet::new(Dtype::F32, 4, 10);
+        for i in 0..10 {
+            queries.set_from_f32(i, &[i as f32 * 4.0 + 0.1, 0.0, 0.0, 0.0]);
+        }
+        let sys = BruteForce { base };
+        let seq = run_workload_batched(&sys, &queries, None, 5, 10, 2, 1);
+        // Batch sizes that divide the stream unevenly must still cover
+        // every query exactly once, with identical results.
+        for batch in [3usize, 4, 16] {
+            let rep = run_workload_batched(&sys, &queries, None, 5, 10, 2, batch);
+            assert_eq!(rep.summary.queries, 10);
+            assert_eq!(rep.summary.errors, 0);
+            assert_eq!(rep.results, seq.results, "batch={batch}");
+            assert_eq!(rep.summary.totals.exact_dists, seq.summary.totals.exact_dists);
+        }
+    }
+
+    #[test]
+    fn batched_runner_counts_errors_per_query() {
+        let mut base = VectorSet::new(Dtype::F32, 4, 50);
+        for i in 0..50 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let mut queries = VectorSet::new(Dtype::F32, 4, 8);
+        for i in 0..8 {
+            queries.set_from_f32(i, &[i as f32 * 5.0 + 0.1, 0.0, 0.0, 0.0]);
+        }
+        let sys = Flaky { inner: BruteForce { base } };
+        // Queries 4..8 fail; a failing query must not take down the rest
+        // of its chunk.
+        let rep = run_workload_batched(&sys, &queries, None, 5, 10, 2, 3);
+        assert_eq!(rep.summary.queries, 8);
+        assert_eq!(rep.summary.errors, 4);
+        let nonempty = rep.results.iter().filter(|r| !r.is_empty()).count();
+        assert_eq!(nonempty, 4);
     }
 
     #[test]

@@ -3,16 +3,30 @@
 //! Wire protocol (little-endian, one request per frame):
 //!
 //! ```text
-//! request:  [u32 magic 0x50414E51 "PANQ"] [u32 k] [u32 l] [u32 dim] [f32 × dim]
-//! response: [u32 magic 0x50414E52 "PANR"] [u32 n] [u32 id × n]
-//!           [f32 latency_ms] [u32 ios]
-//! error:    [u32 magic 0x50414E45 "PANE"] [u32 len] [len bytes utf-8]
+//! request:   [u32 magic 0x50414E51 "PANQ"] [u32 k] [u32 l] [u32 dim] [f32 × dim]
+//! response:  [u32 magic 0x50414E52 "PANR"] [u32 n] [u32 id × n]
+//!            [f32 latency_ms] [u32 ios]
+//! error:     [u32 magic 0x50414E45 "PANE"] [u32 len] [len bytes utf-8]
+//! stats req: [u32 magic 0x50414E53 "PANS"] [u32 top_n]
+//! stats rep: [u32 magic 0x50414E54 "PANT"] [u64 queries] [u64 errors]
+//!            [u64 total_ios] [u64 retries] [u64 failed_ios]
+//!            [u64 crc_failures] [u64 degraded] [u64 batch_shared_ios]
+//!            [u64 lut_reused] [u32 n]
+//!            ([u32 page] [u64 retries] [u64 crc_failures] [u64 failed_ios]) × n
 //! ```
 //!
-//! One OS thread per connection (queries within a connection are
-//! sequential; concurrency comes from multiple connections, matching the
-//! paper's 1–16 query-thread setup). A shared [`AnnSystem`] serves all
-//! connections; per-thread scratch lives in the system's thread-locals.
+//! One OS thread per connection parses frames. With `batch_max == 1`
+//! (ISSUE 8's compatibility mode) the connection thread also runs the
+//! search inline — exactly the pre-batching behavior. With
+//! `batch_max > 1` (the default), parsed requests flow through a
+//! tick-based admission queue: a small executor pool drains up to
+//! `batch_max` requests per tick, waiting at most `gather_window` for
+//! batchmates, groups them by `(k, l)`, and answers each request over its
+//! own reply channel so the connection thread writes the response. The
+//! batched tick calls [`AnnSystem::search_batch`], which shares ADC LUT
+//! builds and coalesces duplicate page reads across the gathered queries
+//! (see `search::search_batch`); results are bit-identical to the inline
+//! path, so batching is purely a throughput knob.
 //!
 //! Failure semantics (ISSUE 6): a failed search answers with a `PANE`
 //! error frame and the connection survives; a malformed request is
@@ -20,20 +34,27 @@
 //! stays in sync, or the connection is closed (when it can't be); each
 //! connection carries a read timeout so a stalled client can't pin its
 //! thread forever; and persistent `accept` errors (e.g. EMFILE) back off
-//! exponentially instead of busy-spinning.
+//! exponentially instead of busy-spinning. [`ServerStats`] additionally
+//! aggregates per-page fault totals (retries / CRC failures / permanent
+//! failures, keyed by page id) so monitoring can spot a dying flash
+//! region via the `PANS` stats frame.
 
 use super::AnnSystem;
 use crate::metrics::QueryStats;
+use crate::util::sync::{cond_wait, cond_wait_timeout, lock};
 use crate::Result;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 pub const REQ_MAGIC: u32 = 0x50414E51;
 pub const RESP_MAGIC: u32 = 0x50414E52;
 pub const ERR_MAGIC: u32 = 0x50414E45;
+pub const STAT_MAGIC: u32 = 0x50414E53;
+pub const STAT_RESP_MAGIC: u32 = 0x50414E54;
 
 /// Hard cap on the query dimension a request may declare. Below it, a bad
 /// request's payload is drained so the connection stays usable; above it,
@@ -43,7 +64,61 @@ pub const MAX_QDIM: usize = 1 << 16;
 /// Default per-connection read timeout (covers idle keep-alive too).
 pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Server statistics (scraped by monitoring / tests).
+/// Largest top-offenders table a `PANS` stats reply will carry.
+pub const STAT_TOP_N_CAP: usize = 256;
+
+/// Default admission-queue batch size when `PAGEANN_BATCH` is unset.
+pub const DEFAULT_BATCH_MAX: usize = 8;
+
+/// Default bounded gather window: how long an executor holds a partial
+/// batch waiting for batchmates before running the tick anyway.
+pub const DEFAULT_GATHER_WINDOW: Duration = Duration::from_micros(200);
+
+/// How long a connection thread waits for its batched reply before
+/// answering with an error frame (guards the executor-shutdown race; in
+/// normal operation replies arrive in query-latency time).
+const EXECUTOR_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Admission-queue configuration for [`QueryServer`].
+///
+/// `batch_max == 1` bypasses the queue entirely: connection threads run
+/// searches inline, reproducing the pre-batching server exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Most requests one executor tick may gather (≥ 1).
+    pub batch_max: usize,
+    /// Longest an executor waits for batchmates after the first request.
+    pub gather_window: Duration,
+    /// Executor threads draining the queue (≥ 1; only used when
+    /// `batch_max > 1`).
+    pub executors: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        let batch_max = std::env::var("PAGEANN_BATCH")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&b| b >= 1)
+            .unwrap_or(DEFAULT_BATCH_MAX);
+        Self { batch_max, gather_window: DEFAULT_GATHER_WINDOW, executors: 2 }
+    }
+}
+
+/// Aggregated fault totals for one page across every query the server has
+/// answered.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PageFaultTotals {
+    /// Successful-after-retry read attempts charged to this page.
+    pub retries: u64,
+    /// CRC32C tail verification failures observed on this page.
+    pub crc_failures: u64,
+    /// Times this page stayed unreadable after the retry budget.
+    pub failed_ios: u64,
+}
+
+/// Server statistics (scraped by monitoring / tests, exported over the
+/// `PANS` stats frame).
 #[derive(Debug, Default)]
 pub struct ServerStats {
     pub queries: AtomicU64,
@@ -56,6 +131,154 @@ pub struct ServerStats {
     pub failed_ios: AtomicU64,
     /// Queries answered from a degraded traversal (some page skipped).
     pub degraded: AtomicU64,
+    /// CRC32C verification failures observed inside the search path.
+    pub crc_failures: AtomicU64,
+    /// Page reads coalesced away by batched execution (sum of
+    /// `QueryStats::batch_shared_ios`).
+    pub batch_shared_ios: AtomicU64,
+    /// Queries whose ADC LUT aliased a batchmate's instead of being built.
+    pub lut_reused: AtomicU64,
+    /// Per-page fault aggregation, keyed by page id. Fed from each query's
+    /// `QueryStats::page_faults`; read via [`ServerStats::top_offenders`].
+    page_faults: Mutex<HashMap<u32, PageFaultTotals>>,
+}
+
+impl ServerStats {
+    /// Fold one answered query's stats into the server counters. `ok`
+    /// mirrors the reply actually sent: `true` for a result frame, `false`
+    /// for an error frame.
+    pub fn note_query(&self, ok: bool, q: &QueryStats) {
+        self.retries.fetch_add(q.retries, Ordering::Relaxed);
+        self.failed_ios.fetch_add(q.failed_ios, Ordering::Relaxed);
+        self.crc_failures.fetch_add(q.crc_failures, Ordering::Relaxed);
+        self.batch_shared_ios.fetch_add(q.batch_shared_ios, Ordering::Relaxed);
+        self.lut_reused.fetch_add(q.lut_reused, Ordering::Relaxed);
+        if ok {
+            self.queries.fetch_add(1, Ordering::Relaxed);
+            self.total_ios.fetch_add(q.ios, Ordering::Relaxed);
+            if q.degraded {
+                self.degraded.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if !q.page_faults.is_empty() {
+            let mut map = lock(&self.page_faults);
+            for r in &q.page_faults {
+                let t = map.entry(r.page).or_default();
+                t.retries += r.retries as u64;
+                t.crc_failures += r.crc_failures as u64;
+                if r.failed {
+                    t.failed_ios += 1;
+                }
+            }
+        }
+    }
+
+    /// The `n` worst pages, ranked by permanent failures, then CRC
+    /// failures, then retries (page id breaks ties deterministically).
+    pub fn top_offenders(&self, n: usize) -> Vec<(u32, PageFaultTotals)> {
+        let map = lock(&self.page_faults);
+        let mut v: Vec<(u32, PageFaultTotals)> = map.iter().map(|(&p, &t)| (p, t)).collect();
+        drop(map);
+        v.sort_by(|a, b| {
+            (b.1.failed_ios, b.1.crc_failures, b.1.retries, a.0)
+                .cmp(&(a.1.failed_ios, a.1.crc_failures, a.1.retries, b.0))
+        });
+        v.truncate(n);
+        v
+    }
+}
+
+/// One parsed request waiting in the admission queue. The reply channel
+/// routes the answer back to the connection thread that parsed it.
+struct PendingQuery {
+    query: Vec<f32>,
+    k: usize,
+    l: usize,
+    reply: mpsc::Sender<(Result<Vec<u32>>, QueryStats)>,
+}
+
+/// Tick-based admission queue shared by connection threads (producers)
+/// and the executor pool (consumers).
+struct AdmissionQueue {
+    q: Mutex<VecDeque<PendingQuery>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl AdmissionQueue {
+    fn new() -> Self {
+        Self {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Executor tick loop: block for one request, gather batchmates within the
+/// bounded window, group by `(k, l)`, run [`AnnSystem::search_batch`], and
+/// route every reply back to its connection. Exits when the queue is both
+/// shut down and fully drained, so no pending request loses its reply.
+fn executor_loop(queue: Arc<AdmissionQueue>, system: Arc<dyn AnnSystem>, cfg: BatchConfig) {
+    loop {
+        let mut batch: Vec<PendingQuery> = Vec::new();
+        {
+            let mut g = lock(&queue.q);
+            loop {
+                if let Some(p) = g.pop_front() {
+                    batch.push(p);
+                    break;
+                }
+                if queue.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                g = cond_wait(&queue.cv, g);
+            }
+            // Bounded gather window: a lone query pays at most
+            // `gather_window` of extra latency waiting for batchmates; a
+            // full batch departs immediately.
+            let deadline = std::time::Instant::now() + cfg.gather_window;
+            while batch.len() < cfg.batch_max {
+                if let Some(p) = g.pop_front() {
+                    batch.push(p);
+                    continue;
+                }
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g2, _timed_out) = cond_wait_timeout(&queue.cv, g, deadline - now);
+                g = g2;
+            }
+        }
+        // search_batch takes one (k, l) per call, so group the gathered
+        // requests; mixed ticks become one call per distinct pair.
+        let mut pending = batch;
+        while let Some(first) = pending.first() {
+            let (k, l) = (first.k, first.l);
+            let mut group = Vec::with_capacity(pending.len());
+            let mut rest = Vec::new();
+            for p in pending {
+                if p.k == k && p.l == l {
+                    group.push(p);
+                } else {
+                    rest.push(p);
+                }
+            }
+            pending = rest;
+            let qrefs: Vec<&[f32]> = group.iter().map(|p| p.query.as_slice()).collect();
+            let mut qstats = vec![QueryStats::default(); group.len()];
+            let results = system.search_batch(&qrefs, k, l.max(k), &mut qstats);
+            drop(qrefs);
+            for ((p, res), st) in group.into_iter().zip(results).zip(qstats) {
+                // A closed receiver only means the connection died while
+                // waiting; nothing to do.
+                let _ = p.reply.send((res, st));
+            }
+        }
+    }
 }
 
 pub struct QueryServer {
@@ -65,6 +288,7 @@ pub struct QueryServer {
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
     read_timeout: Option<Duration>,
+    batch: BatchConfig,
 }
 
 /// Handle returned by [`QueryServer::spawn`]: stop + join the serve loop.
@@ -97,7 +321,8 @@ impl Drop for ServerHandle {
 }
 
 impl QueryServer {
-    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port). Batching
+    /// defaults to [`BatchConfig::default`] (`PAGEANN_BATCH` or 8).
     pub fn bind(addr: &str, system: Arc<dyn AnnSystem>, dim: usize) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
@@ -107,12 +332,20 @@ impl QueryServer {
             stats: Arc::new(ServerStats::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
             read_timeout: Some(DEFAULT_READ_TIMEOUT),
+            batch: BatchConfig::default(),
         })
     }
 
     /// Override the per-connection read timeout (`None` = never time out).
     pub fn with_read_timeout(mut self, timeout: Option<Duration>) -> Self {
         self.read_timeout = timeout;
+        self
+    }
+
+    /// Override the admission-queue configuration. `batch_max == 1`
+    /// disables the queue and restores the inline (pre-batching) path.
+    pub fn with_batching(mut self, cfg: BatchConfig) -> Self {
+        self.batch = cfg;
         self
     }
 
@@ -130,6 +363,19 @@ impl QueryServer {
     }
 
     fn serve_loop(self) {
+        // Batched mode: spin up the executor pool before accepting.
+        let queue = if self.batch.batch_max > 1 {
+            let q = Arc::new(AdmissionQueue::new());
+            for _ in 0..self.batch.executors.max(1) {
+                let qx = Arc::clone(&q);
+                let system = self.system.clone();
+                let cfg = self.batch;
+                std::thread::spawn(move || executor_loop(qx, system, cfg));
+            }
+            Some(q)
+        } else {
+            None
+        };
         // Exponential backoff for persistent accept() failures (EMFILE,
         // ENFILE): busy-spinning on a failing accept would peg a core and
         // starve the very connections holding the descriptors we need.
@@ -143,7 +389,7 @@ impl QueryServer {
                 }
                 Err(e) => {
                     if self.shutdown.load(Ordering::SeqCst) {
-                        return;
+                        break;
                     }
                     eprintln!("server: accept failed ({e}); backing off {backoff:?}");
                     std::thread::sleep(backoff);
@@ -152,16 +398,23 @@ impl QueryServer {
                 }
             };
             if self.shutdown.load(Ordering::SeqCst) {
-                return;
+                break;
             }
             let _ = stream.set_read_timeout(self.read_timeout);
             let system = self.system.clone();
             let stats = self.stats.clone();
             let dim = self.dim;
             let shutdown = self.shutdown.clone();
+            let conn_queue = queue.clone();
             std::thread::spawn(move || {
-                let _ = handle_connection(stream, system, dim, stats, shutdown);
+                let _ = handle_connection(stream, system, dim, stats, shutdown, conn_queue);
             });
+        }
+        // Wake the executors; they drain any queued requests (every
+        // pending connection still gets its reply) and then exit.
+        if let Some(q) = queue {
+            q.shutdown.store(true, Ordering::SeqCst);
+            q.cv.notify_all();
         }
     }
 }
@@ -170,6 +423,12 @@ fn read_u32(s: &mut TcpStream) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     s.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(s: &mut TcpStream) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
 }
 
 /// Read and discard exactly `n` bytes — keeps the stream frame-aligned
@@ -184,14 +443,54 @@ fn drain_exact(s: &mut TcpStream, mut n: usize) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Serialize a `PANT` stats reply into `out` and send it.
+fn write_stats_reply(
+    stream: &mut TcpStream,
+    stats: &ServerStats,
+    top_n: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let offenders = stats.top_offenders(top_n);
+    out.clear();
+    out.extend_from_slice(&STAT_RESP_MAGIC.to_le_bytes());
+    for v in [
+        stats.queries.load(Ordering::Relaxed),
+        stats.errors.load(Ordering::Relaxed),
+        stats.total_ios.load(Ordering::Relaxed),
+        stats.retries.load(Ordering::Relaxed),
+        stats.failed_ios.load(Ordering::Relaxed),
+        stats.crc_failures.load(Ordering::Relaxed),
+        stats.degraded.load(Ordering::Relaxed),
+        stats.batch_shared_ios.load(Ordering::Relaxed),
+        stats.lut_reused.load(Ordering::Relaxed),
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(offenders.len() as u32).to_le_bytes());
+    for (page, t) in &offenders {
+        out.extend_from_slice(&page.to_le_bytes());
+        out.extend_from_slice(&t.retries.to_le_bytes());
+        out.extend_from_slice(&t.crc_failures.to_le_bytes());
+        out.extend_from_slice(&t.failed_ios.to_le_bytes());
+    }
+    stream.write_all(out)?;
+    Ok(())
+}
+
 fn handle_connection(
     mut stream: TcpStream,
     system: Arc<dyn AnnSystem>,
     dim: usize,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
+    queue: Option<Arc<AdmissionQueue>>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
+    // One set of buffers per connection, reused across requests: raw query
+    // bytes, the decoded query, and the outgoing frame.
+    let mut qbytes = vec![0u8; dim * 4];
+    let mut query: Vec<f32> = Vec::with_capacity(dim);
+    let mut out: Vec<u8> = Vec::new();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return Ok(());
@@ -200,6 +499,11 @@ fn handle_connection(
             Ok(m) => m,
             Err(_) => return Ok(()), // connection closed
         };
+        if magic == STAT_MAGIC {
+            let top_n = read_u32(&mut stream)? as usize;
+            write_stats_reply(&mut stream, &stats, top_n.min(STAT_TOP_N_CAP), &mut out)?;
+            continue;
+        }
         if magic != REQ_MAGIC {
             stats.errors.fetch_add(1, Ordering::Relaxed);
             send_error(&mut stream, "bad request magic")?;
@@ -225,37 +529,58 @@ fn handle_connection(
             send_error(&mut stream, &format!("bad request: dim {qdim} (want {dim}), k {k}"))?;
             continue;
         }
-        let mut buf = vec![0u8; dim * 4];
-        stream.read_exact(&mut buf)?;
-        let query: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        stream.read_exact(&mut qbytes)?;
+        query.clear();
+        query.extend(
+            qbytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
 
-        let mut qstats = QueryStats::default();
         let t = std::time::Instant::now();
-        let ids = match system.search_one(&query, k, l.max(k), &mut qstats) {
+        let (res, qstats) = match &queue {
+            Some(q) => {
+                // Batched path: enqueue and wait for the executor tick's
+                // reply. The query buffer moves into the request; the next
+                // frame re-fills a fresh one.
+                let (tx, rx) = mpsc::channel();
+                {
+                    let mut g = lock(&q.q);
+                    g.push_back(PendingQuery {
+                        query: std::mem::take(&mut query),
+                        k,
+                        l,
+                        reply: tx,
+                    });
+                }
+                q.cv.notify_one();
+                match rx.recv_timeout(EXECUTOR_REPLY_TIMEOUT) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        (Err(anyhow::anyhow!("batch executor unavailable")), QueryStats::default())
+                    }
+                }
+            }
+            None => {
+                // Inline path (batch_max == 1): identical to the
+                // pre-batching server.
+                let mut st = QueryStats::default();
+                let r = system.search_one(&query, k, l.max(k), &mut st);
+                (r, st)
+            }
+        };
+        let ids = match res {
             Ok(ids) => ids,
             Err(e) => {
                 // A failed search answers with an error frame; the
                 // connection (and its serving thread) survives.
-                stats.errors.fetch_add(1, Ordering::Relaxed);
-                stats.retries.fetch_add(qstats.retries, Ordering::Relaxed);
-                stats.failed_ios.fetch_add(qstats.failed_ios, Ordering::Relaxed);
+                stats.note_query(false, &qstats);
                 send_error(&mut stream, &format!("search failed: {e}"))?;
                 continue;
             }
         };
         let ms = t.elapsed().as_secs_f64() * 1e3;
-        stats.queries.fetch_add(1, Ordering::Relaxed);
-        stats.total_ios.fetch_add(qstats.ios, Ordering::Relaxed);
-        stats.retries.fetch_add(qstats.retries, Ordering::Relaxed);
-        stats.failed_ios.fetch_add(qstats.failed_ios, Ordering::Relaxed);
-        if qstats.degraded {
-            stats.degraded.fetch_add(1, Ordering::Relaxed);
-        }
+        stats.note_query(true, &qstats);
 
-        let mut out = Vec::with_capacity(16 + ids.len() * 4);
+        out.clear();
         out.extend_from_slice(&RESP_MAGIC.to_le_bytes());
         out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
         for id in &ids {
@@ -287,6 +612,22 @@ pub struct ClientResponse {
     pub ids: Vec<u32>,
     pub server_ms: f32,
     pub ios: u32,
+}
+
+/// Decoded `PANT` stats reply.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub queries: u64,
+    pub errors: u64,
+    pub total_ios: u64,
+    pub retries: u64,
+    pub failed_ios: u64,
+    pub crc_failures: u64,
+    pub degraded: u64,
+    pub batch_shared_ios: u64,
+    pub lut_reused: u64,
+    /// Worst pages by (permanent failures, CRC failures, retries).
+    pub top_offenders: Vec<(u32, PageFaultTotals)>,
 }
 
 impl QueryClient {
@@ -327,12 +668,53 @@ impl QueryClient {
         let ios = read_u32(&mut self.stream)?;
         Ok(ClientResponse { ids, server_ms, ios })
     }
+
+    /// Fetch server counters and the `top_n` worst pages (`PANS`/`PANT`).
+    pub fn stats(&mut self, top_n: usize) -> Result<StatsSnapshot> {
+        let mut out = Vec::with_capacity(8);
+        out.extend_from_slice(&STAT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(top_n as u32).to_le_bytes());
+        self.stream.write_all(&out)?;
+
+        let magic = read_u32(&mut self.stream)?;
+        if magic == ERR_MAGIC {
+            let len = read_u32(&mut self.stream)? as usize;
+            let mut msg = vec![0u8; len.min(4096)];
+            self.stream.read_exact(&mut msg)?;
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        anyhow::ensure!(magic == STAT_RESP_MAGIC, "bad stats magic {magic:#x}");
+        let mut snap = StatsSnapshot {
+            queries: read_u64(&mut self.stream)?,
+            errors: read_u64(&mut self.stream)?,
+            total_ios: read_u64(&mut self.stream)?,
+            retries: read_u64(&mut self.stream)?,
+            failed_ios: read_u64(&mut self.stream)?,
+            crc_failures: read_u64(&mut self.stream)?,
+            degraded: read_u64(&mut self.stream)?,
+            batch_shared_ios: read_u64(&mut self.stream)?,
+            lut_reused: read_u64(&mut self.stream)?,
+            top_offenders: Vec::new(),
+        };
+        let n = read_u32(&mut self.stream)? as usize;
+        anyhow::ensure!(n <= STAT_TOP_N_CAP, "absurd offender count {n}");
+        for _ in 0..n {
+            let page = read_u32(&mut self.stream)?;
+            let retries = read_u64(&mut self.stream)?;
+            let crc_failures = read_u64(&mut self.stream)?;
+            let failed_ios = read_u64(&mut self.stream)?;
+            snap.top_offenders.push((page, PageFaultTotals { retries, crc_failures, failed_ios }));
+        }
+        Ok(snap)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dataset::{Dtype, VectorSet};
+    use crate::metrics::PageFaultRecord;
+    use std::sync::atomic::AtomicUsize;
 
     /// Brute-force system for protocol tests.
     struct Brute {
@@ -364,15 +746,56 @@ mod tests {
         }
     }
 
-    fn spawn_server() -> (ServerHandle, usize) {
+    /// Brute wrapper that records the largest batch `search_batch` saw.
+    struct Batchy {
+        inner: Brute,
+        max_batch: AtomicUsize,
+    }
+    impl AnnSystem for Batchy {
+        fn name(&self) -> String {
+            "batchy".into()
+        }
+        fn search_one(
+            &self,
+            q: &[f32],
+            k: usize,
+            l: usize,
+            stats: &mut QueryStats,
+        ) -> Result<Vec<u32>> {
+            self.inner.search_one(q, k, l, stats)
+        }
+        fn search_batch(
+            &self,
+            queries: &[&[f32]],
+            k: usize,
+            l: usize,
+            stats: &mut [QueryStats],
+        ) -> Vec<Result<Vec<u32>>> {
+            self.max_batch.fetch_max(queries.len(), Ordering::Relaxed);
+            queries
+                .iter()
+                .zip(stats.iter_mut())
+                .map(|(q, st)| self.search_one(q, k, l, st))
+                .collect()
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+    }
+
+    fn spawn_server_with(cfg: BatchConfig) -> (ServerHandle, usize) {
         let dim = 4;
         let mut base = VectorSet::new(Dtype::F32, dim, 20);
         for i in 0..20 {
             base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
         }
         let sys: Arc<dyn AnnSystem> = Arc::new(Brute { base });
-        let server = QueryServer::bind("127.0.0.1:0", sys, dim).unwrap();
+        let server = QueryServer::bind("127.0.0.1:0", sys, dim).unwrap().with_batching(cfg);
         (server.spawn().unwrap(), dim)
+    }
+
+    fn spawn_server() -> (ServerHandle, usize) {
+        spawn_server_with(BatchConfig::default())
     }
 
     #[test]
@@ -388,6 +811,96 @@ mod tests {
         assert_eq!(resp2.ids, vec![0]);
         assert_eq!(handle.stats.queries.load(Ordering::Relaxed), 2);
         handle.stop();
+    }
+
+    #[test]
+    fn batch_max_one_uses_inline_path_and_matches() {
+        // The compatibility mode: no executors, connection threads search
+        // inline — answers and stats identical to the batched default.
+        let cfg = BatchConfig { batch_max: 1, ..BatchConfig::default() };
+        let (handle, _) = spawn_server_with(cfg);
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        let resp = client.query(&[5.2, 0.0, 0.0, 0.0], 3, 10).unwrap();
+        assert_eq!(resp.ids, vec![5, 6, 4]);
+        assert_eq!(resp.ios, 3);
+        assert_eq!(handle.stats.queries.load(Ordering::Relaxed), 1);
+        assert_eq!(handle.stats.retries.load(Ordering::Relaxed), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn batched_executor_coalesces_concurrent_queries() {
+        // One executor, batch_max 3, generous gather window: three
+        // concurrent clients must land in a single search_batch call.
+        let dim = 4;
+        let mut base = VectorSet::new(Dtype::F32, dim, 20);
+        for i in 0..20 {
+            base.set_from_f32(i, &[i as f32, 0.0, 0.0, 0.0]);
+        }
+        let sys = Arc::new(Batchy { inner: Brute { base }, max_batch: AtomicUsize::new(0) });
+        let dynsys: Arc<dyn AnnSystem> = sys.clone();
+        let server = QueryServer::bind("127.0.0.1:0", dynsys, dim).unwrap().with_batching(
+            BatchConfig { batch_max: 3, gather_window: Duration::from_secs(2), executors: 1 },
+        );
+        let handle = server.spawn().unwrap();
+        let addr = handle.addr;
+        std::thread::scope(|s| {
+            for t in 0u32..3 {
+                s.spawn(move || {
+                    let mut c = QueryClient::connect(&addr).unwrap();
+                    let x = (t * 5) as f32;
+                    let resp = c.query(&[x, 0.0, 0.0, 0.0], 1, 5).unwrap();
+                    assert_eq!(resp.ids, vec![t * 5]);
+                });
+            }
+        });
+        assert_eq!(handle.stats.queries.load(Ordering::Relaxed), 3);
+        assert_eq!(sys.max_batch.load(Ordering::Relaxed), 3);
+        handle.stop();
+    }
+
+    #[test]
+    fn stat_frame_reports_server_counters() {
+        let (handle, _) = spawn_server();
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        client.query(&[5.2, 0.0, 0.0, 0.0], 3, 10).unwrap();
+        client.query(&[1.0, 0.0, 0.0, 0.0], 1, 10).unwrap();
+        let snap = client.stats(8).unwrap();
+        assert_eq!(snap.queries, 2);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.total_ios, 6);
+        assert_eq!(snap.retries, 2);
+        assert!(snap.top_offenders.is_empty());
+        // Queries keep working on the same connection after a STAT frame.
+        let resp = client.query(&[0.0, 0.0, 0.0, 0.0], 1, 10).unwrap();
+        assert_eq!(resp.ids, vec![0]);
+        handle.stop();
+    }
+
+    #[test]
+    fn per_page_fault_aggregation_and_top_offenders() {
+        let stats = ServerStats::default();
+        let mut q = QueryStats::default();
+        q.page_faults.push(PageFaultRecord { page: 3, retries: 2, crc_failures: 1, failed: false });
+        q.page_faults.push(PageFaultRecord { page: 9, retries: 0, crc_failures: 0, failed: true });
+        stats.note_query(true, &q);
+        let mut q2 = QueryStats::default();
+        q2.page_faults.push(PageFaultRecord {
+            page: 3,
+            retries: 1,
+            crc_failures: 0,
+            failed: false,
+        });
+        stats.note_query(false, &q2);
+        let top = stats.top_offenders(10);
+        // Page 9 failed permanently → ranks first; page 3 aggregated
+        // 3 retries + 1 CRC failure across two queries.
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0], (9, PageFaultTotals { retries: 0, crc_failures: 0, failed_ios: 1 }));
+        assert_eq!(top[1], (3, PageFaultTotals { retries: 3, crc_failures: 1, failed_ios: 0 }));
+        assert_eq!(stats.top_offenders(1).len(), 1);
+        assert_eq!(stats.queries.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.errors.load(Ordering::Relaxed), 1);
     }
 
     #[test]

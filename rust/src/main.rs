@@ -7,6 +7,8 @@
 //! pageann search --index <dir> [--kind sift] [--n 60000] [--k 10] [--l 64]
 //!                [--queries 100] [--sim-ssd] [--io uring|aio|pread]
 //! pageann experiment <id>|all [--scale xs|s|m] [--workdir target/experiments]
+//! pageann serve  --index <dir> [--addr 127.0.0.1:7700] [--batch-max 8]
+//!                [--gather-us 200] [--sim-ssd] [--io uring|aio|pread]
 //! pageann info
 //! ```
 //!
@@ -14,7 +16,7 @@
 
 use pageann::bench::{list_experiments, run_experiment, ExperimentCtx, Scale};
 use pageann::dataset::{DatasetKind, SynthSpec, Workload};
-use pageann::engine::{run_workload, OpenOptions, PageAnnIndex};
+use pageann::engine::{run_workload, AnnSystem, BatchConfig, OpenOptions, PageAnnIndex, QueryServer};
 use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
 use pageann::Result;
 use std::path::PathBuf;
@@ -91,9 +93,10 @@ fn run() -> Result<()> {
         Some("build") => cmd_build(&args),
         Some("search") => cmd_search(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: pageann <build|search|experiment|info> [flags]");
+            eprintln!("usage: pageann <build|search|experiment|serve|info> [flags]");
             eprintln!("experiments: {}", list_experiments().join(", "));
             Ok(())
         }
@@ -183,6 +186,40 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("index", "target/index"));
+    let addr = args.get("addr", "127.0.0.1:7700");
+    let opts = OpenOptions {
+        sim_ssd: args.has("sim-ssd").then(Default::default),
+        io_backend: args.flags.get("io").cloned(),
+        ..Default::default()
+    };
+    let idx = PageAnnIndex::open(&dir, opts)?;
+    eprintln!("io backend: {}", idx.io_backend());
+    let dim = idx.meta.dim;
+    // Admission-queue knobs: flags beat PAGEANN_BATCH beats the default.
+    let mut cfg = BatchConfig::default();
+    if args.has("batch-max") {
+        cfg.batch_max = args.get_usize("batch-max", cfg.batch_max)?.max(1);
+    }
+    if args.has("gather-us") {
+        cfg.gather_window =
+            std::time::Duration::from_micros(args.get_usize("gather-us", 200)? as u64);
+    }
+    let sys: std::sync::Arc<dyn AnnSystem> = std::sync::Arc::new(idx);
+    let server = QueryServer::bind(&addr, sys, dim)?.with_batching(cfg);
+    let local = server.local_addr()?;
+    println!(
+        "serving on {local} (batch_max={}, gather_window={:?})",
+        cfg.batch_max, cfg.gather_window
+    );
+    // Keep the handle alive (dropping it stops the server) and park.
+    let _handle = server.spawn()?;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_info() -> Result<()> {

@@ -11,6 +11,21 @@ pub use histogram::LatencyHistogram;
 
 use std::time::Duration;
 
+/// One page's fault tally within a single query: recorded by the search
+/// read path whenever a page needed retries, failed checksum verification,
+/// or stayed unreadable after the retry budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageFaultRecord {
+    /// Page id within the index file.
+    pub page: u32,
+    /// Successful-after-retry attempts charged to this page.
+    pub retries: u32,
+    /// CRC32C tail verification failures observed on this page.
+    pub crc_failures: u32,
+    /// True when the page stayed unreadable and was skipped (degraded).
+    pub failed: bool,
+}
+
 /// Per-query statistics, filled in by the searcher.
 #[derive(Debug, Clone, Default)]
 pub struct QueryStats {
@@ -51,6 +66,21 @@ pub struct QueryStats {
     /// True when at least one page was permanently skipped — results may
     /// be missing that page's candidates.
     pub degraded: bool,
+    /// Pages this query wanted in a batched round that were physically read
+    /// once for another query in the same batch (the cross-query I/O
+    /// coalescing of `search_batch`). Shared pages still count in `ios` for
+    /// *every* wanting query — `ios` keeps its sequential-parity meaning of
+    /// "algorithmic reads" — so physical reads = Σ ios − Σ batch_shared_ios.
+    pub batch_shared_ios: u64,
+    /// 1 when this query's ADC LUT aliased a near-duplicate batchmate's
+    /// table instead of being built (see `pq::LutArena`); 0 otherwise.
+    /// Summed across queries by `merge`.
+    pub lut_reused: u64,
+    /// Per-page fault records for this query: one entry per page that
+    /// needed retries, failed its CRC, or stayed unreadable. Empty on the
+    /// happy path (no allocation). The server aggregates these per page id
+    /// into its top-offenders table (`ServerStats`).
+    pub page_faults: Vec<PageFaultRecord>,
     /// Wall time inside I/O waits.
     pub io_time: Duration,
     /// Wall time in distance computation / heap maintenance.
@@ -74,6 +104,9 @@ impl QueryStats {
         self.failed_ios += other.failed_ios;
         self.crc_failures += other.crc_failures;
         self.degraded |= other.degraded;
+        self.batch_shared_ios += other.batch_shared_ios;
+        self.lut_reused += other.lut_reused;
+        self.page_faults.extend_from_slice(&other.page_faults);
         self.io_time += other.io_time;
         self.compute_time += other.compute_time;
         self.total_time += other.total_time;
@@ -173,6 +206,20 @@ mod tests {
         // degraded is sticky: merging a clean query doesn't clear it.
         a.merge(&QueryStats::default());
         assert!(a.degraded);
+    }
+
+    #[test]
+    fn merge_batch_and_page_fault_accounting() {
+        let mut a = QueryStats { batch_shared_ios: 1, lut_reused: 1, ..Default::default() };
+        let mut b = QueryStats { batch_shared_ios: 4, ..Default::default() };
+        b.page_faults.push(PageFaultRecord { page: 7, retries: 2, crc_failures: 1, failed: false });
+        a.merge(&b);
+        assert_eq!(a.batch_shared_ios, 5);
+        assert_eq!(a.lut_reused, 1);
+        assert_eq!(
+            a.page_faults,
+            vec![PageFaultRecord { page: 7, retries: 2, crc_failures: 1, failed: false }]
+        );
     }
 
     #[test]

@@ -165,36 +165,113 @@ impl PqCodebook {
         lut
     }
 
-    /// Build the ADC table into a caller-owned [`AdcLut`], reusing its
-    /// allocation. This is the hot-path entry: the search scratch owns one
-    /// `AdcLut` per thread, so steady-state queries allocate nothing here.
-    pub fn build_lut_into(&self, query: &[f32], lut: &mut AdcLut) {
-        assert_eq!(query.len(), self.dim);
+    /// Size an [`AdcLut`]'s header and table for this codebook without
+    /// filling any slot. The fill pass writes every slot, so only the
+    /// length matters — this skips the zeroing memset on the steady-state
+    /// (same-size) path.
+    fn prepare_lut(&self, lut: &mut AdcLut) {
         lut.m = self.m;
         lut.k = self.k;
         lut.code_bytes = self.code_bytes();
-        // The fill loop writes every slot, so only the length matters —
-        // avoid the zeroing memset on the steady-state (same-size) path.
         if lut.table.len() != self.m * self.k {
             lut.table.resize(self.m * self.k, 0.0);
         }
+    }
+
+    /// Fill one subspace row of `lut` (the k distances from the query's
+    /// `sub` slice to that subspace's centroid block). Both the single- and
+    /// the batched build go through here, so their numerics are identical
+    /// slot for slot.
+    #[inline]
+    fn fill_lut_row(&self, query: &[f32], sub: usize, lut: &mut AdcLut) {
         let l2 = crate::distance::simd::kernels().l2sq_f32;
-        for sub in 0..self.m {
-            let qsub = &query[sub * self.dsub..(sub + 1) * self.dsub];
-            let row = &mut lut.table[sub * self.k..(sub + 1) * self.k];
-            let centroids = &self.centroids[sub * self.k * self.dsub..(sub + 1) * self.k * self.dsub];
-            for (c, slot) in row.iter_mut().enumerate() {
-                *slot = l2(qsub, &centroids[c * self.dsub..(c + 1) * self.dsub]);
-            }
+        let qsub = &query[sub * self.dsub..(sub + 1) * self.dsub];
+        let row = &mut lut.table[sub * self.k..(sub + 1) * self.k];
+        let centroids = &self.centroids[sub * self.k * self.dsub..(sub + 1) * self.k * self.dsub];
+        for (c, slot) in row.iter_mut().enumerate() {
+            *slot = l2(qsub, &centroids[c * self.dsub..(c + 1) * self.dsub]);
         }
+    }
+
+    /// Finish a filled table: quantize the PQ4 fast-scan companion, or
+    /// fully reset it so a reused scratch LUT never exposes a previous PQ4
+    /// query's dequant constants.
+    fn finish_lut(&self, lut: &mut AdcLut) {
         if self.packed() {
             lut.quantize_q4();
         } else {
-            // Fully reset the fast-scan companion so a reused scratch LUT
-            // never exposes a previous PQ4 query's dequant constants.
             lut.q4.clear();
             lut.q4_scale = 1.0;
             lut.q4_bias = 0.0;
+        }
+    }
+
+    /// Build the ADC table into a caller-owned [`AdcLut`], reusing its
+    /// allocation. This is the hot-path entry: the search scratch owns one
+    /// `AdcLut` per thread, so steady-state queries allocate nothing here.
+    /// It is the batch build ([`Self::build_luts_into`]) at batch = 1 —
+    /// same prepare/fill-row/finish steps, so single-query callers see
+    /// bit-identical tables.
+    pub fn build_lut_into(&self, query: &[f32], lut: &mut AdcLut) {
+        assert_eq!(query.len(), self.dim);
+        self.prepare_lut(lut);
+        for sub in 0..self.m {
+            self.fill_lut_row(query, sub, lut);
+        }
+        self.finish_lut(lut);
+    }
+
+    /// Build the ADC tables for a whole query batch in **one pass over the
+    /// codebook**: the fill loop runs subspace-major, so each subspace's
+    /// centroid block is loaded once and stays hot in cache while every
+    /// query's row is computed — instead of `batch` cold sweeps over the
+    /// full `m × k × dsub` centroid array.
+    ///
+    /// Near-duplicate queries (see [`LutArena::set_share`]) alias a
+    /// previously built LUT instead of rebuilding: `arena.lut(i)` maps
+    /// query `i` to its table either way, and `arena.reused(i)` reports
+    /// whether it was aliased. With the default exact share policy an
+    /// aliased table is bit-identical to the rebuild it replaced, so
+    /// sharing never changes results.
+    pub fn build_luts_into(&self, queries: &[&[f32]], arena: &mut LutArena) {
+        arena.assign.clear();
+        arena.reused.clear();
+        arena.owners.clear();
+        for (i, q) in queries.iter().enumerate() {
+            assert_eq!(q.len(), self.dim, "query {i} dim");
+            let alias = if arena.share {
+                arena.owners.iter().position(|&o| arena.matches(queries[o], q))
+            } else {
+                None
+            };
+            match alias {
+                Some(li) => {
+                    arena.assign.push(li);
+                    arena.reused.push(true);
+                }
+                None => {
+                    arena.assign.push(arena.owners.len());
+                    arena.owners.push(i);
+                    arena.reused.push(false);
+                }
+            }
+        }
+        let n_uniq = arena.owners.len();
+        while arena.luts.len() < n_uniq {
+            arena.luts.push(AdcLut::empty());
+        }
+        for li in 0..n_uniq {
+            self.prepare_lut(&mut arena.luts[li]);
+        }
+        // The one pass over the codebook: subspace-major, all queries per
+        // centroid block.
+        for sub in 0..self.m {
+            for li in 0..n_uniq {
+                self.fill_lut_row(queries[arena.owners[li]], sub, &mut arena.luts[li]);
+            }
+        }
+        for li in 0..n_uniq {
+            self.finish_lut(&mut arena.luts[li]);
         }
     }
 
@@ -445,6 +522,117 @@ impl AdcLut {
     }
 }
 
+/// A pool of per-query ADC tables for one query batch, filled by
+/// [`PqCodebook::build_luts_into`]. Allocations (the tables themselves and
+/// the assignment vectors) are reused across batches, so steady-state
+/// batch queries allocate nothing here.
+///
+/// # LUT sharing
+///
+/// Queries that near-duplicate an earlier query in the same batch can
+/// *alias* that query's table instead of rebuilding it. The screen is a
+/// normalized-dot-product threshold (cosine similarity over f64
+/// accumulators). Two policies:
+///
+/// * `threshold >= 1.0` (default): only **bit-identical** queries share a
+///   table. The dot screen is skipped for an exact `memcmp`-style bit
+///   compare, so an aliased LUT is guaranteed identical to the rebuild it
+///   replaced and sharing can never change any result.
+/// * `threshold < 1.0`: queries whose cosine similarity and squared-norm
+///   ratio both clear the threshold share the first query's table. This is
+///   a lossy, explicitly opt-in approximation for duplicate-heavy serving
+///   workloads (resent queries with jittered floats).
+pub struct LutArena {
+    /// Built tables, one per *unique* query (index space of `assign`).
+    luts: Vec<AdcLut>,
+    /// Query index -> index into `luts`.
+    assign: Vec<usize>,
+    /// Whether query `i` aliased a previously built table.
+    reused: Vec<bool>,
+    /// For each built lut, the query index that owns (built) it.
+    owners: Vec<usize>,
+    share: bool,
+    threshold: f32,
+}
+
+impl Default for LutArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LutArena {
+    pub fn new() -> Self {
+        Self {
+            luts: Vec::new(),
+            assign: Vec::new(),
+            reused: Vec::new(),
+            owners: Vec::new(),
+            share: true,
+            threshold: 1.0,
+        }
+    }
+
+    /// Enable/disable near-duplicate LUT sharing (default on), and set the
+    /// normalized-dot threshold (default 1.0 = exact matches only).
+    pub fn set_share(&mut self, share: bool, threshold: f32) {
+        self.share = share;
+        self.threshold = threshold;
+    }
+
+    /// Number of queries in the last batch.
+    pub fn len(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assign.is_empty()
+    }
+
+    /// Number of tables actually built for the last batch (≤ `len`).
+    pub fn built(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// The ADC table assigned to query `qi` of the last batch.
+    #[inline]
+    pub fn lut(&self, qi: usize) -> &AdcLut {
+        &self.luts[self.assign[qi]]
+    }
+
+    /// Whether query `qi` aliased an earlier query's table.
+    #[inline]
+    pub fn reused(&self, qi: usize) -> bool {
+        self.reused[qi]
+    }
+
+    /// The near-duplicate check: exact bit equality when `threshold >=
+    /// 1.0`, else a cosine + norm-ratio screen over f64 accumulators.
+    fn matches(&self, a: &[f32], b: &[f32]) -> bool {
+        if a.len() != b.len() {
+            return false;
+        }
+        if self.threshold >= 1.0 {
+            // Bitwise compare: NaN-safe and distinguishes -0.0 from 0.0,
+            // so an aliased table is exactly what a rebuild would produce.
+            return a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+        }
+        let (mut dot, mut na2, mut nb2) = (0f64, 0f64, 0f64);
+        for (&x, &y) in a.iter().zip(b) {
+            dot += x as f64 * y as f64;
+            na2 += x as f64 * x as f64;
+            nb2 += y as f64 * y as f64;
+        }
+        let t2 = (self.threshold as f64) * (self.threshold as f64);
+        if na2 == 0.0 || nb2 == 0.0 {
+            return na2 == nb2;
+        }
+        // Cosine screen + norm-ratio guard (colinear-but-scaled queries
+        // have cosine 1 but different tables).
+        dot > 0.0 && dot * dot >= t2 * na2 * nb2 && na2.min(nb2) >= t2 * na2.max(nb2)
+    }
+}
+
 /// Encoder: assigns each subvector to its nearest centroid.
 pub struct PqEncoder<'a> {
     cb: &'a PqCodebook,
@@ -664,6 +852,90 @@ mod tests {
         assert!(back.packed());
         assert_eq!(back.code_bytes(), cb.code_bytes());
         assert_eq!(back.centroids, cb.centroids);
+    }
+
+    #[test]
+    fn batch_lut_build_matches_single_build_bitwise() {
+        // The subspace-major batch pass must produce the same table, slot
+        // for slot, as the per-query build — for both PQ8 and PQ4.
+        let data = small_set();
+        for k in [256usize, 16] {
+            let cb = PqCodebook::train_with_k(&data, 4, k, 8, 9);
+            let queries: Vec<Vec<f32>> = (0..5).map(|i| data.get_f32(i * 7)).collect();
+            let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let mut arena = LutArena::new();
+            cb.build_luts_into(&refs, &mut arena);
+            assert_eq!(arena.len(), 5);
+            assert_eq!(arena.built(), 5);
+            for (i, q) in refs.iter().enumerate() {
+                assert!(!arena.reused(i));
+                let single = cb.build_lut(q);
+                assert_eq!(
+                    arena.lut(i).table().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    single.table().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "k={k} query {i}"
+                );
+                assert_eq!(arena.lut(i).q4_table(), single.q4_table());
+                assert_eq!(arena.lut(i).code_bytes(), single.code_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_queries_alias_one_lut() {
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 8, 9);
+        let a = data.get_f32(0);
+        let b = data.get_f32(1);
+        let refs: Vec<&[f32]> = vec![&a, &b, &a, &a, &b];
+        let mut arena = LutArena::new();
+        cb.build_luts_into(&refs, &mut arena);
+        assert_eq!(arena.len(), 5);
+        assert_eq!(arena.built(), 2, "only two unique queries");
+        assert_eq!(
+            (0..5).map(|i| arena.reused(i)).collect::<Vec<_>>(),
+            vec![false, false, true, true, true]
+        );
+        // Aliased tables are the same table.
+        assert!(std::ptr::eq(arena.lut(0), arena.lut(2)));
+        assert_eq!(arena.lut(1).table(), cb.build_lut(&b).table());
+        // Sharing off: every query builds.
+        arena.set_share(false, 1.0);
+        cb.build_luts_into(&refs, &mut arena);
+        assert_eq!(arena.built(), 5);
+        assert!((0..5).all(|i| !arena.reused(i)));
+    }
+
+    #[test]
+    fn near_duplicate_threshold_aliases_jittered_query_only_when_lossy() {
+        let data = small_set();
+        let cb = PqCodebook::train(&data, 4, 8, 9);
+        let a = data.get_f32(0);
+        let mut jitter = a.clone();
+        for v in jitter.iter_mut() {
+            *v *= 1.0 + 1e-6;
+        }
+        let refs: Vec<&[f32]> = vec![&a, &jitter];
+        // Exact policy: a 1e-6 jitter is a different query.
+        let mut arena = LutArena::new();
+        cb.build_luts_into(&refs, &mut arena);
+        assert_eq!(arena.built(), 2);
+        // Lossy opt-in policy: it aliases.
+        arena.set_share(true, 0.999);
+        cb.build_luts_into(&refs, &mut arena);
+        assert_eq!(arena.built(), 1);
+        assert!(arena.reused(1));
+        // But a genuinely different query never does (negated: cosine -1).
+        let c: Vec<f32> = a.iter().map(|v| -v).collect();
+        let refs2: Vec<&[f32]> = vec![&a, &c];
+        cb.build_luts_into(&refs2, &mut arena);
+        assert_eq!(arena.built(), 2);
+        // Scaled-colinear queries have cosine 1 but different tables: the
+        // norm-ratio guard must keep them separate.
+        let scaled: Vec<f32> = a.iter().map(|v| v * 2.0).collect();
+        let refs3: Vec<&[f32]> = vec![&a, &scaled];
+        cb.build_luts_into(&refs3, &mut arena);
+        assert_eq!(arena.built(), 2, "scaled query must not alias");
     }
 
     #[test]

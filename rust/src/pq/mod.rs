@@ -14,7 +14,8 @@ mod codebook;
 mod kmeans;
 
 pub use codebook::{
-    pack_nibbles, storage_bytes, unpack_nibbles, AdcLut, PqCode, PqCodebook, PqEncoder, PQ4_MAX_K,
+    pack_nibbles, storage_bytes, unpack_nibbles, AdcLut, LutArena, PqCode, PqCodebook, PqEncoder,
+    PQ4_MAX_K,
 };
 pub use kmeans::kmeans;
 

@@ -46,8 +46,47 @@
 //! [`QueryStats::retries`], [`QueryStats::crc_failures`],
 //! [`QueryStats::failed_ios`] and [`QueryStats::degraded`].
 //!
+//! # Batched execution ([`search_batch`])
+//!
+//! A batch of queries runs all hop loops in **lockstep**: every round,
+//! each live query does its normal page selection, the per-query frontier
+//! reads are merged into one deduplicated `begin_read` (a page wanted by
+//! several queries is read **once** and scored once per wanting query
+//! through that query's own LUT), and each query's topology phase and
+//! exact scans then run against the shared bytes. The per-query ADC LUTs
+//! are built together in one subspace-major pass over the codebook
+//! ([`crate::pq::PqCodebook::build_luts_into`]), with bit-identical
+//! near-duplicate queries aliasing a batchmate's table
+//! ([`crate::pq::LutArena`]).
+//!
+//! **Identity argument** — why batch results are bit-identical to running
+//! [`search_pages`] per query:
+//! * Each query's cursor (candidate pool, visited marks, reservoir) is
+//!   private and evolves through exactly the sequential state machine; a
+//!   selection pass only ends early when `pop_closest_unvisited` runs dry,
+//!   so "empty selection ⇒ query done" matches the sequential loop's exit.
+//! * Sharing only changes *where bytes come from*, never which bytes: a
+//!   deduplicated page read returns the same page image every wanting
+//!   query would have read itself, and each query scores it in its own
+//!   selection order (disk pages first, then cache hits — the sequential
+//!   gather order).
+//! * Aliased LUTs are bit-identical to the rebuild they replace (the
+//!   default share policy only aliases bit-identical queries), and the
+//!   result reservoir's retained set is order-independent, so moving the
+//!   exact scans out of the deferred pipeline changes timing only.
+//!
+//! Speculation is sequential-only; it also never changes results, so the
+//! parity holds against the speculating one-query path. Stats keep their
+//! sequential meaning per query (`ios` counts a shared page for every
+//! wanting query); [`QueryStats::batch_shared_ios`] counts the duplicate
+//! wants that were *not* physically re-read, so a round's physical reads
+//! are `Σ ios − Σ batch_shared_ios`, and [`QueryStats::lut_reused`] marks
+//! queries whose LUT was aliased.
+//!
 //! [`spec_wasted`]: crate::metrics::QueryStats::spec_wasted
 //! [`QueryStats::spec_hits`]: crate::metrics::QueryStats::spec_hits
+//! [`QueryStats::batch_shared_ios`]: crate::metrics::QueryStats::batch_shared_ios
+//! [`QueryStats::lut_reused`]: crate::metrics::QueryStats::lut_reused
 
 mod candidates;
 
@@ -58,8 +97,8 @@ use crate::dataset::Dtype;
 use crate::distance::BatchScanner;
 use crate::io::{PageStore, PendingRead};
 use crate::layout::{IndexMeta, PageRef};
-use crate::metrics::QueryStats;
-use crate::pq::{AdcLut, PqCodebook};
+use crate::metrics::{PageFaultRecord, QueryStats};
+use crate::pq::{AdcLut, LutArena, PqCodebook};
 use crate::Result;
 use std::time::{Duration, Instant};
 
@@ -86,6 +125,13 @@ pub struct SearchParams {
     /// Bounded per-page re-reads after a transient I/O error or checksum
     /// mismatch before the page is skipped and the traversal degrades.
     pub max_io_retries: usize,
+    /// Batch mode only: alias the ADC LUT of a near-duplicate batchmate
+    /// instead of rebuilding it (see [`crate::pq::LutArena`]).
+    pub lut_share: bool,
+    /// Near-duplicate threshold for `lut_share`. The default `1.0` shares
+    /// only bit-identical queries (sharing can never change results);
+    /// values `< 1.0` opt into lossy cosine-screened sharing.
+    pub lut_share_threshold: f32,
 }
 
 impl Default for SearchParams {
@@ -99,6 +145,8 @@ impl Default for SearchParams {
             pipeline: true,
             speculate: true,
             max_io_retries: 3,
+            lut_share: true,
+            lut_share_threshold: 1.0,
         }
     }
 }
@@ -259,6 +307,21 @@ fn reread_with_retries(
         }
     }
     false
+}
+
+/// Append a [`PageFaultRecord`] for `pid` when its recovery left any trace
+/// — retries attempted, CRC mismatches observed, or a permanent failure —
+/// given the pre-recovery counter snapshot `(r0, c0)`. The happy path
+/// (clean first read) records nothing and allocates nothing.
+fn record_page_fault(stats: &mut QueryStats, pid: u32, r0: u64, c0: u64, good: bool) {
+    if stats.retries > r0 || stats.crc_failures > c0 || !good {
+        stats.page_faults.push(PageFaultRecord {
+            page: pid,
+            retries: (stats.retries - r0) as u32,
+            crc_failures: (stats.crc_failures - c0) as u32,
+            failed: !good,
+        });
+    }
 }
 
 /// Run Algorithm 2. `entries` are entry-point vector ids (new-id space)
@@ -505,6 +568,7 @@ fn run_hops<'c>(
                 // from the pool behind, which a checksum cannot tell from
                 // the real thing (the CRC doesn't bind page identity), so
                 // nothing from a failed batch is ever consumed directly.
+                let (r0, c0) = (stats.retries, stats.crc_failures);
                 let mut good = spec_ok && {
                     let ok = page_bytes_ok(meta, &buf);
                     if !ok {
@@ -518,6 +582,7 @@ fn run_hops<'c>(
                     good =
                         reread_with_retries(ctx, pid, &mut buf, params.max_io_retries, stats);
                 }
+                record_page_fault(stats, pid, r0, c0, good);
                 stats.ios += 1;
                 stats.bytes_read += meta.page_size as u64;
                 if good {
@@ -550,6 +615,7 @@ fn run_hops<'c>(
                 // read can leave a stale-but-valid pool page behind that a
                 // checksum cannot tell from the real thing — so every page
                 // of a failed batch is re-read rather than salvaged.
+                let (r0, c0) = (stats.retries, stats.crc_failures);
                 let mut good = batch_ok && {
                     let ok = page_bytes_ok(meta, &disk_bufs[i]);
                     if !ok {
@@ -566,6 +632,7 @@ fn run_hops<'c>(
                         stats,
                     );
                 }
+                record_page_fault(stats, pid, r0, c0, good);
                 if good {
                     // Stable compaction: kept pages preserve selection
                     // order, so the topology phase's in-order matching
@@ -730,6 +797,483 @@ fn run_hops<'c>(
     // Drain the tail of the pipeline.
     scan_deferred!()?;
     Ok(())
+}
+
+/// Per-query traversal state inside a batched search: exactly the mutable
+/// state [`search_pages`] keeps per query, minus the buffers that are
+/// shared across the batch (the page pool, gather scratch and LUTs, which
+/// live in [`BatchScratch`]).
+struct QueryCursor {
+    candidates: CandidateSet,
+    results: TopReservoir,
+    visited_vec: Vec<u32>,
+    visited_page: Vec<u32>,
+    epoch: u32,
+    /// This round's page selection, in selection order — the order the
+    /// topology phase scores disk pages in.
+    page_ids: Vec<u32>,
+    /// Candidate pool exhausted — this query takes no further rounds.
+    done: bool,
+    /// A per-query failure (corrupt page, missing code). The query stops;
+    /// its batchmates keep running.
+    error: Option<anyhow::Error>,
+}
+
+impl QueryCursor {
+    fn new() -> Self {
+        Self {
+            candidates: CandidateSet::new(64),
+            results: TopReservoir::new(64),
+            visited_vec: Vec::new(),
+            visited_page: Vec::new(),
+            epoch: 0,
+            page_ids: Vec::new(),
+            done: false,
+            error: None,
+        }
+    }
+
+    fn reset(&mut self, n_slots: usize, n_pages: usize, l: usize, k: usize) {
+        if self.visited_vec.len() < n_slots {
+            self.visited_vec.resize(n_slots, 0);
+        }
+        if self.visited_page.len() < n_pages {
+            self.visited_page.resize(n_pages, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Epoch wrapped: hard-clear.
+            self.visited_vec.fill(0);
+            self.visited_page.fill(0);
+            self.epoch = 1;
+        }
+        self.candidates.reset(l);
+        self.results.reset(l.max(k));
+        self.page_ids.clear();
+        self.done = false;
+        self.error = None;
+    }
+}
+
+/// Per-batch reusable search state: the LUT arena, the shared page-buffer
+/// pool and the gather/scan scratch, plus one [`QueryCursor`] per query.
+/// Like [`SearchScratch`], allocations are sized on first use and reused —
+/// steady-state batches allocate nothing.
+pub struct BatchScratch {
+    arena: LutArena,
+    cursors: Vec<QueryCursor>,
+    /// Shared pool of page-sized buffers (one copy of each deduplicated
+    /// round read, not one per wanting query).
+    page_bufs: Vec<Vec<u8>>,
+    dist_buf: Vec<f32>,
+    nbr_ids: Vec<u32>,
+    nbr_codes: Vec<u8>,
+    nbr_dists: Vec<f32>,
+    /// This round's deduplicated disk page ids, in first-wanting order.
+    round_ids: Vec<u32>,
+    /// For each `round_ids` entry, the query that first wanted it — the
+    /// query charged for the physical recovery work (CRC checks, retries).
+    round_owner: Vec<usize>,
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        Self {
+            arena: LutArena::new(),
+            cursors: Vec::new(),
+            page_bufs: Vec::new(),
+            dist_buf: Vec::new(),
+            nbr_ids: Vec::new(),
+            nbr_codes: Vec::new(),
+            nbr_dists: Vec::new(),
+            round_ids: Vec::new(),
+            round_owner: Vec::new(),
+        }
+    }
+
+    /// Buffers currently parked in the shared page pool (leak diagnostics).
+    pub fn pooled_buffers(&self) -> usize {
+        self.page_bufs.len()
+    }
+}
+
+impl Default for BatchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One page's topology gather for one query of a batch: parse, count the
+/// consumed bytes (disk-sourced pages only, matching the sequential path),
+/// and append every unvisited neighbor's id + code to the gather scratch.
+#[allow(clippy::too_many_arguments)]
+fn gather_page(
+    ctx: &SearchContext<'_>,
+    bytes: &[u8],
+    is_disk: bool,
+    visited_vec: &[u32],
+    epoch: u32,
+    nbr_ids: &mut Vec<u32>,
+    nbr_codes: &mut Vec<u8>,
+    stats: &mut QueryStats,
+) -> Result<()> {
+    let meta = ctx.meta;
+    let code_w = meta.code_bytes();
+    let page = PageRef::parse(&bytes[..meta.page_size], meta.vec_stride(), code_w)?;
+    if is_disk {
+        stats.bytes_used += page.used_bytes() as u64;
+    }
+    for j in 0..page.n_nbrs() {
+        let nb = page.nbr_id(j);
+        if visited_vec[nb as usize] == epoch {
+            continue;
+        }
+        let code = page.nbr_code(j).or_else(|| ctx.memcodes.get(nb));
+        let Some(code) = code else {
+            // Build guarantees one copy exists; treat miss as a corrupt
+            // index rather than silently skipping.
+            anyhow::bail!("no compressed vector for neighbor {nb}");
+        };
+        debug_assert_eq!(code.len(), code_w);
+        nbr_ids.push(nb);
+        nbr_codes.extend_from_slice(code);
+    }
+    Ok(())
+}
+
+/// Run Algorithm 2 for a whole query batch in lockstep: all LUTs are built
+/// in one pass over the codebook (near-duplicates alias, see
+/// [`crate::pq::LutArena`]), and each round merges every query's frontier
+/// page reads into **one deduplicated `begin_read`** — a page wanted by
+/// two queries is read once and scored twice.
+///
+/// Per-query results are bit-identical to sequential [`search_pages`] (the
+/// module docs give the identity argument). Errors are per-query: a query
+/// that hits a corrupt page stops with its own `Err` while its batchmates
+/// keep running, so the return value is one `Result` per input query, in
+/// order.
+///
+/// Stats semantics: a shared page counts in `ios`/`bytes_read` for *every*
+/// wanting query (exactly what the sequential run would report), and in
+/// `batch_shared_ios` for every wanting query after the first — so the
+/// round's physical reads are `Σ ios − Σ batch_shared_ios`. Physical
+/// recovery work (CRC verification, retries) is charged to the page's
+/// first-wanting query.
+pub fn search_batch(
+    ctx: &SearchContext<'_>,
+    queries: &[&[f32]],
+    entries: &[&[u32]],
+    params: &SearchParams,
+    batch: &mut BatchScratch,
+    stats: &mut [QueryStats],
+) -> Vec<Result<Vec<(f32, u32)>>> {
+    let n = queries.len();
+    debug_assert_eq!(entries.len(), n);
+    debug_assert_eq!(stats.len(), n);
+    if n == 0 {
+        return Vec::new();
+    }
+    let meta = ctx.meta;
+    let capacity = meta.capacity as u32;
+    let dtype: Dtype = meta.dtype;
+    let stride = meta.vec_stride();
+    let code_w = meta.code_bytes();
+
+    let BatchScratch {
+        arena,
+        cursors,
+        page_bufs,
+        dist_buf,
+        nbr_ids,
+        nbr_codes,
+        nbr_dists,
+        round_ids,
+        round_owner,
+    } = batch;
+
+    // All LUTs in one subspace-major pass; the (approximate) per-query
+    // share of the build cost goes into each query's compute time.
+    arena.set_share(params.lut_share, params.lut_share_threshold);
+    let t_lut = Instant::now();
+    ctx.pq.build_luts_into(queries, arena);
+    let lut_dt = t_lut.elapsed() / n as u32;
+    for (qi, st) in stats.iter_mut().enumerate() {
+        st.compute_time += lut_dt;
+        if arena.reused(qi) {
+            st.lut_reused += 1;
+        }
+        debug_assert_eq!(arena.lut(qi).code_bytes(), code_w);
+    }
+
+    // Seed every cursor exactly like the sequential path (Alg. 2 lines
+    // 4-7): estimated distance from resident codes where available,
+    // visited only when the pool accepts.
+    while cursors.len() < n {
+        cursors.push(QueryCursor::new());
+    }
+    for qi in 0..n {
+        let cur = &mut cursors[qi];
+        cur.reset(meta.n_slots(), meta.n_pages, params.l, params.k);
+        let st = &mut stats[qi];
+        for &e in entries[qi].iter().take(params.max_entries.max(1)) {
+            if cur.visited_vec[e as usize] == cur.epoch {
+                continue;
+            }
+            let d = ctx.memcodes.get(e).map(|c| arena.lut(qi).distance(c)).unwrap_or(0.0);
+            if cur.candidates.push(d, e) {
+                cur.visited_vec[e as usize] = cur.epoch; // seeded (not yet expanded)
+            }
+            st.approx_dists += 1;
+        }
+    }
+
+    // Pages dropped this round after exhausting retries — cleared per
+    // round, capacity retained.
+    let mut failed: Vec<u32> = Vec::new();
+
+    loop {
+        // Selection: one pass per live query, identical to the sequential
+        // lines 10-18. A pass that finds no page proves the pool was
+        // exhausted (it only ends early when `pop_closest_unvisited` runs
+        // dry), so that query is done — see the module docs.
+        round_ids.clear();
+        round_owner.clear();
+        let mut any = false;
+        for qi in 0..n {
+            let cur = &mut cursors[qi];
+            cur.page_ids.clear();
+            if cur.done || cur.error.is_some() {
+                continue;
+            }
+            while cur.page_ids.len() < params.io_batch {
+                let Some(v) = cur.candidates.pop_closest_unvisited() else {
+                    break;
+                };
+                let p = v / capacity;
+                if cur.visited_page[p as usize] != cur.epoch {
+                    cur.visited_page[p as usize] = cur.epoch;
+                    cur.page_ids.push(p);
+                }
+            }
+            if cur.page_ids.is_empty() {
+                cur.done = true;
+                continue;
+            }
+            any = true;
+            let st = &mut stats[qi];
+            st.hops += 1;
+            for &p in cur.page_ids.iter() {
+                if ctx.cache.get(p).is_some() {
+                    st.cache_hits += 1;
+                    continue;
+                }
+                // Every wanting query counts the read (sequential-parity
+                // `ios`); non-first wanters also count the share.
+                st.ios += 1;
+                st.bytes_read += meta.page_size as u64;
+                if round_ids.contains(&p) {
+                    st.batch_shared_ios += 1;
+                } else {
+                    round_ids.push(p);
+                    round_owner.push(qi);
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+
+        // One deduplicated read for the whole round (line 19).
+        failed.clear();
+        let mut round_bufs: Vec<Vec<u8>> = Vec::new();
+        if !round_ids.is_empty() {
+            let rbufs = take_bufs(page_bufs, round_ids.len(), meta.page_size);
+            let t_io = Instant::now();
+            let pending = ctx.store.begin_read(&round_ids[..], rbufs);
+            let (bufs, read_result) = pending.wait();
+            let io_dt = t_io.elapsed();
+            round_bufs = bufs;
+            for qi in 0..n {
+                if cursors[qi].page_ids.iter().any(|p| round_ids.contains(p)) {
+                    stats[qi].io_time += io_dt;
+                }
+            }
+
+            // Recovery: the same per-page policy as the sequential path;
+            // physical work is charged to the page's first-wanting query.
+            let batch_ok = read_result.is_ok();
+            if !batch_ok || meta.page_crc {
+                for i in 0..round_ids.len() {
+                    let pid = round_ids[i];
+                    let st = &mut stats[round_owner[i]];
+                    let (r0, c0) = (st.retries, st.crc_failures);
+                    let mut good = batch_ok && {
+                        let ok = page_bytes_ok(meta, &round_bufs[i]);
+                        if !ok {
+                            st.crc_failures += 1;
+                        }
+                        ok
+                    };
+                    if !good {
+                        good = reread_with_retries(
+                            ctx,
+                            pid,
+                            &mut round_bufs[i],
+                            params.max_io_retries,
+                            st,
+                        );
+                    }
+                    record_page_fault(st, pid, r0, c0, good);
+                    if !good {
+                        failed.push(pid);
+                    }
+                }
+            }
+            if !failed.is_empty() {
+                // Every query that wanted a dropped page degrades; its
+                // batchmates are untouched.
+                for qi in 0..n {
+                    let nf =
+                        cursors[qi].page_ids.iter().filter(|p| failed.contains(p)).count() as u64;
+                    if nf > 0 {
+                        stats[qi].failed_ios += nf;
+                        stats[qi].degraded = true;
+                    }
+                }
+            }
+        }
+
+        // Per-query topology phase + exact scans, in batch order. Each
+        // query scores the one shared copy of a page's bytes through its
+        // own LUT and cursor — read once, scored per wanting query.
+        for qi in 0..n {
+            if cursors[qi].page_ids.is_empty() || cursors[qi].error.is_some() {
+                continue;
+            }
+            let t_cpu = Instant::now();
+            let page_ids = std::mem::take(&mut cursors[qi].page_ids);
+            let epoch = cursors[qi].epoch;
+            nbr_ids.clear();
+            nbr_codes.clear();
+            let mut qerr: Option<anyhow::Error> = None;
+            // Gather order: disk-sourced pages in selection order, then
+            // cache hits — the sequential order, so the candidate-pool
+            // evolution is bit-identical.
+            'gather: for pass in 0..2 {
+                for &p in page_ids.iter() {
+                    let from_disk = round_ids.iter().position(|&r| r == p);
+                    let bytes: &[u8] = match (pass, from_disk) {
+                        (0, Some(i)) => {
+                            if failed.contains(&p) {
+                                continue; // dropped this round (degraded)
+                            }
+                            round_bufs[i].as_slice()
+                        }
+                        (1, None) => match ctx.cache.get(p) {
+                            Some(b) => b,
+                            None => continue,
+                        },
+                        _ => continue,
+                    };
+                    if let Err(e) = gather_page(
+                        ctx,
+                        bytes,
+                        pass == 0,
+                        &cursors[qi].visited_vec,
+                        epoch,
+                        nbr_ids,
+                        nbr_codes,
+                        &mut stats[qi],
+                    ) {
+                        qerr = Some(e);
+                        break 'gather;
+                    }
+                }
+            }
+            if let Some(e) = qerr.take() {
+                stats[qi].compute_time += t_cpu.elapsed();
+                cursors[qi].error = Some(e);
+                cursors[qi].page_ids = page_ids;
+                continue;
+            }
+            let n_g = nbr_ids.len();
+            arena.lut(qi).score_into(&nbr_codes[..], n_g, nbr_dists);
+            stats[qi].approx_dists += n_g as u64;
+            {
+                let cur = &mut cursors[qi];
+                for i in 0..n_g {
+                    let nb = nbr_ids[i];
+                    // A neighbor can be gathered twice in one round; the
+                    // epoch re-check keeps the second copy out.
+                    if cur.visited_vec[nb as usize] == cur.epoch {
+                        continue;
+                    }
+                    if cur.candidates.push(nbr_dists[i], nb) {
+                        cur.visited_vec[nb as usize] = cur.epoch;
+                    }
+                }
+            }
+            // Exact scans (lines 21-23). The reservoir's retained set is
+            // order-independent, so scanning here instead of deferred into
+            // the next I/O wait changes timing only, never results.
+            for &p in page_ids.iter() {
+                let bytes: &[u8] = if let Some(i) = round_ids.iter().position(|&r| r == p) {
+                    if failed.contains(&p) {
+                        continue;
+                    }
+                    round_bufs[i].as_slice()
+                } else if let Some(b) = ctx.cache.get(p) {
+                    b
+                } else {
+                    continue;
+                };
+                let page = match PageRef::parse(&bytes[..meta.page_size], stride, code_w) {
+                    Ok(pg) => pg,
+                    Err(e) => {
+                        qerr = Some(e);
+                        break;
+                    }
+                };
+                let nv = page.n_vecs();
+                if dist_buf.len() < nv {
+                    dist_buf.resize(nv, 0.0);
+                }
+                ctx.scanner.scan(queries[qi], page.vectors_block(), dtype, nv, dist_buf);
+                stats[qi].exact_dists += nv as u64;
+                let cur = &mut cursors[qi];
+                for i in 0..nv {
+                    cur.results.push(dist_buf[i], page.orig_id(i));
+                }
+            }
+            stats[qi].compute_time += t_cpu.elapsed();
+            cursors[qi].error = qerr;
+            cursors[qi].page_ids = page_ids;
+        }
+
+        // The round's buffers — one per deduplicated page — back to the
+        // shared pool.
+        page_bufs.append(&mut round_bufs);
+    }
+
+    // Final ranking per query (lines 29-30).
+    let t_fin = Instant::now();
+    let mut out: Vec<Result<Vec<(f32, u32)>>> = Vec::with_capacity(n);
+    for qi in 0..n {
+        let cur = &mut cursors[qi];
+        match cur.error.take() {
+            Some(e) => out.push(Err(e)),
+            None => {
+                let mut r = cur.results.sorted();
+                r.truncate(params.k);
+                out.push(Ok(r));
+            }
+        }
+    }
+    let fin_dt = t_fin.elapsed() / n as u32;
+    for st in stats.iter_mut() {
+        st.compute_time += fin_dt;
+    }
+    out
 }
 
 #[cfg(test)]

@@ -25,6 +25,20 @@ pub fn cond_wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T>
     cv.wait(g).unwrap_or_else(|e| e.into_inner())
 }
 
+/// Wait on `cv` with a timeout, recovering the guard if the mutex was
+/// poisoned while we were parked. Returns the guard and whether the wait
+/// timed out (the server's batch gather window uses this to bound how
+/// long an executor holds a partial batch waiting for batchmates).
+#[inline]
+pub fn cond_wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    let (g, res) = cv.wait_timeout(g, dur).unwrap_or_else(|e| e.into_inner());
+    (g, res.timed_out())
+}
+
 /// Consume a mutex, recovering the inner value even if poisoned.
 #[inline]
 pub fn into_inner<T>(m: Mutex<T>) -> T {
@@ -48,6 +62,15 @@ mod tests {
         assert!(m.is_poisoned());
         assert_eq!(*lock(&m), 7);
         assert_eq!(into_inner(Arc::try_unwrap(m).unwrap()), 7);
+    }
+
+    #[test]
+    fn cond_wait_timeout_reports_expiry() {
+        let pair = Arc::new((Mutex::new(()), Condvar::new()));
+        let (m, cv) = &*pair;
+        let g = lock(m);
+        let (_g, timed_out) = cond_wait_timeout(cv, g, std::time::Duration::from_millis(1));
+        assert!(timed_out);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Batched-search parity suite (ISSUE 8): `search_batch` must be
+//! bit-identical to the sequential path for every batch size, on every
+//! I/O backend, and under permanent page loss — batching may change only
+//! WHERE bytes come from (one deduplicated read per round) and how LUTs
+//! are built (one subspace-major pass, aliased for duplicates), never the
+//! answers.
+//!
+//! Everything here pins `FaultSpec::Config`/`FaultSpec::Off` explicitly,
+//! so the suite is deterministic regardless of any `PAGEANN_FAULTS` the
+//! CI matrix leg exports. (Transient-fault schedules depend on read
+//! order, which batching legitimately changes; permanent `dead` pages
+//! fail every read regardless of order, so they ARE parity-testable.)
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{AnnSystem, FaultSpec, OpenOptions, PageAnnIndex};
+use pageann::io::FaultConfig;
+use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
+use pageann::metrics::QueryStats;
+use pageann::search::{BatchScratch, SearchParams, SearchScratch};
+use pageann::vamana::VamanaParams;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pageann-batch-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn small_workload() -> Workload {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 3000).with_dim(32).with_clusters(16);
+    Workload::synthesize(&spec, 24, 10, 77)
+}
+
+fn build_index(dir: &PathBuf) -> Workload {
+    let w = small_workload();
+    let cfg = BuildConfig {
+        pq_m: 8,
+        cv_placement: CvPlacement::OnPage,
+        routing_sample_frac: 0.03,
+        vamana: VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 },
+        ..Default::default()
+    };
+    IndexBuilder::new(&w.base, cfg).build(dir).unwrap();
+    w
+}
+
+fn assert_bitwise_eq(got: &[(f32, u32)], want: &[(f32, u32)], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: result count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.1, w.1, "{tag}: id mismatch at rank {i}");
+        assert_eq!(
+            g.0.to_bits(),
+            w.0.to_bits(),
+            "{tag}: distance at rank {i} not bit-identical ({} vs {})",
+            g.0,
+            w.0
+        );
+    }
+}
+
+/// Sequential reference: one `search` per query on a fresh scratch.
+fn sequential_reference(
+    idx: &PageAnnIndex,
+    w: &Workload,
+    params: &SearchParams,
+) -> (Vec<Vec<(f32, u32)>>, Vec<QueryStats>) {
+    let mut scratch = SearchScratch::new();
+    let mut results = Vec::new();
+    let mut stats = Vec::new();
+    for qi in 0..w.queries.len() {
+        let q = w.queries.get_f32(qi);
+        let mut st = QueryStats::default();
+        results.push(idx.search(&q, params, &mut scratch, &mut st).unwrap());
+        stats.push(st);
+    }
+    (results, stats)
+}
+
+#[test]
+fn batch_is_bit_identical_to_sequential_across_backends_and_sizes() {
+    let dir = tmpdir("parity");
+    let w = build_index(&dir);
+    let params = SearchParams { k: 10, l: 60, ..Default::default() };
+
+    // `io_backend` preference never fails the open: unavailable backends
+    // fall back, so every row runs everywhere (possibly on pread).
+    for backend in [None, Some("pread"), Some("aio"), Some("uring")] {
+        let idx = PageAnnIndex::open(
+            &dir,
+            OpenOptions {
+                io_backend: backend.map(str::to_string),
+                faults: FaultSpec::Off,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let tag = format!("pref={} backend={}", backend.unwrap_or("auto"), idx.io_backend());
+        let (seq, seq_stats) = sequential_reference(&idx, &w, &params);
+
+        let mut batch = BatchScratch::new();
+        for bs in [1usize, 3, 8] {
+            let mut qi = 0;
+            while qi < w.queries.len() {
+                let hi = (qi + bs).min(w.queries.len());
+                let qvecs: Vec<Vec<f32>> = (qi..hi).map(|i| w.queries.get_f32(i)).collect();
+                let qrefs: Vec<&[f32]> = qvecs.iter().map(|v| v.as_slice()).collect();
+                let mut stats = vec![QueryStats::default(); qrefs.len()];
+                let outs = idx.search_batch(&qrefs, &params, &mut batch, &mut stats);
+                assert_eq!(outs.len(), qrefs.len());
+                for (j, out) in outs.into_iter().enumerate() {
+                    let q = qi + j;
+                    let t = format!("{tag} bs={bs} q={q}");
+                    let out = out.unwrap_or_else(|e| panic!("{t}: query failed: {e}"));
+                    assert_bitwise_eq(&out, &seq[q], &t);
+                    // Stats invariants: `ios`/`hops`/`cache_hits` keep
+                    // their sequential-parity meaning; the coalescing
+                    // shows up only in `batch_shared_ios`.
+                    let st = &stats[j];
+                    let ss = &seq_stats[q];
+                    assert_eq!(st.ios, ss.ios, "{t}: ios");
+                    assert_eq!(st.hops, ss.hops, "{t}: hops");
+                    assert_eq!(st.cache_hits, ss.cache_hits, "{t}: cache_hits");
+                    assert_eq!(st.approx_dists, ss.approx_dists, "{t}: approx_dists");
+                    assert_eq!(st.exact_dists, ss.exact_dists, "{t}: exact_dists");
+                    assert!(st.batch_shared_ios <= st.ios, "{t}: shared > ios");
+                    assert_eq!(st.retries + st.failed_ios + st.crc_failures, 0, "{t}");
+                    assert!(!st.degraded, "{t}");
+                }
+                qi = hi;
+            }
+        }
+        // The batch scratch pools its round buffers: repeated use must
+        // reach a steady pool size, like the sequential scratch.
+        let sizes: Vec<usize> = (0..4)
+            .map(|_| {
+                let q0 = w.queries.get_f32(0);
+                let q1 = w.queries.get_f32(1);
+                let qrefs: Vec<&[f32]> = vec![&q0, &q1];
+                let mut stats = vec![QueryStats::default(); 2];
+                let _ = idx.search_batch(&qrefs, &params, &mut batch, &mut stats);
+                batch.pooled_buffers()
+            })
+            .collect();
+        assert!(
+            sizes.windows(2).skip(1).all(|s| s[0] == s[1]),
+            "{tag}: batch buffer pool never stabilized: {sizes:?}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn duplicate_heavy_batch_shares_luts_and_page_reads() {
+    let dir = tmpdir("dup");
+    let w = build_index(&dir);
+    let idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions { faults: FaultSpec::Off, ..Default::default() },
+    )
+    .unwrap();
+    let params = SearchParams { k: 10, l: 60, ..Default::default() };
+
+    let q0 = w.queries.get_f32(0);
+    let q1 = w.queries.get_f32(1);
+    let q2 = w.queries.get_f32(2);
+    // Sequential reference per distinct query.
+    let mut scratch = SearchScratch::new();
+    let mut refs: Vec<Vec<(f32, u32)>> = Vec::new();
+    for q in [&q0, &q1, &q2] {
+        let mut st = QueryStats::default();
+        refs.push(idx.search(q, &params, &mut scratch, &mut st).unwrap());
+    }
+
+    // Duplicate-heavy batch: 8 queries over 3 distinct vectors.
+    let pattern: [usize; 8] = [0, 1, 0, 0, 1, 2, 2, 0];
+    let distinct: [&[f32]; 3] = [q0.as_slice(), q1.as_slice(), q2.as_slice()];
+    let qrefs: Vec<&[f32]> = pattern.iter().map(|&i| distinct[i]).collect();
+    let mut stats = vec![QueryStats::default(); qrefs.len()];
+    let mut batch = BatchScratch::new();
+    let outs = idx.search_batch(&qrefs, &params, &mut batch, &mut stats);
+    let (mut shared, mut reused) = (0u64, 0u64);
+    for (j, out) in outs.into_iter().enumerate() {
+        let out = out.unwrap();
+        assert_bitwise_eq(&out, &refs[pattern[j]], &format!("dup q={j}"));
+        shared += stats[j].batch_shared_ios;
+        reused += stats[j].lut_reused;
+    }
+    assert!(shared > 0, "identical batchmates never coalesced a page read");
+    assert_eq!(reused, 5, "8 queries over 3 distinct vectors must alias exactly 5 LUTs");
+
+    // Opting out of LUT sharing must not change answers either.
+    let off = SearchParams { lut_share: false, ..params.clone() };
+    let mut stats = vec![QueryStats::default(); qrefs.len()];
+    let outs = idx.search_batch(&qrefs, &off, &mut batch, &mut stats);
+    for (j, out) in outs.into_iter().enumerate() {
+        assert_bitwise_eq(&out.unwrap(), &refs[pattern[j]], &format!("dup/off q={j}"));
+        assert_eq!(stats[j].lut_reused, 0, "share=off still aliased a LUT");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn trait_search_batch_matches_search_one() {
+    // The engine-level API: `AnnSystem::search_batch` (id-only) must agree
+    // with `search_one` for every batch size, including the batch=1 bypass
+    // that routes through today's single-query path.
+    let dir = tmpdir("trait");
+    let w = build_index(&dir);
+    let idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions { faults: FaultSpec::Off, ..Default::default() },
+    )
+    .unwrap();
+    let (k, l) = (10usize, 60usize);
+
+    let mut seq: Vec<Vec<u32>> = Vec::new();
+    for qi in 0..w.queries.len() {
+        let q = w.queries.get_f32(qi);
+        let mut st = QueryStats::default();
+        seq.push(idx.search_one(&q, k, l, &mut st).unwrap());
+    }
+    for bs in [1usize, 3, 8] {
+        let mut qi = 0;
+        while qi < w.queries.len() {
+            let hi = (qi + bs).min(w.queries.len());
+            let qvecs: Vec<Vec<f32>> = (qi..hi).map(|i| w.queries.get_f32(i)).collect();
+            let qrefs: Vec<&[f32]> = qvecs.iter().map(|v| v.as_slice()).collect();
+            let mut stats = vec![QueryStats::default(); qrefs.len()];
+            let outs = AnnSystem::search_batch(&idx, &qrefs, k, l, &mut stats);
+            for (j, out) in outs.into_iter().enumerate() {
+                assert_eq!(out.unwrap(), seq[qi + j], "bs={bs} q={}", qi + j);
+            }
+            qi = hi;
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn dead_pages_degrade_batchmates_independently() {
+    // Permanent loss is order-independent (a dead page fails EVERY read),
+    // so even under faults the batch must be bit-identical to sequential:
+    // same answers, same per-query degraded flags. A degraded query must
+    // never poison its batchmates.
+    let dir = tmpdir("dead");
+    let w = build_index(&dir);
+    let probe = PageAnnIndex::open(
+        &dir,
+        OpenOptions { faults: FaultSpec::Off, ..Default::default() },
+    )
+    .unwrap();
+    let n_pages = probe.meta.n_pages;
+    assert!(n_pages >= 8, "workload too small to lose pages meaningfully");
+    drop(probe);
+    let dead: Vec<u32> = (0..n_pages as u32).step_by(4).collect();
+    let faulty = PageAnnIndex::open(
+        &dir,
+        OpenOptions {
+            faults: FaultSpec::Config(FaultConfig { dead: dead.clone(), ..Default::default() }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let params = SearchParams { k: 10, l: 60, ..Default::default() };
+    let (seq, seq_stats) = {
+        let mut scratch = SearchScratch::new();
+        let mut results = Vec::new();
+        let mut stats = Vec::new();
+        for qi in 0..w.queries.len() {
+            let q = w.queries.get_f32(qi);
+            let mut st = QueryStats::default();
+            results.push(faulty.search(&q, &params, &mut scratch, &mut st).unwrap());
+            stats.push(st);
+        }
+        (results, stats)
+    };
+    assert!(seq_stats.iter().any(|s| s.degraded), "no query ever touched a dead page");
+    assert!(seq_stats.iter().any(|s| !s.degraded), "every query degraded — batchmate isolation untestable");
+
+    let mut batch = BatchScratch::new();
+    let mut total = QueryStats::default();
+    let mut qi = 0;
+    while qi < w.queries.len() {
+        let hi = (qi + 8).min(w.queries.len());
+        let qvecs: Vec<Vec<f32>> = (qi..hi).map(|i| w.queries.get_f32(i)).collect();
+        let qrefs: Vec<&[f32]> = qvecs.iter().map(|v| v.as_slice()).collect();
+        let mut stats = vec![QueryStats::default(); qrefs.len()];
+        let outs = faulty.search_batch(&qrefs, &params, &mut batch, &mut stats);
+        for (j, out) in outs.into_iter().enumerate() {
+            let q = qi + j;
+            let out =
+                out.unwrap_or_else(|e| panic!("query {q} failed under permanent loss: {e}"));
+            assert_bitwise_eq(&out, &seq[q], &format!("dead q={q}"));
+            assert_eq!(
+                stats[j].degraded, seq_stats[q].degraded,
+                "q {q}: degraded flag diverged from sequential"
+            );
+            if stats[j].degraded {
+                assert!(stats[j].failed_ios > 0, "q {q}: degraded without failed_ios");
+            }
+            total.merge(&stats[j]);
+        }
+        qi = hi;
+    }
+    assert!(total.failed_ios > 0);
+    assert!(total.retries > 0, "dead pages must be retried before being dropped");
+    // The per-page fault records (aggregated server-side into the
+    // top-offenders table) name actual dead pages as permanent failures.
+    assert!(
+        total.page_faults.iter().any(|r| r.failed && dead.contains(&r.page)),
+        "no page-fault record names a dead page"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
