@@ -47,6 +47,17 @@ echo "== tier-1: batch-parity leg (PAGEANN_BATCH=8) =="
 # PAGEANN_BATCH=8 also exercises the server admission-queue default.
 PAGEANN_BATCH=8 cargo test -q --test batch_search
 
+echo "== tier-1: adaptive-scheduler leg (gather policy + LUT cache + recall gate) =="
+# ISSUE 9: the scheduler suite pins the adaptive gather window against a
+# manual clock (lone queries must not wait), proves --gather-us fixed
+# mode is wire-identical to the adaptive default, and shows cross-tick
+# LUT cache hits change stats but never results. recall_regression pins
+# absolute recall@10 / mean-IO floors under batch {1,8} on every backend
+# and proves the gate fails on an injected result drop. PAGEANN_BATCH=8
+# matches the batch-parity leg so the server default path is the one the
+# floors certify.
+PAGEANN_BATCH=8 cargo test -q --test scheduler --test recall_regression
+
 echo "== tier-1: bench rows (BENCH_adc.json, BENCH_io.json, BENCH_batch.json) =="
 cargo bench --bench hot_paths
 

@@ -10,7 +10,10 @@
 use pageann::bench::{ns_per_op, time_loop};
 use pageann::dataset::{DatasetKind, Dtype, SynthSpec, Workload};
 use pageann::distance::{kernels, scalar_kernels, BatchScanner, NativeBatch, ScalarBatch, XlaBatch};
-use pageann::engine::{FaultSpec, OpenOptions, PageAnnIndex};
+use pageann::engine::{
+    AnnSystem, BatchConfig, FaultSpec, GatherPolicy, OpenOptions, PageAnnIndex, QueryClient,
+    QueryServer,
+};
 use pageann::io::{
     open_auto, AioPageStore, PageStore, PendingRead, PreadPageStore, SimSsdStore, SsdModel,
     UringPageStore,
@@ -471,9 +474,98 @@ fn bench_batch_pipeline() {
             ));
         }
     }
+    // Cross-tick LUT cache sweep (ISSUE 9): the same 8 distinct queries
+    // recur tick after tick at batch 8, so every tick sees each query
+    // exactly once — within-tick arena sharing never fires and any win is
+    // the cache's. Sim-SSD off for this leg: the cache saves CPU (LUT
+    // builds), which the ~80µs simulated reads above would drown out.
+    let mut cache_rows = Vec::new();
+    for entries in [0usize, 64] {
+        let idx_c = PageAnnIndex::open(
+            &dir,
+            OpenOptions {
+                faults: FaultSpec::Off,
+                lut_cache_entries: entries,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let params = SearchParams { k: 10, l: 60, ..params_base.clone() };
+        let tick: Vec<&[f32]> = distinct.iter().map(|q| q.as_slice()).collect();
+        let ticks = 8usize;
+        let mut tot = QueryStats::default();
+        let mut best = f64::MAX;
+        for _ in 0..3 {
+            let t = Instant::now();
+            for _ in 0..ticks {
+                let mut stats = vec![QueryStats::default(); tick.len()];
+                for out in idx_c.search_batch(&tick, &params, &mut batch, &mut stats) {
+                    out.unwrap();
+                }
+                for st in &stats {
+                    tot.merge(st);
+                }
+            }
+            best = best.min(t.elapsed().as_secs_f64() * 1e6 / (ticks * tick.len()) as f64);
+        }
+        let (hits, misses) = idx_c
+            .lut_cache_stats()
+            .map(|s| (s.hits, s.misses))
+            .unwrap_or((0, 0));
+        println!(
+            "batch_lut_cache_{entries:<4}       {best:>8.1} µs/query  stat_hits {:>3}  cache h/m {hits}/{misses}",
+            tot.lut_cache_hits
+        );
+        cache_rows.push(format!(
+            "    {{\"lut_cache_entries\": {entries}, \"us_per_query\": {best:.1}, \"lut_cache_hits\": {}, \"cache_hits\": {hits}, \"cache_misses\": {misses}}}",
+            tot.lut_cache_hits
+        ));
+    }
+
+    // Gather-policy latency (ISSUE 9): a trickle of lone queries 3ms apart
+    // — slower than any sensible gather cap. A fixed 2ms window makes each
+    // of them wait out the full window for batchmates that never come; the
+    // adaptive policy reads the arrival gaps and dispatches immediately.
+    let mut gather_rows = Vec::new();
+    for (name, gather) in [
+        ("fixed_2000us", GatherPolicy::Fixed(Duration::from_micros(2000))),
+        ("adaptive_max_2000us", GatherPolicy::Adaptive { max: Duration::from_micros(2000) }),
+    ] {
+        let idx_s = PageAnnIndex::open(
+            &dir,
+            OpenOptions { faults: FaultSpec::Off, ..Default::default() },
+        )
+        .unwrap();
+        let dim = idx_s.meta.dim;
+        let sys: std::sync::Arc<dyn AnnSystem> = std::sync::Arc::new(idx_s);
+        let server = QueryServer::bind("127.0.0.1:0", sys, dim)
+            .unwrap()
+            .with_batching(BatchConfig { batch_max: 8, gather, executors: 1 });
+        let handle = server.spawn().unwrap();
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        let n_q = 16usize;
+        let mut total = Duration::ZERO;
+        for i in 0..n_q {
+            std::thread::sleep(Duration::from_millis(3));
+            let t = Instant::now();
+            let resp = client.query(&distinct[i % distinct.len()], 10, 60).unwrap();
+            total += t.elapsed();
+            std::hint::black_box(&resp);
+        }
+        drop(client);
+        handle.stop();
+        let mean_us = total.as_secs_f64() * 1e6 / n_q as f64;
+        println!("gather_{name:<20}  {mean_us:>8.1} µs/query (lone queries, batch_max 8)");
+        gather_rows.push(format!(
+            "    {{\"policy\": \"{name}\", \"mean_us_per_query\": {mean_us:.1}}}"
+        ));
+    }
+
     let json = format!(
-        "{{\n  \"bench\": \"batch_pipeline\",\n  \"n_queries\": 32,\n  \"distinct\": 8,\n  \"k\": 10,\n  \"l\": 60,\n  \"lut_build\": {{\"m\": 8, \"dup_factor\": 4, \"sequential_ns\": {lut_seq_ns:.1}, \"batched_ns\": {lut_batch_ns:.1}, \"batched_shared_ns\": {lut_shared_ns:.1}}},\n  \"rows\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
+        "{{\n  \"bench\": \"batch_pipeline\",\n  \"n_queries\": 32,\n  \"distinct\": 8,\n  \"k\": 10,\n  \"l\": 60,\n  \"lut_build\": {{\"m\": 8, \"dup_factor\": 4, \"sequential_ns\": {lut_seq_ns:.1}, \"batched_ns\": {lut_batch_ns:.1}, \"batched_shared_ns\": {lut_shared_ns:.1}}},\n  \"rows\": [\n{}\n  ],\n  \"lut_cache\": [\n{}\n  ],\n  \"gather_policy\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        cache_rows.join(",\n"),
+        gather_rows.join(",\n")
     );
     match std::fs::write("BENCH_batch.json", &json) {
         Ok(()) => println!("# wrote BENCH_batch.json"),

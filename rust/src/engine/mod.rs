@@ -11,8 +11,8 @@ pub mod server;
 
 pub use runner::{run_workload, run_workload_batched, tune_to_recall, WorkloadReport};
 pub use server::{
-    BatchConfig, PageFaultTotals, QueryClient, QueryServer, ServerHandle, ServerStats,
-    StatsSnapshot,
+    ArrivalTracker, BatchConfig, GatherPolicy, MonotonicClock, PageFaultTotals, QueryClient,
+    QueryServer, ServerHandle, ServerStats, StatsSnapshot, TickClock,
 };
 
 use crate::cache::{MemCodes, PageCache};
@@ -21,7 +21,7 @@ use crate::distance::{BatchScanner, NativeBatch};
 use crate::io::{open_with, FaultConfig, FaultStore, PageStore, SimSsdStore, SsdModel};
 use crate::layout::{IndexFiles, IndexMeta, PageRef};
 use crate::metrics::QueryStats;
-use crate::pq::PqCodebook;
+use crate::pq::{LutCache, PqCodebook};
 use crate::routing::RoutingIndex;
 use crate::search::{
     search_batch, search_pages, BatchScratch, SearchContext, SearchParams, SearchScratch,
@@ -110,10 +110,20 @@ pub struct OpenOptions {
     /// the sim-SSD model when both are on — so injected faults hit the
     /// same surface real device errors would.
     pub faults: FaultSpec,
+    /// Cross-tick ADC LUT cache entries (`--lut-cache` /
+    /// `PAGEANN_LUT_CACHE`). 0 (the default) disables the cache; > 0 lets
+    /// `search_batch` skip LUT builds for queries that recur bit-identically
+    /// across server ticks (see `pq::LutCache` — loss-free by
+    /// construction).
+    pub lut_cache_entries: usize,
 }
 
 impl Default for OpenOptions {
     fn default() -> Self {
+        let lut_cache_entries = std::env::var("PAGEANN_LUT_CACHE")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
         Self {
             sim_ssd: None,
             cache_budget_bytes: 0,
@@ -121,6 +131,7 @@ impl Default for OpenOptions {
             params: SearchParams::default(),
             io_backend: None,
             faults: FaultSpec::default(),
+            lut_cache_entries,
         }
     }
 }
@@ -137,6 +148,9 @@ pub struct PageAnnIndex {
     pq: PqCodebook,
     scanner: Box<dyn BatchScanner>,
     params: SearchParams,
+    /// Cross-tick LUT cache (`OpenOptions::lut_cache_entries` > 0); `None`
+    /// keeps the zero-overhead build path.
+    lut_cache: Option<LutCache>,
 }
 
 thread_local! {
@@ -190,6 +204,11 @@ impl PageAnnIndex {
             cache: PageCache::empty(meta.page_size),
             scanner: opts.scanner.unwrap_or_else(|| Box::new(NativeBatch)),
             params: opts.params,
+            lut_cache: if opts.lut_cache_entries > 0 {
+                Some(LutCache::new(opts.lut_cache_entries))
+            } else {
+                None
+            },
             meta,
             store,
             io_backend,
@@ -232,6 +251,7 @@ impl PageAnnIndex {
             memcodes: &self.memcodes,
             scanner: self.scanner.as_ref(),
             pq: &self.pq,
+            lut_cache: self.lut_cache.as_ref(),
         };
         let out = search_pages(&ctx, query, &entries, params, scratch, stats)?;
         stats.total_time += t0.elapsed();
@@ -260,6 +280,7 @@ impl PageAnnIndex {
             memcodes: &self.memcodes,
             scanner: self.scanner.as_ref(),
             pq: &self.pq,
+            lut_cache: self.lut_cache.as_ref(),
         };
         let out = search_batch(&ctx, queries, &entry_refs, params, batch, stats);
         let dt = t0.elapsed();
@@ -322,6 +343,11 @@ impl PageAnnIndex {
 
     pub fn cache_pages(&self) -> usize {
         self.cache.n_pages()
+    }
+
+    /// Counters of the cross-tick LUT cache, or `None` when it is off.
+    pub fn lut_cache_stats(&self) -> Option<crate::pq::LutCacheStats> {
+        self.lut_cache.as_ref().map(|c| c.stats())
     }
 }
 

@@ -11,7 +11,7 @@
 //! stats rep: [u32 magic 0x50414E54 "PANT"] [u64 queries] [u64 errors]
 //!            [u64 total_ios] [u64 retries] [u64 failed_ios]
 //!            [u64 crc_failures] [u64 degraded] [u64 batch_shared_ios]
-//!            [u64 lut_reused] [u32 n]
+//!            [u64 lut_reused] [u64 lut_cache_hits] [u32 n]
 //!            ([u32 page] [u64 retries] [u64 crc_failures] [u64 failed_ios]) × n
 //! ```
 //!
@@ -20,13 +20,35 @@
 //! search inline — exactly the pre-batching behavior. With
 //! `batch_max > 1` (the default), parsed requests flow through a
 //! tick-based admission queue: a small executor pool drains up to
-//! `batch_max` requests per tick, waiting at most `gather_window` for
+//! `batch_max` requests per tick, waiting at most the gather window for
 //! batchmates, groups them by `(k, l)`, and answers each request over its
 //! own reply channel so the connection thread writes the response. The
 //! batched tick calls [`AnnSystem::search_batch`], which shares ADC LUT
 //! builds and coalesces duplicate page reads across the gathered queries
 //! (see `search::search_batch`); results are bit-identical to the inline
 //! path, so batching is purely a throughput knob.
+//!
+//! # Gather-window policy (ISSUE 9)
+//!
+//! The wait-for-batchmates budget is a [`GatherPolicy`]. The default is
+//! **adaptive**: an [`ArrivalTracker`] EWMA of request inter-arrival times
+//! (sampled on every enqueue, through the injected [`TickClock`]) sizes
+//! each tick's window as `(batch_max − 1) × ewma`, capped at
+//! `--gather-us-max`. Under light load — no arrival history yet, or
+//! arrivals slower than the cap — the window collapses to zero, so a lone
+//! query never pays the full window waiting for batchmates that are not
+//! coming; under bursts it grows toward the cap and batches fill.
+//! `GatherPolicy::Fixed` (`--gather-us`) pins the pre-adaptive behavior
+//! exactly: every tick waits the same bounded window.
+//!
+//! # Server knobs
+//!
+//! | flag | env | default | meaning |
+//! |---|---|---|---|
+//! | `--batch-max N` | `PAGEANN_BATCH` | 8 | requests per executor tick; 1 = inline path |
+//! | `--gather-us U` | `PAGEANN_GATHER_US` | unset | **fixed** gather window of `U` µs (disables adaptivity) |
+//! | `--gather-us-max U` | `PAGEANN_GATHER_US_MAX` | 200 | cap on the adaptive window |
+//! | `--lut-cache N` | `PAGEANN_LUT_CACHE` | 0 (off) | cross-tick LUT cache entries (`pq::LutCache`) |
 //!
 //! Failure semantics (ISSUE 6): a failed search answers with a `PANE`
 //! error frame and the connection survives; a malformed request is
@@ -70,14 +92,147 @@ pub const STAT_TOP_N_CAP: usize = 256;
 /// Default admission-queue batch size when `PAGEANN_BATCH` is unset.
 pub const DEFAULT_BATCH_MAX: usize = 8;
 
-/// Default bounded gather window: how long an executor holds a partial
-/// batch waiting for batchmates before running the tick anyway.
+/// The historical fixed gather window (ISSUE 8): how long an executor held
+/// a partial batch waiting for batchmates before running the tick anyway.
+/// Still the value `--gather-us` documentation points at, and the default
+/// **cap** of the adaptive policy ([`DEFAULT_GATHER_WINDOW_MAX`]).
 pub const DEFAULT_GATHER_WINDOW: Duration = Duration::from_micros(200);
+
+/// Default cap on the adaptive gather window (`--gather-us-max`).
+pub const DEFAULT_GATHER_WINDOW_MAX: Duration = DEFAULT_GATHER_WINDOW;
+
+/// EWMA smoothing factor for [`ArrivalTracker`]: weight of the newest
+/// inter-arrival sample. 0.2 reacts to a burst within ~5 requests while a
+/// single straggler barely moves the estimate.
+pub const ARRIVAL_EWMA_ALPHA: f64 = 0.2;
 
 /// How long a connection thread waits for its batched reply before
 /// answering with an error frame (guards the executor-shutdown race; in
 /// normal operation replies arrive in query-latency time).
 const EXECUTOR_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Injected time source for the admission queue's arrival tracking.
+///
+/// Production uses [`MonotonicClock`]; the deterministic scheduler tests
+/// substitute a hand-stepped clock so EWMA trajectories and window sizes
+/// are exact, not timing-dependent.
+pub trait TickClock: Send + Sync {
+    /// Microseconds since an arbitrary fixed origin. Must be monotonic
+    /// non-decreasing within one clock instance.
+    fn now_us(&self) -> u64;
+}
+
+/// Production [`TickClock`]: microseconds since the clock was created,
+/// anchored to a monotonic [`std::time::Instant`].
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: std::time::Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        Self { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TickClock for MonotonicClock {
+    fn now_us(&self) -> u64 {
+        // Saturating: u64 µs overflows after ~584k years of uptime.
+        u64::try_from(self.origin.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+}
+
+/// EWMA of request inter-arrival times, fed by every enqueue (under the
+/// admission-queue lock) and read by the executor when it sizes a tick's
+/// gather window. Pure arithmetic over caller-supplied timestamps — no
+/// clock inside — so tests drive it deterministically.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArrivalTracker {
+    ewma_us: f64,
+    /// Inter-arrival samples folded so far (0 = no estimate yet).
+    samples: u64,
+    last_us: Option<u64>,
+}
+
+impl ArrivalTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one arrival at `now_us`. The first arrival only anchors the
+    /// stream; each later one folds its inter-arrival delta into the EWMA
+    /// (the first delta seeds it directly).
+    pub fn note_arrival(&mut self, now_us: u64) {
+        if let Some(last) = self.last_us {
+            let delta = now_us.saturating_sub(last) as f64;
+            self.ewma_us = if self.samples == 0 {
+                delta
+            } else {
+                ARRIVAL_EWMA_ALPHA * delta + (1.0 - ARRIVAL_EWMA_ALPHA) * self.ewma_us
+            };
+            self.samples += 1;
+        }
+        self.last_us = Some(now_us);
+    }
+
+    /// Current inter-arrival estimate in µs, or `None` before the second
+    /// arrival.
+    pub fn ewma_us(&self) -> Option<f64> {
+        if self.samples > 0 {
+            Some(self.ewma_us)
+        } else {
+            None
+        }
+    }
+
+    /// The adaptive gather window in µs for a tick that just accepted its
+    /// first request: expected time for the *rest* of a `batch_max` batch
+    /// to arrive (`(batch_max − 1) × ewma`), capped at `max_us`. Zero when
+    /// there is no estimate yet, or when arrivals run slower than the cap
+    /// itself — waiting the cap would buy at most one batchmate, so a lone
+    /// query under light load departs immediately.
+    pub fn window_us(&self, max_us: u64, batch_max: usize) -> u64 {
+        let ewma = match self.ewma_us() {
+            Some(e) => e,
+            None => return 0,
+        };
+        if ewma >= max_us as f64 {
+            return 0;
+        }
+        let want = (batch_max.saturating_sub(1) as f64) * ewma;
+        (want.ceil() as u64).min(max_us)
+    }
+}
+
+/// How long an executor tick waits for batchmates after its first request.
+#[derive(Debug, Clone, Copy)]
+pub enum GatherPolicy {
+    /// Always wait up to the given window — the pre-adaptive (ISSUE 8)
+    /// behavior, pinned exactly (`--gather-us`).
+    Fixed(Duration),
+    /// Arrival-rate-adaptive window ([`ArrivalTracker::window_us`]),
+    /// capped at `max` (`--gather-us-max`). The default.
+    Adaptive { max: Duration },
+}
+
+impl GatherPolicy {
+    /// The wait budget for one tick, given the queue's arrival history.
+    pub fn window(&self, arrivals: &ArrivalTracker, batch_max: usize) -> Duration {
+        match *self {
+            GatherPolicy::Fixed(d) => d,
+            GatherPolicy::Adaptive { max } => {
+                let max_us = u64::try_from(max.as_micros()).unwrap_or(u64::MAX);
+                Duration::from_micros(arrivals.window_us(max_us, batch_max))
+            }
+        }
+    }
+}
 
 /// Admission-queue configuration for [`QueryServer`].
 ///
@@ -87,8 +242,9 @@ const EXECUTOR_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
 pub struct BatchConfig {
     /// Most requests one executor tick may gather (≥ 1).
     pub batch_max: usize,
-    /// Longest an executor waits for batchmates after the first request.
-    pub gather_window: Duration,
+    /// Gather-window policy: how long a tick waits for batchmates after
+    /// its first request (see the module docs).
+    pub gather: GatherPolicy,
     /// Executor threads draining the queue (≥ 1; only used when
     /// `batch_max > 1`).
     pub executors: usize,
@@ -101,7 +257,21 @@ impl Default for BatchConfig {
             .and_then(|v| v.parse::<usize>().ok())
             .filter(|&b| b >= 1)
             .unwrap_or(DEFAULT_BATCH_MAX);
-        Self { batch_max, gather_window: DEFAULT_GATHER_WINDOW, executors: 2 }
+        let gather = match std::env::var("PAGEANN_GATHER_US")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            Some(us) => GatherPolicy::Fixed(Duration::from_micros(us)),
+            None => {
+                let max = std::env::var("PAGEANN_GATHER_US_MAX")
+                    .ok()
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .map(Duration::from_micros)
+                    .unwrap_or(DEFAULT_GATHER_WINDOW_MAX);
+                GatherPolicy::Adaptive { max }
+            }
+        };
+        Self { batch_max, gather, executors: 2 }
     }
 }
 
@@ -138,6 +308,9 @@ pub struct ServerStats {
     pub batch_shared_ios: AtomicU64,
     /// Queries whose ADC LUT aliased a batchmate's instead of being built.
     pub lut_reused: AtomicU64,
+    /// Queries whose ADC LUT came from the cross-tick `pq::LutCache`
+    /// (sum of `QueryStats::lut_cache_hits`).
+    pub lut_cache_hits: AtomicU64,
     /// Per-page fault aggregation, keyed by page id. Fed from each query's
     /// `QueryStats::page_faults`; read via [`ServerStats::top_offenders`].
     page_faults: Mutex<HashMap<u32, PageFaultTotals>>,
@@ -153,6 +326,7 @@ impl ServerStats {
         self.crc_failures.fetch_add(q.crc_failures, Ordering::Relaxed);
         self.batch_shared_ios.fetch_add(q.batch_shared_ios, Ordering::Relaxed);
         self.lut_reused.fetch_add(q.lut_reused, Ordering::Relaxed);
+        self.lut_cache_hits.fetch_add(q.lut_cache_hits, Ordering::Relaxed);
         if ok {
             self.queries.fetch_add(1, Ordering::Relaxed);
             self.total_ios.fetch_add(q.ios, Ordering::Relaxed);
@@ -199,20 +373,33 @@ struct PendingQuery {
     reply: mpsc::Sender<(Result<Vec<u32>>, QueryStats)>,
 }
 
+/// The queue proper plus its arrival history, together under one lock:
+/// every enqueue stamps the tracker with the same ordering the executor
+/// later reads it in, so EWMA updates never race the window computation.
+struct QueueState {
+    q: VecDeque<PendingQuery>,
+    arrivals: ArrivalTracker,
+}
+
 /// Tick-based admission queue shared by connection threads (producers)
 /// and the executor pool (consumers).
 struct AdmissionQueue {
-    q: Mutex<VecDeque<PendingQuery>>,
+    state: Mutex<QueueState>,
     cv: Condvar,
     shutdown: AtomicBool,
+    clock: Arc<dyn TickClock>,
 }
 
 impl AdmissionQueue {
-    fn new() -> Self {
+    fn new(clock: Arc<dyn TickClock>) -> Self {
         Self {
-            q: Mutex::new(VecDeque::new()),
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                arrivals: ArrivalTracker::new(),
+            }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            clock,
         }
     }
 }
@@ -225,9 +412,9 @@ fn executor_loop(queue: Arc<AdmissionQueue>, system: Arc<dyn AnnSystem>, cfg: Ba
     loop {
         let mut batch: Vec<PendingQuery> = Vec::new();
         {
-            let mut g = lock(&queue.q);
+            let mut g = lock(&queue.state);
             loop {
-                if let Some(p) = g.pop_front() {
+                if let Some(p) = g.q.pop_front() {
                     batch.push(p);
                     break;
                 }
@@ -236,15 +423,23 @@ fn executor_loop(queue: Arc<AdmissionQueue>, system: Arc<dyn AnnSystem>, cfg: Ba
                 }
                 g = cond_wait(&queue.cv, g);
             }
-            // Bounded gather window: a lone query pays at most
-            // `gather_window` of extra latency waiting for batchmates; a
-            // full batch departs immediately.
-            let deadline = std::time::Instant::now() + cfg.gather_window;
+            // Bounded gather window, sized by the policy from the arrival
+            // history (fixed mode passes its constant through untouched):
+            // a lone query pays at most `window` of extra latency waiting
+            // for batchmates; a full batch departs immediately. A zero
+            // window still drains whatever is already queued.
+            let window = cfg.gather.window(&g.arrivals, cfg.batch_max);
+            let deadline = std::time::Instant::now() + window;
             while batch.len() < cfg.batch_max {
-                if let Some(p) = g.pop_front() {
+                if let Some(p) = g.q.pop_front() {
                     batch.push(p);
                     continue;
                 }
+                // Spurious-wakeup safety: the deadline and the queue are
+                // re-checked on EVERY wake — `cond_wait_timeout`'s timed-out
+                // flag is deliberately ignored, so a spurious wake can
+                // neither end the gather early nor extend it past the
+                // deadline (see util::sync and tests/scheduler.rs).
                 let now = std::time::Instant::now();
                 if now >= deadline {
                     break;
@@ -289,6 +484,7 @@ pub struct QueryServer {
     shutdown: Arc<AtomicBool>,
     read_timeout: Option<Duration>,
     batch: BatchConfig,
+    clock: Arc<dyn TickClock>,
 }
 
 /// Handle returned by [`QueryServer::spawn`]: stop + join the serve loop.
@@ -333,6 +529,7 @@ impl QueryServer {
             shutdown: Arc::new(AtomicBool::new(false)),
             read_timeout: Some(DEFAULT_READ_TIMEOUT),
             batch: BatchConfig::default(),
+            clock: Arc::new(MonotonicClock::new()),
         })
     }
 
@@ -346,6 +543,13 @@ impl QueryServer {
     /// disables the queue and restores the inline (pre-batching) path.
     pub fn with_batching(mut self, cfg: BatchConfig) -> Self {
         self.batch = cfg;
+        self
+    }
+
+    /// Override the arrival-tracking clock (tests inject a deterministic
+    /// one; production keeps the default [`MonotonicClock`]).
+    pub fn with_clock(mut self, clock: Arc<dyn TickClock>) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -365,7 +569,7 @@ impl QueryServer {
     fn serve_loop(self) {
         // Batched mode: spin up the executor pool before accepting.
         let queue = if self.batch.batch_max > 1 {
-            let q = Arc::new(AdmissionQueue::new());
+            let q = Arc::new(AdmissionQueue::new(self.clock.clone()));
             for _ in 0..self.batch.executors.max(1) {
                 let qx = Arc::clone(&q);
                 let system = self.system.clone();
@@ -463,6 +667,7 @@ fn write_stats_reply(
         stats.degraded.load(Ordering::Relaxed),
         stats.batch_shared_ios.load(Ordering::Relaxed),
         stats.lut_reused.load(Ordering::Relaxed),
+        stats.lut_cache_hits.load(Ordering::Relaxed),
     ] {
         out.extend_from_slice(&v.to_le_bytes());
     }
@@ -543,8 +748,13 @@ fn handle_connection(
                 // frame re-fills a fresh one.
                 let (tx, rx) = mpsc::channel();
                 {
-                    let mut g = lock(&q.q);
-                    g.push_back(PendingQuery {
+                    let mut g = lock(&q.state);
+                    // Stamp the arrival under the queue lock so the EWMA
+                    // sees enqueues in the same order the executor drains
+                    // them.
+                    let now = q.clock.now_us();
+                    g.arrivals.note_arrival(now);
+                    g.q.push_back(PendingQuery {
                         query: std::mem::take(&mut query),
                         k,
                         l,
@@ -626,6 +836,7 @@ pub struct StatsSnapshot {
     pub degraded: u64,
     pub batch_shared_ios: u64,
     pub lut_reused: u64,
+    pub lut_cache_hits: u64,
     /// Worst pages by (permanent failures, CRC failures, retries).
     pub top_offenders: Vec<(u32, PageFaultTotals)>,
 }
@@ -694,6 +905,7 @@ impl QueryClient {
             degraded: read_u64(&mut self.stream)?,
             batch_shared_ios: read_u64(&mut self.stream)?,
             lut_reused: read_u64(&mut self.stream)?,
+            lut_cache_hits: read_u64(&mut self.stream)?,
             top_offenders: Vec::new(),
         };
         let n = read_u32(&mut self.stream)? as usize;
@@ -840,7 +1052,11 @@ mod tests {
         let sys = Arc::new(Batchy { inner: Brute { base }, max_batch: AtomicUsize::new(0) });
         let dynsys: Arc<dyn AnnSystem> = sys.clone();
         let server = QueryServer::bind("127.0.0.1:0", dynsys, dim).unwrap().with_batching(
-            BatchConfig { batch_max: 3, gather_window: Duration::from_secs(2), executors: 1 },
+            BatchConfig {
+                batch_max: 3,
+                gather: GatherPolicy::Fixed(Duration::from_secs(2)),
+                executors: 1,
+            },
         );
         let handle = server.spawn().unwrap();
         let addr = handle.addr;

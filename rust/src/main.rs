@@ -8,7 +8,8 @@
 //!                [--queries 100] [--sim-ssd] [--io uring|aio|pread]
 //! pageann experiment <id>|all [--scale xs|s|m] [--workdir target/experiments]
 //! pageann serve  --index <dir> [--addr 127.0.0.1:7700] [--batch-max 8]
-//!                [--gather-us 200] [--sim-ssd] [--io uring|aio|pread]
+//!                [--gather-us <fixed>|--gather-us-max 200] [--lut-cache 0]
+//!                [--sim-ssd] [--io uring|aio|pread]
 //! pageann info
 //! ```
 //!
@@ -194,27 +195,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = OpenOptions {
         sim_ssd: args.has("sim-ssd").then(Default::default),
         io_backend: args.flags.get("io").cloned(),
+        // Cross-tick LUT cache: --lut-cache beats PAGEANN_LUT_CACHE beats
+        // the default (0 = off).
+        lut_cache_entries: if args.has("lut-cache") {
+            args.get_usize("lut-cache", 0)?
+        } else {
+            OpenOptions::default().lut_cache_entries
+        },
         ..Default::default()
     };
     let idx = PageAnnIndex::open(&dir, opts)?;
     eprintln!("io backend: {}", idx.io_backend());
     let dim = idx.meta.dim;
-    // Admission-queue knobs: flags beat PAGEANN_BATCH beats the default.
+    // Admission-queue knobs: flags beat PAGEANN_GATHER_US[_MAX] /
+    // PAGEANN_BATCH beats the defaults. `--gather-us` pins the historical
+    // fixed window; otherwise the window adapts to arrival rate up to
+    // `--gather-us-max`.
     let mut cfg = BatchConfig::default();
     if args.has("batch-max") {
         cfg.batch_max = args.get_usize("batch-max", cfg.batch_max)?.max(1);
     }
     if args.has("gather-us") {
-        cfg.gather_window =
-            std::time::Duration::from_micros(args.get_usize("gather-us", 200)? as u64);
+        cfg.gather = pageann::engine::GatherPolicy::Fixed(std::time::Duration::from_micros(
+            args.get_usize("gather-us", 200)? as u64,
+        ));
+    } else if args.has("gather-us-max") {
+        cfg.gather = pageann::engine::GatherPolicy::Adaptive {
+            max: std::time::Duration::from_micros(args.get_usize("gather-us-max", 200)? as u64),
+        };
     }
     let sys: std::sync::Arc<dyn AnnSystem> = std::sync::Arc::new(idx);
     let server = QueryServer::bind(&addr, sys, dim)?.with_batching(cfg);
     let local = server.local_addr()?;
-    println!(
-        "serving on {local} (batch_max={}, gather_window={:?})",
-        cfg.batch_max, cfg.gather_window
-    );
+    println!("serving on {local} (batch_max={}, gather={:?})", cfg.batch_max, cfg.gather);
     // Keep the handle alive (dropping it stops the server) and park.
     let _handle = server.spawn()?;
     loop {

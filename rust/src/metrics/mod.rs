@@ -76,6 +76,11 @@ pub struct QueryStats {
     /// table instead of being built (see `pq::LutArena`); 0 otherwise.
     /// Summed across queries by `merge`.
     pub lut_reused: u64,
+    /// 1 when this query's ADC LUT came out of the server's cross-tick
+    /// `pq::LutCache` (the query recurred bit-identically since a prior
+    /// tick), skipping `build_luts_into` entirely; 0 otherwise. Summed
+    /// across queries by `merge`.
+    pub lut_cache_hits: u64,
     /// Per-page fault records for this query: one entry per page that
     /// needed retries, failed its CRC, or stayed unreadable. Empty on the
     /// happy path (no allocation). The server aggregates these per page id
@@ -106,6 +111,7 @@ impl QueryStats {
         self.degraded |= other.degraded;
         self.batch_shared_ios += other.batch_shared_ios;
         self.lut_reused += other.lut_reused;
+        self.lut_cache_hits += other.lut_cache_hits;
         self.page_faults.extend_from_slice(&other.page_faults);
         self.io_time += other.io_time;
         self.compute_time += other.compute_time;
@@ -211,11 +217,12 @@ mod tests {
     #[test]
     fn merge_batch_and_page_fault_accounting() {
         let mut a = QueryStats { batch_shared_ios: 1, lut_reused: 1, ..Default::default() };
-        let mut b = QueryStats { batch_shared_ios: 4, ..Default::default() };
+        let mut b = QueryStats { batch_shared_ios: 4, lut_cache_hits: 1, ..Default::default() };
         b.page_faults.push(PageFaultRecord { page: 7, retries: 2, crc_failures: 1, failed: false });
         a.merge(&b);
         assert_eq!(a.batch_shared_ios, 5);
         assert_eq!(a.lut_reused, 1);
+        assert_eq!(a.lut_cache_hits, 1);
         assert_eq!(
             a.page_faults,
             vec![PageFaultRecord { page: 7, retries: 2, crc_failures: 1, failed: false }]

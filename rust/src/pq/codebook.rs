@@ -341,7 +341,10 @@ const PQ_VERSION: u32 = 2;
 /// fast-scan shuffle kernel: per-subspace row minima folded into `q4_bias`,
 /// one shared `q4_scale = max row range / 255`. Fields are private so the
 /// layout contract between this type and `distance::simd` stays in one
-/// file.
+/// file. `Clone` exists for the cross-tick [`LutCache`](super::LutCache),
+/// which keeps deep copies of built tables so cached entries stay valid
+/// after the arena that built them is reused.
+#[derive(Clone)]
 pub struct AdcLut {
     m: usize,
     k: usize,

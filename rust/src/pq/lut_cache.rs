@@ -1,0 +1,265 @@
+//! Cross-tick ADC LUT cache for recurring queries.
+//!
+//! The batch pipeline already aliases duplicate queries *within* one batch
+//! ([`LutArena`](super::LutArena) sharing), but a serving workload's
+//! duplicates mostly recur *across* server ticks — the same query resent
+//! seconds apart lands in a different batch and rebuilds its `m × k` table
+//! from scratch. [`LutCache`] is a small bounded LRU map from a query's
+//! exact f32 **bit pattern** plus the codebook's `(m, k)` identity to a
+//! deep-copied [`AdcLut`], shared behind an `Arc` so a hit costs one clone
+//! of a pointer instead of a full `build_luts_into` pass.
+//!
+//! Keying on bits (not values) keeps the cache loss-free by construction:
+//! a hit returns byte-for-byte the table a rebuild would produce, so cache
+//! on vs. off can never change any result (the scheduler test suite pins
+//! this). The `(m, k)` component guards against an index reopen with a
+//! different codebook shape sharing a process-wide cache.
+//!
+//! Default **off** (`--lut-cache 0`); the engine only constructs one when
+//! the operator opts in. A capacity of 0 disables the cache entirely
+//! (`get` always misses and `insert` is a no-op), so callers can hold an
+//! unconditional handle without branching.
+//!
+//! Concurrency: one `Mutex` (poison-tolerant via [`crate::util::sync::
+//! lock`]) around the whole map. Executor threads touch it once per query
+//! per tick — orders of magnitude colder than the page read path — so a
+//! single lock is the right simplicity/contention trade.
+
+use super::AdcLut;
+use crate::util::sync::lock;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Aggregate counters, for the stats frame and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LutCacheStats {
+    /// `get` calls that returned a cached table.
+    pub hits: u64,
+    /// `get` calls that found nothing (including all calls at capacity 0).
+    pub misses: u64,
+    /// Entries displaced by LRU eviction (not counting no-op inserts).
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+/// Key: the query's exact f32 bit pattern + the codebook identity it was
+/// built against. Bit keying makes `-0.0 != 0.0` and NaN payloads distinct
+/// — exactly the equivalence classes under which two LUT builds are
+/// guaranteed bitwise identical.
+type Key = (Vec<u32>, usize, usize);
+
+struct Entry {
+    lut: Arc<AdcLut>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Bounded cross-tick LRU cache of built ADC tables. See the module docs.
+pub struct LutCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl LutCache {
+    /// A cache holding at most `capacity` tables. Capacity 0 disables it
+    /// (always-miss, insert is a no-op).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    fn key(query: &[f32], m: usize, k: usize) -> Key {
+        (query.iter().map(|v| v.to_bits()).collect(), m, k)
+    }
+
+    /// Maximum resident entries.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up the table for `query` under codebook identity `(m, k)`.
+    /// A hit refreshes the entry's LRU position.
+    pub fn get(&self, query: &[f32], m: usize, k: usize) -> Option<Arc<AdcLut>> {
+        if self.capacity == 0 {
+            let mut g = lock(&self.inner);
+            g.misses += 1;
+            return None;
+        }
+        let key = Self::key(query, m, k);
+        let mut g = lock(&self.inner);
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                let lut = Arc::clone(&e.lut);
+                g.hits += 1;
+                Some(lut)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly built table for `query`. Evicts the least recently
+    /// used entry when at capacity; replaces in place on key collision
+    /// (idempotent for concurrent builders of the same query).
+    pub fn insert(&self, query: &[f32], m: usize, k: usize, lut: Arc<AdcLut>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = Self::key(query, m, k);
+        let mut g = lock(&self.inner);
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.map.get_mut(&key) {
+            e.lut = lut;
+            e.last_used = tick;
+            return;
+        }
+        if g.map.len() >= self.capacity {
+            // O(n) LRU scan: the cache is small and bounded by design.
+            if let Some(victim) =
+                g.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+            {
+                g.map.remove(&victim);
+                g.evictions += 1;
+            }
+        }
+        g.map.insert(key, Entry { lut, last_used: tick });
+    }
+
+    /// Aggregate hit/miss/eviction counters and current occupancy.
+    pub fn stats(&self) -> LutCacheStats {
+        let g = lock(&self.inner);
+        LutCacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            entries: g.map.len(),
+        }
+    }
+
+    /// Currently resident entries.
+    pub fn len(&self) -> usize {
+        lock(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, SynthSpec};
+    use crate::pq::PqCodebook;
+
+    fn codebook() -> PqCodebook {
+        let data =
+            SynthSpec::new(DatasetKind::DeepLike, 300).with_dim(16).with_clusters(4).generate(5);
+        PqCodebook::train(&data, 4, 6, 7)
+    }
+
+    #[test]
+    fn hit_returns_bitwise_identical_table() {
+        let cb = codebook();
+        let q: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let cache = LutCache::new(4);
+        assert!(cache.get(&q, cb.m, cb.k).is_none());
+        let built = Arc::new(cb.build_lut(&q));
+        cache.insert(&q, cb.m, cb.k, Arc::clone(&built));
+        let hit = cache.get(&q, cb.m, cb.k).expect("inserted entry must hit");
+        let fresh = cb.build_lut(&q);
+        assert_eq!(
+            hit.table().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fresh.table().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn bit_pattern_and_identity_are_the_key() {
+        let cb = codebook();
+        let q: Vec<f32> = vec![0.5; 16];
+        let cache = LutCache::new(4);
+        cache.insert(&q, cb.m, cb.k, Arc::new(cb.build_lut(&q)));
+        // A 1-ulp jitter is a different query: bit keying, not value keying.
+        let mut jitter = q.clone();
+        jitter[3] = f32::from_bits(jitter[3].to_bits() + 1);
+        assert!(cache.get(&jitter, cb.m, cb.k).is_none());
+        // Same bits under a different codebook identity: miss.
+        assert!(cache.get(&q, cb.m, cb.k + 1).is_none());
+        assert!(cache.get(&q, cb.m + 1, cb.k).is_none());
+        // -0.0 and 0.0 are distinct keys (a rebuild could differ bitwise
+        // only if the inputs differ bitwise — keep the classes aligned).
+        let zp = vec![0.0f32; 16];
+        let mut zn = zp.clone();
+        zn[0] = -0.0;
+        cache.insert(&zp, cb.m, cb.k, Arc::new(cb.build_lut(&zp)));
+        assert!(cache.get(&zn, cb.m, cb.k).is_none());
+        assert!(cache.get(&zp, cb.m, cb.k).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_displaces_least_recent() {
+        let cb = codebook();
+        let qs: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32; 16]).collect();
+        let cache = LutCache::new(2);
+        cache.insert(&qs[0], cb.m, cb.k, Arc::new(cb.build_lut(&qs[0])));
+        cache.insert(&qs[1], cb.m, cb.k, Arc::new(cb.build_lut(&qs[1])));
+        // Touch q0 so q1 becomes the LRU victim.
+        assert!(cache.get(&qs[0], cb.m, cb.k).is_some());
+        cache.insert(&qs[2], cb.m, cb.k, Arc::new(cb.build_lut(&qs[2])));
+        assert!(cache.get(&qs[1], cb.m, cb.k).is_none(), "LRU entry must be evicted");
+        assert!(cache.get(&qs[0], cb.m, cb.k).is_some());
+        assert!(cache.get(&qs[2], cb.m, cb.k).is_some());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_without_eviction() {
+        let cb = codebook();
+        let q = vec![1.5f32; 16];
+        let cache = LutCache::new(1);
+        cache.insert(&q, cb.m, cb.k, Arc::new(cb.build_lut(&q)));
+        cache.insert(&q, cb.m, cb.k, Arc::new(cb.build_lut(&q)));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_cache() {
+        let cb = codebook();
+        let q = vec![2.0f32; 16];
+        let cache = LutCache::new(0);
+        cache.insert(&q, cb.m, cb.k, Arc::new(cb.build_lut(&q)));
+        assert!(cache.get(&q, cb.m, cb.k).is_none());
+        assert!(cache.is_empty());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 1, 0));
+    }
+}

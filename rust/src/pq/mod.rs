@@ -12,12 +12,14 @@
 
 mod codebook;
 mod kmeans;
+mod lut_cache;
 
 pub use codebook::{
     pack_nibbles, storage_bytes, unpack_nibbles, AdcLut, LutArena, PqCode, PqCodebook, PqEncoder,
     PQ4_MAX_K,
 };
 pub use kmeans::kmeans;
+pub use lut_cache::{LutCache, LutCacheStats};
 
 #[cfg(test)]
 mod tests {

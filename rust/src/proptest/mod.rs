@@ -63,6 +63,29 @@ pub fn gen_dim(rng: &mut XorShift) -> usize {
     DIMS[rng.next_below(DIMS.len())]
 }
 
+/// A batch of `n` near-duplicate queries: the first is drawn fresh, every
+/// later one is the first with per-coordinate multiplicative jitter of
+/// relative size ≲ `rel_jitter` (the shape of a resent serving query whose
+/// floats got re-rounded). Models the duplicate-heavy batches the lossy
+/// LUT-sharing policy (`lut_share_threshold < 1.0`) exists for.
+pub fn gen_near_duplicates(
+    rng: &mut XorShift,
+    dim: usize,
+    n: usize,
+    scale: f32,
+    rel_jitter: f32,
+) -> Vec<Vec<f32>> {
+    let base = gen_vec(rng, dim, scale);
+    let mut out = Vec::with_capacity(n);
+    out.push(base.clone());
+    for _ in 1..n {
+        out.push(
+            base.iter().map(|&v| v * (1.0 + rel_jitter * rng.next_gaussian())).collect(),
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

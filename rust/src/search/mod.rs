@@ -74,6 +74,23 @@
 //!   default share policy only aliases bit-identical queries), and the
 //!   result reservoir's retained set is order-independent, so moving the
 //!   exact scans out of the deferred pipeline changes timing only.
+//! * **Cross-tick LUT cache** ([`SearchContext::lut_cache`], default off):
+//!   a cache hit returns byte-for-byte the table a rebuild would produce —
+//!   the cache keys on the query's exact f32 bit pattern plus the
+//!   codebook's `(m, k)` identity (see [`crate::pq::LutCache`]) — so
+//!   resolving a LUT from the cache instead of building it can never
+//!   change a result. [`QueryStats::lut_cache_hits`] counts the skipped
+//!   builds.
+//! * **I/O-overlapped rerank**: while a round's deduplicated `begin_read`
+//!   is in flight, the topology + exact-scan phase already runs for every
+//!   batchmate whose selected pages were all satisfied from the page cache
+//!   (cached pages never enter the round's read list, so these queries
+//!   need none of the in-flight bytes). Each query mutates only its own
+//!   cursor and stats plus shared scratch that is cleared per query, so
+//!   overlapping cache-only batchmates with the wait reorders work
+//!   *across* queries without reordering any single query's state machine
+//!   — every per-query candidate order, and therefore every result, is
+//!   untouched.
 //!
 //! Speculation is sequential-only; it also never changes results, so the
 //! parity holds against the speculating one-query path. Stats keep their
@@ -87,6 +104,7 @@
 //! [`QueryStats::spec_hits`]: crate::metrics::QueryStats::spec_hits
 //! [`QueryStats::batch_shared_ios`]: crate::metrics::QueryStats::batch_shared_ios
 //! [`QueryStats::lut_reused`]: crate::metrics::QueryStats::lut_reused
+//! [`QueryStats::lut_cache_hits`]: crate::metrics::QueryStats::lut_cache_hits
 
 mod candidates;
 
@@ -98,8 +116,9 @@ use crate::distance::BatchScanner;
 use crate::io::{PageStore, PendingRead};
 use crate::layout::{IndexMeta, PageRef};
 use crate::metrics::{PageFaultRecord, QueryStats};
-use crate::pq::{AdcLut, LutArena, PqCodebook};
+use crate::pq::{AdcLut, LutArena, LutCache, PqCodebook};
 use crate::Result;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Tunables of one search (paper notation: L = pool, b = I/O batch).
@@ -242,6 +261,10 @@ pub struct SearchContext<'a> {
     pub memcodes: &'a MemCodes,
     pub scanner: &'a dyn BatchScanner,
     pub pq: &'a PqCodebook,
+    /// Cross-tick LUT cache (`None` = off, the default). Consulted only by
+    /// [`search_batch`]: recurring bit-identical queries skip their LUT
+    /// build entirely across server ticks, loss-free by construction.
+    pub lut_cache: Option<&'a LutCache>,
 }
 
 /// Exact scans deferred until the next I/O wait (paper §5 pipeline);
@@ -874,6 +897,9 @@ pub struct BatchScratch {
     /// For each `round_ids` entry, the query that first wanted it — the
     /// query charged for the physical recovery work (CRC checks, retries).
     round_owner: Vec<usize>,
+    /// Per-round flags: queries whose topology + scan phase already ran
+    /// during the I/O overlap window (selection fully cache-satisfied).
+    round_done: Vec<bool>,
 }
 
 impl BatchScratch {
@@ -888,6 +914,7 @@ impl BatchScratch {
             nbr_dists: Vec::new(),
             round_ids: Vec::new(),
             round_owner: Vec::new(),
+            round_done: Vec::new(),
         }
     }
 
@@ -941,6 +968,130 @@ fn gather_page(
     Ok(())
 }
 
+/// One query's topology phase (gather + ADC scoring + candidate pushes)
+/// and exact scans for one batch round, against the round's shared disk
+/// bytes and the page cache. Factored out of the round loop so queries
+/// whose selection was fully cache-satisfied can run while the round's
+/// deduplicated read is still in flight — for those calls `round_bufs` is
+/// empty and never indexed, because none of their pages appear in
+/// `round_ids`. The call mutates only `cur`/`st` plus shared scratch that
+/// is cleared on entry, so the relative order of batchmates can never
+/// change any query's result (module docs, "I/O-overlapped rerank").
+#[allow(clippy::too_many_arguments)]
+fn process_query_round(
+    ctx: &SearchContext<'_>,
+    query: &[f32],
+    lut: &AdcLut,
+    cur: &mut QueryCursor,
+    round_ids: &[u32],
+    round_bufs: &[Vec<u8>],
+    failed: &[u32],
+    nbr_ids: &mut Vec<u32>,
+    nbr_codes: &mut Vec<u8>,
+    nbr_dists: &mut Vec<f32>,
+    dist_buf: &mut Vec<f32>,
+    st: &mut QueryStats,
+) {
+    let meta = ctx.meta;
+    let stride = meta.vec_stride();
+    let code_w = meta.code_bytes();
+    let dtype: Dtype = meta.dtype;
+    let t_cpu = Instant::now();
+    let QueryCursor {
+        candidates,
+        results,
+        visited_vec,
+        visited_page: _,
+        epoch,
+        page_ids,
+        done: _,
+        error,
+    } = cur;
+    let epoch = *epoch;
+    nbr_ids.clear();
+    nbr_codes.clear();
+    let mut qerr: Option<anyhow::Error> = None;
+    // Gather order: disk-sourced pages in selection order, then cache
+    // hits — the sequential order, so the candidate-pool evolution is
+    // bit-identical.
+    'gather: for pass in 0..2 {
+        for &p in page_ids.iter() {
+            let from_disk = round_ids.iter().position(|&r| r == p);
+            let bytes: &[u8] = match (pass, from_disk) {
+                (0, Some(i)) => {
+                    if failed.contains(&p) {
+                        continue; // dropped this round (degraded)
+                    }
+                    round_bufs[i].as_slice()
+                }
+                (1, None) => match ctx.cache.get(p) {
+                    Some(b) => b,
+                    None => continue,
+                },
+                _ => continue,
+            };
+            if let Err(e) =
+                gather_page(ctx, bytes, pass == 0, visited_vec, epoch, nbr_ids, nbr_codes, st)
+            {
+                qerr = Some(e);
+                break 'gather;
+            }
+        }
+    }
+    if let Some(e) = qerr.take() {
+        st.compute_time += t_cpu.elapsed();
+        *error = Some(e);
+        return;
+    }
+    let n_g = nbr_ids.len();
+    lut.score_into(&nbr_codes[..], n_g, nbr_dists);
+    st.approx_dists += n_g as u64;
+    for i in 0..n_g {
+        let nb = nbr_ids[i];
+        // A neighbor can be gathered twice in one round; the epoch
+        // re-check keeps the second copy out.
+        if visited_vec[nb as usize] == epoch {
+            continue;
+        }
+        if candidates.push(nbr_dists[i], nb) {
+            visited_vec[nb as usize] = epoch;
+        }
+    }
+    // Exact scans (lines 21-23). The reservoir's retained set is
+    // order-independent, so scanning here instead of deferred into the
+    // next I/O wait changes timing only, never results.
+    for &p in page_ids.iter() {
+        let bytes: &[u8] = if let Some(i) = round_ids.iter().position(|&r| r == p) {
+            if failed.contains(&p) {
+                continue;
+            }
+            round_bufs[i].as_slice()
+        } else if let Some(b) = ctx.cache.get(p) {
+            b
+        } else {
+            continue;
+        };
+        let page = match PageRef::parse(&bytes[..meta.page_size], stride, code_w) {
+            Ok(pg) => pg,
+            Err(e) => {
+                qerr = Some(e);
+                break;
+            }
+        };
+        let nv = page.n_vecs();
+        if dist_buf.len() < nv {
+            dist_buf.resize(nv, 0.0);
+        }
+        ctx.scanner.scan(query, page.vectors_block(), dtype, nv, dist_buf);
+        st.exact_dists += nv as u64;
+        for i in 0..nv {
+            results.push(dist_buf[i], page.orig_id(i));
+        }
+    }
+    st.compute_time += t_cpu.elapsed();
+    *error = qerr;
+}
+
 /// Run Algorithm 2 for a whole query batch in lockstep: all LUTs are built
 /// in one pass over the codebook (near-duplicates alias, see
 /// [`crate::pq::LutArena`]), and each round merges every query's frontier
@@ -975,8 +1126,6 @@ pub fn search_batch(
     }
     let meta = ctx.meta;
     let capacity = meta.capacity as u32;
-    let dtype: Dtype = meta.dtype;
-    let stride = meta.vec_stride();
     let code_w = meta.code_bytes();
 
     let BatchScratch {
@@ -989,20 +1138,68 @@ pub fn search_batch(
         nbr_dists,
         round_ids,
         round_owner,
+        round_done,
     } = batch;
 
-    // All LUTs in one subspace-major pass; the (approximate) per-query
-    // share of the build cost goes into each query's compute time.
+    // LUT resolution. Without a cross-tick cache, every LUT is built in
+    // one subspace-major pass (near-duplicates alias inside the arena);
+    // with `ctx.lut_cache` on, recurring bit-identical queries take their
+    // table straight from the cache and only the misses go through the
+    // build pass, each unique fresh build published back. Either way the
+    // resolved tables are byte-identical to a per-query rebuild (module
+    // docs), and the (approximate) per-query share of the resolution cost
+    // goes into each query's compute time.
     arena.set_share(params.lut_share, params.lut_share_threshold);
     let t_lut = Instant::now();
-    ctx.pq.build_luts_into(queries, arena);
+    let mut cached_luts: Vec<Option<Arc<AdcLut>>> = Vec::new();
+    // Maps a cache-missed query to its arena build slot; empty when the
+    // cache is off (then arena slot == query index).
+    let mut miss_pos: Vec<usize> = Vec::new();
+    match ctx.lut_cache {
+        None => ctx.pq.build_luts_into(queries, arena),
+        Some(cache) => {
+            let (m, k) = (ctx.pq.m, ctx.pq.k);
+            cached_luts.reserve(n);
+            for &q in queries.iter() {
+                cached_luts.push(cache.get(q, m, k));
+            }
+            miss_pos = vec![usize::MAX; n];
+            let mut miss_queries: Vec<&[f32]> = Vec::new();
+            for qi in 0..n {
+                if cached_luts[qi].is_none() {
+                    miss_pos[qi] = miss_queries.len();
+                    miss_queries.push(queries[qi]);
+                }
+            }
+            ctx.pq.build_luts_into(&miss_queries, arena);
+            for qi in 0..n {
+                let mi = miss_pos[qi];
+                // Publish each unique fresh build; aliased slots share an
+                // owner slot that gets published itself.
+                if mi != usize::MAX && !arena.reused(mi) {
+                    cache.insert(queries[qi], m, k, Arc::new(arena.lut(mi).clone()));
+                }
+            }
+        }
+    }
+    // Per-query table handles: cache hit → the cached copy, otherwise the
+    // query's arena slot.
+    let lut_refs: Vec<&AdcLut> = (0..n)
+        .map(|qi| match cached_luts.get(qi).and_then(|c| c.as_deref()) {
+            Some(l) => l,
+            None if miss_pos.is_empty() => arena.lut(qi),
+            None => arena.lut(miss_pos[qi]),
+        })
+        .collect();
     let lut_dt = t_lut.elapsed() / n as u32;
     for (qi, st) in stats.iter_mut().enumerate() {
         st.compute_time += lut_dt;
-        if arena.reused(qi) {
+        if matches!(cached_luts.get(qi), Some(Some(_))) {
+            st.lut_cache_hits += 1;
+        } else if arena.reused(if miss_pos.is_empty() { qi } else { miss_pos[qi] }) {
             st.lut_reused += 1;
         }
-        debug_assert_eq!(arena.lut(qi).code_bytes(), code_w);
+        debug_assert_eq!(lut_refs[qi].code_bytes(), code_w);
     }
 
     // Seed every cursor exactly like the sequential path (Alg. 2 lines
@@ -1019,7 +1216,7 @@ pub fn search_batch(
             if cur.visited_vec[e as usize] == cur.epoch {
                 continue;
             }
-            let d = ctx.memcodes.get(e).map(|c| arena.lut(qi).distance(c)).unwrap_or(0.0);
+            let d = ctx.memcodes.get(e).map(|c| lut_refs[qi].distance(c)).unwrap_or(0.0);
             if cur.candidates.push(d, e) {
                 cur.visited_vec[e as usize] = cur.epoch; // seeded (not yet expanded)
             }
@@ -1083,15 +1280,51 @@ pub fn search_batch(
             break;
         }
 
-        // One deduplicated read for the whole round (line 19).
+        // One deduplicated read for the whole round (line 19) — with the
+        // topology + scan phase of every *cache-only* query (no selected
+        // page in `round_ids`, so none of the in-flight bytes are needed)
+        // overlapped into the wait. Cached pages never enter `round_ids`,
+        // and each query touches only its own cursor plus per-call-cleared
+        // scratch, so the overlap is invisible to the remaining queries —
+        // see the module docs ("I/O-overlapped rerank").
         failed.clear();
+        round_done.clear();
+        round_done.resize(n, false);
         let mut round_bufs: Vec<Vec<u8>> = Vec::new();
         if !round_ids.is_empty() {
             let rbufs = take_bufs(page_bufs, round_ids.len(), meta.page_size);
-            let t_io = Instant::now();
+            let t_submit = Instant::now();
             let pending = ctx.store.begin_read(&round_ids[..], rbufs);
+            let submit_dt = t_submit.elapsed();
+            for qi in 0..n {
+                if cursors[qi].page_ids.is_empty()
+                    || cursors[qi].error.is_some()
+                    || cursors[qi].page_ids.iter().any(|p| round_ids.contains(p))
+                {
+                    continue;
+                }
+                process_query_round(
+                    ctx,
+                    queries[qi],
+                    lut_refs[qi],
+                    &mut cursors[qi],
+                    round_ids,
+                    &round_bufs,
+                    &failed,
+                    nbr_ids,
+                    nbr_codes,
+                    nbr_dists,
+                    dist_buf,
+                    &mut stats[qi],
+                );
+                round_done[qi] = true;
+            }
+            let t_wait = Instant::now();
             let (bufs, read_result) = pending.wait();
-            let io_dt = t_io.elapsed();
+            // Charged I/O time excludes the overlapped CPU work: the
+            // submit cost plus the residual wait, not the batchmates'
+            // scoring that hid inside it.
+            let io_dt = submit_dt + t_wait.elapsed();
             round_bufs = bufs;
             for qi in 0..n {
                 if cursors[qi].page_ids.iter().any(|p| round_ids.contains(p)) {
@@ -1143,111 +1376,28 @@ pub fn search_batch(
             }
         }
 
-        // Per-query topology phase + exact scans, in batch order. Each
+        // Per-query topology phase + exact scans for every query not
+        // already handled in the overlap window, in batch order. Each
         // query scores the one shared copy of a page's bytes through its
         // own LUT and cursor — read once, scored per wanting query.
         for qi in 0..n {
-            if cursors[qi].page_ids.is_empty() || cursors[qi].error.is_some() {
+            if round_done[qi] || cursors[qi].page_ids.is_empty() || cursors[qi].error.is_some() {
                 continue;
             }
-            let t_cpu = Instant::now();
-            let page_ids = std::mem::take(&mut cursors[qi].page_ids);
-            let epoch = cursors[qi].epoch;
-            nbr_ids.clear();
-            nbr_codes.clear();
-            let mut qerr: Option<anyhow::Error> = None;
-            // Gather order: disk-sourced pages in selection order, then
-            // cache hits — the sequential order, so the candidate-pool
-            // evolution is bit-identical.
-            'gather: for pass in 0..2 {
-                for &p in page_ids.iter() {
-                    let from_disk = round_ids.iter().position(|&r| r == p);
-                    let bytes: &[u8] = match (pass, from_disk) {
-                        (0, Some(i)) => {
-                            if failed.contains(&p) {
-                                continue; // dropped this round (degraded)
-                            }
-                            round_bufs[i].as_slice()
-                        }
-                        (1, None) => match ctx.cache.get(p) {
-                            Some(b) => b,
-                            None => continue,
-                        },
-                        _ => continue,
-                    };
-                    if let Err(e) = gather_page(
-                        ctx,
-                        bytes,
-                        pass == 0,
-                        &cursors[qi].visited_vec,
-                        epoch,
-                        nbr_ids,
-                        nbr_codes,
-                        &mut stats[qi],
-                    ) {
-                        qerr = Some(e);
-                        break 'gather;
-                    }
-                }
-            }
-            if let Some(e) = qerr.take() {
-                stats[qi].compute_time += t_cpu.elapsed();
-                cursors[qi].error = Some(e);
-                cursors[qi].page_ids = page_ids;
-                continue;
-            }
-            let n_g = nbr_ids.len();
-            arena.lut(qi).score_into(&nbr_codes[..], n_g, nbr_dists);
-            stats[qi].approx_dists += n_g as u64;
-            {
-                let cur = &mut cursors[qi];
-                for i in 0..n_g {
-                    let nb = nbr_ids[i];
-                    // A neighbor can be gathered twice in one round; the
-                    // epoch re-check keeps the second copy out.
-                    if cur.visited_vec[nb as usize] == cur.epoch {
-                        continue;
-                    }
-                    if cur.candidates.push(nbr_dists[i], nb) {
-                        cur.visited_vec[nb as usize] = cur.epoch;
-                    }
-                }
-            }
-            // Exact scans (lines 21-23). The reservoir's retained set is
-            // order-independent, so scanning here instead of deferred into
-            // the next I/O wait changes timing only, never results.
-            for &p in page_ids.iter() {
-                let bytes: &[u8] = if let Some(i) = round_ids.iter().position(|&r| r == p) {
-                    if failed.contains(&p) {
-                        continue;
-                    }
-                    round_bufs[i].as_slice()
-                } else if let Some(b) = ctx.cache.get(p) {
-                    b
-                } else {
-                    continue;
-                };
-                let page = match PageRef::parse(&bytes[..meta.page_size], stride, code_w) {
-                    Ok(pg) => pg,
-                    Err(e) => {
-                        qerr = Some(e);
-                        break;
-                    }
-                };
-                let nv = page.n_vecs();
-                if dist_buf.len() < nv {
-                    dist_buf.resize(nv, 0.0);
-                }
-                ctx.scanner.scan(queries[qi], page.vectors_block(), dtype, nv, dist_buf);
-                stats[qi].exact_dists += nv as u64;
-                let cur = &mut cursors[qi];
-                for i in 0..nv {
-                    cur.results.push(dist_buf[i], page.orig_id(i));
-                }
-            }
-            stats[qi].compute_time += t_cpu.elapsed();
-            cursors[qi].error = qerr;
-            cursors[qi].page_ids = page_ids;
+            process_query_round(
+                ctx,
+                queries[qi],
+                lut_refs[qi],
+                &mut cursors[qi],
+                round_ids,
+                &round_bufs,
+                &failed,
+                nbr_ids,
+                nbr_codes,
+                nbr_dists,
+                dist_buf,
+                &mut stats[qi],
+            );
         }
 
         // The round's buffers — one per deduplicated page — back to the

@@ -29,6 +29,30 @@ pub fn cond_wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T>
 /// poisoned while we were parked. Returns the guard and whether the wait
 /// timed out (the server's batch gather window uses this to bound how
 /// long an executor holds a partial batch waiting for batchmates).
+///
+/// # Spurious wakeups
+///
+/// Like [`Condvar::wait_timeout`], this can return `(guard, false)` with
+/// the awaited condition still false — either a spurious wakeup or a
+/// notify meant for a different waiter. Callers MUST loop, re-checking
+/// both the predicate and their own deadline each time around:
+///
+/// ```ignore
+/// let deadline = Instant::now() + window;
+/// while !ready(&g) {
+///     let remaining = deadline.saturating_duration_since(Instant::now());
+///     if remaining.is_zero() { break; }        // deadline owned by caller
+///     let (g2, _timed_out) = cond_wait_timeout(&cv, g, remaining);
+///     g = g2;                                  // ignore timed_out; re-check
+/// }
+/// ```
+///
+/// Passing the *remaining* time (not the full window) on every iteration
+/// is what keeps a stream of spurious wakeups from extending the wait
+/// indefinitely; trusting the returned `timed_out` flag alone does not —
+/// a wakeup in the last microsecond reports `false` yet the window is
+/// effectively spent. The server's executor gather loop
+/// (`engine::server`) follows exactly this shape.
 #[inline]
 pub fn cond_wait_timeout<'a, T>(
     cv: &Condvar,
@@ -71,6 +95,63 @@ mod tests {
         let g = lock(m);
         let (_g, timed_out) = cond_wait_timeout(cv, g, std::time::Duration::from_millis(1));
         assert!(timed_out);
+    }
+
+    #[test]
+    fn spurious_notifies_neither_release_early_nor_lose_the_deadline() {
+        // Regression for the gather-window idiom documented on
+        // `cond_wait_timeout`: a waiter hammered with notifies whose
+        // predicate stays false must (a) never return before its
+        // deadline and (b) still return promptly once it passes, even
+        // though every individual wait ends with `timed_out == false`.
+        use std::time::{Duration, Instant};
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new(), std::sync::atomic::AtomicBool::new(false)));
+        let pair2 = Arc::clone(&pair);
+        // Noise thread: bump the counter and notify in a tight loop —
+        // real notifies with no predicate change, the worst case the
+        // loop idiom has to absorb.
+        let noise = std::thread::spawn(move || {
+            let (m, cv, stop) = &*pair2;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                *lock(m) += 1;
+                cv.notify_all();
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        });
+
+        let (m, cv, stop) = &*pair;
+        let window = Duration::from_millis(30);
+        let start = Instant::now();
+        let deadline = start + window;
+        let mut g = lock(m);
+        let mut wakeups = 0u32;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            let (g2, _timed_out) = cond_wait_timeout(cv, g, remaining);
+            g = g2;
+            wakeups += 1;
+        }
+        drop(g);
+        let waited = start.elapsed();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        noise.join().unwrap();
+
+        assert!(
+            waited >= window,
+            "released {waited:?} into a {window:?} window after {wakeups} wakeups"
+        );
+        // The deadline must not stretch under notify pressure: each
+        // iteration waits only the *remaining* time. Generous ceiling —
+        // CI schedulers are coarse — but far below the ~unbounded drift
+        // of re-waiting the full window per wakeup.
+        assert!(
+            waited < window + Duration::from_millis(250),
+            "deadline drifted to {waited:?} under spurious notifies ({wakeups} wakeups)"
+        );
+        assert!(wakeups >= 1);
     }
 
     #[test]

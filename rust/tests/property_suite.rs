@@ -6,8 +6,8 @@ use pageann::dataset::{DatasetKind, Dtype, SynthSpec, VectorSet};
 use pageann::distance::{l2sq_f32, l2sq_query, BatchScanner, NativeBatch};
 use pageann::layout::{IdRemap, PageRef, PageWriter};
 use pageann::pagegraph::{group_into_pages, GroupingParams};
-use pageann::pq::{unpack_nibbles, PqCodebook, PqEncoder};
-use pageann::proptest::{default_cases, forall, gen_dim, gen_vec};
+use pageann::pq::{unpack_nibbles, LutArena, PqCodebook, PqEncoder};
+use pageann::proptest::{default_cases, forall, gen_dim, gen_near_duplicates, gen_vec};
 use pageann::routing::RoutingIndex;
 use pageann::search::CandidateSet;
 use pageann::util::XorShift;
@@ -270,6 +270,95 @@ fn prop_pq4_adc_tracks_decoded_distance_within_quant_step() {
                     "vector {i}: adc4 {adc} vs decoded-exact {exact} (bound {bound})"
                 );
             }
+        },
+    );
+}
+
+#[test]
+fn prop_lossy_lut_sharing_stays_within_adc_bound() {
+    // `lut_share_threshold < 1.0` (the explicitly lossy opt-in) lets a
+    // near-duplicate query score through an earlier batchmate's ADC table.
+    // The substitution error is analytically bounded: for queries a, b and
+    // any reconstruction x,
+    //   |d_a(x) − d_b(x)| = |⟨a−b, a+b−2x⟩| ≤ ‖a−b‖ · (‖a‖ + ‖b‖ + 2‖x‖).
+    // Every aliased lookup must land inside that bound (plus the PQ4 u8
+    // table-quantization step when packed, and f32 accumulation slack) on
+    // randomized jittered batches — replayable via PAGEANN_PROP_SEED.
+    forall(
+        "lossy-lut-share-bound",
+        12, // training is expensive; fewer cases
+        |rng| {
+            let dim = [16usize, 32][rng.next_below(2)];
+            let m = [4usize, 8][rng.next_below(2)];
+            let pq4 = rng.next_below(2) == 1;
+            let spec = SynthSpec::new(DatasetKind::DeepLike, 300).with_dim(dim).with_clusters(5);
+            let base = spec.generate(rng.next_u64());
+            let batch = gen_near_duplicates(rng, dim, 6, 1.0, 1e-4);
+            (base, m, pq4, batch)
+        },
+        |(base, m, pq4, batch)| {
+            let cb = if pq4 {
+                PqCodebook::train_with_k(&base, m, 16, 6, 9)
+            } else {
+                PqCodebook::train(&base, m, 6, 9)
+            };
+            let enc = PqEncoder::new(&cb);
+            let refs: Vec<&[f32]> = batch.iter().map(|v| v.as_slice()).collect();
+            let mut arena = LutArena::new();
+            arena.set_share(true, 0.999);
+            cb.build_luts_into(&refs, &mut arena);
+            // A 1e-4 relative jitter clears a 0.999 cosine screen by
+            // orders of magnitude: the batch must collapse onto one table.
+            assert!(
+                (1..batch.len()).all(|i| arena.reused(i)),
+                "near-duplicates failed to alias under the lossy policy"
+            );
+
+            let norm = |v: &[f32]| {
+                v.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32
+            };
+            let dist = |a: &[f32], b: &[f32]| {
+                a.iter()
+                    .zip(b)
+                    .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            };
+            let max_norm = batch.iter().map(|q| norm(q)).fold(0f32, f32::max);
+            let dmax = batch.iter().map(|q| dist(&batch[0], q)).fold(0f32, f32::max);
+            for qi in 1..batch.len() {
+                let own = cb.build_lut(&batch[qi]);
+                // Whichever batchmate owns the shared table, it is within
+                // dmax of the base, so ‖owner − q_qi‖ ≤ dmax + ‖q_0 − q_qi‖.
+                let delta = dmax + dist(&batch[0], &batch[qi]);
+                for i in [0usize, 7, 150, 299] {
+                    let v = base.get_f32(i);
+                    let unpacked = enc.encode(&v);
+                    let code = if cb.packed() { enc.encode_packed(&v) } else { unpacked.clone() };
+                    let shared_d = arena.lut(qi).distance(&code);
+                    let own_d = own.distance(&code);
+                    let x_norm = norm(&cb.decode(&unpacked));
+                    let quant = if cb.packed() {
+                        0.5 * (arena.lut(qi).q4_scale() + own.q4_scale()) * m as f32
+                    } else {
+                        0.0
+                    };
+                    let bound = delta * (2.0 * max_norm + 2.0 * x_norm)
+                        + quant
+                        + 1e-3 * own_d.abs().max(1.0);
+                    assert!(
+                        (shared_d - own_d).abs() <= bound,
+                        "q {qi} vec {i}: shared-table ADC {shared_d} vs own {own_d} \
+                         exceeds bound {bound}"
+                    );
+                }
+            }
+            // The exact (default) policy must keep jittered queries apart:
+            // bit keying, so nothing lossy happens unless asked for.
+            let mut exact = LutArena::new();
+            exact.set_share(true, 1.0);
+            cb.build_luts_into(&refs, &mut exact);
+            assert!(exact.built() >= 2, "distinct bit patterns aliased under the exact policy");
         },
     );
 }

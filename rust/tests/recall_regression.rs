@@ -1,0 +1,192 @@
+//! Recall/IO regression gate (ISSUE 9): pinned floors that fail the build
+//! if navigation quality quietly degrades.
+//!
+//! The parity suites (`batch_search.rs`) prove batching/scheduling changes
+//! are bit-identical to the sequential path — but bit-identity tests can't
+//! catch a regression that changes the sequential path itself (a PQ
+//! training slip, a selection-order bug, a grouping change that strands
+//! neighborhoods across pages). This suite pins absolute floors instead:
+//! the synthetic SiftLike workload has recall@10 ≈ 0.9 at `l = 80`
+//! (`index_end_to_end.rs` asserts ≥ 0.85), so floors of 0.80 (PQ8) and
+//! 0.70 (PQ4, coarser routing) leave slack for noise across I/O backends
+//! while still catching any real drop. Mean I/Os per query is the latency
+//! proxy — it is deterministic for a given index + params, where wall
+//! clock is not.
+//!
+//! The floors run under both the classic per-query loop and the batched
+//! pipeline (`PAGEANN_BATCH` ∈ {1, 8} equivalents), on every I/O backend
+//! preference, and the final test proves the gate *can* fail by injecting
+//! a result drop and requiring recall to fall below the floor.
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{
+    run_workload_batched, AnnSystem, FaultSpec, OpenOptions, PageAnnIndex, WorkloadReport,
+};
+use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
+use pageann::metrics::QueryStats;
+use pageann::vamana::VamanaParams;
+use pageann::Result;
+use std::path::PathBuf;
+
+const K: usize = 10;
+const L: usize = 80;
+const PQ8_RECALL_FLOOR: f64 = 0.80;
+const PQ4_RECALL_FLOOR: f64 = 0.70;
+/// `index_end_to_end.rs` pins `mean_ios < 80` on this workload; the
+/// regression gate allows headroom but still catches a blow-up.
+const MEAN_IOS_CEILING: f64 = 100.0;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pageann-recall-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn workload() -> Workload {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 3000).with_dim(32).with_clusters(16);
+    Workload::synthesize(&spec, 40, K, 77)
+}
+
+/// Build with the e2e suite's config; `pq_k = 16` selects the nibble-packed
+/// PQ4 fast-scan mode, `pq_k = 256` the byte-coded PQ8 default.
+fn build_index(dir: &PathBuf, w: &Workload, pq_k: usize) {
+    let cfg = BuildConfig {
+        pq_m: 8,
+        pq_k,
+        cv_placement: CvPlacement::OnPage,
+        routing_sample_frac: 0.03,
+        vamana: VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 },
+        ..Default::default()
+    };
+    IndexBuilder::new(&w.base, cfg).build(dir).unwrap();
+}
+
+fn run(idx: &PageAnnIndex, w: &Workload, batch: usize) -> WorkloadReport {
+    run_workload_batched(idx, &w.queries, Some(&w.gt), K, L, 4, batch)
+}
+
+fn check_floor(rep: &WorkloadReport, floor: f64, tag: &str) {
+    assert_eq!(rep.summary.errors, 0, "{tag}: queries failed");
+    assert!(
+        rep.summary.recall >= floor,
+        "{tag}: recall@{K} regressed to {:.4} (floor {floor})",
+        rep.summary.recall
+    );
+    let ios = rep.summary.mean_ios();
+    assert!(
+        ios < MEAN_IOS_CEILING,
+        "{tag}: mean I/Os per query regressed to {ios:.1} (ceiling {MEAN_IOS_CEILING})"
+    );
+}
+
+#[test]
+fn pq8_recall_floor_across_backends_and_batch_sizes() {
+    let dir = tmpdir("pq8");
+    let w = workload();
+    build_index(&dir, &w, 256);
+    // Backend preferences never fail the open (unavailable ones fall
+    // back), so every row runs everywhere; the CI matrix additionally
+    // pins `PAGEANN_IO` per leg, which `None` (= probe order) honors.
+    for backend in [None, Some("pread"), Some("aio"), Some("uring")] {
+        let idx = PageAnnIndex::open(
+            &dir,
+            OpenOptions {
+                io_backend: backend.map(str::to_string),
+                faults: FaultSpec::Off,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let tag_base = format!("pq8 pref={} backend={}", backend.unwrap_or("auto"), idx.io_backend());
+        let seq = run(&idx, &w, 1);
+        check_floor(&seq, PQ8_RECALL_FLOOR, &format!("{tag_base} batch=1"));
+        let batched = run(&idx, &w, 8);
+        check_floor(&batched, PQ8_RECALL_FLOOR, &format!("{tag_base} batch=8"));
+        // Batching is bit-identical to sequential, so recall and total
+        // I/Os must agree exactly — a cheap end-to-end parity pin on top
+        // of the absolute floor.
+        assert_eq!(
+            seq.summary.recall, batched.summary.recall,
+            "{tag_base}: batched recall diverged from sequential"
+        );
+        assert_eq!(
+            seq.summary.totals.ios, batched.summary.totals.ios,
+            "{tag_base}: batched total I/Os diverged from sequential"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pq4_recall_floor_with_and_without_batching() {
+    let dir = tmpdir("pq4");
+    let w = workload();
+    build_index(&dir, &w, 16);
+    let idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions { faults: FaultSpec::Off, ..Default::default() },
+    )
+    .unwrap();
+    let seq = run(&idx, &w, 1);
+    check_floor(&seq, PQ4_RECALL_FLOOR, "pq4 batch=1");
+    let batched = run(&idx, &w, 8);
+    check_floor(&batched, PQ4_RECALL_FLOOR, "pq4 batch=8");
+    assert_eq!(seq.summary.recall, batched.summary.recall, "pq4: batched recall diverged");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Result-dropping wrapper: keeps only the first `keep` of every answer.
+/// Simulates the class of regression the floors exist to catch (navigation
+/// finding fewer of the true neighbors) without touching the index.
+struct Truncating {
+    inner: PageAnnIndex,
+    keep: usize,
+}
+
+impl AnnSystem for Truncating {
+    fn name(&self) -> String {
+        "truncating".into()
+    }
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        l: usize,
+        stats: &mut QueryStats,
+    ) -> Result<Vec<u32>> {
+        let mut ids = self.inner.search_one(query, k, l, stats)?;
+        ids.truncate(self.keep);
+        Ok(ids)
+    }
+    fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes()
+    }
+}
+
+#[test]
+fn gate_detects_injected_recall_drop() {
+    // Sensitivity check: the floor must actually be able to fail. Dropping
+    // half of every answer caps recall at 0.5 < 0.80, so a gate that still
+    // passes here is asserting nothing.
+    let dir = tmpdir("inject");
+    let w = workload();
+    build_index(&dir, &w, 256);
+    let idx = PageAnnIndex::open(
+        &dir,
+        OpenOptions { faults: FaultSpec::Off, ..Default::default() },
+    )
+    .unwrap();
+    let broken = Truncating { inner: idx, keep: K / 2 };
+    for batch in [1usize, 8] {
+        let rep = run_workload_batched(&broken, &w.queries, Some(&w.gt), K, L, 4, batch);
+        assert_eq!(rep.summary.errors, 0);
+        assert!(
+            rep.summary.recall < PQ8_RECALL_FLOOR,
+            "batch={batch}: injected half-result drop not detected (recall {:.4})",
+            rep.summary.recall
+        );
+        assert!(rep.summary.recall <= 0.5 + 1e-9, "batch={batch}: truncation cap violated");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,354 @@
+//! Adaptive batch-scheduler suite (ISSUE 9): deterministic, clock-driven
+//! tests of the gather-window policy, plus end-to-end checks that the new
+//! scheduling and caching knobs never change answers.
+//!
+//! The window logic is pure arithmetic over caller-supplied timestamps
+//! ([`ArrivalTracker`] never reads a clock), so every trajectory here is
+//! exact — no sleeps, no tolerance bands. The wire-parity and LUT-cache
+//! tests then pin the end-to-end invariants: `--gather-us` (fixed mode)
+//! produces the same deterministic frames as the adaptive default, and the
+//! cross-tick LUT cache is invisible in results while visible in stats.
+
+use pageann::dataset::{DatasetKind, SynthSpec, Workload};
+use pageann::engine::{
+    AnnSystem, ArrivalTracker, BatchConfig, FaultSpec, GatherPolicy, MonotonicClock, OpenOptions,
+    PageAnnIndex, QueryClient, QueryServer, TickClock,
+};
+use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
+use pageann::metrics::QueryStats;
+use pageann::search::{BatchScratch, SearchParams};
+use pageann::vamana::VamanaParams;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hand-stepped [`TickClock`]: tests advance time explicitly, so EWMA
+/// trajectories and window sizes are exact rather than timing-dependent.
+struct ManualClock {
+    now: AtomicU64,
+}
+
+impl ManualClock {
+    fn new() -> Self {
+        Self { now: AtomicU64::new(0) }
+    }
+    fn advance(&self, us: u64) {
+        self.now.fetch_add(us, Ordering::SeqCst);
+    }
+}
+
+impl TickClock for ManualClock {
+    fn now_us(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic window-policy tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn lone_query_waits_under_ten_micros() {
+    // The acceptance bound: a lone query under the adaptive policy must
+    // wait < 10µs for batchmates that are not coming. With no arrival
+    // history the window is exactly zero.
+    let clock = ManualClock::new();
+    let mut arrivals = ArrivalTracker::new();
+    arrivals.note_arrival(clock.now_us()); // first arrival only anchors
+    let policy = GatherPolicy::Adaptive { max: Duration::from_micros(200) };
+    let w = policy.window(&arrivals, 8);
+    assert!(w < Duration::from_micros(10), "lone query would wait {w:?}");
+    assert_eq!(w, Duration::ZERO);
+}
+
+#[test]
+fn slow_arrivals_collapse_window_to_zero() {
+    // Arrivals slower than the cap: waiting the whole cap buys at most one
+    // batchmate, so the adaptive window collapses to zero.
+    let clock = ManualClock::new();
+    let mut arrivals = ArrivalTracker::new();
+    for _ in 0..5 {
+        arrivals.note_arrival(clock.now_us());
+        clock.advance(1_000); // 1ms apart >> 200µs cap
+    }
+    let policy = GatherPolicy::Adaptive { max: Duration::from_micros(200) };
+    assert_eq!(policy.window(&arrivals, 8), Duration::ZERO);
+}
+
+#[test]
+fn burst_grows_window_toward_cap() {
+    // A steady 10µs-apart burst: the EWMA converges to 10, so the window
+    // asks for (batch_max − 1) × 10µs — under the cap, it is exact.
+    let clock = ManualClock::new();
+    let mut arrivals = ArrivalTracker::new();
+    for _ in 0..50 {
+        arrivals.note_arrival(clock.now_us());
+        clock.advance(10);
+    }
+    let ewma = arrivals.ewma_us().expect("samples folded");
+    assert!((ewma - 10.0).abs() < 1e-9, "steady stream must converge exactly, got {ewma}");
+    let policy = GatherPolicy::Adaptive { max: Duration::from_micros(200) };
+    assert_eq!(policy.window(&arrivals, 8), Duration::from_micros(70));
+    // A tighter cap truncates the same demand.
+    let capped = GatherPolicy::Adaptive { max: Duration::from_micros(50) };
+    assert_eq!(capped.window(&arrivals, 8), Duration::from_micros(50));
+    // batch_max = 1 never waits: there is no batchmate to gather.
+    assert_eq!(policy.window(&arrivals, 1), Duration::ZERO);
+}
+
+#[test]
+fn ewma_reacts_to_regime_change() {
+    // 1ms-apart trickle (window 0), then a 5µs burst: the EWMA must move
+    // below the cap within a handful of samples and the window reopen.
+    let clock = ManualClock::new();
+    let mut arrivals = ArrivalTracker::new();
+    for _ in 0..10 {
+        arrivals.note_arrival(clock.now_us());
+        clock.advance(1_000);
+    }
+    let policy = GatherPolicy::Adaptive { max: Duration::from_micros(200) };
+    assert_eq!(policy.window(&arrivals, 8), Duration::ZERO);
+    for _ in 0..30 {
+        arrivals.note_arrival(clock.now_us());
+        clock.advance(5);
+    }
+    let w = policy.window(&arrivals, 8);
+    assert!(w > Duration::ZERO, "window never reopened after burst began");
+    assert!(w <= Duration::from_micros(200), "window exceeded its cap: {w:?}");
+}
+
+#[test]
+fn fixed_policy_ignores_arrival_history() {
+    // `--gather-us` pins the historical behavior exactly: the constant
+    // passes through untouched no matter what the tracker has seen.
+    let fixed = GatherPolicy::Fixed(Duration::from_micros(200));
+    let mut arrivals = ArrivalTracker::new();
+    assert_eq!(fixed.window(&arrivals, 8), Duration::from_micros(200));
+    let clock = ManualClock::new();
+    for _ in 0..20 {
+        arrivals.note_arrival(clock.now_us());
+        clock.advance(3);
+    }
+    assert_eq!(fixed.window(&arrivals, 8), Duration::from_micros(200));
+    assert_eq!(fixed.window(&arrivals, 1), Duration::from_micros(200));
+}
+
+#[test]
+fn monotonic_clock_is_nondecreasing() {
+    let clock = MonotonicClock::new();
+    let mut last = clock.now_us();
+    for _ in 0..1000 {
+        let now = clock.now_us();
+        assert!(now >= last, "clock went backwards: {now} < {last}");
+        last = now;
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: wire parity and the cross-tick LUT cache
+// ---------------------------------------------------------------------
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pageann-sched-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn build_index(dir: &PathBuf) -> Workload {
+    let spec = SynthSpec::new(DatasetKind::SiftLike, 3000).with_dim(32).with_clusters(16);
+    let w = Workload::synthesize(&spec, 16, 10, 77);
+    let cfg = BuildConfig {
+        pq_m: 8,
+        cv_placement: CvPlacement::OnPage,
+        routing_sample_frac: 0.03,
+        vamana: VamanaParams { r: 16, l_build: 40, alpha: 1.2, seed: 5, nthreads: 4 },
+        ..Default::default()
+    };
+    IndexBuilder::new(&w.base, cfg).build(dir).unwrap();
+    w
+}
+
+fn open_index(dir: &PathBuf, lut_cache_entries: usize) -> PageAnnIndex {
+    PageAnnIndex::open(
+        dir,
+        OpenOptions { faults: FaultSpec::Off, lut_cache_entries, ..Default::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn fixed_mode_wire_parity_with_adaptive_default() {
+    // `--gather-us` (fixed) vs the adaptive default: scheduling may change
+    // only *when* a tick runs, never what it answers. Every deterministic
+    // field of every frame — result ids, per-query ios, and the
+    // deterministic stats counters — must agree between the two servers.
+    let dir = tmpdir("parity");
+    let w = build_index(&dir);
+    let spawn = |gather: GatherPolicy| {
+        let idx = open_index(&dir, 0);
+        let dim = idx.meta.dim;
+        let sys: Arc<dyn AnnSystem> = Arc::new(idx);
+        QueryServer::bind("127.0.0.1:0", sys, dim)
+            .unwrap()
+            .with_batching(BatchConfig { batch_max: 4, gather, executors: 1 })
+            .spawn()
+            .unwrap()
+    };
+    let fixed = spawn(GatherPolicy::Fixed(Duration::from_micros(200)));
+    let adaptive = spawn(GatherPolicy::Adaptive { max: Duration::from_micros(200) });
+
+    let mut cf = QueryClient::connect(&fixed.addr).unwrap();
+    let mut ca = QueryClient::connect(&adaptive.addr).unwrap();
+    for qi in 0..w.queries.len() {
+        let q = w.queries.get_f32(qi);
+        let rf = cf.query(&q, 10, 60).unwrap();
+        let ra = ca.query(&q, 10, 60).unwrap();
+        assert_eq!(rf.ids, ra.ids, "q {qi}: ids diverged between fixed and adaptive");
+        assert_eq!(rf.ios, ra.ios, "q {qi}: ios diverged between fixed and adaptive");
+    }
+    let sf = cf.stats(8).unwrap();
+    let sa = ca.stats(8).unwrap();
+    for (name, f, a) in [
+        ("queries", sf.queries, sa.queries),
+        ("errors", sf.errors, sa.errors),
+        ("total_ios", sf.total_ios, sa.total_ios),
+        ("retries", sf.retries, sa.retries),
+        ("failed_ios", sf.failed_ios, sa.failed_ios),
+        ("crc_failures", sf.crc_failures, sa.crc_failures),
+        ("degraded", sf.degraded, sa.degraded),
+        ("lut_cache_hits", sf.lut_cache_hits, sa.lut_cache_hits),
+    ] {
+        assert_eq!(f, a, "stats field {name} diverged between fixed and adaptive");
+    }
+    assert_eq!(sf.queries, w.queries.len() as u64);
+    fixed.stop();
+    adaptive.stop();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn lut_cache_is_invisible_in_results_and_visible_in_stats() {
+    // Cross-tick recurrence: the same duplicate-heavy batch submitted
+    // twice. Cache off: every tick rebuilds (in-batch aliasing only).
+    // Cache on: tick 1 misses and publishes, tick 2 hits for every query
+    // whose bits recur — with bit-identical results throughout.
+    let dir = tmpdir("lutcache");
+    let w = build_index(&dir);
+    let params = SearchParams { k: 10, l: 60, ..Default::default() };
+    let q0 = w.queries.get_f32(0);
+    let q1 = w.queries.get_f32(1);
+    let q2 = w.queries.get_f32(2);
+    let pattern: [&[f32]; 6] = [&q0, &q1, &q0, &q2, &q1, &q0];
+
+    let run_tick = |idx: &PageAnnIndex, batch: &mut BatchScratch| {
+        let mut stats = vec![QueryStats::default(); pattern.len()];
+        let outs = idx.search_batch(&pattern, &params, batch, &mut stats);
+        let results: Vec<Vec<(f32, u32)>> = outs.into_iter().map(|o| o.unwrap()).collect();
+        (results, stats)
+    };
+
+    let off = open_index(&dir, 0);
+    assert!(off.lut_cache_stats().is_none(), "entries=0 must not construct a cache");
+    let mut batch_off = BatchScratch::new();
+    let (ref1, st_off1) = run_tick(&off, &mut batch_off);
+    let (ref2, st_off2) = run_tick(&off, &mut batch_off);
+    assert_eq!(ref1.len(), ref2.len());
+    for (a, b) in ref1.iter().zip(ref2.iter()) {
+        assert_eq!(a, b, "cache-off ticks disagree with themselves");
+    }
+    let off_hits: u64 = st_off1.iter().chain(st_off2.iter()).map(|s| s.lut_cache_hits).sum();
+    assert_eq!(off_hits, 0, "cache off must never report hits");
+
+    let on = open_index(&dir, 8);
+    let mut batch_on = BatchScratch::new();
+    let (tick1, st1) = run_tick(&on, &mut batch_on);
+    let (tick2, st2) = run_tick(&on, &mut batch_on);
+    for (j, (got, want)) in tick1.iter().chain(tick2.iter()).zip(ref1.iter().cycle()).enumerate() {
+        assert_eq!(got.len(), want.len(), "q {j}: result count");
+        for (rank, ((gd, gi), (wd, wi))) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(gi, wi, "q {j} rank {rank}: id changed by the LUT cache");
+            assert_eq!(
+                gd.to_bits(),
+                wd.to_bits(),
+                "q {j} rank {rank}: distance not bit-identical under the LUT cache"
+            );
+        }
+    }
+    // Tick 1: all 6 queries miss (3 distinct builds + 3 in-arena aliases).
+    let hits1: u64 = st1.iter().map(|s| s.lut_cache_hits).sum();
+    assert_eq!(hits1, 0, "first tick cannot hit an empty cache");
+    assert_eq!(st1.iter().map(|s| s.lut_reused).sum::<u64>(), 3);
+    // Tick 2: every query's bits recur → all 6 hit; nothing is rebuilt or
+    // aliased because nothing is built at all.
+    let hits2: u64 = st2.iter().map(|s| s.lut_cache_hits).sum();
+    assert_eq!(hits2, 6, "second tick must be served entirely from the cache");
+    assert_eq!(st2.iter().map(|s| s.lut_reused).sum::<u64>(), 0);
+    let cs = on.lut_cache_stats().expect("cache constructed");
+    assert_eq!(cs.entries, 3, "3 distinct bit patterns resident");
+    assert_eq!(cs.hits, 6);
+    assert_eq!(cs.misses, 6, "6 lookups on the cold tick missed");
+    assert_eq!(cs.evictions, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn lut_cache_hits_flow_through_server_stats_frame() {
+    // Full wire path: two concurrent identical queries per round so the
+    // executor forms a real batch (the batch=1 bypass routes through the
+    // sequential path, which never consults the cache). Round 1 populates;
+    // round 2 must report cross-tick hits in the PANT frame.
+    let dir = tmpdir("lutwire");
+    let w = build_index(&dir);
+    let idx = open_index(&dir, 8);
+    let dim = idx.meta.dim;
+    let sys: Arc<dyn AnnSystem> = Arc::new(idx);
+    let handle = QueryServer::bind("127.0.0.1:0", sys, dim)
+        .unwrap()
+        .with_batching(BatchConfig {
+            batch_max: 2,
+            gather: GatherPolicy::Fixed(Duration::from_secs(2)),
+            executors: 1,
+        })
+        .spawn()
+        .unwrap();
+    let addr = handle.addr;
+    let q = w.queries.get_f32(0);
+    let round = |tag: &str| {
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let qv = q.clone();
+                s.spawn(move || {
+                    let mut c = QueryClient::connect(&addr).unwrap();
+                    let resp = c.query(&qv, 10, 60).unwrap();
+                    assert!(!resp.ids.is_empty(), "{tag}: empty result");
+                });
+            }
+        });
+    };
+    round("round1");
+    round("round2");
+    let mut c = QueryClient::connect(&addr).unwrap();
+    let snap = c.stats(8).unwrap();
+    assert_eq!(snap.queries, 4);
+    assert_eq!(snap.errors, 0);
+    // Round 1's pair shares in-batch (1 alias); round 2's pair hits the
+    // cross-tick cache (2 hits) — but if the two clients of a round ever
+    // land in separate ticks the split shifts, so assert the invariant
+    // that must hold either way: the recurring query was served from the
+    // cache at least once, and no query both hit and aliased.
+    assert!(
+        snap.lut_cache_hits >= 2,
+        "identical queries across ticks never hit the cache (hits={})",
+        snap.lut_cache_hits
+    );
+    assert!(
+        snap.lut_cache_hits + snap.lut_reused <= 3,
+        "hits ({}) + aliases ({}) exceed the 3 non-building queries",
+        snap.lut_cache_hits,
+        snap.lut_reused
+    );
+    handle.stop();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
