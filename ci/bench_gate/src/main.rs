@@ -1,0 +1,553 @@
+//! CI bench-regression gate.
+//!
+//! Reads the fresh bench artifacts (`bench_out/BENCH_*.json`, written by
+//! `cargo bench --bench hot_paths` through `bench::emit`) and compares
+//! every row marked `"gate": true` against the checked-in baseline under
+//! `ci/baselines/`. A gated row more than `--threshold` (default 25%)
+//! slower than its baseline fails the build; anything the gate cannot
+//! compare — missing baseline, host-fingerprint mismatch, schema bump —
+//! prints a visible `SKIP` and passes. Baselines are only comparable on
+//! the host that blessed them, which is what the fingerprint check
+//! enforces; refresh with `--bless` (see `OBSERVABILITY.md`,
+//! "Bench gate").
+//!
+//! ```text
+//! bench_gate [--fresh <dir>] [--baseline <dir>] [--threshold <frac>] [--bless]
+//! ```
+//!
+//! Zero dependencies (hand-rolled JSON): the gate must keep building even
+//! when the main crate is broken.
+
+use std::path::{Path, PathBuf};
+
+const STEMS: [&str; 3] = ["adc", "io", "batch"];
+const DEFAULT_FRESH_DIR: &str = "bench_out";
+const DEFAULT_BASELINE_DIR: &str = "ci/baselines";
+const DEFAULT_THRESHOLD: f64 = 0.25;
+
+// ---------------------------------------------------------------------------
+// Minimal JSON (parse only — the gate never writes JSON).
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn parse(s: &str) -> Result<Json, String> {
+        Parser { b: s.as_bytes(), i: 0 }.parse()
+    }
+
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn parse(mut self) -> Result<Json, String> {
+        let v = self.value()?;
+        self.ws();
+        if self.i != self.b.len() {
+            return Err(self.err("trailing data"));
+        }
+        Ok(v)
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("json error at byte {}: {msg}", self.i)
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            // No surrogate-pair handling: bench names and
+                            // units are ASCII; lone surrogates degrade to
+                            // the replacement character.
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    // Multi-byte UTF-8 sequence: copy it through verbatim.
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.i - 1;
+                    let end = start + len;
+                    let s = self
+                        .b
+                        .get(start..end)
+                        .and_then(|s| std::str::from_utf8(s).ok())
+                        .ok_or_else(|| self.err("bad utf-8"))?;
+                    out.push_str(s);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.i += 1; // '{'
+        let mut kv = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            if self.peek() != Some(b':') {
+                return Err(self.err("expected ':'"));
+            }
+            self.i += 1;
+            let v = self.value()?;
+            kv.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.i += 1; // '['
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comparison.
+
+/// (os, arch, isa) of the machine that produced a report. Baselines only
+/// gate runs from the machine that blessed them.
+fn fingerprint(j: &Json) -> (String, String, String) {
+    let f = |k: &str| {
+        j.get("host")
+            .and_then(|h| h.get(k))
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string()
+    };
+    (f("os"), f("arch"), f("isa"))
+}
+
+/// `(name, unit, value)` for every row; `gated_only` keeps `gate: true`.
+fn rows(j: &Json, gated_only: bool) -> Vec<(String, String, f64)> {
+    let mut out = Vec::new();
+    if let Some(rs) = j.get("rows").and_then(Json::as_arr) {
+        for r in rs {
+            if gated_only && r.get("gate").and_then(Json::as_bool) != Some(true) {
+                continue;
+            }
+            if let (Some(name), Some(unit), Some(value)) = (
+                r.get("name").and_then(Json::as_str),
+                r.get("unit").and_then(Json::as_str),
+                r.get("value").and_then(Json::as_f64),
+            ) {
+                out.push((name.to_string(), unit.to_string(), value));
+            }
+        }
+    }
+    out
+}
+
+/// One file's gate outcome: lines to print + the number of hard failures.
+fn compare(stem: &str, fresh: &Json, base: &Json, threshold: f64) -> (Vec<String>, usize) {
+    let mut lines = Vec::new();
+    let fresh_ver = fresh.get("schema_version").and_then(Json::as_f64);
+    let base_ver = base.get("schema_version").and_then(Json::as_f64);
+    if fresh_ver != base_ver {
+        lines.push(format!(
+            "SKIP {stem}: schema_version mismatch (baseline {base_ver:?} vs fresh {fresh_ver:?}) — refresh with --bless"
+        ));
+        return (lines, 0);
+    }
+    let (fo, fa, fi) = fingerprint(fresh);
+    let (bo, ba, bi) = fingerprint(base);
+    if (&fo, &fa, &fi) != (&bo, &ba, &bi) {
+        lines.push(format!(
+            "SKIP {stem}: fingerprint mismatch (baseline {bo}/{ba}/{bi} vs host {fo}/{fa}/{fi}) — bless baselines on this host to enable the gate"
+        ));
+        return (lines, 0);
+    }
+    let baseline_rows = rows(base, false);
+    let mut failures = 0;
+    for (name, unit, value) in rows(fresh, true) {
+        let Some((_, bunit, bvalue)) =
+            baseline_rows.iter().find(|(bn, _, _)| *bn == name)
+        else {
+            lines.push(format!("NEW  {stem}/{name}: {value:.2} {unit} (no baseline row)"));
+            continue;
+        };
+        if *bunit != unit {
+            lines.push(format!(
+                "SKIP {stem}/{name}: unit changed ({bunit} -> {unit}) — refresh with --bless"
+            ));
+            continue;
+        }
+        if *bvalue <= 0.0 || !bvalue.is_finite() || !value.is_finite() {
+            lines.push(format!("SKIP {stem}/{name}: non-comparable values ({bvalue} vs {value})"));
+            continue;
+        }
+        let delta = (value - bvalue) / bvalue;
+        if delta > threshold {
+            failures += 1;
+            lines.push(format!(
+                "FAIL {stem}/{name}: {value:.2} {unit} vs baseline {bvalue:.2} (+{:.1}% > {:.0}%)",
+                delta * 100.0,
+                threshold * 100.0
+            ));
+        } else {
+            lines.push(format!(
+                "OK   {stem}/{name}: {value:.2} {unit} vs baseline {bvalue:.2} ({}{:.1}%)",
+                if delta >= 0.0 { "+" } else { "" },
+                delta * 100.0
+            ));
+        }
+    }
+    (lines, failures)
+}
+
+// ---------------------------------------------------------------------------
+// File plumbing.
+
+/// Locate the fresh artifact: `<fresh>/BENCH_<stem>.json`, with repo-root
+/// and `rust/` fallbacks for one release (pre-`bench_out/` layouts).
+fn fresh_path(fresh_dir: &Path, stem: &str) -> Option<PathBuf> {
+    let name = format!("BENCH_{stem}.json");
+    let candidates =
+        [fresh_dir.join(&name), PathBuf::from(&name), Path::new("rust").join(&name)];
+    candidates.into_iter().find(|p| p.is_file())
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench_gate [--fresh <dir>] [--baseline <dir>] [--threshold <frac>] [--bless]"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let mut fresh_dir = PathBuf::from(DEFAULT_FRESH_DIR);
+    let mut baseline_dir = PathBuf::from(DEFAULT_BASELINE_DIR);
+    let mut threshold = DEFAULT_THRESHOLD;
+    let mut bless = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--fresh" => fresh_dir = args.next().map(PathBuf::from).unwrap_or_else(|| usage()),
+            "--baseline" => {
+                baseline_dir = args.next().map(PathBuf::from).unwrap_or_else(|| usage())
+            }
+            "--threshold" => {
+                threshold = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .filter(|t: &f64| t.is_finite() && *t > 0.0)
+                    .unwrap_or_else(|| usage())
+            }
+            "--bless" => bless = true,
+            _ => usage(),
+        }
+    }
+
+    if bless {
+        if let Err(e) = std::fs::create_dir_all(&baseline_dir) {
+            eprintln!("bench_gate: cannot create {}: {e}", baseline_dir.display());
+            std::process::exit(1);
+        }
+        let mut blessed = 0;
+        for stem in STEMS {
+            let Some(src) = fresh_path(&fresh_dir, stem) else {
+                println!("SKIP bless {stem}: no fresh BENCH_{stem}.json");
+                continue;
+            };
+            let dst = baseline_dir.join(format!("BENCH_{stem}.json"));
+            match std::fs::copy(&src, &dst) {
+                Ok(_) => {
+                    println!("blessed {} -> {}", src.display(), dst.display());
+                    blessed += 1;
+                }
+                Err(e) => {
+                    eprintln!("bench_gate: bless {stem} failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        println!("bench_gate: blessed {blessed} baseline(s)");
+        return;
+    }
+
+    let mut failures = 0;
+    for stem in STEMS {
+        let Some(fp) = fresh_path(&fresh_dir, stem) else {
+            println!("SKIP {stem}: no fresh BENCH_{stem}.json (run `cargo bench --bench hot_paths` first)");
+            continue;
+        };
+        let bp = baseline_dir.join(format!("BENCH_{stem}.json"));
+        if !bp.is_file() {
+            println!("SKIP {stem}: no baseline ({})", bp.display());
+            continue;
+        }
+        let (fresh, base) = match (load(&fp), load(&bp)) {
+            (Ok(f), Ok(b)) => (f, b),
+            (Err(e), _) | (_, Err(e)) => {
+                // An unreadable artifact is a hard failure: a silently
+                // skipped gate is how regressions slip through.
+                eprintln!("FAIL {stem}: {e}");
+                failures += 1;
+                continue;
+            }
+        };
+        let (lines, f) = compare(stem, &fresh, &base, threshold);
+        for l in lines {
+            println!("{l}");
+        }
+        failures += f;
+    }
+    if failures > 0 {
+        eprintln!("bench_gate: {failures} gated row(s) regressed beyond {:.0}%", threshold * 100.0);
+        std::process::exit(1);
+    }
+    println!("bench_gate: OK");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FRESH: &str = r#"{
+  "schema_version": 1,
+  "bench": "adc_hot_path",
+  "host": {"os": "linux", "arch": "x86_64", "isa": "avx2", "threads": 8},
+  "meta": {"m": 16},
+  "rows": [
+    {"name": "adc8_batch", "unit": "ns_per_code", "value": 10.0, "gate": true, "extra": {"kernel": "avx2"}},
+    {"name": "adc8_batch_scalar", "unit": "ns_per_code", "value": 40.0, "gate": true},
+    {"name": "untracked", "unit": "us", "value": 5.0, "gate": false}
+  ]
+}"#;
+
+    fn base_with(v8: f64, v8s: f64) -> Json {
+        let s = FRESH.replace("\"value\": 10.0", &format!("\"value\": {v8}"))
+            .replace("\"value\": 40.0", &format!("\"value\": {v8s}"));
+        Json::parse(&s).unwrap()
+    }
+
+    #[test]
+    fn parser_roundtrips_report_shape() {
+        let j = Json::parse(FRESH).unwrap();
+        assert_eq!(j.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("adc_hot_path"));
+        assert_eq!(fingerprint(&j), ("linux".into(), "x86_64".into(), "avx2".into()));
+        let gated = rows(&j, true);
+        assert_eq!(gated.len(), 2);
+        assert_eq!(gated[0], ("adc8_batch".into(), "ns_per_code".into(), 10.0));
+        assert_eq!(rows(&j, false).len(), 3);
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_rejects_garbage() {
+        let j = Json::parse(r#"{"a": "q\"\\\nA", "b": [1, -2.5e3, true, null]}"#).unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_str), Some("q\"\\\nA"));
+        let b = j.get("b").and_then(Json::as_arr).unwrap();
+        assert_eq!(b[1].as_f64(), Some(-2500.0));
+        assert_eq!(b[2].as_bool(), Some(true));
+        assert_eq!(b[3], Json::Null);
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn within_threshold_passes_and_regression_fails() {
+        let fresh = Json::parse(FRESH).unwrap();
+        // Baseline equal to fresh: everything OK.
+        let (lines, fails) = compare("adc", &fresh, &base_with(10.0, 40.0), 0.25);
+        assert_eq!(fails, 0);
+        assert!(lines.iter().all(|l| l.starts_with("OK")), "{lines:?}");
+        // Fresh 10.0 vs baseline 7.0 → +42.9% > 25% → one failure; the
+        // scalar row (40 vs 39, +2.6%) stays OK.
+        let (lines, fails) = compare("adc", &fresh, &base_with(7.0, 39.0), 0.25);
+        assert_eq!(fails, 1, "{lines:?}");
+        assert!(lines.iter().any(|l| l.starts_with("FAIL adc/adc8_batch")));
+        // Improvements never fail.
+        let (_, fails) = compare("adc", &fresh, &base_with(100.0, 400.0), 0.25);
+        assert_eq!(fails, 0);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_skips_instead_of_failing() {
+        let fresh = Json::parse(FRESH).unwrap();
+        let base = Json::parse(&FRESH.replace("avx2", "seed")).unwrap();
+        let (lines, fails) = compare("adc", &fresh, &base, 0.25);
+        assert_eq!(fails, 0);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].starts_with("SKIP adc: fingerprint mismatch"), "{}", lines[0]);
+    }
+
+    #[test]
+    fn missing_baseline_row_reports_new_not_fail() {
+        let fresh = Json::parse(FRESH).unwrap();
+        let base = Json::parse(&FRESH.replace("adc8_batch_scalar", "renamed_away")).unwrap();
+        let (lines, fails) = compare("adc", &fresh, &base, 0.25);
+        assert_eq!(fails, 0);
+        assert!(lines.iter().any(|l| l.starts_with("NEW  adc/adc8_batch_scalar")), "{lines:?}");
+    }
+}

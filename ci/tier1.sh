@@ -4,89 +4,176 @@
 # backend preference. Unavailable backends skip inside the suite (the
 # open_with ladder falls back), so every leg passes on every kernel —
 # including the 4.4 CI kernel, which predates io_uring.
+#
+# Leg selection: set PAGEANN_TIER1_LEGS to a comma-separated subset to
+# run only those legs, e.g.
+#     PAGEANN_TIER1_LEGS=lint,test ci/tier1.sh
+#     PAGEANN_TIER1_LEGS=bench,bench-gate ci/tier1.sh
+# Known legs: lint build test io-matrix faults batch scheduler bench
+# bench-gate sanitizers. Unlisted legs print a visible SKIP.
+#
+# Every run ends with a per-leg wall-time table; on failure the EXIT
+# trap names the leg that died so CI logs do not need spelunking.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1: pallas-lint (hard fail) =="
-# Repo-native static analysis (LINTS.md): unsafe hygiene, hot-path
-# unwraps, truncating casts, pool-bypass leaks. Any finding fails the
-# build; the binary prints its own scan runtime (sub-second).
-cargo run -q --release -p pallas-lint -- rust/src
+LEGS_FILTER="${PAGEANN_TIER1_LEGS:-}"
+summary=""
+current_leg=""
+t0_total=$(date +%s)
 
-echo "== tier-1: build =="
-cargo build --release
+want_leg() {
+    [ -z "$LEGS_FILTER" ] && return 0
+    case ",$LEGS_FILTER," in
+        *",$1,"*) return 0 ;;
+        *) echo "SKIP: leg $1 (not in PAGEANN_TIER1_LEGS=$LEGS_FILTER)"; return 1 ;;
+    esac
+}
 
-echo "== tier-1: test =="
-cargo test -q
+# run_leg <name> <title> <cmd...> — announce, time, and account one leg.
+# current_leg stays set while the command runs so the EXIT trap can name
+# the failing leg under set -e.
+run_leg() {
+    local name="$1" title="$2"
+    shift 2
+    want_leg "$name" || return 0
+    echo "== tier-1: $title =="
+    current_leg="$name"
+    local t0 t1
+    t0=$(date +%s)
+    "$@"
+    t1=$(date +%s)
+    current_leg=""
+    summary+=$(printf '  %-12s %5ss' "$name" "$((t1 - t0))")$'\n'
+}
 
-echo "== tier-1: PAGEANN_IO matrix =="
-for io in auto uring aio pread; do
-    echo "-- io backend leg: $io --"
-    if [ "$io" = auto ]; then
-        env -u PAGEANN_IO cargo test -q --test io_stores
-    else
-        PAGEANN_IO=$io cargo test -q --test io_stores
+on_exit() {
+    local rc=$?
+    if [ "$rc" -ne 0 ] && [ -n "$current_leg" ]; then
+        echo "tier-1 FAILED in leg: $current_leg (exit $rc)" >&2
     fi
-done
+    if [ -n "$summary" ]; then
+        echo "== tier-1 leg wall times =="
+        printf '%s' "$summary"
+        printf '  %-12s %5ss\n' total "$(( $(date +%s) - t0_total ))"
+    fi
+}
+trap on_exit EXIT
 
-echo "== tier-1: PAGEANN_FAULTS leg =="
-# Deterministically recoverable transient faults (ISSUE 6): every page's
-# first read fails once (fail_first) and every 97th read gets a single bit
-# flip that only the CRC32C page tail can catch. FaultSpec::Env wires this
-# into every engine open, so the end-to-end suite re-proves its
-# recall/IO/speculation assertions under injected faults; fault_matrix
-# pins its own configs and checks clean-run parity and degraded-traversal
-# semantics explicitly.
-PAGEANN_FAULTS="seed=7,fail_first=1,flip_every=97" \
-    cargo test -q --test fault_matrix --test index_end_to_end
+leg_lint() {
+    # Repo-native static analysis (LINTS.md): unsafe hygiene, hot-path
+    # unwraps, truncating casts, pool-bypass leaks. Any finding fails the
+    # build; the binary prints its own scan runtime (sub-second).
+    cargo run -q --release -p pallas-lint -- rust/src
+}
 
-echo "== tier-1: batch-parity leg (PAGEANN_BATCH=8) =="
-# ISSUE 8: batched execution must be bit-identical to sequential. The
-# batch_search suite chunks the same query stream at sizes {1,3,8} and
-# asserts bitwise result parity plus ios/hops/distance-counter equality;
-# PAGEANN_BATCH=8 also exercises the server admission-queue default.
-PAGEANN_BATCH=8 cargo test -q --test batch_search
+leg_build() {
+    cargo build --release
+}
 
-echo "== tier-1: adaptive-scheduler leg (gather policy + LUT cache + recall gate) =="
-# ISSUE 9: the scheduler suite pins the adaptive gather window against a
-# manual clock (lone queries must not wait), proves --gather-us fixed
-# mode is wire-identical to the adaptive default, and shows cross-tick
-# LUT cache hits change stats but never results. recall_regression pins
-# absolute recall@10 / mean-IO floors under batch {1,8} on every backend
-# and proves the gate fails on an injected result drop. PAGEANN_BATCH=8
-# matches the batch-parity leg so the server default path is the one the
-# floors certify.
-PAGEANN_BATCH=8 cargo test -q --test scheduler --test recall_regression
+leg_test() {
+    cargo test -q
+}
 
-echo "== tier-1: bench rows (BENCH_adc.json, BENCH_io.json, BENCH_batch.json) =="
-cargo bench --bench hot_paths
-
-echo "== tier-1: sanitizers (best-effort) =="
-# TSan/ASan need nightly + rust-src (-Zbuild-std) and Miri needs its
-# component; the offline CI image has none of them, so each leg probes
-# and prints a visible SKIP instead of failing. Developer machines with
-# a full nightly run the whole matrix.
-host_triple="$(rustc -vV | sed -n 's/^host: //p')"
-if rustc +nightly -vV >/dev/null 2>&1 \
-    && rustc +nightly --print sysroot >/dev/null 2>&1 \
-    && [ -d "$(rustc +nightly --print sysroot)/lib/rustlib/src/rust/library" ]; then
-    for san in thread address; do
-        echo "-- sanitizer leg: $san --"
-        RUSTFLAGS="-Zsanitizer=$san" RUSTDOCFLAGS="-Zsanitizer=$san" \
-            cargo +nightly test -q -Zbuild-std --target "$host_triple" \
-            --test io_stores --test fault_matrix
+leg_io_matrix() {
+    for io in auto uring aio pread; do
+        echo "-- io backend leg: $io --"
+        if [ "$io" = auto ]; then
+            env -u PAGEANN_IO cargo test -q --test io_stores
+        else
+            PAGEANN_IO=$io cargo test -q --test io_stores
+        fi
     done
-else
-    echo "SKIP: sanitizer legs (nightly toolchain with rust-src not available)"
-fi
-if cargo +nightly miri --version >/dev/null 2>&1; then
-    echo "-- miri leg: pure-rust kernels --"
-    # Raw syscalls (io_uring/AIO/pread) are unsupported under Miri; scope
-    # the leg to the pure-Rust kernel and layout unit tests.
-    cargo +nightly miri test -q -p pageann --lib \
-        distance:: layout:: pq:: util:: cache::
-else
-    echo "SKIP: miri leg (cargo +nightly miri not available)"
-fi
+}
+
+leg_faults() {
+    # Deterministically recoverable transient faults (ISSUE 6): every page's
+    # first read fails once (fail_first) and every 97th read gets a single bit
+    # flip that only the CRC32C page tail can catch. FaultSpec::Env wires this
+    # into every engine open, so the end-to-end suite re-proves its
+    # recall/IO/speculation assertions under injected faults; fault_matrix
+    # pins its own configs and checks clean-run parity and degraded-traversal
+    # semantics explicitly.
+    PAGEANN_FAULTS="seed=7,fail_first=1,flip_every=97" \
+        cargo test -q --test fault_matrix --test index_end_to_end
+}
+
+leg_batch() {
+    # ISSUE 8: batched execution must be bit-identical to sequential. The
+    # batch_search suite chunks the same query stream at sizes {1,3,8} and
+    # asserts bitwise result parity plus ios/hops/distance-counter equality;
+    # PAGEANN_BATCH=8 also exercises the server admission-queue default.
+    PAGEANN_BATCH=8 cargo test -q --test batch_search
+}
+
+leg_scheduler() {
+    # ISSUE 9: the scheduler suite pins the adaptive gather window against a
+    # manual clock (lone queries must not wait), proves --gather-us fixed
+    # mode is wire-identical to the adaptive default, and shows cross-tick
+    # LUT cache hits change stats but never results. recall_regression pins
+    # absolute recall@10 / mean-IO floors under batch {1,8} on every backend
+    # and proves the gate fails on an injected result drop. PAGEANN_BATCH=8
+    # matches the batch-parity leg so the server default path is the one the
+    # floors certify. ISSUE 10 extended the suite to assert the PANT stats
+    # frame carries arrival/gather/phase histograms under this config.
+    PAGEANN_BATCH=8 cargo test -q --test scheduler --test recall_regression
+}
+
+leg_bench() {
+    # Bench artifacts land in gitignored bench_out/ (OBSERVABILITY.md);
+    # PAGEANN_BENCH_OUT pins them to the repo root even if cargo bench
+    # runs with a package-root cwd.
+    PAGEANN_BENCH_OUT=bench_out cargo bench --bench hot_paths
+}
+
+leg_bench_gate() {
+    # Compare the fresh bench_out/BENCH_*.json against ci/baselines/.
+    # Seed baselines carry a sentinel host fingerprint, so until a real
+    # host blesses (`cargo run -p bench_gate -- --bless`) this leg prints
+    # a visible SKIP per file and stays green; >25% regressions on a
+    # blessed host hard-fail tier-1.
+    cargo run -q --release -p bench_gate
+}
+
+leg_sanitizers() {
+    # TSan/ASan need nightly + rust-src (-Zbuild-std) and Miri needs its
+    # component; the offline CI image has none of them, so each leg probes
+    # and prints a visible SKIP instead of failing. Developer machines with
+    # a full nightly run the whole matrix.
+    local host_triple
+    host_triple="$(rustc -vV | sed -n 's/^host: //p')"
+    if rustc +nightly -vV >/dev/null 2>&1 \
+        && rustc +nightly --print sysroot >/dev/null 2>&1 \
+        && [ -d "$(rustc +nightly --print sysroot)/lib/rustlib/src/rust/library" ]; then
+        for san in thread address; do
+            echo "-- sanitizer leg: $san --"
+            RUSTFLAGS="-Zsanitizer=$san" RUSTDOCFLAGS="-Zsanitizer=$san" \
+                cargo +nightly test -q -Zbuild-std --target "$host_triple" \
+                --test io_stores --test fault_matrix
+        done
+    else
+        echo "SKIP: sanitizer legs (nightly toolchain with rust-src not available)"
+    fi
+    if cargo +nightly miri --version >/dev/null 2>&1; then
+        echo "-- miri leg: pure-rust kernels --"
+        # Raw syscalls (io_uring/AIO/pread) are unsupported under Miri; scope
+        # the leg to the pure-Rust kernel and layout unit tests.
+        cargo +nightly miri test -q -p pageann --lib \
+            distance:: layout:: pq:: util:: cache::
+    else
+        echo "SKIP: miri leg (cargo +nightly miri not available)"
+    fi
+}
+
+run_leg lint       "pallas-lint (hard fail)"                                    leg_lint
+run_leg build      "build"                                                      leg_build
+run_leg test       "test"                                                       leg_test
+run_leg io-matrix  "PAGEANN_IO matrix"                                          leg_io_matrix
+run_leg faults     "PAGEANN_FAULTS leg"                                         leg_faults
+run_leg batch      "batch-parity leg (PAGEANN_BATCH=8)"                         leg_batch
+run_leg scheduler  "adaptive-scheduler leg (gather policy + LUT cache + recall gate)" leg_scheduler
+run_leg bench      "bench rows (bench_out/BENCH_{adc,io,batch}.json)"           leg_bench
+run_leg bench-gate "bench regression gate (ci/baselines)"                       leg_bench_gate
+run_leg sanitizers "sanitizers (best-effort)"                                   leg_sanitizers
 
 echo "tier-1 OK"

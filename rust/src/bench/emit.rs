@@ -1,0 +1,248 @@
+//! Unified machine-readable bench emission (`BENCH_*.json`).
+//!
+//! Every bench target routes its JSON artifact through [`BenchReport`] so
+//! the files share one stable schema (`schema_version`, a host/ISA
+//! fingerprint, named rows) instead of three ad-hoc `format!` layouts.
+//! `ci/bench_gate` parses these files and compares rows marked
+//! `gate: true` against checked-in baselines (`ci/baselines/`); the
+//! fingerprint keeps it from comparing numbers across different machines.
+//! See `OBSERVABILITY.md` ("Bench gate").
+//!
+//! Artifacts land in `bench_out/` (gitignored), never the repo root;
+//! `PAGEANN_BENCH_OUT` overrides the directory so CI can pin it
+//! regardless of the bench binary's working directory.
+
+use std::path::{Path, PathBuf};
+
+/// Bumped when the JSON layout changes incompatibly.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// Default output directory, relative to the bench binary's cwd.
+pub const DEFAULT_OUT_DIR: &str = "bench_out";
+
+/// Environment override for the output directory.
+pub const OUT_DIR_ENV: &str = "PAGEANN_BENCH_OUT";
+
+/// One JSON scalar — the only value shapes bench rows need.
+#[derive(Debug, Clone)]
+pub enum Val {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Val {
+    fn render(&self, out: &mut String) {
+        match self {
+            // Rust's f64 Display never uses exponent notation and
+            // round-trips, so it is valid JSON as-is; non-finite values
+            // have no JSON spelling and degrade to null.
+            Val::Num(v) if v.is_finite() => out.push_str(&format!("{v}")),
+            Val::Num(_) => out.push_str("null"),
+            Val::Int(v) => out.push_str(&format!("{v}")),
+            Val::Str(s) => esc(s, out),
+            Val::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+}
+
+fn esc(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// One named measurement. `gate: true` marks the row for regression
+/// comparison by `ci/bench_gate` (lower value = better; a fresh value more
+/// than the gate threshold above baseline fails CI). Rows dominated by
+/// sleeps or real-device timing should stay ungated.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    /// Unit tag (`"ns_per_code"`, `"us_per_query"`, `"ratio"`, …) — part
+    /// of the row identity: the gate refuses to compare mismatched units.
+    pub unit: String,
+    pub value: f64,
+    pub gate: bool,
+    /// Free-form context (kernel name, I/O counts, …), not compared.
+    pub extra: Vec<(String, Val)>,
+}
+
+impl BenchRow {
+    pub fn new(name: &str, unit: &str, value: f64) -> Self {
+        Self { name: name.to_string(), unit: unit.to_string(), value, gate: false, extra: Vec::new() }
+    }
+
+    /// Mark this row for the CI regression gate.
+    pub fn gated(mut self) -> Self {
+        self.gate = true;
+        self
+    }
+
+    pub fn extra(mut self, key: &str, v: Val) -> Self {
+        self.extra.push((key.to_string(), v));
+        self
+    }
+}
+
+/// One bench artifact: schema header + host fingerprint + metadata + rows.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    bench: String,
+    meta: Vec<(String, Val)>,
+    rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), meta: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn meta(&mut self, key: &str, v: Val) -> &mut Self {
+        self.meta.push((key.to_string(), v));
+        self
+    }
+
+    pub fn push(&mut self, row: BenchRow) -> &mut Self {
+        self.rows.push(row);
+        self
+    }
+
+    /// Render the artifact. Key order is fixed so diffs stay readable.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512 + self.rows.len() * 128);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {BENCH_SCHEMA_VERSION},\n"));
+        s.push_str("  \"bench\": ");
+        esc(&self.bench, &mut s);
+        s.push_str(",\n  \"host\": {\"os\": ");
+        esc(std::env::consts::OS, &mut s);
+        s.push_str(", \"arch\": ");
+        esc(std::env::consts::ARCH, &mut s);
+        s.push_str(", \"isa\": ");
+        esc(crate::distance::kernels().isa, &mut s);
+        s.push_str(&format!(", \"threads\": {}}},\n", crate::util::num_threads()));
+        s.push_str("  \"meta\": {");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            esc(k, &mut s);
+            s.push_str(": ");
+            v.render(&mut s);
+        }
+        s.push_str("},\n  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str("    {\"name\": ");
+            esc(&r.name, &mut s);
+            s.push_str(", \"unit\": ");
+            esc(&r.unit, &mut s);
+            s.push_str(", \"value\": ");
+            Val::Num(r.value).render(&mut s);
+            s.push_str(&format!(", \"gate\": {}", r.gate));
+            if !r.extra.is_empty() {
+                s.push_str(", \"extra\": {");
+                for (j, (k, v)) in r.extra.iter().enumerate() {
+                    if j > 0 {
+                        s.push_str(", ");
+                    }
+                    esc(k, &mut s);
+                    s.push_str(": ");
+                    v.render(&mut s);
+                }
+                s.push('}');
+            }
+            s.push('}');
+            if i + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<stem>.json` into `dir`, creating it if needed.
+    pub fn write_to(&self, dir: &Path, stem: &str) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{stem}.json"));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<stem>.json` into [`out_dir`].
+    pub fn write(&self, stem: &str) -> std::io::Result<PathBuf> {
+        self.write_to(&out_dir(), stem)
+    }
+}
+
+/// Where bench artifacts go: `PAGEANN_BENCH_OUT` or `bench_out/`.
+pub fn out_dir() -> PathBuf {
+    std::env::var_os(OUT_DIR_ENV).map(PathBuf::from).unwrap_or_else(|| PathBuf::from(DEFAULT_OUT_DIR))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        let mut rep = BenchReport::new("unit_test");
+        rep.meta("m", Val::Int(16)).meta("label", Val::Str("a \"b\"\n".into()));
+        rep.push(
+            BenchRow::new("fast_path", "ns_per_code", 12.5)
+                .gated()
+                .extra("kernel", Val::Str("scalar".into()))
+                .extra("ok", Val::Bool(true)),
+        );
+        rep.push(BenchRow::new("slow_path", "us", 3.0));
+        rep
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let j = sample().to_json();
+        assert!(j.starts_with("{\n  \"schema_version\": 1,\n  \"bench\": \"unit_test\""), "{j}");
+        assert!(j.contains("\"host\": {\"os\": "), "{j}");
+        assert!(j.contains("\"isa\": "), "{j}");
+        assert!(j.contains(
+            "{\"name\": \"fast_path\", \"unit\": \"ns_per_code\", \"value\": 12.5, \"gate\": true"
+        ));
+        assert!(j.contains("\"extra\": {\"kernel\": \"scalar\", \"ok\": true}"));
+        assert!(j.contains("{\"name\": \"slow_path\", \"unit\": \"us\", \"value\": 3, \"gate\": false}"));
+        // Escaping: the quote and newline in the meta label are escaped.
+        assert!(j.contains("\"label\": \"a \\\"b\\\"\\n\""), "{j}");
+        // Balanced braces (structural sanity without a parser).
+        let open = j.matches('{').count();
+        let close = j.matches('}').count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn non_finite_values_become_null() {
+        let mut rep = BenchReport::new("nan");
+        rep.push(BenchRow::new("bad", "ns", f64::NAN));
+        assert!(rep.to_json().contains("\"value\": null"));
+    }
+
+    #[test]
+    fn write_to_creates_dir_and_file() {
+        let dir = std::env::temp_dir().join(format!("pageann-emit-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = sample().write_to(&dir.join("nested"), "unit").unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, sample().to_json());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -2,6 +2,7 @@
 //! and figures (DESIGN.md §5 experiment index) without criterion (offline
 //! build).
 
+pub mod emit;
 mod experiments;
 mod schemes;
 mod table;

@@ -12,7 +12,7 @@ pub mod server;
 pub use runner::{run_workload, run_workload_batched, tune_to_recall, WorkloadReport};
 pub use server::{
     ArrivalTracker, BatchConfig, GatherPolicy, MonotonicClock, PageFaultTotals, QueryClient,
-    QueryServer, ServerHandle, ServerStats, StatsSnapshot, TickClock,
+    QueryServer, ServerHandle, ServerStats, StatsSnapshot, TickClock, STAT_HIST_NAMES,
 };
 
 use crate::cache::{MemCodes, PageCache};
@@ -20,7 +20,7 @@ use crate::dataset::VectorSet;
 use crate::distance::{BatchScanner, NativeBatch};
 use crate::io::{open_with, FaultConfig, FaultStore, PageStore, SimSsdStore, SsdModel};
 use crate::layout::{IndexFiles, IndexMeta, PageRef};
-use crate::metrics::QueryStats;
+use crate::metrics::{QueryStats, TraceSink};
 use crate::pq::{LutCache, PqCodebook};
 use crate::routing::RoutingIndex;
 use crate::search::{
@@ -116,6 +116,10 @@ pub struct OpenOptions {
     /// across server ticks (see `pq::LutCache` — loss-free by
     /// construction).
     pub lut_cache_entries: usize,
+    /// Per-hop JSONL trace target (`--trace` / `PAGEANN_TRACE`). `None`
+    /// (the default) keeps tracing off at one pointer-check per hop; see
+    /// `metrics::trace` and `OBSERVABILITY.md`.
+    pub trace_path: Option<std::path::PathBuf>,
 }
 
 impl Default for OpenOptions {
@@ -132,6 +136,7 @@ impl Default for OpenOptions {
             io_backend: None,
             faults: FaultSpec::default(),
             lut_cache_entries,
+            trace_path: None,
         }
     }
 }
@@ -151,6 +156,9 @@ pub struct PageAnnIndex {
     /// Cross-tick LUT cache (`OpenOptions::lut_cache_entries` > 0); `None`
     /// keeps the zero-overhead build path.
     lut_cache: Option<LutCache>,
+    /// Per-hop trace sink (`OpenOptions::trace_path` / `PAGEANN_TRACE`);
+    /// `None` keeps the zero-overhead untraced path.
+    trace: Option<std::sync::Arc<TraceSink>>,
 }
 
 thread_local! {
@@ -209,6 +217,7 @@ impl PageAnnIndex {
             } else {
                 None
             },
+            trace: TraceSink::from_env_or(opts.trace_path.as_deref())?,
             meta,
             store,
             io_backend,
@@ -252,6 +261,7 @@ impl PageAnnIndex {
             scanner: self.scanner.as_ref(),
             pq: &self.pq,
             lut_cache: self.lut_cache.as_ref(),
+            trace: self.trace.as_deref(),
         };
         let out = search_pages(&ctx, query, &entries, params, scratch, stats)?;
         stats.total_time += t0.elapsed();
@@ -281,6 +291,7 @@ impl PageAnnIndex {
             scanner: self.scanner.as_ref(),
             pq: &self.pq,
             lut_cache: self.lut_cache.as_ref(),
+            trace: self.trace.as_deref(),
         };
         let out = search_batch(&ctx, queries, &entry_refs, params, batch, stats);
         let dt = t0.elapsed();
@@ -348,6 +359,12 @@ impl PageAnnIndex {
     /// Counters of the cross-tick LUT cache, or `None` when it is off.
     pub fn lut_cache_stats(&self) -> Option<crate::pq::LutCacheStats> {
         self.lut_cache.as_ref().map(|c| c.stats())
+    }
+
+    /// The per-hop trace sink, when tracing is on (`--trace` /
+    /// `PAGEANN_TRACE`).
+    pub fn trace_sink(&self) -> Option<&TraceSink> {
+        self.trace.as_deref()
     }
 }
 

@@ -11,7 +11,11 @@
 //! stats rep: [u32 magic 0x50414E54 "PANT"] [u64 queries] [u64 errors]
 //!            [u64 total_ios] [u64 retries] [u64 failed_ios]
 //!            [u64 crc_failures] [u64 degraded] [u64 batch_shared_ios]
-//!            [u64 lut_reused] [u64 lut_cache_hits] [u32 n]
+//!            [u64 lut_reused] [u64 lut_cache_hits]
+//!            [u32 n_hists] ([u8 name_len] [name_len bytes utf-8]
+//!             [u64 count] [f64 mean] [f64 p50] [f64 p90] [f64 p99]
+//!             [f64 p999] [f64 max]) × n_hists
+//!            [u32 n]
 //!            ([u32 page] [u64 retries] [u64 crc_failures] [u64 failed_ios]) × n
 //! ```
 //!
@@ -49,6 +53,19 @@
 //! | `--gather-us U` | `PAGEANN_GATHER_US` | unset | **fixed** gather window of `U` µs (disables adaptivity) |
 //! | `--gather-us-max U` | `PAGEANN_GATHER_US_MAX` | 200 | cap on the adaptive window |
 //! | `--lut-cache N` | `PAGEANN_LUT_CACHE` | 0 (off) | cross-tick LUT cache entries (`pq::LutCache`) |
+//! | `--trace <path>` | `PAGEANN_TRACE` | off | per-hop JSONL trace spans (`metrics::trace`) |
+//!
+//! # Telemetry
+//!
+//! Beyond the raw counters, the `PANT` frame carries a self-describing
+//! histogram section ([`STAT_HIST_NAMES`]): request inter-arrival gaps,
+//! gather-window occupancy (queries per executor tick), end-to-end query
+//! latency, and one histogram per search phase
+//! (`metrics::PhaseTimes` — gather_wait / lut_build / io_submit /
+//! io_wait / topology / rerank). The phase taxonomy, frame layout, and
+//! histogram semantics are documented in `OBSERVABILITY.md` at the repo
+//! root; [`QueryClient::stats`] decodes the frame into a
+//! [`StatsSnapshot`].
 //!
 //! Failure semantics (ISSUE 6): a failed search answers with a `PANE`
 //! error frame and the connection survives; a malformed request is
@@ -62,7 +79,7 @@
 //! region via the `PANS` stats frame.
 
 use super::AnnSystem;
-use crate::metrics::QueryStats;
+use crate::metrics::{HistSummary, LatencyHistogram, LogHistogram, QueryStats, N_PHASES};
 use crate::util::sync::{cond_wait, cond_wait_timeout, lock};
 use crate::Result;
 use std::collections::{HashMap, VecDeque};
@@ -167,18 +184,25 @@ impl ArrivalTracker {
 
     /// Record one arrival at `now_us`. The first arrival only anchors the
     /// stream; each later one folds its inter-arrival delta into the EWMA
-    /// (the first delta seeds it directly).
-    pub fn note_arrival(&mut self, now_us: u64) {
-        if let Some(last) = self.last_us {
-            let delta = now_us.saturating_sub(last) as f64;
+    /// (the first delta seeds it directly). Returns that delta in µs —
+    /// `None` on the anchoring arrival — so the caller can feed an
+    /// arrival-rate histogram from the same sample the EWMA saw.
+    pub fn note_arrival(&mut self, now_us: u64) -> Option<u64> {
+        let delta = if let Some(last) = self.last_us {
+            let d = now_us.saturating_sub(last);
+            let df = d as f64;
             self.ewma_us = if self.samples == 0 {
-                delta
+                df
             } else {
-                ARRIVAL_EWMA_ALPHA * delta + (1.0 - ARRIVAL_EWMA_ALPHA) * self.ewma_us
+                ARRIVAL_EWMA_ALPHA * df + (1.0 - ARRIVAL_EWMA_ALPHA) * self.ewma_us
             };
             self.samples += 1;
-        }
+            Some(d)
+        } else {
+            None
+        };
         self.last_us = Some(now_us);
+        delta
     }
 
     /// Current inter-arrival estimate in µs, or `None` before the second
@@ -287,6 +311,67 @@ pub struct PageFaultTotals {
     pub failed_ios: u64,
 }
 
+/// Histogram names carried in the `PANT` stats frame, in wire order.
+/// `*_us` histograms are µs-domain; `gather_occupancy` counts queries
+/// gathered per executor tick. The six phase histograms follow
+/// `metrics::PhaseTimes::NAMES` order with a `_us` suffix. See
+/// `OBSERVABILITY.md` ("Stats frame").
+pub const STAT_HIST_NAMES: [&str; 3 + N_PHASES] = [
+    "arrival_us",
+    "gather_occupancy",
+    "total_us",
+    "gather_wait_us",
+    "lut_build_us",
+    "io_submit_us",
+    "io_wait_us",
+    "topology_us",
+    "rerank_us",
+];
+
+/// Sanity bound a client places on the stats frame's histogram count.
+pub const STAT_HIST_CAP: usize = 64;
+
+/// Histogram state behind one lock: written per answered query (total +
+/// phases), per enqueue (arrival gap), and per executor tick (occupancy).
+/// Fixed memory — a few hundred u64 buckets per histogram, regardless of
+/// query volume.
+#[derive(Debug)]
+struct ServerHists {
+    /// Inter-arrival gaps between admission-queue enqueues, µs.
+    arrival_us: LogHistogram,
+    /// Queries gathered per executor tick (batch fill, 1 … batch_max).
+    gather_occupancy: LogHistogram,
+    /// End-to-end per-query latency (including gather wait), µs.
+    total_us: LatencyHistogram,
+    /// Per-phase latency, µs, indexed like `PhaseTimes::as_array`.
+    phase_us: [LatencyHistogram; N_PHASES],
+}
+
+impl Default for ServerHists {
+    fn default() -> Self {
+        Self {
+            arrival_us: LogHistogram::new(1.0, 1e7, 200),
+            gather_occupancy: LogHistogram::new(1.0, 4096.0, 64),
+            total_us: LatencyHistogram::new(),
+            phase_us: Default::default(),
+        }
+    }
+}
+
+impl ServerHists {
+    /// Named summaries in [`STAT_HIST_NAMES`] order.
+    fn summaries(&self) -> Vec<(String, HistSummary)> {
+        let mut v = Vec::with_capacity(STAT_HIST_NAMES.len());
+        v.push((STAT_HIST_NAMES[0].to_string(), self.arrival_us.summary()));
+        v.push((STAT_HIST_NAMES[1].to_string(), self.gather_occupancy.summary()));
+        v.push((STAT_HIST_NAMES[2].to_string(), self.total_us.summary()));
+        for (i, h) in self.phase_us.iter().enumerate() {
+            v.push((STAT_HIST_NAMES[3 + i].to_string(), h.summary()));
+        }
+        v
+    }
+}
+
 /// Server statistics (scraped by monitoring / tests, exported over the
 /// `PANS` stats frame).
 #[derive(Debug, Default)]
@@ -314,6 +399,9 @@ pub struct ServerStats {
     /// Per-page fault aggregation, keyed by page id. Fed from each query's
     /// `QueryStats::page_faults`; read via [`ServerStats::top_offenders`].
     page_faults: Mutex<HashMap<u32, PageFaultTotals>>,
+    /// Arrival / occupancy / total / per-phase latency histograms,
+    /// exported as the `PANT` frame's histogram section.
+    hists: Mutex<ServerHists>,
 }
 
 impl ServerStats {
@@ -347,6 +435,31 @@ impl ServerStats {
                 }
             }
         }
+        // Latency histograms: every answered query contributes one sample
+        // to the total and to each phase (zero-duration phases land in
+        // bucket 0, so counts stay comparable across histograms).
+        let mut h = lock(&self.hists);
+        h.total_us.record(q.total_time);
+        let phases = q.phases.as_array();
+        for i in 0..N_PHASES {
+            h.phase_us[i].record(phases[i]);
+        }
+    }
+
+    /// Record one inter-arrival gap (µs) into the arrival-rate histogram.
+    /// Fed by the connection threads from [`ArrivalTracker::note_arrival`].
+    pub fn note_arrival_delta(&self, delta_us: u64) {
+        lock(&self.hists).arrival_us.record(delta_us as f64);
+    }
+
+    /// Record one executor tick's batch fill (queries gathered).
+    pub fn note_gather_occupancy(&self, n: usize) {
+        lock(&self.hists).gather_occupancy.record(n as f64);
+    }
+
+    /// Named histogram summaries in wire order ([`STAT_HIST_NAMES`]).
+    pub fn hist_summaries(&self) -> Vec<(String, HistSummary)> {
+        lock(&self.hists).summaries()
     }
 
     /// The `n` worst pages, ranked by permanent failures, then CRC
@@ -370,6 +483,9 @@ struct PendingQuery {
     query: Vec<f32>,
     k: usize,
     l: usize,
+    /// When the request entered the admission queue. The executor charges
+    /// `dispatch − enqueued_at` to the query's `gather_wait` phase.
+    enqueued_at: std::time::Instant,
     reply: mpsc::Sender<(Result<Vec<u32>>, QueryStats)>,
 }
 
@@ -408,7 +524,12 @@ impl AdmissionQueue {
 /// bounded window, group by `(k, l)`, run [`AnnSystem::search_batch`], and
 /// route every reply back to its connection. Exits when the queue is both
 /// shut down and fully drained, so no pending request loses its reply.
-fn executor_loop(queue: Arc<AdmissionQueue>, system: Arc<dyn AnnSystem>, cfg: BatchConfig) {
+fn executor_loop(
+    queue: Arc<AdmissionQueue>,
+    system: Arc<dyn AnnSystem>,
+    cfg: BatchConfig,
+    stats: Arc<ServerStats>,
+) {
     loop {
         let mut batch: Vec<PendingQuery> = Vec::new();
         {
@@ -448,6 +569,9 @@ fn executor_loop(queue: Arc<AdmissionQueue>, system: Arc<dyn AnnSystem>, cfg: Ba
                 g = g2;
             }
         }
+        // Gather-window occupancy: how full this tick's batch got (always
+        // ≥ 1 — a tick only starts once it holds a request).
+        stats.note_gather_occupancy(batch.len());
         // search_batch takes one (k, l) per call, so group the gathered
         // requests; mixed ticks become one call per distinct pair.
         let mut pending = batch;
@@ -465,9 +589,16 @@ fn executor_loop(queue: Arc<AdmissionQueue>, system: Arc<dyn AnnSystem>, cfg: Ba
             pending = rest;
             let qrefs: Vec<&[f32]> = group.iter().map(|p| p.query.as_slice()).collect();
             let mut qstats = vec![QueryStats::default(); group.len()];
+            // The admission-queue wait ends here: everything before this
+            // instant is gather_wait, everything after is the search
+            // proper (whose phases search_batch accounts itself).
+            let dispatched = std::time::Instant::now();
             let results = system.search_batch(&qrefs, k, l.max(k), &mut qstats);
             drop(qrefs);
-            for ((p, res), st) in group.into_iter().zip(results).zip(qstats) {
+            for ((p, res), mut st) in group.into_iter().zip(results).zip(qstats) {
+                let gw = dispatched.saturating_duration_since(p.enqueued_at);
+                st.phases.gather_wait = gw;
+                st.total_time += gw;
                 // A closed receiver only means the connection died while
                 // waiting; nothing to do.
                 let _ = p.reply.send((res, st));
@@ -574,7 +705,8 @@ impl QueryServer {
                 let qx = Arc::clone(&q);
                 let system = self.system.clone();
                 let cfg = self.batch;
-                std::thread::spawn(move || executor_loop(qx, system, cfg));
+                let stats = self.stats.clone();
+                std::thread::spawn(move || executor_loop(qx, system, cfg, stats));
             }
             Some(q)
         } else {
@@ -635,6 +767,18 @@ fn read_u64(s: &mut TcpStream) -> std::io::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+fn read_u8(s: &mut TcpStream) -> std::io::Result<u8> {
+    let mut b = [0u8; 1];
+    s.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_f64(s: &mut TcpStream) -> std::io::Result<f64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
 /// Read and discard exactly `n` bytes — keeps the stream frame-aligned
 /// after a rejected request without allocating the full payload.
 fn drain_exact(s: &mut TcpStream, mut n: usize) -> std::io::Result<()> {
@@ -670,6 +814,19 @@ fn write_stats_reply(
         stats.lut_cache_hits.load(Ordering::Relaxed),
     ] {
         out.extend_from_slice(&v.to_le_bytes());
+    }
+    // Self-describing histogram section: clients match by name, so the
+    // server can add histograms without a wire-version bump.
+    let hists = stats.hist_summaries();
+    out.extend_from_slice(&(hists.len() as u32).to_le_bytes());
+    for (name, s) in &hists {
+        debug_assert!(name.len() <= u8::MAX as usize, "histogram name too long");
+        out.push(name.len() as u8);
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&s.count.to_le_bytes());
+        for v in [s.mean, s.p50, s.p90, s.p99, s.p999, s.max] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
     }
     out.extend_from_slice(&(offenders.len() as u32).to_le_bytes());
     for (page, t) in &offenders {
@@ -747,19 +904,25 @@ fn handle_connection(
                 // reply. The query buffer moves into the request; the next
                 // frame re-fills a fresh one.
                 let (tx, rx) = mpsc::channel();
-                {
+                let delta = {
                     let mut g = lock(&q.state);
                     // Stamp the arrival under the queue lock so the EWMA
                     // sees enqueues in the same order the executor drains
                     // them.
                     let now = q.clock.now_us();
-                    g.arrivals.note_arrival(now);
+                    let delta = g.arrivals.note_arrival(now);
                     g.q.push_back(PendingQuery {
                         query: std::mem::take(&mut query),
                         k,
                         l,
+                        enqueued_at: std::time::Instant::now(),
                         reply: tx,
                     });
+                    delta
+                };
+                // Histogram write happens outside the queue lock.
+                if let Some(d) = delta {
+                    stats.note_arrival_delta(d);
                 }
                 q.cv.notify_one();
                 match rx.recv_timeout(EXECUTOR_REPLY_TIMEOUT) {
@@ -837,8 +1000,19 @@ pub struct StatsSnapshot {
     pub batch_shared_ios: u64,
     pub lut_reused: u64,
     pub lut_cache_hits: u64,
+    /// Named histogram summaries in wire order — see [`STAT_HIST_NAMES`]
+    /// and `OBSERVABILITY.md` ("Stats frame"). µs domains except
+    /// `gather_occupancy` (queries per tick).
+    pub hists: Vec<(String, HistSummary)>,
     /// Worst pages by (permanent failures, CRC failures, retries).
     pub top_offenders: Vec<(u32, PageFaultTotals)>,
+}
+
+impl StatsSnapshot {
+    /// Look up one histogram summary by its wire name (e.g. `"arrival_us"`).
+    pub fn hist(&self, name: &str) -> Option<&HistSummary> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
 }
 
 impl QueryClient {
@@ -906,8 +1080,25 @@ impl QueryClient {
             batch_shared_ios: read_u64(&mut self.stream)?,
             lut_reused: read_u64(&mut self.stream)?,
             lut_cache_hits: read_u64(&mut self.stream)?,
+            hists: Vec::new(),
             top_offenders: Vec::new(),
         };
+        let n_hists = read_u32(&mut self.stream)? as usize;
+        anyhow::ensure!(n_hists <= STAT_HIST_CAP, "absurd histogram count {n_hists}");
+        for _ in 0..n_hists {
+            let name_len = read_u8(&mut self.stream)? as usize;
+            let mut name = vec![0u8; name_len];
+            self.stream.read_exact(&mut name)?;
+            let name = String::from_utf8_lossy(&name).into_owned();
+            let count = read_u64(&mut self.stream)?;
+            let mean = read_f64(&mut self.stream)?;
+            let p50 = read_f64(&mut self.stream)?;
+            let p90 = read_f64(&mut self.stream)?;
+            let p99 = read_f64(&mut self.stream)?;
+            let p999 = read_f64(&mut self.stream)?;
+            let max = read_f64(&mut self.stream)?;
+            snap.hists.push((name, HistSummary { count, mean, p50, p90, p99, p999, max }));
+        }
         let n = read_u32(&mut self.stream)? as usize;
         anyhow::ensure!(n <= STAT_TOP_N_CAP, "absurd offender count {n}");
         for _ in 0..n {
@@ -1091,6 +1282,58 @@ mod tests {
         let resp = client.query(&[0.0, 0.0, 0.0, 0.0], 1, 10).unwrap();
         assert_eq!(resp.ids, vec![0]);
         handle.stop();
+    }
+
+    #[test]
+    fn stats_frame_carries_arrival_and_phase_hists() {
+        // Deterministic batched setup: one executor, zero gather window —
+        // each tick drains exactly the queries already queued.
+        let cfg = BatchConfig {
+            batch_max: 4,
+            gather: GatherPolicy::Fixed(Duration::ZERO),
+            executors: 1,
+        };
+        let (handle, _) = spawn_server_with(cfg);
+        let mut client = QueryClient::connect(&handle.addr).unwrap();
+        client.query(&[5.2, 0.0, 0.0, 0.0], 3, 10).unwrap();
+        client.query(&[1.0, 0.0, 0.0, 0.0], 1, 10).unwrap();
+        let snap = client.stats(0).unwrap();
+        assert_eq!(snap.hists.len(), STAT_HIST_NAMES.len());
+        for (i, (name, _)) in snap.hists.iter().enumerate() {
+            assert_eq!(name, STAT_HIST_NAMES[i]);
+        }
+        // Two answered queries → two samples in total + every phase hist.
+        assert_eq!(snap.hist("total_us").unwrap().count, 2);
+        for name in &STAT_HIST_NAMES[3..] {
+            assert_eq!(snap.hist(name).unwrap().count, 2, "{name}");
+        }
+        // Sequential queries on one connection: exactly one inter-arrival
+        // gap, and each tick gathered exactly one query.
+        assert_eq!(snap.hist("arrival_us").unwrap().count, 1);
+        let occ = snap.hist("gather_occupancy").unwrap();
+        assert_eq!(occ.count, 2);
+        assert!(occ.max >= 1.0, "occupancy max {}", occ.max);
+        // Summaries are ordered.
+        let t = snap.hist("total_us").unwrap();
+        assert!(t.p50 <= t.p90 && t.p90 <= t.p99 && t.p99 <= t.p999);
+        handle.stop();
+    }
+
+    #[test]
+    fn stat_hist_names_follow_phase_taxonomy() {
+        use crate::metrics::PhaseTimes;
+        for (i, phase) in PhaseTimes::NAMES.iter().enumerate() {
+            assert_eq!(STAT_HIST_NAMES[3 + i], format!("{phase}_us"));
+        }
+    }
+
+    #[test]
+    fn note_arrival_returns_inter_arrival_delta() {
+        let mut t = ArrivalTracker::new();
+        assert_eq!(t.note_arrival(100), None); // anchor only
+        assert_eq!(t.note_arrival(150), Some(50));
+        assert_eq!(t.note_arrival(150), Some(0));
+        assert_eq!(t.note_arrival(250), Some(100));
     }
 
     #[test]

@@ -6,10 +6,11 @@
 //!                [--placement onpage|hybrid:<frac>|inmem] [--page-size 4096]
 //! pageann search --index <dir> [--kind sift] [--n 60000] [--k 10] [--l 64]
 //!                [--queries 100] [--sim-ssd] [--io uring|aio|pread]
+//!                [--trace <path>]
 //! pageann experiment <id>|all [--scale xs|s|m] [--workdir target/experiments]
 //! pageann serve  --index <dir> [--addr 127.0.0.1:7700] [--batch-max 8]
 //!                [--gather-us <fixed>|--gather-us-max 200] [--lut-cache 0]
-//!                [--sim-ssd] [--io uring|aio|pread]
+//!                [--sim-ssd] [--io uring|aio|pread] [--trace <path>]
 //! pageann info
 //! ```
 //!
@@ -152,6 +153,8 @@ fn cmd_search(args: &Args) -> Result<()> {
         // I/O backend preference: --io beats PAGEANN_IO beats the
         // uring → aio → pread probe; never fails the open.
         io_backend: args.flags.get("io").cloned(),
+        // Per-hop JSONL tracing: --trace beats PAGEANN_TRACE beats off.
+        trace_path: args.flags.get("trace").map(PathBuf::from),
         ..Default::default()
     };
     let idx = PageAnnIndex::open(&dir, opts)?;
@@ -167,6 +170,10 @@ fn cmd_search(args: &Args) -> Result<()> {
         rep.summary.mean_ios(),
         rep.summary.totals.read_amplification(),
     );
+    if let Some(tr) = idx.trace_sink() {
+        tr.sync();
+        eprintln!("trace: {} spans written, {} dropped", tr.emitted(), tr.dropped());
+    }
     Ok(())
 }
 
@@ -202,6 +209,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             OpenOptions::default().lut_cache_entries
         },
+        // Per-hop JSONL tracing: --trace beats PAGEANN_TRACE beats off.
+        trace_path: args.flags.get("trace").map(PathBuf::from),
         ..Default::default()
     };
     let idx = PageAnnIndex::open(&dir, opts)?;

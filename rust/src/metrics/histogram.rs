@@ -1,18 +1,185 @@
-//! Latency histogram with log-spaced buckets (1µs … 10s) for percentile
+//! Reusable log-bucketed histograms: fixed memory, mergeable, percentile
 //! reporting without storing every sample.
+//!
+//! `LogHistogram` is the general primitive — any positive value domain
+//! (latency µs, inter-arrival gaps, batch occupancy) over caller-chosen
+//! bounds. `LatencyHistogram` is the µs-domain wrapper (1µs … 10s) used
+//! throughout the query path. Semantics are documented in
+//! `OBSERVABILITY.md` ("Histogram semantics").
 
 use std::time::Duration;
 
-const BUCKETS: usize = 200;
+const DEFAULT_BUCKETS: usize = 200;
 const MIN_US: f64 = 1.0;
 const MAX_US: f64 = 10_000_000.0; // 10 s
 
+/// Compact percentile summary of one histogram — the unit that crosses
+/// the `PANT` stats wire frame and lands in bench JSON.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+/// Log-spaced bucketed histogram over `[min, max]` with a fixed number of
+/// buckets. Values below `min` clamp into bucket 0; values above `max`
+/// clamp into the last bucket (and are still reflected exactly in
+/// `max_value()`). Merging requires identical bucket geometry — merge of
+/// mismatched shapes is a debug-assert and degrades to totals-only in
+/// release builds.
 #[derive(Debug, Clone)]
-pub struct LatencyHistogram {
+pub struct LogHistogram {
+    ln_min: f64,
+    ln_span: f64,
     counts: Vec<u64>,
     total: u64,
-    sum_us: f64,
-    max_us: f64,
+    sum: f64,
+    max_seen: f64,
+}
+
+impl LogHistogram {
+    /// `min`/`max` must be positive with `min < max`; out-of-range values
+    /// clamp rather than error.
+    pub fn new(min: f64, max: f64, buckets: usize) -> Self {
+        let min = if min > 0.0 { min } else { 1.0 };
+        let max = if max > min { max } else { min * 2.0 };
+        let buckets = buckets.max(1);
+        Self {
+            ln_min: min.ln(),
+            ln_span: max.ln() - min.ln(),
+            counts: vec![0; buckets],
+            total: 0,
+            sum: 0.0,
+            max_seen: 0.0,
+        }
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Raw per-bucket counts (low bucket first).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub(crate) fn bucket_of(&self, v: f64) -> usize {
+        if !(v.ln() > self.ln_min) {
+            return 0;
+        }
+        let frac = (v.ln() - self.ln_min) / self.ln_span;
+        ((frac * self.counts.len() as f64) as usize).min(self.counts.len() - 1)
+    }
+
+    /// Representative (geometric-mid) value of bucket `b`.
+    pub(crate) fn bucket_value(&self, b: usize) -> f64 {
+        let frac = (b as f64 + 0.5) / self.counts.len() as f64;
+        (self.ln_min + frac * self.ln_span).exp()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let b = self.bucket_of(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max_seen {
+            self.max_seen = v;
+        }
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        debug_assert_eq!(self.counts.len(), other.counts.len(), "histogram shape mismatch");
+        debug_assert!(
+            (self.ln_min - other.ln_min).abs() < 1e-12
+                && (self.ln_span - other.ln_span).abs() < 1e-12,
+            "histogram bounds mismatch"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Largest value ever recorded (exact, not bucket-quantized).
+    pub fn max_value(&self) -> f64 {
+        self.max_seen
+    }
+
+    /// Approximate percentile (`p` in 0.0–1.0): the geometric mid of the
+    /// bucket holding the `⌈p·count⌉`-th sample. Monotone in `p` by
+    /// construction; the top percentile is capped at the exact max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                // Bucket mid, capped at the exact max so the top percentile
+                // never reports beyond a value that was actually seen.
+                return self.bucket_value(b).min(self.max_seen);
+            }
+        }
+        self.max_seen
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.percentile(0.999)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.total,
+            mean: self.mean(),
+            p50: self.p50(),
+            p90: self.p90(),
+            p99: self.p99(),
+            p999: self.p999(),
+            max: self.max_seen,
+        }
+    }
+}
+
+/// Latency histogram in µs (1µs … 10s, 200 log buckets).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    h: LogHistogram,
 }
 
 impl Default for LatencyHistogram {
@@ -23,76 +190,53 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn new() -> Self {
-        Self { counts: vec![0; BUCKETS], total: 0, sum_us: 0.0, max_us: 0.0 }
-    }
-
-    fn bucket_of(us: f64) -> usize {
-        if us <= MIN_US {
-            return 0;
-        }
-        let frac = (us.ln() - MIN_US.ln()) / (MAX_US.ln() - MIN_US.ln());
-        ((frac * BUCKETS as f64) as usize).min(BUCKETS - 1)
-    }
-
-    /// Representative (geometric-mid) latency of bucket `b`, in µs.
-    fn bucket_value(b: usize) -> f64 {
-        let frac = (b as f64 + 0.5) / BUCKETS as f64;
-        (MIN_US.ln() + frac * (MAX_US.ln() - MIN_US.ln())).exp()
+        Self { h: LogHistogram::new(MIN_US, MAX_US, DEFAULT_BUCKETS) }
     }
 
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_secs_f64() * 1e6;
-        self.counts[Self::bucket_of(us)] += 1;
-        self.total += 1;
-        self.sum_us += us;
-        if us > self.max_us {
-            self.max_us = us;
-        }
+        self.h.record(d.as_secs_f64() * 1e6);
     }
 
     pub fn merge(&mut self, other: &LatencyHistogram) {
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
-        }
-        self.total += other.total;
-        self.sum_us += other.sum_us;
-        self.max_us = self.max_us.max(other.max_us);
+        self.h.merge(&other.h);
     }
 
     pub fn count(&self) -> u64 {
-        self.total
+        self.h.count()
     }
 
     pub fn mean_us(&self) -> f64 {
-        if self.total == 0 {
-            0.0
-        } else {
-            self.sum_us / self.total as f64
-        }
+        self.h.mean()
     }
 
     /// Approximate percentile (0.0–1.0) in µs.
     pub fn percentile_us(&self, p: f64) -> f64 {
-        if self.total == 0 {
-            return 0.0;
-        }
-        let target = (p.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
-        let mut seen = 0u64;
-        for (b, &c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen >= target.max(1) {
-                return Self::bucket_value(b);
-            }
-        }
-        self.max_us
+        self.h.percentile(p)
     }
 
     pub fn p50_ms(&self) -> f64 {
         self.percentile_us(0.50) / 1e3
     }
 
+    pub fn p90_ms(&self) -> f64 {
+        self.percentile_us(0.90) / 1e3
+    }
+
     pub fn p99_ms(&self) -> f64 {
         self.percentile_us(0.99) / 1e3
+    }
+
+    pub fn p999_ms(&self) -> f64 {
+        self.percentile_us(0.999) / 1e3
+    }
+
+    /// Summary in µs units.
+    pub fn summary(&self) -> HistSummary {
+        self.h.summary()
+    }
+
+    pub fn inner(&self) -> &LogHistogram {
+        &self.h
     }
 }
 
@@ -135,5 +279,108 @@ mod tests {
         h.record(Duration::from_secs(100));
         assert_eq!(h.count(), 2);
         assert!(h.percentile_us(0.0) >= 0.0);
+        // Above-range samples clamp into the last bucket but keep the exact max.
+        assert!((h.inner().max_value() - 100e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn bucket_boundaries_clamp_and_cover() {
+        let h = LogHistogram::new(1.0, 1000.0, 30);
+        // Below-min and at-min land in bucket 0.
+        assert_eq!(h.bucket_of(0.0), 0);
+        assert_eq!(h.bucket_of(0.5), 0);
+        assert_eq!(h.bucket_of(1.0), 0);
+        // Above-max clamps to the last bucket.
+        assert_eq!(h.bucket_of(1000.0), 29);
+        assert_eq!(h.bucket_of(1e12), 29);
+        // bucket_of is monotone over a geometric sweep and bucket_value is
+        // a value inside the bucket's bounds.
+        let mut last = 0usize;
+        let mut v = 1.0f64;
+        while v <= 1000.0 {
+            let b = h.bucket_of(v);
+            assert!(b >= last, "bucket_of not monotone at {v}");
+            last = b;
+            let mid = h.bucket_value(b);
+            assert!(mid > 0.9 && mid < 1100.0);
+            v *= 1.07;
+        }
+        // Every bucket's representative value maps back to that bucket.
+        for b in 0..30 {
+            assert_eq!(h.bucket_of(h.bucket_value(b)), b, "bucket {b} roundtrip");
+        }
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        // xorshift-ish deterministic sample stream split three ways.
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            1.0 + (x % 1_000_000) as f64
+        };
+        let mk = || LogHistogram::new(1.0, 1e7, 64);
+        let (mut a, mut b, mut c) = (mk(), mk(), mk());
+        for i in 0..3000 {
+            let v = next();
+            [&mut a, &mut b, &mut c][i % 3].record(v);
+        }
+        // (a ⊕ b) ⊕ c  ==  a ⊕ (b ⊕ c), bucket-for-bucket.
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.bucket_counts(), right.bucket_counts());
+        assert_eq!(left.count(), right.count());
+        assert!((left.mean() - right.mean()).abs() < 1e-9);
+        assert_eq!(left.max_value(), right.max_value());
+    }
+
+    #[test]
+    fn percentiles_monotone_and_near_sorted_oracle() {
+        // Compare against the exact sorted-vector percentile: the log-bucket
+        // estimate must stay within one bucket's relative width
+        // ((1e7)^(1/200) ≈ 1.084 per bucket — allow 1.10 slack).
+        let mut x = 0xdeadbeefcafef00du64;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            2.0 + (x % 5_000_000) as f64
+        };
+        let mut h = LogHistogram::new(1.0, 1e7, 200);
+        let mut vals: Vec<f64> = (0..5000).map(|_| next()).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = 0.0f64;
+        for p in [0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999] {
+            let est = h.percentile(p);
+            assert!(est >= prev, "percentile not monotone at p={p}: {est} < {prev}");
+            prev = est;
+            let idx = ((p * vals.len() as f64).ceil() as usize).clamp(1, vals.len()) - 1;
+            let exact = vals[idx];
+            let ratio = est / exact;
+            assert!(
+                (0.90..=1.10).contains(&ratio),
+                "p={p}: estimate {est} vs oracle {exact} (ratio {ratio})"
+            );
+        }
+        // The full summary is ordered.
+        let s = h.summary();
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.p999);
+        assert!(s.p999 <= s.max * 1.10);
+    }
+
+    #[test]
+    fn summary_of_empty_is_zero() {
+        let s = LogHistogram::new(1.0, 100.0, 8).summary();
+        assert_eq!(s, HistSummary::default());
     }
 }

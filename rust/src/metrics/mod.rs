@@ -5,11 +5,73 @@
 
 mod cpu;
 mod histogram;
+pub mod trace;
 
 pub use cpu::CpuMeter;
-pub use histogram::LatencyHistogram;
+pub use histogram::{HistSummary, LatencyHistogram, LogHistogram};
+pub use trace::TraceSink;
 
 use std::time::Duration;
+
+/// Number of phases in [`PhaseTimes`] / the order of [`PhaseTimes::NAMES`].
+pub const N_PHASES: usize = 6;
+
+/// Per-phase wall-time breakdown of one query (the observability layer's
+/// phase taxonomy — see `OBSERVABILITY.md`). Every phase is a disjoint
+/// span, so `sum() ≤ total_time` always holds; the coarse
+/// `io_time`/`compute_time` pair is preserved unchanged and decomposes as
+/// `io_time = io_submit + io_wait`, `compute_time = lut_build + topology
+/// + rerank` on the search path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTimes {
+    /// Time spent parked in the server's admission queue waiting for the
+    /// gather window to close (zero outside the server path).
+    pub gather_wait: Duration,
+    /// ADC LUT construction (`build_lut_into`/`build_luts_into`),
+    /// including cross-tick cache probes.
+    pub lut_build: Duration,
+    /// Submitting page reads to the I/O backend (`begin_read`), including
+    /// speculative submissions.
+    pub io_submit: Duration,
+    /// Blocked on in-flight reads (`PendingRead::wait`).
+    pub io_wait: Duration,
+    /// Topology scan: neighbor gathering, ADC scoring, frontier pushes.
+    pub topology: Duration,
+    /// Exact-distance rerank: deferred exact scans + final result ranking.
+    pub rerank: Duration,
+}
+
+impl PhaseTimes {
+    /// Phase names in field order — the canonical spelling used by the
+    /// stats wire frame ("<name>_us" histograms) and trace spans.
+    pub const NAMES: [&'static str; N_PHASES] =
+        ["gather_wait", "lut_build", "io_submit", "io_wait", "topology", "rerank"];
+
+    pub fn as_array(&self) -> [Duration; N_PHASES] {
+        [
+            self.gather_wait,
+            self.lut_build,
+            self.io_submit,
+            self.io_wait,
+            self.topology,
+            self.rerank,
+        ]
+    }
+
+    /// Total accounted time across all phases.
+    pub fn sum(&self) -> Duration {
+        self.as_array().iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        self.gather_wait += other.gather_wait;
+        self.lut_build += other.lut_build;
+        self.io_submit += other.io_submit;
+        self.io_wait += other.io_wait;
+        self.topology += other.topology;
+        self.rerank += other.rerank;
+    }
+}
 
 /// One page's fault tally within a single query: recorded by the search
 /// read path whenever a page needed retries, failed checksum verification,
@@ -92,6 +154,10 @@ pub struct QueryStats {
     pub compute_time: Duration,
     /// End-to-end query latency.
     pub total_time: Duration,
+    /// Fine-grained per-phase breakdown (disjoint spans; `phases.sum() ≤
+    /// total_time`). The coarse `io_time`/`compute_time` pair above is
+    /// kept bit-compatible for existing consumers.
+    pub phases: PhaseTimes,
 }
 
 impl QueryStats {
@@ -116,6 +182,7 @@ impl QueryStats {
         self.io_time += other.io_time;
         self.compute_time += other.compute_time;
         self.total_time += other.total_time;
+        self.phases.merge(&other.phases);
     }
 
     /// Read amplification: bytes fetched / bytes useful. 1.0 is ideal.
@@ -227,6 +294,21 @@ mod tests {
             a.page_faults,
             vec![PageFaultRecord { page: 7, retries: 2, crc_failures: 1, failed: false }]
         );
+    }
+
+    #[test]
+    fn phase_times_sum_and_merge() {
+        let mut a = QueryStats::default();
+        a.phases.lut_build = Duration::from_micros(10);
+        a.phases.io_wait = Duration::from_micros(30);
+        let mut b = QueryStats::default();
+        b.phases.gather_wait = Duration::from_micros(5);
+        b.phases.rerank = Duration::from_micros(7);
+        a.merge(&b);
+        assert_eq!(a.phases.lut_build, Duration::from_micros(10));
+        assert_eq!(a.phases.gather_wait, Duration::from_micros(5));
+        assert_eq!(a.phases.sum(), Duration::from_micros(52));
+        assert_eq!(PhaseTimes::NAMES.len(), a.phases.as_array().len());
     }
 
     #[test]

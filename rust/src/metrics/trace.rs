@@ -1,0 +1,416 @@
+//! Opt-in bounded query tracing: one JSONL span record per hop.
+//!
+//! Off by default (a `None` check per hop is the entire happy-path cost).
+//! Enabled via `--trace <path>` or `PAGEANN_TRACE=<path>`: every hop of
+//! every query appends one JSON line — page ids wanted, speculation
+//! hit/miss, retries, and per-phase durations — to the trace file. A
+//! dedicated writer thread drains a bounded in-memory queue; when the
+//! writer falls behind, new spans are *dropped and counted* instead of
+//! ever blocking the query path. The JSONL schema is documented in
+//! `OBSERVABILITY.md` ("Trace JSONL schema").
+
+use crate::util::sync::{cond_wait, cond_wait_timeout, lock};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Version stamped into the trace file's `open` record; bump on any
+/// field change to the hop span schema.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// Default bounded-queue capacity (spans). ~100 bytes/span, so the queue
+/// caps at sub-MB memory even when the writer stalls completely.
+pub const DEFAULT_CAPACITY: usize = 8192;
+
+struct Queue {
+    q: VecDeque<String>,
+    shutdown: bool,
+    /// True while the writer holds drained-but-unflushed lines, so
+    /// `sync()` really means "on disk", not just "dequeued".
+    in_flight: bool,
+}
+
+struct Shared {
+    state: Mutex<Queue>,
+    /// Producers → writer: "there is work".
+    cv: Condvar,
+    /// Writer → `sync()` waiters: "queue drained and flushed".
+    drained: Condvar,
+    /// Test/debug hook: while true the writer parks without draining, so
+    /// queue-full drop behavior becomes deterministic.
+    paused: AtomicBool,
+    dropped: AtomicU64,
+    emitted: AtomicU64,
+    cap: usize,
+}
+
+/// One hop of one query, as recorded by the search loop. All durations
+/// are µs of wall time charged to this query for this hop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HopSpan<'a> {
+    /// Process-wide query sequence number (`TraceSink::next_query_id`).
+    pub query: u64,
+    /// Hop index within the query, starting at 0.
+    pub hop: u64,
+    /// Queries sharing this round's deduplicated read (1 = sequential).
+    pub batch: u64,
+    /// Page ids this query wanted this hop (cache hits included).
+    pub pages: &'a [u32],
+    /// Pages of `pages` served from the in-memory cache.
+    pub cache_hits: u64,
+    /// Speculatively-read pages this hop consumed.
+    pub spec_hits: u64,
+    /// Speculatively-read pages this hop discarded.
+    pub spec_wasted: u64,
+    /// Read attempts retried-then-OK during this hop.
+    pub retries: u64,
+    /// Pages that stayed unreadable and were skipped this hop.
+    pub failed_ios: u64,
+    pub lut_build_us: f64,
+    pub io_submit_us: f64,
+    pub io_wait_us: f64,
+    pub topology_us: f64,
+    pub rerank_us: f64,
+}
+
+/// Bounded, non-blocking JSONL trace writer. Clone the `Arc` freely —
+/// emission is `&self` and thread-safe.
+pub struct TraceSink {
+    shared: Arc<Shared>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+    seq: AtomicU64,
+}
+
+impl TraceSink {
+    /// Create (truncate) `path` and start the writer thread.
+    pub fn create(path: &Path) -> Result<TraceSink> {
+        Self::create_with_capacity(path, DEFAULT_CAPACITY)
+    }
+
+    pub fn create_with_capacity(path: &Path, cap: usize) -> Result<TraceSink> {
+        let file = File::create(path)
+            .with_context(|| format!("trace: create {}", path.display()))?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(Queue { q: VecDeque::new(), shutdown: false, in_flight: false }),
+            cv: Condvar::new(),
+            drained: Condvar::new(),
+            paused: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+            emitted: AtomicU64::new(0),
+            cap: cap.max(1),
+        });
+        let shared2 = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("pageann-trace".into())
+            .spawn(move || writer_loop(shared2, file))
+            .context("trace: spawn writer thread")?;
+        let sink = TraceSink {
+            shared,
+            writer: Mutex::new(Some(handle)),
+            seq: AtomicU64::new(0),
+        };
+        sink.emit_line(format!(
+            "{{\"ev\":\"open\",\"schema_version\":{TRACE_SCHEMA_VERSION}}}"
+        ));
+        Ok(sink)
+    }
+
+    /// Resolve the trace target: explicit path (CLI) wins, else the
+    /// `PAGEANN_TRACE` environment variable, else tracing stays off.
+    pub fn from_env_or(explicit: Option<&Path>) -> Result<Option<Arc<TraceSink>>> {
+        let path = match explicit {
+            Some(p) => Some(p.to_path_buf()),
+            None => std::env::var_os("PAGEANN_TRACE").map(std::path::PathBuf::from),
+        };
+        match path {
+            Some(p) => Ok(Some(Arc::new(TraceSink::create(&p)?))),
+            None => Ok(None),
+        }
+    }
+
+    /// Allocate a process-unique query id for span correlation.
+    pub fn next_query_id(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Spans dropped because the queue was full (writer behind).
+    pub fn dropped(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Spans accepted into the queue (including not-yet-written ones).
+    pub fn emitted(&self) -> u64 {
+        self.shared.emitted.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue one raw JSONL line. Never blocks: a full queue increments
+    /// the drop counter and returns.
+    pub fn emit_line(&self, line: String) {
+        let mut g = lock(&self.shared.state);
+        if g.shutdown || g.q.len() >= self.shared.cap {
+            drop(g);
+            self.shared.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        g.q.push_back(line);
+        drop(g);
+        self.shared.emitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.cv.notify_one();
+    }
+
+    /// Format and enqueue one hop span.
+    pub fn emit_hop(&self, s: &HopSpan) {
+        let mut line = String::with_capacity(160 + 8 * s.pages.len());
+        let _ = write!(
+            line,
+            "{{\"ev\":\"hop\",\"q\":{},\"hop\":{},\"batch\":{},\"pages\":[",
+            s.query, s.hop, s.batch
+        );
+        for (i, p) in s.pages.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let _ = write!(line, "{p}");
+        }
+        let _ = write!(
+            line,
+            "],\"cache_hits\":{},\"spec_hits\":{},\"spec_wasted\":{},\"retries\":{},\"failed_ios\":{}",
+            s.cache_hits, s.spec_hits, s.spec_wasted, s.retries, s.failed_ios
+        );
+        let _ = write!(
+            line,
+            ",\"lut_build_us\":{:.1},\"io_submit_us\":{:.1},\"io_wait_us\":{:.1},\"topology_us\":{:.1},\"rerank_us\":{:.1}}}",
+            s.lut_build_us, s.io_submit_us, s.io_wait_us, s.topology_us, s.rerank_us
+        );
+        self.emit_line(line);
+    }
+
+    /// Block until every span enqueued before this call has been written
+    /// and flushed (bounded wait per iteration; used by tests and by the
+    /// CLI before printing a "trace written" notice).
+    pub fn sync(&self) {
+        let mut g = lock(&self.shared.state);
+        while (!g.q.is_empty() || g.in_flight) && !g.shutdown {
+            let (g2, _) = cond_wait_timeout(&self.shared.drained, g, Duration::from_millis(50));
+            g = g2;
+        }
+    }
+
+    #[cfg(test)]
+    fn set_paused(&self, paused: bool) {
+        self.shared.paused.store(paused, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        {
+            let mut g = lock(&self.shared.state);
+            g.shutdown = true;
+        }
+        self.shared.paused.store(false, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let handle = lock(&self.writer).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+fn writer_loop(shared: Arc<Shared>, file: File) {
+    let mut out = BufWriter::new(file);
+    let mut batch: Vec<String> = Vec::new();
+    loop {
+        let shutdown = {
+            let mut g = lock(&shared.state);
+            while (g.q.is_empty() || shared.paused.load(Ordering::SeqCst)) && !g.shutdown {
+                g = cond_wait(&shared.cv, g);
+            }
+            batch.extend(g.q.drain(..));
+            g.in_flight = !batch.is_empty();
+            g.shutdown
+        };
+        for line in batch.drain(..) {
+            let _ = out.write_all(line.as_bytes());
+            let _ = out.write_all(b"\n");
+        }
+        let _ = out.flush();
+        lock(&shared.state).in_flight = false;
+        shared.drained.notify_all();
+        if shutdown {
+            let summary = format!(
+                "{{\"ev\":\"summary\",\"emitted\":{},\"dropped\":{}}}\n",
+                shared.emitted.load(Ordering::Relaxed),
+                shared.dropped.load(Ordering::Relaxed)
+            );
+            let _ = out.write_all(summary.as_bytes());
+            let _ = out.flush();
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pageann_trace_{}_{}", std::process::id(), name));
+        p
+    }
+
+    /// Minimal structural JSON check: balanced braces/brackets outside
+    /// strings, even quote count, single-line.
+    fn looks_like_json_object(line: &str) -> bool {
+        if !line.starts_with('{') || !line.ends_with('}') {
+            return false;
+        }
+        let (mut depth, mut quotes) = (0i64, 0u64);
+        let mut in_str = false;
+        for c in line.chars() {
+            match c {
+                '"' => {
+                    in_str = !in_str;
+                    quotes += 1;
+                }
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                '\n' => return false,
+                _ => {}
+            }
+            if depth < 0 {
+                return false;
+            }
+        }
+        depth == 0 && quotes % 2 == 0 && !in_str
+    }
+
+    #[test]
+    fn bounded_queue_counts_drops() {
+        let path = tmpfile("drops");
+        {
+            let sink = TraceSink::create_with_capacity(&path, 4).unwrap();
+            sink.sync(); // let the open record drain
+            sink.set_paused(true);
+            for i in 0..20 {
+                sink.emit_line(format!("{{\"ev\":\"t\",\"i\":{i}}}"));
+            }
+            // Queue holds 4; the other 16 were dropped, not blocked on.
+            assert_eq!(sink.dropped(), 16, "dropped={}", sink.dropped());
+            assert_eq!(sink.emitted(), 1 + 4);
+            sink.set_paused(false);
+            sink.sync();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // open + 4 surviving spans + shutdown summary.
+        assert_eq!(lines.len(), 6, "{text}");
+        assert!(lines[0].contains("\"ev\":\"open\""));
+        assert!(lines[5].contains("\"dropped\":16"), "{}", lines[5]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn concurrent_writers_produce_valid_jsonl() {
+        let path = tmpfile("concurrent");
+        let n_threads = 8;
+        let per_thread = 200;
+        {
+            let sink = Arc::new(TraceSink::create(&path).unwrap());
+            let mut handles = Vec::new();
+            for t in 0..n_threads {
+                let s = Arc::clone(&sink);
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        let q = s.next_query_id();
+                        let pages = [t as u32, i as u32, 7];
+                        s.emit_hop(&HopSpan {
+                            query: q,
+                            hop: i as u64,
+                            batch: 1,
+                            pages: &pages,
+                            cache_hits: 1,
+                            retries: 0,
+                            io_wait_us: 12.5,
+                            topology_us: 3.25,
+                            ..Default::default()
+                        });
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            sink.sync();
+            assert_eq!(sink.dropped(), 0);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // open + all spans + summary: nothing torn, every line standalone JSON.
+        assert_eq!(lines.len(), 1 + n_threads * per_thread + 1);
+        for line in &lines {
+            assert!(looks_like_json_object(line), "bad line: {line}");
+        }
+        let hops = lines.iter().filter(|l| l.contains("\"ev\":\"hop\"")).count();
+        assert_eq!(hops, n_threads * per_thread);
+        // Query ids were allocated uniquely across threads.
+        assert!(text.contains(&format!("\"q\":{}", n_threads * per_thread - 1)));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn emit_after_shutdown_is_counted_not_lost_silently() {
+        let path = tmpfile("shutdown");
+        let sink = TraceSink::create(&path).unwrap();
+        {
+            let mut g = lock(&sink.shared.state);
+            g.shutdown = true;
+        }
+        sink.emit_line("{\"ev\":\"late\"}".into());
+        assert_eq!(sink.dropped(), 1);
+        drop(sink);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hop_span_json_shape() {
+        let pages = [3u32, 9, 1024];
+        let path = tmpfile("shape");
+        {
+            let sink = TraceSink::create(&path).unwrap();
+            sink.emit_hop(&HopSpan {
+                query: 42,
+                hop: 3,
+                batch: 8,
+                pages: &pages,
+                cache_hits: 2,
+                spec_hits: 1,
+                spec_wasted: 0,
+                retries: 1,
+                failed_ios: 0,
+                lut_build_us: 1.0,
+                io_submit_us: 2.0,
+                io_wait_us: 150.0,
+                topology_us: 30.5,
+                rerank_us: 12.0,
+            });
+            sink.sync();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let hop = text.lines().find(|l| l.contains("\"ev\":\"hop\"")).unwrap();
+        assert!(looks_like_json_object(hop));
+        assert!(hop.contains("\"q\":42"));
+        assert!(hop.contains("\"pages\":[3,9,1024]"));
+        assert!(hop.contains("\"io_wait_us\":150.0"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

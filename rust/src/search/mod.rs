@@ -115,6 +115,7 @@ use crate::dataset::Dtype;
 use crate::distance::BatchScanner;
 use crate::io::{PageStore, PendingRead};
 use crate::layout::{IndexMeta, PageRef};
+use crate::metrics::trace::{HopSpan, TraceSink};
 use crate::metrics::{PageFaultRecord, QueryStats};
 use crate::pq::{AdcLut, LutArena, LutCache, PqCodebook};
 use crate::Result;
@@ -265,6 +266,67 @@ pub struct SearchContext<'a> {
     /// [`search_batch`]: recurring bit-identical queries skip their LUT
     /// build entirely across server ticks, loss-free by construction.
     pub lut_cache: Option<&'a LutCache>,
+    /// Opt-in hop tracing (`None` = off, the default — one pointer check
+    /// per hop is the entire happy-path cost). When set, every hop emits a
+    /// JSONL span to the sink; see `OBSERVABILITY.md`.
+    pub trace: Option<&'a TraceSink>,
+}
+
+/// Counter snapshot taken at hop start so a trace span can report per-hop
+/// deltas without any always-on bookkeeping (only built when tracing).
+#[derive(Clone, Copy)]
+struct HopSnap {
+    cache_hits: u64,
+    spec_hits: u64,
+    spec_wasted: u64,
+    retries: u64,
+    failed_ios: u64,
+    lut_build: Duration,
+    io_submit: Duration,
+    io_wait: Duration,
+    topology: Duration,
+    rerank: Duration,
+}
+
+impl HopSnap {
+    fn of(st: &QueryStats) -> Self {
+        Self {
+            cache_hits: st.cache_hits,
+            spec_hits: st.spec_hits,
+            spec_wasted: st.spec_wasted,
+            retries: st.retries,
+            failed_ios: st.failed_ios,
+            lut_build: st.phases.lut_build,
+            io_submit: st.phases.io_submit,
+            io_wait: st.phases.io_wait,
+            topology: st.phases.topology,
+            rerank: st.phases.rerank,
+        }
+    }
+
+    /// Build the span for one finished hop from the deltas since `self`.
+    fn span<'p>(&self, st: &QueryStats, qid: u64, batch: u64, pages: &'p [u32]) -> HopSpan<'p> {
+        HopSpan {
+            query: qid,
+            hop: st.hops.saturating_sub(1),
+            batch,
+            pages,
+            cache_hits: st.cache_hits - self.cache_hits,
+            spec_hits: st.spec_hits - self.spec_hits,
+            spec_wasted: st.spec_wasted - self.spec_wasted,
+            retries: st.retries - self.retries,
+            failed_ios: st.failed_ios - self.failed_ios,
+            lut_build_us: dur_us(st.phases.lut_build.saturating_sub(self.lut_build)),
+            io_submit_us: dur_us(st.phases.io_submit.saturating_sub(self.io_submit)),
+            io_wait_us: dur_us(st.phases.io_wait.saturating_sub(self.io_wait)),
+            topology_us: dur_us(st.phases.topology.saturating_sub(self.topology)),
+            rerank_us: dur_us(st.phases.rerank.saturating_sub(self.rerank)),
+        }
+    }
+}
+
+fn dur_us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
 }
 
 /// Exact scans deferred until the next I/O wait (paper §5 pipeline);
@@ -367,7 +429,9 @@ pub fn search_pages(
     // Per-query ADC table into the scratch-owned buffer.
     let t_lut = Instant::now();
     ctx.pq.build_lut_into(query, &mut scratch.lut);
-    stats.compute_time += t_lut.elapsed();
+    let lut_dt = t_lut.elapsed();
+    stats.compute_time += lut_dt;
+    stats.phases.lut_build += lut_dt;
     debug_assert_eq!(scratch.lut.code_bytes(), code_w);
 
     // Seed candidates (Alg. 2 lines 4-7): estimated distance from resident
@@ -418,7 +482,9 @@ pub fn search_pages(
     let t_cpu = Instant::now();
     let mut out = scratch.results.sorted();
     out.truncate(params.k);
-    stats.compute_time += t_cpu.elapsed();
+    let fin_dt = t_cpu.elapsed();
+    stats.compute_time += fin_dt;
+    stats.phases.rerank += fin_dt;
     Ok(out)
 }
 
@@ -495,10 +561,17 @@ fn run_hops<'c>(
                     scratch.page_bufs.push(buf); // back to the pool
                 }
             }
-            stats.compute_time += t_cpu.elapsed();
+            let scan_dt = t_cpu.elapsed();
+            stats.compute_time += scan_dt;
+            stats.phases.rerank += scan_dt;
             scan_result
         }};
     }
+
+    // Hop tracing state: a query id and a per-hop counter snapshot, both
+    // built only when the sink is on.
+    let qid = ctx.trace.map(|t| t.next_query_id()).unwrap_or(0);
+    let mut hop_snap: Option<HopSnap> = None;
 
     while scratch.candidates.has_unvisited() {
         // Collect up to `io_batch` unvisited pages (lines 10-18).
@@ -521,6 +594,14 @@ fn run_hops<'c>(
         }
         stats.hops += 1;
         failed_pages.clear();
+        if ctx.trace.is_some() {
+            let mut snap = HopSnap::of(stats);
+            if stats.hops == 1 {
+                // Charge the pre-loop LUT build to the first hop's span.
+                snap.lut_build = Duration::ZERO;
+            }
+            hop_snap = Some(snap);
+        }
 
         // Partition into speculation-covered / cached / disk. Pages the
         // in-flight speculative batch already covers need no new read.
@@ -572,7 +653,9 @@ fn run_hops<'c>(
         if let Some((sp, sids)) = spec.take() {
             let t_spec = Instant::now();
             let (mut sbufs, sres) = sp.wait();
-            stats.io_time += t_spec.elapsed();
+            let spec_dt = t_spec.elapsed();
+            stats.io_time += spec_dt;
+            stats.phases.io_wait += spec_dt;
             let spec_ok = sres.is_ok();
             for (&pid, mut buf) in sids.iter().zip(sbufs.drain(..)) {
                 let wanted = want_spec.contains(&pid);
@@ -623,7 +706,10 @@ fn run_hops<'c>(
         let t_wait = Instant::now();
         let (rbufs_back, read_result) = pending.wait();
         *disk_bufs = rbufs_back;
-        stats.io_time += submit_time + t_wait.elapsed();
+        let wait_dt = t_wait.elapsed();
+        stats.io_time += submit_time + wait_dt;
+        stats.phases.io_submit += submit_time;
+        stats.phases.io_wait += wait_dt;
 
         // Recovery: a batch error or a checksum mismatch demotes the
         // affected pages to bounded per-page re-reads; pages that stay
@@ -703,7 +789,9 @@ fn run_hops<'c>(
                 let sbufs = take_bufs(&mut scratch.page_bufs, sids.len(), meta.page_size);
                 let t_spec = Instant::now();
                 let sp = ctx.store.begin_read(&sids, sbufs);
-                stats.io_time += t_spec.elapsed();
+                let spec_submit_dt = t_spec.elapsed();
+                stats.io_time += spec_submit_dt;
+                stats.phases.io_submit += spec_submit_dt;
                 if !sp.is_async() {
                     // The store degraded to a synchronous submission (e.g.
                     // AIO ctx pool exhausted): this speculation already
@@ -798,7 +886,9 @@ fn run_hops<'c>(
                 scratch.visited_vec[nb as usize] = epoch;
             }
         }
-        stats.compute_time += t_cpu.elapsed();
+        let topo_dt = t_cpu.elapsed();
+        stats.compute_time += topo_dt;
+        stats.phases.topology += topo_dt;
 
         // Queue the exact scans (lines 21-23): deferred in pipelined mode,
         // immediate otherwise.
@@ -815,6 +905,10 @@ fn run_hops<'c>(
             // Nothing is in flight here except a speculation parked in
             // `hop.spec` (caller-recovered), so the error can propagate.
             scan_deferred!()?;
+        }
+
+        if let (Some(tr), Some(snap)) = (ctx.trace, hop_snap.take()) {
+            tr.emit_hop(&snap.span(stats, qid, 1, &scratch.page_ids));
         }
     }
     // Drain the tail of the pipeline.
@@ -1039,7 +1133,9 @@ fn process_query_round(
         }
     }
     if let Some(e) = qerr.take() {
-        st.compute_time += t_cpu.elapsed();
+        let dt = t_cpu.elapsed();
+        st.compute_time += dt;
+        st.phases.topology += dt;
         *error = Some(e);
         return;
     }
@@ -1060,6 +1156,7 @@ fn process_query_round(
     // Exact scans (lines 21-23). The reservoir's retained set is
     // order-independent, so scanning here instead of deferred into the
     // next I/O wait changes timing only, never results.
+    let t_rerank = Instant::now();
     for &p in page_ids.iter() {
         let bytes: &[u8] = if let Some(i) = round_ids.iter().position(|&r| r == p) {
             if failed.contains(&p) {
@@ -1088,7 +1185,14 @@ fn process_query_round(
             results.push(dist_buf[i], page.orig_id(i));
         }
     }
-    st.compute_time += t_cpu.elapsed();
+    // Split the round's CPU span at the scan boundary: gather + scoring +
+    // pushes are topology, the exact scans are rerank; their sum is the
+    // exact coarse `compute_time` this block always charged.
+    let topo_dt = t_rerank.duration_since(t_cpu);
+    let rerank_dt = t_rerank.elapsed();
+    st.compute_time += topo_dt + rerank_dt;
+    st.phases.topology += topo_dt;
+    st.phases.rerank += rerank_dt;
     *error = qerr;
 }
 
@@ -1194,6 +1298,7 @@ pub fn search_batch(
     let lut_dt = t_lut.elapsed() / n as u32;
     for (qi, st) in stats.iter_mut().enumerate() {
         st.compute_time += lut_dt;
+        st.phases.lut_build += lut_dt;
         if matches!(cached_luts.get(qi), Some(Some(_))) {
             st.lut_cache_hits += 1;
         } else if arena.reused(if miss_pos.is_empty() { qi } else { miss_pos[qi] }) {
@@ -1228,7 +1333,26 @@ pub fn search_batch(
     // round, capacity retained.
     let mut failed: Vec<u32> = Vec::new();
 
+    // Hop tracing (off by default): per-query span ids plus a per-round
+    // counter snapshot so each emitted span reports that round's deltas.
+    let qids: Vec<u64> = match ctx.trace {
+        Some(tr) => (0..n).map(|_| tr.next_query_id()).collect(),
+        None => Vec::new(),
+    };
+    let mut snaps: Vec<HopSnap> = Vec::new();
+    let mut round_no: u64 = 0;
+
     loop {
+        if ctx.trace.is_some() {
+            snaps.clear();
+            snaps.extend(stats.iter().map(HopSnap::of));
+            if round_no == 0 {
+                // Charge the pre-loop LUT resolution to the first round.
+                for s in snaps.iter_mut() {
+                    s.lut_build = Duration::ZERO;
+                }
+            }
+        }
         // Selection: one pass per live query, identical to the sequential
         // lines 10-18. A pass that finds no page proves the pool was
         // exhausted (it only ends early when `pop_closest_unvisited` runs
@@ -1324,11 +1448,14 @@ pub fn search_batch(
             // Charged I/O time excludes the overlapped CPU work: the
             // submit cost plus the residual wait, not the batchmates'
             // scoring that hid inside it.
-            let io_dt = submit_dt + t_wait.elapsed();
+            let wait_dt = t_wait.elapsed();
+            let io_dt = submit_dt + wait_dt;
             round_bufs = bufs;
             for qi in 0..n {
                 if cursors[qi].page_ids.iter().any(|p| round_ids.contains(p)) {
                     stats[qi].io_time += io_dt;
+                    stats[qi].phases.io_submit += submit_dt;
+                    stats[qi].phases.io_wait += wait_dt;
                 }
             }
 
@@ -1400,6 +1527,18 @@ pub fn search_batch(
             );
         }
 
+        // One span per live query per round (its hop) when tracing.
+        if let Some(tr) = ctx.trace {
+            let live = cursors.iter().take(n).filter(|c| !c.page_ids.is_empty()).count() as u64;
+            for qi in 0..n {
+                if cursors[qi].page_ids.is_empty() {
+                    continue;
+                }
+                tr.emit_hop(&snaps[qi].span(&stats[qi], qids[qi], live, &cursors[qi].page_ids));
+            }
+        }
+        round_no += 1;
+
         // The round's buffers — one per deduplicated page — back to the
         // shared pool.
         page_bufs.append(&mut round_bufs);
@@ -1422,6 +1561,7 @@ pub fn search_batch(
     let fin_dt = t_fin.elapsed() / n as u32;
     for st in stats.iter_mut() {
         st.compute_time += fin_dt;
+        st.phases.rerank += fin_dt;
     }
     out
 }

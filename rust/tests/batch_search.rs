@@ -126,6 +126,27 @@ fn batch_is_bit_identical_to_sequential_across_backends_and_sizes() {
                     assert!(st.batch_shared_ios <= st.ios, "{t}: shared > ios");
                     assert_eq!(st.retries + st.failed_ios + st.crc_failures, 0, "{t}");
                     assert!(!st.degraded, "{t}");
+                    // Phase-taxonomy invariants (ISSUE 10): the phases
+                    // are disjoint sub-spans of the query's wall time,
+                    // the coarse io_time is exactly the submit+wait
+                    // split, and gather_wait belongs to the server
+                    // executor — direct calls never charge it.
+                    assert!(
+                        st.phases.sum() <= st.total_time,
+                        "{t}: phases ({:?}) exceed total ({:?})",
+                        st.phases.sum(),
+                        st.total_time
+                    );
+                    assert_eq!(
+                        st.io_time,
+                        st.phases.io_submit + st.phases.io_wait,
+                        "{t}: io_time is not the io_submit+io_wait split"
+                    );
+                    assert_eq!(
+                        st.phases.gather_wait,
+                        std::time::Duration::ZERO,
+                        "{t}: direct search_batch charged gather_wait"
+                    );
                 }
                 qi = hi;
             }

@@ -214,6 +214,22 @@ fn transient_faults_leave_results_identical_and_are_counted() {
         assert!(!st_f.degraded, "query {qi}: recoverable faults must not degrade");
         assert_eq!(st_f.failed_ios, 0, "query {qi}");
         assert_eq!(st_c.retries + st_c.crc_failures, 0, "clean run saw faults");
+        // Phase taxonomy holds under injected faults (ISSUE 10): recovery
+        // work lands inside the same disjoint spans, so the sum stays
+        // bounded by wall time and the coarse io_time stays exactly the
+        // submit+wait split. gather_wait belongs to the server executor.
+        assert!(
+            st_f.phases.sum() <= st_f.total_time,
+            "query {qi}: phases ({:?}) exceed total ({:?})",
+            st_f.phases.sum(),
+            st_f.total_time
+        );
+        assert_eq!(
+            st_f.io_time,
+            st_f.phases.io_submit + st_f.phases.io_wait,
+            "query {qi}: io_time split broken under transient faults"
+        );
+        assert_eq!(st_f.phases.gather_wait, Duration::ZERO, "query {qi}: direct call gathered");
         total.merge(&st_f);
     }
     assert!(total.retries > 0, "fail-first EIOs never triggered a retry");
@@ -273,6 +289,19 @@ fn dead_pages_degrade_traversal_without_panic() {
             degraded_queries += 1;
             assert!(st.failed_ios > 0, "query {qi}: degraded without failed_ios");
         }
+        // Phase invariants survive permanent loss too: degraded rounds
+        // still charge their I/O inside the submit+wait split.
+        assert!(
+            st.phases.sum() <= st.total_time,
+            "query {qi}: phases ({:?}) exceed total ({:?})",
+            st.phases.sum(),
+            st.total_time
+        );
+        assert_eq!(
+            st.io_time,
+            st.phases.io_submit + st.phases.io_wait,
+            "query {qi}: io_time split broken under permanent loss"
+        );
         total.merge(&st);
     }
     assert!(degraded_queries > 0, "no query ever touched a dead page");

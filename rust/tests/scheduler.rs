@@ -12,7 +12,7 @@
 use pageann::dataset::{DatasetKind, SynthSpec, Workload};
 use pageann::engine::{
     AnnSystem, ArrivalTracker, BatchConfig, FaultSpec, GatherPolicy, MonotonicClock, OpenOptions,
-    PageAnnIndex, QueryClient, QueryServer, TickClock,
+    PageAnnIndex, QueryClient, QueryServer, TickClock, STAT_HIST_NAMES,
 };
 use pageann::layout::{BuildConfig, CvPlacement, IndexBuilder};
 use pageann::metrics::QueryStats;
@@ -290,6 +290,71 @@ fn lut_cache_is_invisible_in_results_and_visible_in_stats() {
     assert_eq!(cs.hits, 6);
     assert_eq!(cs.misses, 6, "6 lookups on the cold tick missed");
     assert_eq!(cs.evictions, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stats_frame_carries_full_histogram_taxonomy() {
+    // ISSUE 10: the PANT stats frame must carry every histogram named in
+    // STAT_HIST_NAMES, in wire order — arrival gaps, gather occupancy,
+    // total latency, and one histogram per search phase. Sequential
+    // queries over one connection make every count deterministic, and the
+    // per-phase means must sum to no more than the total-latency mean
+    // (each phase is a sub-interval of the query's wall time).
+    let dir = tmpdir("hists");
+    let w = build_index(&dir);
+    let idx = open_index(&dir, 0);
+    let dim = idx.meta.dim;
+    let sys: Arc<dyn AnnSystem> = Arc::new(idx);
+    let handle = QueryServer::bind("127.0.0.1:0", sys, dim)
+        .unwrap()
+        .with_batching(BatchConfig {
+            batch_max: 4,
+            gather: GatherPolicy::Fixed(Duration::ZERO),
+            executors: 1,
+        })
+        .spawn()
+        .unwrap();
+    let mut c = QueryClient::connect(&handle.addr).unwrap();
+    let n = 6usize;
+    for qi in 0..n {
+        let q = w.queries.get_f32(qi);
+        let resp = c.query(&q, 10, 60).unwrap();
+        assert!(!resp.ids.is_empty(), "q {qi}: empty result");
+    }
+    let snap = c.stats(8).unwrap();
+    assert_eq!(snap.queries, n as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(
+        snap.hists.iter().map(|(name, _)| name.as_str()).collect::<Vec<_>>(),
+        STAT_HIST_NAMES.to_vec(),
+        "stats frame must carry every histogram in wire order"
+    );
+    let total = *snap.hist("total_us").expect("total_us histogram");
+    assert_eq!(total.count, n as u64);
+    assert!(total.max > 0.0, "queries took nonzero wall time");
+    assert!(total.p50 <= total.p90 && total.p90 <= total.p99 && total.p99 <= total.p999);
+    // Sequential queries drain one per tick: one occupancy sample per
+    // tick, one inter-arrival gap per adjacent enqueue pair (the first
+    // arrival only anchors the tracker).
+    let occ = snap.hist("gather_occupancy").expect("gather_occupancy histogram");
+    assert_eq!(occ.count, n as u64);
+    assert!(occ.max >= 1.0, "occupancy max below one query per tick");
+    assert_eq!(snap.hist("arrival_us").expect("arrival_us histogram").count, (n - 1) as u64);
+    // Every phase histogram saw every query; zero-duration phases still
+    // land in bucket 0, so counts stay equal across the taxonomy.
+    let mut phase_mean_sum = 0.0;
+    for &name in &STAT_HIST_NAMES[3..] {
+        let ph = snap.hist(name).unwrap_or_else(|| panic!("missing phase histogram {name}"));
+        assert_eq!(ph.count, n as u64, "phase {name} missed a query");
+        phase_mean_sum += ph.mean;
+    }
+    assert!(
+        phase_mean_sum <= total.mean * 1.001 + 1.0,
+        "phase means ({phase_mean_sum:.1}us) exceed total mean ({:.1}us)",
+        total.mean
+    );
+    handle.stop();
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
